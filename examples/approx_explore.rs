@@ -1,0 +1,79 @@
+//! Neuron-approximation design-space exploration (§3.2.3, Fig. 7): runs
+//! NSGA-II on one dataset and dumps the full Pareto front —
+//! (#single-cycle neurons vs accuracy) — plus the circuit-level area of
+//! each frontier point, so you can see the abstract objective (neuron
+//! count) tracking real area.
+//!
+//! ```bash
+//! cargo run --release --example approx_explore [dataset] [pop] [gens]
+//! ```
+
+use printed_mlp::approx;
+use printed_mlp::circuits::{hybrid, seq_multicycle};
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::model::ApproxTables;
+use printed_mlp::nsga::NsgaConfig;
+use printed_mlp::runtime::{Engine, PjrtEvaluator, BATCH_THROUGHPUT};
+use printed_mlp::tech;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("har");
+    let pop: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let gens: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(30);
+
+    let store = ArtifactStore::discover();
+    let model = store.model(name)?;
+    let ds = store.dataset(name)?;
+    let engine = Engine::cpu()?;
+    let eval = PjrtEvaluator::new(
+        &engine,
+        &store.hlo_path(name, BATCH_THROUGHPUT),
+        &model,
+        BATCH_THROUGHPUT,
+    )?;
+
+    let fit = ds.train.head(512);
+    let fm = vec![1u8; model.features];
+    let tables = approx::build_tables(&model, &fit.xs, fit.len(), &fm);
+    let baseline = eval.accuracy(&fit, &fm, &vec![0u8; model.hidden], &ApproxTables::disabled(model.hidden))?;
+    println!("{name}: H={} baseline train acc {baseline:.3}; NSGA pop {pop} × {gens} generations", model.hidden);
+
+    let cfg = NsgaConfig {
+        pop_size: pop,
+        generations: gens,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let mut front = approx::explore(model.hidden, &cfg, |mask| {
+        eval.accuracy(&fit, &fm, mask, &tables).expect("PJRT eval")
+    });
+    front.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+    println!("explored in {:.1}s; Pareto front:", t0.elapsed().as_secs_f64());
+
+    let active: Vec<usize> = (0..model.features).collect();
+    let exact_area = tech::report(&seq_multicycle::generate(&model, &active).netlist).area_cm2;
+    println!(
+        "{:>8} {:>10} {:>12} {:>10}",
+        "#approx", "train acc", "area cm²", "area gain"
+    );
+    for ind in &front {
+        let approx_b: Vec<bool> = ind.genome.clone();
+        let circ = hybrid::generate(&model, &active, &approx_b, &tables);
+        let area = tech::report(&circ.netlist).area_cm2;
+        println!(
+            "{:>8} {:>10.3} {:>12.1} {:>9.2}×",
+            ind.objectives[0], ind.objectives[1], area, exact_area / area
+        );
+    }
+    for drop in [0.01, 0.02, 0.05] {
+        let sel = approx::select(&front, baseline, drop);
+        println!(
+            "selected @ {:.0}% drop: {} neurons, train acc {:.3}",
+            drop * 100.0,
+            sel.n_approx,
+            sel.accuracy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! End-to-end driver (the EXPERIMENTS.md run): executes the complete
+//! framework — PJRT-backed RFP + NSGA-II, all four circuit architectures,
+//! gate-level validation — over all seven paper datasets and regenerates
+//! every table and figure of the evaluation (§4).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_sweep
+//! ```
+//!
+//! Writes `artifacts/results/report.md` + one CSV per table/figure.
+
+use std::time::Instant;
+
+use printed_mlp::coordinator::{run_pipeline, PipelineConfig};
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::report;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::discover();
+    let cfg = PipelineConfig::default();
+    for d in &cfg.datasets {
+        if !store.has(d) {
+            eprintln!("artifacts for {d} missing — run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+
+    println!(
+        "running full pipeline: {} datasets, {} threads, NSGA pop {} × {} generations",
+        cfg.datasets.len(),
+        cfg.threads,
+        cfg.nsga.pop_size,
+        cfg.nsga.generations
+    );
+    let t0 = Instant::now();
+    let outs = run_pipeline(&store, &cfg)?;
+    println!("pipeline done in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let md = report::full_report(&outs, &store.results_dir())?;
+    println!("{md}");
+    println!(
+        "wrote {} and per-experiment CSVs",
+        store.results_dir().join("report.md").display()
+    );
+    Ok(())
+}

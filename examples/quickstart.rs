@@ -1,0 +1,63 @@
+//! Quickstart: load one dataset's artifacts, run the paper's automated
+//! framework end-to-end on it, and print the resulting design points.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use printed_mlp::coordinator::{run_dataset, PipelineConfig};
+use printed_mlp::data::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::discover();
+    if !store.has("spectf") {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // Smaller NSGA budget for a fast first run; the full harness uses the
+    // defaults (pop 40 × 30 generations).
+    let mut cfg = PipelineConfig::default();
+    cfg.nsga.pop_size = 16;
+    cfg.nsga.generations = 12;
+    cfg.cache = false;
+
+    let out = run_dataset(&store, "spectf", &cfg)?;
+
+    println!("dataset          : {}", out.name);
+    println!(
+        "RFP              : kept {}/{} features ({:.0}% retention, {} evals)",
+        out.rfp.kept,
+        out.rfp.order.len(),
+        out.rfp.retention() * 100.0,
+        out.rfp.evals
+    );
+    for (drop, sel) in &out.selections {
+        println!(
+            "NSGA @ {:.0}% drop : {} of {} neurons single-cycle (train acc {:.3})",
+            drop * 100.0,
+            sel.n_approx,
+            sel.approx_mask.len(),
+            sel.accuracy
+        );
+    }
+    println!(
+        "\n{:<14} {:>10} {:>10} {:>8} {:>10} {:>9}",
+        "design", "area cm²", "power mW", "cycles", "energy mJ", "test acc"
+    );
+    for d in [&out.comb, &out.sota, &out.ours]
+        .into_iter()
+        .chain(out.hybrids.iter().map(|(_, d)| d))
+    {
+        println!(
+            "{:<14} {:>10.1} {:>10.1} {:>8} {:>10.2} {:>9.3}",
+            d.arch, d.report.area_cm2, d.report.power_mw, d.cycles, d.energy_mj, d.test_acc
+        );
+    }
+    println!(
+        "\nours vs seq[16]: {:.1}× area, {:.1}× power (paper Table 1: 3.8× / 5.5× for SPECTF)",
+        out.sota.report.area_cm2 / out.ours.report.area_cm2,
+        out.sota.report.power_mw / out.ours.report.power_mw
+    );
+    Ok(())
+}

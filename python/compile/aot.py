@@ -1,0 +1,125 @@
+"""AOT build entrypoint: datasets -> trained models -> HLO artifacts.
+
+Runs once at `make artifacts`; emits everything the Rust coordinator needs:
+
+  artifacts/data/<ds>.bin      — quantized dataset (binary, see datasets.py)
+  artifacts/models/<ds>.json   — integer model (powers/signs/biases/trunc)
+  artifacts/hlo/<ds>_b<B>.hlo.txt — lowered hybrid forward, B in {1, 256}
+  artifacts/manifest.json      — index of all of the above
+
+HLO **text** is the interchange format: jax >= 0.5 serializes protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+
+BATCHES = (1, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_dataset(cfg: datasets.DatasetConfig, trunc: int, batch: int) -> str:
+    fn = functools.partial(model.mlp_forward, trunc=trunc)
+    lowered = jax.jit(fn).lower(*model.example_args(cfg, batch))
+    return to_hlo_text(lowered)
+
+
+def model_to_json(m: train.QuantModel) -> dict:
+    c = m.cfg
+    return {
+        "name": c.name,
+        "features": c.features,
+        "classes": c.classes,
+        "hidden": c.hidden,
+        "in_bits": 4,
+        "w_bits": c.w_bits,
+        "pmax": c.pmax,
+        "trunc": m.trunc,
+        "seq_clock_ms": c.seq_clock_ms,
+        "comb_clock_ms": c.comb_clock_ms,
+        "float_acc": m.float_acc,
+        "train_acc": m.train_acc,
+        "test_acc": m.test_acc,
+        "w1_p": m.w1p.tolist(),
+        "w1_s": m.w1s.tolist(),
+        "b1": m.b1.tolist(),
+        "w2_p": m.w2p.tolist(),
+        "w2_s": m.w2s.tolist(),
+        "b2": m.b2.tolist(),
+    }
+
+
+def build_one(name: str, out: str) -> dict:
+    cfg = datasets.CONFIGS[name]
+    t0 = time.time()
+    ds = datasets.generate(cfg)
+    datasets.save_bin(ds, os.path.join(out, "data", f"{name}.bin"))
+
+    params = train.train_float(ds)
+    qm = train.quantize_and_qat(ds, params)
+    with open(os.path.join(out, "models", f"{name}.json"), "w") as fh:
+        json.dump(model_to_json(qm), fh)
+
+    hlo_paths = {}
+    for b in BATCHES:
+        text = lower_dataset(cfg, qm.trunc, b)
+        path = os.path.join("hlo", f"{name}_b{b}.hlo.txt")
+        with open(os.path.join(out, path), "w") as fh:
+            fh.write(text)
+        hlo_paths[str(b)] = path
+
+    entry = {
+        "name": name,
+        "data": f"data/{name}.bin",
+        "model": f"models/{name}.json",
+        "hlo": hlo_paths,
+        "float_acc": qm.float_acc,
+        "quant_test_acc": qm.test_acc,
+    }
+    print(
+        f"[aot] {name:<12} F={cfg.features:<4} H={cfg.hidden:<3} C={cfg.classes:<3} "
+        f"trunc={qm.trunc} float={qm.float_acc:.3f} quant={qm.test_acc:.3f} "
+        f"({time.time() - t0:.1f}s)"
+    )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", nargs="*", default=datasets.DATASET_ORDER)
+    args = ap.parse_args()
+
+    for sub in ("data", "models", "hlo", "results"):
+        os.makedirs(os.path.join(args.out, sub), exist_ok=True)
+
+    manifest = {"version": 2, "batches": list(BATCHES), "datasets": []}
+    for name in args.datasets:
+        manifest["datasets"].append(build_one(name, args.out))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: single-cycle (approximated) neuron accumulator.
+
+Functional model of the paper's Fig. 2c / Fig. 5 single-cycle neuron: the
+two most-important inputs are probed at one bit position each (the
+expected-leading-1 of their products, computed offline from avg_prod,
+Eq. 1); the two bits feed a 1-bit adder whose output is rewired to the
+leading-1 column.  Here that is `(bit << l1)` with sign and mask applied —
+bit-exact w.r.t. the hybrid netlist generated in `rust/src/circuits`.
+
+The gather of the two important inputs per neuron happens in the L2 model
+(XLA gathers are cheap and fuse); this kernel is the arithmetic part, so
+it stays a pure elementwise/reduce block over (bt, H, 2) tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_imp_ref, pos_ref, l1_ref, sign_ref, imp_mask_ref, bias_ref, o_ref):
+    x_imp = x_imp_ref[...]  # (bt, H, 2)
+    pos = pos_ref[...]  # (H, 2)
+    l1 = l1_ref[...]  # (H, 2)
+    sign = sign_ref[...]  # (H, 2)
+    mask = imp_mask_ref[...]  # (H, 2)
+    bias = bias_ref[...]  # (H,)
+
+    bit = jnp.right_shift(x_imp, pos[None, :, :]) & 1
+    contrib = sign[None, :, :] * jnp.left_shift(bit, l1[None, :, :]) * mask[None, :, :]
+    o_ref[...] = bias[None, :] + jnp.sum(contrib, axis=2)
+
+
+def approx_accum(x_imp, pos, l1, sign, imp_mask, bias, *, bt: int = 256):
+    """acc[b,h] = bias[h] + sum_k sign*(bit(x_imp, pos) << l1)*mask.
+
+    Shapes: x_imp (B, H, 2) int32; pos, l1, sign, imp_mask (H, 2); bias (H,).
+    """
+    b, h, _ = x_imp.shape
+    bt = min(bt, max(b, 1))
+    bp = -b % bt
+    if bp:
+        x_imp = jnp.pad(x_imp, ((0, bp), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=((b + bp) // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, h, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((h, 2), lambda i: (0, 0)),
+            pl.BlockSpec((h, 2), lambda i: (0, 0)),
+            pl.BlockSpec((h, 2), lambda i: (0, 0)),
+            pl.BlockSpec((h, 2), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + bp, h), jnp.int32),
+        interpret=True,
+    )(x_imp, pos, l1, sign, imp_mask, bias)
+    return out[:b]

@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: power-of-2 shift-add matvec with qReLU epilogue.
+
+This is the compute hot-spot of the whole stack: every RFP sweep step and
+every NSGA-II fitness evaluation runs the quantized MLP forward over a
+training batch, and both layers of that forward are this kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the printed circuit
+time-multiplexes ONE barrel shifter per neuron across feature cycles; on a
+vector machine we instead tile the (batch × feature) plane into VMEM-sized
+blocks with BlockSpec and evaluate the shift-add contraction densely —
+`x << p` is the barrel shifter, the block-local accumulation is the
+accumulator register.  Power-of-2 multiply is a shift, so int32 semantics
+are bit-exact w.r.t. the netlist simulator.
+
+The kernel is lowered with `interpret=True`: the CPU PJRT client cannot
+execute Mosaic custom-calls, and correctness (not TPU wallclock) is what
+this environment can validate.  Block shapes are still chosen as if for a
+real TPU VMEM budget; see EXPERIMENTS.md §Perf for the footprint analysis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  (bt × ft) int32 input block + (H × ft) weight blocks;
+# with bt=64, ft=128, H<=16 the working set is
+#   x: 64*128*4 = 32 KiB, p+s: 2*16*128*4 = 16 KiB, acc: 64*16*4 = 4 KiB
+# comfortably inside a 16 MiB VMEM budget even with double buffering.
+DEFAULT_BT = 64
+DEFAULT_FT = 128
+
+
+def _kernel(x_ref, p_ref, s_ref, bias_ref, mask_ref, o_ref, *, nf: int):
+    """One (batch-tile, feature-tile) grid cell.
+
+    Accumulates partial shift-add sums into o_ref across the feature-tile
+    grid dimension (the classic K-loop accumulation pattern).
+    """
+    j = pl.program_id(1)
+
+    x = x_ref[...]  # (bt, ft) int32
+    p = p_ref[...]  # (H, ft) int32
+    s = s_ref[...]  # (H, ft) int32
+    mask = mask_ref[...]  # (ft,)  int32
+
+    # Barrel shifter: x << p, sign/zero via s in {-1, 0, +1}, RFP via mask.
+    shifted = jnp.left_shift(x[:, None, :], p[None, :, :])  # (bt, H, ft)
+    part = jnp.sum(shifted * (s * mask[None, :])[None, :, :], axis=2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(bias_ref[...][None, :], o_ref.shape) + part
+
+    @pl.when(j != 0)
+    def _accum():
+        o_ref[...] += part
+
+    # nf is static; silence "unused" for the 1-tile case.
+    del nf
+
+
+def pow2_matvec(x, p, s, bias, feat_mask, *, bt: int = DEFAULT_BT, ft: int = DEFAULT_FT):
+    """acc[b,h] = bias[h] + sum_f mask[f]*s[h,f]*(x[b,f] << p[h,f]).
+
+    Shapes: x (B, F) int32; p, s (H, F) int32; bias (H,); feat_mask (F,).
+    B and F need not be tile-aligned: inputs are padded here and padding
+    features are masked out (mask=0), so padding is bit-exact-neutral.
+    """
+    b, f = x.shape
+    h = p.shape[0]
+    bt = min(bt, max(b, 1))
+    ft = min(ft, max(f, 1))
+    bp = -b % bt
+    fp = -f % ft
+    if bp or fp:
+        x = jnp.pad(x, ((0, bp), (0, fp)))
+        p = jnp.pad(p, ((0, 0), (0, fp)))
+        s = jnp.pad(s, ((0, 0), (0, fp)))
+        feat_mask = jnp.pad(feat_mask, (0, fp))
+    nb = (b + bp) // bt
+    nf = (f + fp) // ft
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nf=nf),
+        grid=(nb, nf),
+        in_specs=[
+            pl.BlockSpec((bt, ft), lambda i, j: (i, j)),
+            pl.BlockSpec((h, ft), lambda i, j: (0, j)),
+            pl.BlockSpec((h, ft), lambda i, j: (0, j)),
+            pl.BlockSpec((h,), lambda i, j: (0,)),
+            pl.BlockSpec((ft,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, h), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((b + bp), h), jnp.int32),
+        interpret=True,
+    )(x, p, s, bias, feat_mask)
+    return out[:b]
+
+
+def _qrelu_kernel(acc_ref, o_ref, *, trunc: int):
+    pos = jnp.maximum(acc_ref[...], 0)
+    o_ref[...] = jnp.minimum(jnp.right_shift(pos, trunc), 15)
+
+
+def qrelu(acc, trunc: int, *, bt: int = 256):
+    """Quantized ReLU epilogue: clamp(max(acc,0) >> trunc, 0, 15)."""
+    b, h = acc.shape
+    bt = min(bt, max(b, 1))
+    bp = -b % bt
+    if bp:
+        acc = jnp.pad(acc, ((0, bp), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_qrelu_kernel, trunc=trunc),
+        grid=((b + bp) // bt,),
+        in_specs=[pl.BlockSpec((bt, h), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + bp, h), jnp.int32),
+        interpret=True,
+    )(acc)
+    return out[:b]

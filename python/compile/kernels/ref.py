@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the *bit-exact functional semantics* shared by every layer of
+the stack (Pallas kernel, the Rust functional model in `rust/src/model`,
+and the gate-level netlist simulator).  All arithmetic is int32; power-of-2
+multiplication is a left shift, exactly as the barrel shifter in the
+printed circuit performs it (DESIGN.md §Functional semantics).
+
+Conventions:
+  x        : (B, F) int32, 4-bit unsigned values in [0, 15]
+  p        : (H, F) int32, shift amount (weight power), p in [0, pmax]
+  s        : (H, F) int32, weight sign in {-1, 0, +1}; 0 == pruned weight
+  bias     : (H,)  int32, accumulator units
+  feat_mask: (F,)  int32 in {0, 1}; 0 == feature pruned by RFP
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pow2_matvec_ref(x, p, s, bias, feat_mask):
+    """acc[b,h] = bias[h] + sum_f mask[f] * s[h,f] * (x[b,f] << p[h,f])."""
+    x = x.astype(jnp.int32)
+    shifted = jnp.left_shift(x[:, None, :], p[None, :, :])  # (B, H, F)
+    terms = shifted * s[None, :, :] * feat_mask[None, None, :]
+    return bias[None, :] + jnp.sum(terms, axis=2)
+
+
+def qrelu_ref(acc, trunc):
+    """Quantized ReLU: clamp(max(acc, 0) >> trunc, 0, 15)  (§3.2.1).
+
+    Truncates `trunc` LSBs and saturates to the 4-bit input range of the
+    next layer, avoiding any re-quantization step.
+    """
+    pos = jnp.maximum(acc, 0)
+    return jnp.minimum(jnp.right_shift(pos, trunc), 15)
+
+
+def approx_accum_ref(x_imp, pos, l1, sign, imp_mask, base):
+    """Single-cycle (approximated) neuron accumulator (Fig. 2c / Fig. 5).
+
+    x_imp    : (B, H, 2) int32 — the two most-important inputs per neuron,
+               gathered by the caller (the circuit receives them on their
+               scheduled cycle via en0/en1).
+    pos      : (H, 2) int32 — bit position probed in each input
+               (expected-leading-1 minus the weight power, clamped to the
+               4-bit input width).
+    l1       : (H, 2) int32 — expected leading-1 position of the product;
+               the 1-bit sum is rewired (shifted) to this column.
+    sign     : (H, 2) int32 in {-1, 0, +1} — weight sign (0: input pruned).
+    imp_mask : (H, 2) int32 in {0, 1} — feat_mask gathered at the
+               important-input indices.
+    base     : (H,) int32 — the hardwired constant the two bit
+               contributions modulate: bias plus the rounded expected
+               contribution of every other active feature (the §3.1.2
+               realignment; folds into the reset constant, so free).
+
+    acc[b,h] = base[h]
+             + sum_k sign[h,k] * (bit(x_imp[b,h,k], pos[h,k]) << l1[h,k])
+    """
+    bit = jnp.right_shift(x_imp, pos[None, :, :]) & 1  # (B, H, 2)
+    contrib = sign[None, :, :] * jnp.left_shift(bit, l1[None, :, :])
+    contrib = contrib * imp_mask[None, :, :]
+    return base[None, :] + jnp.sum(contrib, axis=2)
+
+
+def hybrid_hidden_ref(
+    x, p, s, bias, feat_mask, approx_mask, x_imp, pos, l1, sign, imp_mask, base, trunc
+):
+    """Hidden layer with per-neuron exact/approx selection (§3.1.3)."""
+    exact = pow2_matvec_ref(x, p, s, bias, feat_mask)
+    approx = approx_accum_ref(x_imp, pos, l1, sign, imp_mask, base)
+    acc = jnp.where(approx_mask[None, :] == 1, approx, exact)
+    return qrelu_ref(acc, trunc)
+
+
+def mlp_ref(
+    x,
+    w1p,
+    w1s,
+    b1,
+    w2p,
+    w2s,
+    b2,
+    feat_mask,
+    approx_mask,
+    imp_idx,
+    imp_pos,
+    imp_l1,
+    imp_sign,
+    imp_base,
+    trunc,
+):
+    """Full hybrid MLP forward: hidden (qReLU) -> output -> (pred, logits).
+
+    The output layer is always exact multi-cycle (the paper only
+    approximates hidden neurons; outputs feed the argmax directly), and
+    hidden "features" are never pruned, so its mask is all-ones.
+    """
+    x_imp = jnp.take(x, imp_idx.reshape(-1), axis=1).reshape(x.shape[0], -1, 2)
+    imp_mask = jnp.take(feat_mask, imp_idx.reshape(-1)).reshape(-1, 2)
+    hid = hybrid_hidden_ref(
+        x, w1p, w1s, b1, feat_mask, approx_mask, x_imp, imp_pos, imp_l1, imp_sign,
+        imp_mask, imp_base, trunc
+    )
+    hid_mask = jnp.ones((w1p.shape[0],), dtype=jnp.int32)
+    logits = pow2_matvec_ref(hid, w2p, w2s, b2, hid_mask)
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    return pred, logits

@@ -1,0 +1,92 @@
+"""Layer-2 JAX model: the hybrid sequential super-TinyML MLP forward.
+
+Composes the Layer-1 Pallas kernels (`kernels.pow2_matvec`,
+`kernels.approx_neuron`) into the full classifier forward that the Rust
+coordinator executes through PJRT:
+
+    hidden  = qReLU( pow2_matvec(x, W1) | approx_accum(...) per neuron )
+    logits  = pow2_matvec(hidden, W2)
+    pred    = argmax(logits)
+
+Every RFP / NSGA-II design decision is a *runtime argument* (feature mask,
+approx mask, important-input tables), so one AOT-compiled artifact per
+dataset serves the entire optimization loop without recompilation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.approx_neuron import approx_accum
+from .kernels.pow2_matvec import pow2_matvec, qrelu
+
+
+def mlp_forward(
+    x,
+    w1p,
+    w1s,
+    b1,
+    w2p,
+    w2s,
+    b2,
+    feat_mask,
+    approx_mask,
+    imp_idx,
+    imp_pos,
+    imp_l1,
+    imp_sign,
+    imp_base,
+    *,
+    trunc: int,
+):
+    """Full hybrid forward.  Returns (pred (B,), logits (B, C)) int32.
+
+    Static: shapes and `trunc` (baked per dataset at AOT time).
+    Dynamic: everything else, including the masks and approx tables.
+    """
+    h = w1p.shape[0]
+    x = x.astype(jnp.int32)
+
+    # Exact multi-cycle path for every hidden neuron.
+    acc_exact = pow2_matvec(x, w1p, w1s, b1, feat_mask)
+
+    # Single-cycle path: gather the two most-important inputs per neuron
+    # (the circuit sees them arrive on their scheduled cycle, en0/en1).
+    bsz = x.shape[0]
+    x_imp = jnp.take(x, imp_idx.reshape(-1), axis=1).reshape(bsz, h, 2)
+    imp_mask = jnp.take(feat_mask, imp_idx.reshape(-1)).reshape(h, 2)
+    acc_approx = approx_accum(x_imp, imp_pos, imp_l1, imp_sign, imp_mask, imp_base)
+
+    acc = jnp.where(approx_mask[None, :] == 1, acc_approx, acc_exact)
+    hidden = qrelu(acc, trunc)
+
+    # Output layer: always exact; hidden values are never pruned.
+    hid_mask = jnp.ones((h,), dtype=jnp.int32)
+    logits = pow2_matvec(hidden, w2p, w2s, b2, hid_mask)
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    return pred, logits
+
+
+def example_args(cfg, batch: int):
+    """ShapeDtypeStructs matching `mlp_forward`'s signature for AOT lowering."""
+    import jax
+
+    f, h, c = cfg.features, cfg.hidden, cfg.classes
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds((batch, f), i32),  # x
+        sds((h, f), i32),  # w1p
+        sds((h, f), i32),  # w1s
+        sds((h,), i32),  # b1
+        sds((c, h), i32),  # w2p
+        sds((c, h), i32),  # w2s
+        sds((c,), i32),  # b2
+        sds((f,), i32),  # feat_mask
+        sds((h,), i32),  # approx_mask
+        sds((h, 2), i32),  # imp_idx
+        sds((h, 2), i32),  # imp_pos
+        sds((h, 2), i32),  # imp_l1
+        sds((h, 2), i32),  # imp_sign
+        sds((h,), i32),  # imp_base
+    )

@@ -1,0 +1,39 @@
+"""AOT lowering: HLO text emission sanity (the Rust loader's contract)."""
+
+import dataclasses
+
+import pytest
+
+from compile import aot, datasets
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    cfg = dataclasses.replace(datasets.CONFIGS["spectf"])
+    return aot.lower_dataset(cfg, trunc=7, batch=4)
+
+
+def test_hlo_is_text_module(hlo_text):
+    assert hlo_text.startswith("HloModule"), hlo_text[:80]
+    assert "ENTRY" in hlo_text
+
+
+def test_hlo_has_expected_signature(hlo_text):
+    # 13 parameters, int32 domain, and a tuple root (return_tuple=True).
+    assert "s32[4,44]" in hlo_text  # x
+    assert "s32[3,44]" in hlo_text  # w1p/w1s
+    assert "s32[2,3]" in hlo_text  # w2p/w2s
+    assert "(s32[4]" in hlo_text or "tuple" in hlo_text
+
+
+def test_hlo_deterministic():
+    cfg = datasets.CONFIGS["spectf"]
+    a = aot.lower_dataset(cfg, trunc=7, batch=2)
+    b = aot.lower_dataset(cfg, trunc=7, batch=2)
+    assert a == b
+
+
+def test_batch_changes_shapes_only():
+    cfg = datasets.CONFIGS["spectf"]
+    a = aot.lower_dataset(cfg, trunc=7, batch=2)
+    assert "s32[2,44]" in a and "s32[4,44]" not in a

@@ -1,0 +1,88 @@
+"""Dataset generator invariants + binary interchange round-trip."""
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.fixture(scope="module")
+def spectf():
+    return datasets.generate(datasets.CONFIGS["spectf"])
+
+
+def test_deterministic(spectf):
+    again = datasets.generate(datasets.CONFIGS["spectf"])
+    np.testing.assert_array_equal(spectf.x_train, again.x_train)
+    np.testing.assert_array_equal(spectf.y_test, again.y_test)
+
+
+def test_quantized_range(spectf):
+    assert spectf.x_train.dtype == np.uint8
+    assert spectf.x_train.min() >= 0 and spectf.x_train.max() <= 15
+
+
+def test_shapes_match_config():
+    for name, cfg in datasets.CONFIGS.items():
+        if cfg.features > 300:
+            continue  # keep the test fast; large ones covered by aot build
+        ds = datasets.generate(cfg)
+        assert ds.x_train.shape == (cfg.n_train, cfg.features), name
+        assert ds.x_test.shape == (cfg.n_test, cfg.features), name
+        assert set(np.unique(ds.y_train)) <= set(range(cfg.classes))
+
+
+def test_all_classes_present(spectf):
+    assert len(np.unique(spectf.y_train)) == spectf.config.classes
+
+
+def test_redundant_features_exist(spectf):
+    """The generator must create strongly correlated feature pairs —
+    that's what RFP exploits (§3.2.2)."""
+    x = spectf.x_train.astype(np.float64)
+    c = np.corrcoef(x.T)
+    np.fill_diagonal(c, 0.0)
+    n_high = (np.abs(c) > 0.9).sum() // 2
+    assert n_high >= 3, f"expected redundant pairs, found {n_high}"
+
+
+def test_roundtrip_binary(spectf):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.bin")
+        datasets.save_bin(spectf, path)
+        xtr, ytr, xte, yte, classes = datasets.load_bin(path)
+        np.testing.assert_array_equal(xtr, spectf.x_train)
+        np.testing.assert_array_equal(ytr, spectf.y_train)
+        np.testing.assert_array_equal(xte, spectf.x_test)
+        np.testing.assert_array_equal(yte, spectf.y_test)
+        assert classes == spectf.config.classes
+
+
+def test_bad_magic_rejected(spectf):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.bin")
+        datasets.save_bin(spectf, path)
+        raw = bytearray(open(path, "rb").read())
+        raw[0] ^= 0xFF
+        open(path, "wb").write(raw)
+        with pytest.raises(ValueError):
+            datasets.load_bin(path)
+
+
+def test_difficulty_monotone_hurts_separation():
+    cfg = datasets.CONFIGS["spectf"]
+    easy = datasets.generate(dataclasses.replace(cfg, difficulty=0.5))
+    hard = datasets.generate(dataclasses.replace(cfg, difficulty=30.0))
+
+    def class_gap(ds):
+        x = ds.x_train.astype(np.float64)
+        m0 = x[ds.y_train == 0].mean(axis=0)
+        m1 = x[ds.y_train == 1].mean(axis=0)
+        sd = x.std(axis=0) + 1e-9
+        return float(np.abs((m0 - m1) / sd).mean())
+
+    assert class_gap(easy) > class_gap(hard)

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; everything must match bit-exactly (int32
+semantics, no tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.approx_neuron import approx_accum
+from compile.kernels.pow2_matvec import pow2_matvec, qrelu
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand_layer(rng, b, f, h, pmax=6):
+    x = rng.integers(0, 16, size=(b, f), dtype=np.int32)
+    p = rng.integers(0, pmax + 1, size=(h, f), dtype=np.int32)
+    s = rng.integers(-1, 2, size=(h, f), dtype=np.int32)
+    bias = rng.integers(-500, 500, size=(h,), dtype=np.int32)
+    mask = rng.integers(0, 2, size=(f,), dtype=np.int32)
+    return map(jnp.asarray, (x, p, s, bias, mask))
+
+
+@given(
+    b=st.integers(1, 70),
+    f=st.integers(1, 300),
+    h=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_pow2_matvec_matches_ref(b, f, h, seed):
+    rng = np.random.default_rng(seed)
+    x, p, s, bias, mask = rand_layer(rng, b, f, h)
+    got = pow2_matvec(x, p, s, bias, mask)
+    want = ref.pow2_matvec_ref(x, p, s, bias, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    b=st.integers(1, 70),
+    f=st.integers(1, 200),
+    h=st.integers(1, 16),
+    bt=st.sampled_from([1, 8, 64]),
+    ft=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_pow2_matvec_tile_invariance(b, f, h, bt, ft, seed):
+    """The BlockSpec tiling must never change the numbers."""
+    rng = np.random.default_rng(seed)
+    x, p, s, bias, mask = rand_layer(rng, b, f, h)
+    base = ref.pow2_matvec_ref(x, p, s, bias, mask)
+    got = pow2_matvec(x, p, s, bias, mask, bt=bt, ft=ft)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@given(
+    b=st.integers(1, 128),
+    h=st.integers(1, 16),
+    trunc=st.integers(0, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_qrelu_matches_ref(b, h, trunc, seed):
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.integers(-(2**24), 2**24, size=(b, h), dtype=np.int32))
+    got = qrelu(acc, trunc)
+    want = ref.qrelu_ref(acc, trunc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    out = np.asarray(got)
+    assert out.min() >= 0 and out.max() <= 15
+
+
+@given(
+    b=st.integers(1, 80),
+    h=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_approx_accum_matches_ref(b, h, seed):
+    rng = np.random.default_rng(seed)
+    x_imp = jnp.asarray(rng.integers(0, 16, size=(b, h, 2), dtype=np.int32))
+    pos = jnp.asarray(rng.integers(0, 4, size=(h, 2), dtype=np.int32))
+    l1 = jnp.asarray(rng.integers(0, 20, size=(h, 2), dtype=np.int32))
+    sign = jnp.asarray(rng.integers(-1, 2, size=(h, 2), dtype=np.int32))
+    mask = jnp.asarray(rng.integers(0, 2, size=(h, 2), dtype=np.int32))
+    bias = jnp.asarray(rng.integers(-500, 500, size=(h,), dtype=np.int32))
+    got = approx_accum(x_imp, pos, l1, sign, mask, bias)
+    want = ref.approx_accum_ref(x_imp, pos, l1, sign, mask, bias)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_zero_mask_yields_bias():
+    """All features pruned -> accumulator is exactly the bias."""
+    b, f, h = 4, 10, 3
+    rng = np.random.default_rng(0)
+    x, p, s, bias, _ = rand_layer(rng, b, f, h)
+    mask = jnp.zeros((f,), jnp.int32)
+    got = np.asarray(pow2_matvec(x, p, s, bias, mask))
+    np.testing.assert_array_equal(got, np.broadcast_to(np.asarray(bias), (b, h)))
+
+
+def test_qrelu_saturates():
+    acc = jnp.asarray([[10_000_000, -5, 15, 16, 31, 32]], jnp.int32)
+    out = np.asarray(qrelu(acc, 1))
+    np.testing.assert_array_equal(out, [[15, 0, 7, 8, 15, 15]])
+
+
+def test_shift_is_pow2_multiply():
+    """x << p == x * 2^p for the whole operand range used by the circuit."""
+    x = jnp.asarray(np.arange(16, dtype=np.int32)[None, :])
+    for p in range(13):
+        pp = jnp.full((1, 16), p, jnp.int32)
+        s = jnp.ones((1, 16), jnp.int32)
+        bias = jnp.zeros((1,), jnp.int32)
+        mask = jnp.ones((16,), jnp.int32)
+        got = np.asarray(pow2_matvec(x, pp, s, bias, mask))[0, 0]
+        assert got == int(np.arange(16).sum() * 2**p)

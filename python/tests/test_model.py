@@ -1,0 +1,76 @@
+"""L2 correctness: the composed hybrid MLP forward vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", max_examples=15, deadline=None)
+settings.load_profile("model")
+
+
+def rand_mlp(rng, b, f, h, c, pmax=6):
+    return dict(
+        x=jnp.asarray(rng.integers(0, 16, size=(b, f), dtype=np.int32)),
+        w1p=jnp.asarray(rng.integers(0, pmax + 1, size=(h, f), dtype=np.int32)),
+        w1s=jnp.asarray(rng.integers(-1, 2, size=(h, f), dtype=np.int32)),
+        b1=jnp.asarray(rng.integers(-200, 200, size=(h,), dtype=np.int32)),
+        w2p=jnp.asarray(rng.integers(0, pmax + 1, size=(c, h), dtype=np.int32)),
+        w2s=jnp.asarray(rng.integers(-1, 2, size=(c, h), dtype=np.int32)),
+        b2=jnp.asarray(rng.integers(-200, 200, size=(c,), dtype=np.int32)),
+        feat_mask=jnp.asarray(rng.integers(0, 2, size=(f,), dtype=np.int32)),
+        approx_mask=jnp.asarray(rng.integers(0, 2, size=(h,), dtype=np.int32)),
+        imp_idx=jnp.asarray(rng.integers(0, f, size=(h, 2), dtype=np.int32)),
+        imp_pos=jnp.asarray(rng.integers(0, 4, size=(h, 2), dtype=np.int32)),
+        imp_l1=jnp.asarray(rng.integers(0, 16, size=(h, 2), dtype=np.int32)),
+        imp_sign=jnp.asarray(rng.integers(-1, 2, size=(h, 2), dtype=np.int32)),
+        imp_base=jnp.asarray(rng.integers(-200, 200, size=(h,), dtype=np.int32)),
+    )
+
+
+@given(
+    b=st.integers(1, 40),
+    f=st.integers(2, 120),
+    h=st.integers(1, 12),
+    c=st.integers(2, 8),
+    trunc=st.integers(0, 10),
+    seed=st.integers(0, 2**31),
+)
+def test_mlp_forward_matches_ref(b, f, h, c, trunc, seed):
+    rng = np.random.default_rng(seed)
+    args = rand_mlp(rng, b, f, h, c)
+    pred_k, log_k = model.mlp_forward(*args.values(), trunc=trunc)
+    pred_r, log_r = ref.mlp_ref(*args.values(), trunc)
+    np.testing.assert_array_equal(np.asarray(log_k), np.asarray(log_r))
+    np.testing.assert_array_equal(np.asarray(pred_k), np.asarray(pred_r))
+
+
+def test_output_shapes():
+    rng = np.random.default_rng(0)
+    args = rand_mlp(rng, 9, 30, 5, 4)
+    pred, logits = model.mlp_forward(*args.values(), trunc=3)
+    assert pred.shape == (9,)
+    assert logits.shape == (9, 4)
+    assert pred.dtype == jnp.int32 and logits.dtype == jnp.int32
+
+
+def test_pred_in_class_range():
+    rng = np.random.default_rng(1)
+    args = rand_mlp(rng, 32, 50, 6, 5)
+    pred, _ = model.mlp_forward(*args.values(), trunc=2)
+    out = np.asarray(pred)
+    assert out.min() >= 0 and out.max() < 5
+
+
+def test_example_args_match_signature():
+    """AOT lowering shapes must exactly match what the model consumes."""
+    from compile import datasets
+
+    cfg = datasets.CONFIGS["spectf"]
+    args = model.example_args(cfg, 8)
+    assert args[0].shape == (8, cfg.features)
+    assert args[1].shape == (cfg.hidden, cfg.features)
+    assert args[4].shape == (cfg.classes, cfg.hidden)
+    assert len(args) == 14

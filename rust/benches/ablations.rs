@@ -1,0 +1,137 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//!   A1  RFP on/off — what feature pruning buys in area, cycles, energy
+//!   A2  base realignment on/off — the single-cycle neuron's hardwired
+//!       expected-value constant (§3.1.2 "realign"), measured as accuracy
+//!       when approximating each dataset's single best neuron
+//!   A3  netlist optimizer (CSE+DCE) contribution to the hardwired designs
+//!   A4  RFP search strategy — greedy (paper) vs bisect (§Perf), evals
+//!
+//! Run with `cargo bench --bench ablations`.
+
+mod harness;
+
+use printed_mlp::circuits::seq_multicycle;
+use printed_mlp::model::ApproxTables;
+use printed_mlp::rfp::{self, Strategy};
+use printed_mlp::runtime::{Engine, PjrtEvaluator, BATCH_THROUGHPUT};
+use printed_mlp::tech;
+
+fn main() {
+    let Some(store) = harness::require_artifacts() else { return };
+    let engine = Engine::cpu().unwrap();
+
+    // --- A1: RFP on/off ------------------------------------------------------
+    harness::section("A1 — RFP on vs off (multi-cycle design)");
+    println!(
+        "{:>12} {:>6} {:>6} {:>11} {:>11} {:>10}",
+        "dataset", "F", "kept", "area off", "area on", "Δcycles"
+    );
+    for name in ["spectf", "gas", "har"] {
+        let m = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let eval = PjrtEvaluator::new(
+            &engine,
+            &store.hlo_path(name, BATCH_THROUGHPUT),
+            &m,
+            BATCH_THROUGHPUT,
+        )
+        .unwrap();
+        let fit = ds.train.head(512);
+        let prep = eval.prepare(&fit).unwrap();
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let thr = eval
+            .accuracy_prepared(&prep, &vec![1u8; m.features], &am, &t)
+            .unwrap();
+        let res = rfp::prune(&m, &fit, thr, Strategy::Bisect, |mask| {
+            eval.accuracy_prepared(&prep, mask, &am, &t).unwrap()
+        });
+        let all: Vec<usize> = (0..m.features).collect();
+        let off = tech::report(&seq_multicycle::generate(&m, &all).netlist);
+        let on = tech::report(&seq_multicycle::generate(&m, &res.active).netlist);
+        println!(
+            "{name:>12} {:>6} {:>6} {:>9.1} c {:>9.1} c {:>10}",
+            m.features,
+            res.kept,
+            off.area_cm2,
+            on.area_cm2,
+            m.features - res.kept
+        );
+    }
+
+    // --- A2: base realignment on/off ----------------------------------------
+    harness::section("A2 — single-cycle base realignment (accuracy, best 1-neuron approx)");
+    println!("{:>12} {:>10} {:>14} {:>14}", "dataset", "exact", "aligned", "bias-only");
+    for name in ["spectf", "gas", "har"] {
+        let m = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let fit = ds.train.head(512);
+        let fm = vec![1u8; m.features];
+        let tables = printed_mlp::approx::build_tables(&m, &fit.xs, fit.len(), &fm);
+        // Strawman tables: base = raw bias (no expectation realignment).
+        let mut naive = tables.clone();
+        for h in 0..m.hidden {
+            naive.base[h] = m.b1[h];
+        }
+        let am0 = vec![0u8; m.hidden];
+        let exact = m.accuracy(&fit.xs, &fit.ys, &fm, &am0, &tables);
+        let (mut best_al, mut best_nv) = (0.0f64, 0.0f64);
+        for h in 0..m.hidden {
+            let mut am = vec![0u8; m.hidden];
+            am[h] = 1;
+            best_al = best_al.max(m.accuracy(&fit.xs, &fit.ys, &fm, &am, &tables));
+            best_nv = best_nv.max(m.accuracy(&fit.xs, &fit.ys, &fm, &am, &naive));
+        }
+        println!("{name:>12} {exact:>10.3} {best_al:>14.3} {best_nv:>14.3}");
+    }
+
+    // --- A3: netlist optimizer contribution ---------------------------------
+    harness::section("A3 — CSE+DCE contribution (multi-cycle, const-folded hardwiring)");
+    println!("{:>12} {:>12} {:>12} {:>8}", "dataset", "raw cells", "opt cells", "ratio");
+    for name in ["spectf", "arrhythmia"] {
+        let m = store.model(name).unwrap();
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = seq_multicycle::generate(&m, &active);
+        let opt_cells = circ.netlist.cells.len();
+        println!(
+            "{name:>12} {:>12} {:>12} {:>8.2}",
+            circ.raw_cells,
+            opt_cells,
+            circ.raw_cells as f64 / opt_cells.max(1) as f64
+        );
+    }
+
+    // --- A4: RFP strategy evals ----------------------------------------------
+    harness::section("A4 — RFP evals: greedy (paper) vs bisect (§Perf)");
+    println!("{:>12} {:>8} {:>8} {:>9} {:>9}", "dataset", "g.evals", "b.evals", "g.kept", "b.kept");
+    for name in ["spectf", "gas", "epileptic"] {
+        let m = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let eval = PjrtEvaluator::new(
+            &engine,
+            &store.hlo_path(name, BATCH_THROUGHPUT),
+            &m,
+            BATCH_THROUGHPUT,
+        )
+        .unwrap();
+        let fit = ds.train.head(512);
+        let prep = eval.prepare(&fit).unwrap();
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let thr = eval
+            .accuracy_prepared(&prep, &vec![1u8; m.features], &am, &t)
+            .unwrap();
+        let run = |s: Strategy| {
+            rfp::prune(&m, &fit, thr, s, |mask| {
+                eval.accuracy_prepared(&prep, mask, &am, &t).unwrap()
+            })
+        };
+        let g = run(Strategy::Greedy);
+        let b = run(Strategy::Bisect);
+        println!(
+            "{name:>12} {:>8} {:>8} {:>9} {:>9}",
+            g.evals, b.evals, g.kept, b.kept
+        );
+    }
+}

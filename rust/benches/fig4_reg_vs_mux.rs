@@ -1,0 +1,64 @@
+//! Figure 4 regeneration: area of shift registers vs multiplexers as the
+//! number of inputs grows (§3.1.4).
+//!
+//! Two series: the *generic* analytical comparison (n 4-bit values in
+//! shift registers vs an n:1 mux selector — the paper's figure), and the
+//! *hardwired* comparison measured on real generated circuits, where
+//! constant-folding the weight mux trees delivers the ≥4× whole-circuit
+//! gains the paper quotes (4.4× for Arrhythmia).
+
+mod harness;
+
+use printed_mlp::circuits::{seq_multicycle, seq_sota};
+use printed_mlp::tech;
+
+fn main() {
+    harness::section("Figure 4 — registers vs multiplexers");
+
+    println!("{:>8} {:>16} {:>14} {:>8}", "inputs", "shift-reg cm²", "mux cm²", "ratio");
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+        let reg = tech::shift_register_area(n, 4);
+        let mux = tech::mux_selector_area(n, 4);
+        println!("{n:>8} {reg:>16.2} {mux:>14.2} {:>7.2}×", reg / mux);
+        rows.push(format!("generic_{n},{reg:.4},{mux:.4},{:.4}", reg / mux));
+    }
+
+    let Some(store) = harness::require_artifacts() else { return };
+    println!("\nhardwired-weight measurement (whole circuit, registers→muxes):");
+    println!("{:>12} {:>14} {:>14} {:>8}", "dataset", "seq[16] cm²", "ours cm²", "ratio");
+    for name in ["spectf", "arrhythmia", "gas"] {
+        let m = store.model(name).unwrap();
+        let active: Vec<usize> = (0..m.features).collect();
+        let sota = tech::report(&seq_sota::generate(&m, &active).netlist);
+        let ours = tech::report(&seq_multicycle::generate(&m, &active).netlist);
+        println!(
+            "{name:>12} {:>14.1} {:>14.1} {:>7.2}×",
+            sota.area_cm2,
+            ours.area_cm2,
+            sota.area_cm2 / ours.area_cm2
+        );
+        rows.push(format!(
+            "{name},{:.4},{:.4},{:.4}",
+            sota.area_cm2,
+            ours.area_cm2,
+            sota.area_cm2 / ours.area_cm2
+        ));
+    }
+    let dir = store.results_dir();
+    std::fs::create_dir_all(&dir).ok();
+    let mut csv = String::from("series,reg_or_sota_cm2,mux_or_ours_cm2,ratio\n");
+    for r in &rows {
+        csv.push_str(r);
+        csv.push('\n');
+    }
+    std::fs::write(dir.join("fig4.csv"), csv).ok();
+
+    // Perf: circuit generation speed (hot in ablation loops).
+    let m = store.model("arrhythmia").unwrap();
+    let active: Vec<usize> = (0..m.features).collect();
+    harness::bench("generate multicycle (arrhythmia, 274F)", 10, || {
+        let c = seq_multicycle::generate(&m, &active);
+        std::hint::black_box(c.netlist.cells.len());
+    });
+}

@@ -1,0 +1,32 @@
+//! Figure 6 regeneration: area and power of the combinational [14],
+//! conventional sequential [16], and proposed multi-cycle designs over
+//! all seven datasets (QAT + RFP applied to all, as in §4.2.1), plus the
+//! end-to-end timing of the synthesis-lite flow per architecture.
+
+mod harness;
+
+use printed_mlp::report;
+
+fn main() {
+    let Some(store) = harness::require_artifacts() else { return };
+    harness::section("Figure 6 — area & power across architectures");
+    let outs = harness::pipeline_outcomes(&store);
+    let md = report::fig6(&outs, &store.results_dir()).expect("fig6");
+    println!("{md}");
+
+    // Perf: full characterize (generate + optimize + cost) per arch.
+    let m = store.model("gas").unwrap();
+    let active: Vec<usize> = (0..m.features).collect();
+    harness::bench("comb generate+cost (gas, 128F)", 5, || {
+        let c = printed_mlp::circuits::combinational::generate(&m, &active);
+        std::hint::black_box(printed_mlp::tech::report(&c.netlist).area_cm2);
+    });
+    harness::bench("seq_sota generate+cost (gas)", 5, || {
+        let c = printed_mlp::circuits::seq_sota::generate(&m, &active);
+        std::hint::black_box(printed_mlp::tech::report(&c.netlist).area_cm2);
+    });
+    harness::bench("multicycle generate+cost (gas)", 5, || {
+        let c = printed_mlp::circuits::seq_multicycle::generate(&m, &active);
+        std::hint::black_box(printed_mlp::tech::report(&c.netlist).area_cm2);
+    });
+}

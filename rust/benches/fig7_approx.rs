@@ -1,0 +1,53 @@
+//! Figure 7 regeneration: hybrid (NSGA-II-approximated) vs multi-cycle
+//! sequential at 1%/2%/5% accuracy-drop budgets — plus the NSGA fitness
+//! evaluation throughput (the framework's dominant cost).
+
+mod harness;
+
+use printed_mlp::approx;
+use printed_mlp::model::ApproxTables;
+use printed_mlp::nsga::NsgaConfig;
+use printed_mlp::report;
+use printed_mlp::runtime::{Engine, PjrtEvaluator, BATCH_THROUGHPUT};
+
+fn main() {
+    let Some(store) = harness::require_artifacts() else { return };
+    harness::section("Figure 7 — neuron approximation (hybrid vs multi-cycle)");
+    let outs = harness::pipeline_outcomes(&store);
+    let md = report::fig7(&outs, &store.results_dir()).expect("fig7");
+    println!("{md}");
+
+    // Perf: one NSGA fitness evaluation = one masked PJRT accuracy pass.
+    let name = "har";
+    let m = store.model(name).unwrap();
+    let ds = store.dataset(name).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let eval = PjrtEvaluator::new(
+        &engine,
+        &store.hlo_path(name, BATCH_THROUGHPUT),
+        &m,
+        BATCH_THROUGHPUT,
+    )
+    .unwrap();
+    let fit = ds.train.head(512);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &fit.xs, fit.len(), &fm);
+    let am = vec![1u8; m.hidden];
+    harness::bench("NSGA fitness eval: PJRT 512 samples (har)", 20, || {
+        std::hint::black_box(eval.accuracy(&fit, &fm, &am, &tables).unwrap());
+    });
+
+    // Perf: a full small NSGA run end-to-end.
+    harness::bench("NSGA pop12×gen8 end-to-end (har)", 3, || {
+        let cfg = NsgaConfig {
+            pop_size: 12,
+            generations: 8,
+            ..Default::default()
+        };
+        let front = approx::explore(m.hidden, &cfg, |mask| {
+            eval.accuracy(&fit, &fm, mask, &tables).unwrap()
+        });
+        std::hint::black_box(front.len());
+    });
+    let _ = ApproxTables::disabled(1);
+}

@@ -1,0 +1,19 @@
+//! Figure 8 regeneration: per-inference energy of all four architectures
+//! (power × cycles × synthesis clock, §4.3), with the paper's headline
+//! ratios printed alongside.
+
+mod harness;
+
+use printed_mlp::report;
+
+fn main() {
+    let Some(store) = harness::require_artifacts() else { return };
+    harness::section("Figure 8 — energy per inference");
+    let outs = harness::pipeline_outcomes(&store);
+    let md = report::fig8(&outs, &store.results_dir()).expect("fig8");
+    println!("{md}");
+
+    // Also regenerate the RFP retention companion (§3.2.2).
+    let md = report::rfp_summary(&outs, &store.results_dir()).expect("rfp");
+    println!("{md}");
+}

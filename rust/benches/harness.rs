@@ -1,0 +1,65 @@
+//! Mini-bench harness (criterion substitute — unavailable offline; see
+//! DESIGN.md §Substitutions).
+//!
+//! `bench(name, iters, f)` warms up, runs `f` `iters` times, and prints
+//! mean / p50 / p99 wall time.  Every bench doubles as the regeneration
+//! harness for its paper table/figure: it prints paper-vs-measured rows
+//! and writes the CSV under `artifacts/results/`.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Time `f` over `iters` iterations (plus one warmup) and report.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
+    println!("  [bench] {name:<48} mean {mean:>9.3} ms  p50 {p50:>9.3} ms  p99 {p99:>9.3} ms");
+    BenchResult {
+        name: name.to_string(),
+        mean_ms: mean,
+        p50_ms: p50,
+        p99_ms: p99,
+    }
+}
+
+/// Section header for a table/figure bench.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Artifact-gated entry: skip politely when `make artifacts` hasn't run.
+pub fn require_artifacts() -> Option<printed_mlp::data::ArtifactStore> {
+    let store = printed_mlp::data::ArtifactStore::discover();
+    if store.has("spectf") {
+        Some(store)
+    } else {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Shared pipeline outcomes (reuses the coordinator's disk cache, so the
+/// expensive NSGA stage is only paid once across all benches).
+pub fn pipeline_outcomes(
+    store: &printed_mlp::data::ArtifactStore,
+) -> Vec<printed_mlp::coordinator::DatasetOutcome> {
+    let cfg = printed_mlp::coordinator::PipelineConfig::default();
+    printed_mlp::coordinator::run_pipeline(store, &cfg).expect("pipeline")
+}

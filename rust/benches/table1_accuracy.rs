@@ -1,0 +1,34 @@
+//! Table 1 regeneration: accuracy, [16] area/power, and the proposed
+//! design's area/power gains per dataset — plus gate-level simulation
+//! throughput (the VCS-substitute's hot path).
+
+mod harness;
+
+use printed_mlp::circuits::seq_multicycle;
+use printed_mlp::report;
+use printed_mlp::sim::testbench;
+
+fn main() {
+    let Some(store) = harness::require_artifacts() else { return };
+    harness::section("Table 1 — accuracy, area, power (paper vs measured)");
+    let outs = harness::pipeline_outcomes(&store);
+    let md = report::table1(&outs, &store.results_dir()).expect("table1");
+    println!("{md}");
+
+    // Perf: gate-level accuracy evaluation (full test set) per dataset.
+    for name in ["spectf", "gas"] {
+        let m = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = seq_multicycle::generate(&m, &active);
+        harness::bench(
+            &format!("gate-level sim, full test set ({name})"),
+            5,
+            || {
+                let preds =
+                    testbench::run_sequential(&circ, &ds.test.xs, ds.test.len(), m.features);
+                std::hint::black_box(testbench::accuracy(&preds, &ds.test.ys));
+            },
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Neuron-approximation framework (§3.2.3): decides which hidden neurons
+//! become single-cycle (Fig. 2c) using NSGA-II over boolean genomes.
+//!
+//! Objectives (both maximized): the number of approximated neurons — an
+//! abstract stand-in for circuit area savings, per the paper — and the
+//! training accuracy.  The final design for an accuracy-drop budget
+//! (1%/2%/5% in Fig. 7) is the Pareto solution with the most approximated
+//! neurons whose accuracy stays within the budget.
+
+use crate::model::{importance, ApproxTables, QuantModel};
+use crate::nsga::{self, Individual, NsgaConfig};
+
+/// A chosen hybrid configuration.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub approx_mask: Vec<u8>,
+    pub n_approx: usize,
+    pub accuracy: f64,
+}
+
+/// Build the single-cycle tables for a model + RFP mask from training
+/// statistics (Eq. 1 + expected leading-1, Fig. 5).
+pub fn build_tables(
+    model: &QuantModel,
+    train_xs: &[u8],
+    n_train: usize,
+    feat_mask: &[u8],
+) -> ApproxTables {
+    importance::approx_tables(model, train_xs, n_train, feat_mask)
+}
+
+/// Run the genetic exploration.  `eval(approx_mask) -> accuracy` evaluates
+/// the hybrid model on the training set (PJRT-backed on the hot path).
+pub fn explore<F>(hidden: usize, cfg: &NsgaConfig, mut eval: F) -> Vec<Individual>
+where
+    F: FnMut(&[u8]) -> f64,
+{
+    nsga::run(hidden, cfg, |genome| {
+        let mask: Vec<u8> = genome.iter().map(|&b| b as u8).collect();
+        let acc = eval(&mask);
+        vec![genome.iter().filter(|&&b| b).count() as f64, acc]
+    })
+}
+
+/// Pick the most-approximated Pareto solution within the accuracy budget.
+/// Falls back to the all-exact design when nothing fits.
+pub fn select(front: &[Individual], baseline_acc: f64, max_drop: f64) -> Selection {
+    let floor = baseline_acc - max_drop;
+    let mut best: Option<&Individual> = None;
+    for ind in front {
+        if ind.objectives[1] + 1e-12 >= floor {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    ind.objectives[0] > b.objectives[0]
+                        || (ind.objectives[0] == b.objectives[0]
+                            && ind.objectives[1] > b.objectives[1])
+                }
+            };
+            if better {
+                best = Some(ind);
+            }
+        }
+    }
+    match best {
+        Some(ind) => Selection {
+            approx_mask: ind.genome.iter().map(|&b| b as u8).collect(),
+            n_approx: ind.objectives[0] as usize,
+            accuracy: ind.objectives[1],
+        },
+        None => Selection {
+            approx_mask: vec![0; front.first().map(|i| i.genome.len()).unwrap_or(0)],
+            n_approx: 0,
+            accuracy: baseline_acc,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::testutil::rand_model;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn explore_finds_harmless_neurons() {
+        // Synthetic fitness: neurons 0 and 2 are free to approximate,
+        // each other approximated neuron costs 10% accuracy.
+        let cfg = NsgaConfig {
+            pop_size: 16,
+            generations: 15,
+            ..Default::default()
+        };
+        let front = explore(5, &cfg, |mask| {
+            let harmful = mask
+                .iter()
+                .enumerate()
+                .filter(|(i, &m)| m == 1 && *i != 0 && *i != 2)
+                .count();
+            1.0 - 0.1 * harmful as f64
+        });
+        let sel = select(&front, 1.0, 0.005);
+        assert_eq!(sel.n_approx, 2, "exactly the two free neurons");
+        assert_eq!(sel.approx_mask[0], 1);
+        assert_eq!(sel.approx_mask[2], 1);
+    }
+
+    #[test]
+    fn select_respects_budget_ordering() {
+        // Larger budgets must never select fewer approximated neurons.
+        let cfg = NsgaConfig {
+            pop_size: 16,
+            generations: 12,
+            ..Default::default()
+        };
+        let front = explore(6, &cfg, |mask| {
+            1.0 - 0.02 * mask.iter().filter(|&&m| m == 1).count() as f64
+        });
+        let s1 = select(&front, 1.0, 0.01);
+        let s2 = select(&front, 1.0, 0.02);
+        let s5 = select(&front, 1.0, 0.05);
+        assert!(s1.n_approx <= s2.n_approx && s2.n_approx <= s5.n_approx);
+        assert!(s1.accuracy >= 0.99 - 1e-9);
+    }
+
+    #[test]
+    fn select_falls_back_to_exact() {
+        let front = vec![Individual {
+            genome: vec![true, true],
+            objectives: vec![2.0, 0.1],
+            rank: 0,
+            crowding: 0.0,
+        }];
+        let sel = select(&front, 0.9, 0.01);
+        assert_eq!(sel.n_approx, 0);
+        assert_eq!(sel.approx_mask, vec![0, 0]);
+    }
+
+    #[test]
+    fn end_to_end_with_native_model() {
+        // Full wiring on a random model: tables + NSGA + selection, using
+        // the bit-exact functional model as the evaluator.
+        let m = rand_model(61, 12, 4, 3);
+        let mut r = Rng::new(8);
+        let n = 60;
+        let xs: Vec<u8> = (0..n * 12).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(3) as u16).collect();
+        let fm = vec![1u8; 12];
+        let tables = build_tables(&m, &xs, n, &fm);
+        let baseline = m.accuracy(&xs, &ys, &fm, &vec![0u8; 4], &tables);
+        let cfg = NsgaConfig {
+            pop_size: 12,
+            generations: 8,
+            ..Default::default()
+        };
+        let front = explore(4, &cfg, |mask| m.accuracy(&xs, &ys, &fm, mask, &tables));
+        let sel = select(&front, baseline, 0.05);
+        // The selected mask's accuracy must satisfy the constraint.
+        let acc = m.accuracy(&xs, &ys, &fm, &sel.approx_mask, &tables);
+        assert!(acc + 1e-12 >= baseline - 0.05);
+    }
+}

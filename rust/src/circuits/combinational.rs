@@ -1,0 +1,225 @@
+//! Fully-parallel bespoke combinational MLP — the [14]-style baseline
+//! (Fig. 3a left input stage, no registers at all).
+//!
+//! Every active feature is an input port; power-of-2 multiplies are pure
+//! wiring (shift), positive and negative products are summed in separate
+//! minimal-width unsigned adder trees, and
+//! `acc = bias + sum_pos - sum_neg` closes the neuron.  qReLU and a
+//! comparator-tree argmax complete the single-cycle datapath.
+
+use crate::model::QuantModel;
+use crate::netlist::{Netlist, Word, CONST0};
+
+use super::rtl::{add_cin, gt_signed, mux_word, qrelu_unit, sext, width_for_range, zext};
+use super::{acc_widths, index_bits, CombCircuit};
+
+/// An unsigned partial sum with its statically known maximum value.
+struct Term {
+    word: Word,
+    max: i64,
+}
+
+/// Unsigned add with just enough output width.
+fn add_u(n: &mut Netlist, a: &Term, b: &Term) -> Term {
+    let max = a.max + b.max;
+    let w = width_for_range(0, max);
+    let aw = zext(&a.word, w);
+    let bw = zext(&b.word, w);
+    Term {
+        word: add_cin(n, &aw, &bw, CONST0),
+        max,
+    }
+}
+
+/// Balanced tree reduction of unsigned terms.
+fn sum_tree(n: &mut Netlist, mut terms: Vec<Term>) -> Term {
+    if terms.is_empty() {
+        return Term {
+            word: vec![CONST0],
+            max: 0,
+        };
+    }
+    while terms.len() > 1 {
+        let mut next = Vec::with_capacity(terms.len().div_ceil(2));
+        let mut it = terms.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(add_u(n, &a, &b)),
+                None => next.push(a),
+            }
+        }
+        terms = next;
+    }
+    terms.pop().unwrap()
+}
+
+/// acc = bias + pos - neg, at `accw` bits (signed).
+fn close_accumulator(n: &mut Netlist, bias: i64, pos: Term, neg: Term, accw: usize) -> Word {
+    let p = zext(&pos.word, accw);
+    let m = zext(&neg.word, accw);
+    // p - m
+    let minv: Word = m.iter().map(|&b| n.inv(b)).collect();
+    let diff = add_cin(n, &p, &minv, crate::netlist::CONST1);
+    // + bias (constant add folds heavily)
+    let bw = n.const_word(bias, accw);
+    add_cin(n, &diff, &bw, CONST0)
+}
+
+/// Shift-add terms of one neuron over `inputs` (each 4-bit unsigned).
+/// Power-of-2 multiplies are pure wiring, so no gates are emitted here.
+fn neuron_terms(
+    _n: &mut Netlist,
+    inputs: &[Word],
+    powers: &[i32],
+    signs: &[i32],
+) -> (Vec<Term>, Vec<Term>) {
+    let mut pos = Vec::new();
+    let mut neg = Vec::new();
+    for (x, (&p, &s)) in inputs.iter().zip(powers.iter().zip(signs)) {
+        if s == 0 {
+            continue;
+        }
+        // x << p is wiring: p zero LSBs then the input bits.
+        let mut word = vec![CONST0; p as usize];
+        word.extend_from_slice(x);
+        let t = Term {
+            word,
+            max: 15i64 << p,
+        };
+        if s > 0 {
+            pos.push(t);
+        } else {
+            neg.push(t);
+        }
+    }
+    (pos, neg)
+}
+
+/// Comparator-tree argmax over signed words; returns the index word.
+fn argmax_tree(n: &mut Netlist, values: &[Word], accw: usize) -> Word {
+    let iw = index_bits(values.len());
+    let mut layer: Vec<(Word, Word)> = values
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (sext(v, accw), n.const_word(i as i64, iw)))
+        .collect();
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.into_iter();
+        while let Some((av, ai)) = it.next() {
+            match it.next() {
+                Some((bv, bi)) => {
+                    // Strict >: on ties the lower index (a) wins, matching
+                    // the functional model and jnp.argmax.
+                    let bgt = gt_signed(n, &bv, &av);
+                    let v = mux_word(n, bgt, &av, &bv);
+                    let i = mux_word(n, bgt, &ai, &bi);
+                    next.push((v, i));
+                }
+                None => next.push((av, ai)),
+            }
+        }
+        layer = next;
+    }
+    layer.pop().unwrap().1
+}
+
+/// Generate the combinational design over the active feature set.
+pub fn generate(model: &QuantModel, active: &[usize]) -> CombCircuit {
+    let mut n = Netlist::new(&format!("{}_comb", model.name));
+    let w = acc_widths(model, active);
+
+    // One wide input port, 4 bits per active feature (ADC outputs).
+    let x_all = n.add_input("x_all", 4 * active.len());
+    let inputs: Vec<Word> = (0..active.len())
+        .map(|i| x_all[i * 4..(i + 1) * 4].to_vec())
+        .collect();
+
+    // Hidden layer.
+    let mut hid = Vec::with_capacity(model.hidden);
+    for h in 0..model.hidden {
+        let powers: Vec<i32> = active.iter().map(|&f| model.w1p[h * model.features + f]).collect();
+        let signs: Vec<i32> = active.iter().map(|&f| model.w1s[h * model.features + f]).collect();
+        let (pos, neg) = neuron_terms(&mut n, &inputs, &powers, &signs);
+        let pos = sum_tree(&mut n, pos);
+        let neg = sum_tree(&mut n, neg);
+        let acc = close_accumulator(&mut n, model.b1[h] as i64, pos, neg, w.acc1);
+        hid.push(qrelu_unit(&mut n, &acc, model.trunc as usize));
+    }
+
+    // Output layer.
+    let mut logits = Vec::with_capacity(model.classes);
+    for c in 0..model.classes {
+        let powers: Vec<i32> = (0..model.hidden).map(|h| model.w2p[c * model.hidden + h]).collect();
+        let signs: Vec<i32> = (0..model.hidden).map(|h| model.w2s[c * model.hidden + h]).collect();
+        let (pos, neg) = neuron_terms(&mut n, &hid, &powers, &signs);
+        let pos = sum_tree(&mut n, pos);
+        let neg = sum_tree(&mut n, neg);
+        logits.push(close_accumulator(&mut n, model.b2[c] as i64, pos, neg, w.acc2));
+    }
+
+    let idx = argmax_tree(&mut n, &logits, w.acc2);
+    n.add_output("class_out", idx);
+    let raw_cells = n.cells.len();
+    crate::netlist::opt::optimize(&mut n);
+    CombCircuit {
+        netlist: n,
+        active: active.to_vec(),
+        raw_cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::testutil::rand_model;
+    use crate::sim::testbench;
+
+    #[test]
+    fn matches_functional_model() {
+        let m = rand_model(21, 8, 3, 4);
+        let active: Vec<usize> = (0..8).collect();
+        let circ = generate(&m, &active);
+        let mut r = crate::util::prng::Rng::new(5);
+        let samples = 40;
+        let xs: Vec<u8> = (0..samples * m.features).map(|_| r.below(16) as u8).collect();
+        let preds = testbench::run_combinational(&circ, &xs, samples, m.features);
+        for i in 0..samples {
+            let x: Vec<i32> = (0..m.features).map(|f| xs[i * m.features + f] as i32).collect();
+            let (want, _) = m.forward_exact(&x);
+            assert_eq!(preds[i] as usize, want, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn no_registers() {
+        let m = rand_model(22, 6, 2, 2);
+        let circ = generate(&m, &(0..6).collect::<Vec<_>>());
+        assert_eq!(circ.netlist.n_dffs(), 0);
+    }
+
+    #[test]
+    fn respects_feature_mask() {
+        // Pruned features must not appear as inputs at all.
+        let m = rand_model(23, 10, 2, 2);
+        let active = vec![1, 3, 5];
+        let circ = generate(&m, &active);
+        let x_all = &circ.netlist.inputs[0].bits;
+        assert_eq!(x_all.len(), 12);
+        // Functional equivalence under the matching mask:
+        let mut fm = vec![0u8; 10];
+        for &f in &active {
+            fm[f] = 1;
+        }
+        let am = vec![0u8; 2];
+        let t = crate::model::ApproxTables::disabled(2);
+        let mut r = crate::util::prng::Rng::new(6);
+        let xs: Vec<u8> = (0..20 * 10).map(|_| r.below(16) as u8).collect();
+        let preds = testbench::run_combinational(&circ, &xs, 20, 10);
+        for i in 0..20 {
+            let x: Vec<i32> = (0..10).map(|f| xs[i * 10 + f] as i32).collect();
+            let (want, _) = m.forward(&x, &fm, &am, &t);
+            assert_eq!(preds[i] as usize, want, "sample {i}");
+        }
+    }
+}

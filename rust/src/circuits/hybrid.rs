@@ -1,0 +1,82 @@
+//! Hybrid sequential architecture: multi-cycle neurons plus
+//! NSGA-II-selected single-cycle (approximated) neurons — the paper's full
+//! proposed design (§3.1.2 + §3.2.3).  The builder lives in
+//! [`super::seq_multicycle`]; this module re-exports it under the paper's
+//! name and carries the hybrid-specific tests.
+
+pub use super::seq_multicycle::generate_hybrid as generate;
+
+#[cfg(test)]
+mod tests {
+    use crate::circuits::testutil::rand_model;
+    use crate::model::importance;
+    use crate::sim::testbench;
+
+    #[test]
+    fn hybrid_matches_functional_model() {
+        let m = rand_model(41, 9, 4, 3);
+        let active: Vec<usize> = (0..9).collect();
+        let mut r = crate::util::prng::Rng::new(3);
+        let samples = 30;
+        let xs: Vec<u8> = (0..samples * m.features).map(|_| r.below(16) as u8).collect();
+
+        // Tables from the sample statistics, like the real framework.
+        let fm = vec![1u8; m.features];
+        let tables = importance::approx_tables(&m, &xs, samples, &fm);
+
+        for approx_pattern in [[true, false, false, false], [true, true, false, true], [true; 4]] {
+            let approx: Vec<bool> = approx_pattern.to_vec();
+            let circ = super::generate(&m, &active, &approx, &tables);
+            let preds = testbench::run_sequential(&circ, &xs, samples, m.features);
+            let am: Vec<u8> = approx.iter().map(|&b| b as u8).collect();
+            for i in 0..samples {
+                let x: Vec<i32> =
+                    (0..m.features).map(|f| xs[i * m.features + f] as i32).collect();
+                let (want, _) = m.forward(&x, &fm, &am, &tables);
+                assert_eq!(preds[i] as usize, want, "pattern {approx_pattern:?} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn approx_neurons_shrink_area() {
+        let m = rand_model(42, 40, 4, 3);
+        let active: Vec<usize> = (0..40).collect();
+        let xs: Vec<u8> = (0..64 * 40).map(|i| (i % 16) as u8).collect();
+        let tables = importance::approx_tables(&m, &xs, 64, &vec![1u8; 40]);
+
+        let exact = super::super::seq_multicycle::generate(&m, &active);
+        let hybrid = super::generate(&m, &active, &[true, true, true, false], &tables);
+        let a_exact = crate::tech::report(&exact.netlist).area_cm2;
+        let a_hybrid = crate::tech::report(&hybrid.netlist).area_cm2;
+        assert!(
+            a_hybrid < a_exact,
+            "hybrid {a_hybrid} must be smaller than exact {a_exact}"
+        );
+    }
+
+    #[test]
+    fn hybrid_with_rfp_schedule_matches() {
+        // Approximation composed with feature pruning: tables derived from
+        // the masked feature set, circuit built on the pruned schedule.
+        let m = rand_model(43, 12, 3, 2);
+        let active = vec![0, 2, 3, 5, 7, 8, 11];
+        let mut fm = vec![0u8; 12];
+        for &f in &active {
+            fm[f] = 1;
+        }
+        let samples = 25;
+        let mut r = crate::util::prng::Rng::new(9);
+        let xs: Vec<u8> = (0..samples * 12).map(|_| r.below(16) as u8).collect();
+        let tables = importance::approx_tables(&m, &xs, samples, &fm);
+        let approx = vec![true, false, true];
+        let circ = super::generate(&m, &active, &approx, &tables);
+        let preds = testbench::run_sequential(&circ, &xs, samples, 12);
+        let am: Vec<u8> = approx.iter().map(|&b| b as u8).collect();
+        for i in 0..samples {
+            let x: Vec<i32> = (0..12).map(|f| xs[i * 12 + f] as i32).collect();
+            let (want, _) = m.forward(&x, &fm, &am, &tables);
+            assert_eq!(preds[i] as usize, want, "sample {i}");
+        }
+    }
+}

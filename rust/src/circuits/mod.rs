@@ -1,0 +1,207 @@
+//! Circuit architecture generators: the four designs the paper evaluates.
+//!
+//! - [`combinational`] — fully-parallel bespoke MLP (the DATE'23 [14]
+//!   baseline style): shift-add trees, combinational qReLU, comparator-tree
+//!   argmax; one (long) cycle per inference.
+//! - [`seq_sota`] — conventional sequential (MICRO'20 [16] style): weights
+//!   and inter-layer values in shift registers.
+//! - [`seq_multicycle`] — the paper's contribution: registers replaced by
+//!   multiplexers over hardwired coefficients (§3.1.4), one barrel shifter
+//!   + accumulator per neuron.
+//! - [`hybrid`] — multi-cycle plus single-cycle (approximated) neurons
+//!   (§3.1.2) selected by NSGA-II.
+//!
+//! All generators consume the same [`QuantModel`] and an `active` feature
+//! schedule (RFP output: kept features in arrival order) and must be
+//! bit-exact w.r.t. `model::QuantModel::forward` — enforced by the
+//! `circuits_vs_model` integration tests.
+
+pub mod combinational;
+pub mod hybrid;
+pub mod rtl;
+pub mod seq_multicycle;
+pub mod seq_sota;
+
+use crate::model::QuantModel;
+use crate::netlist::Netlist;
+use rtl::width_for_range;
+
+/// A generated sequential circuit plus its execution contract.
+pub struct SeqCircuit {
+    pub netlist: Netlist,
+    /// Total cycles per inference **after** the reset cycle:
+    /// `active.len() + hidden + classes`.
+    pub cycles: usize,
+    /// Feature arrival schedule (dataset feature index per input cycle).
+    pub active: Vec<usize>,
+    /// Cell count before the CSE+DCE cleanup (ablation A3).
+    pub raw_cells: usize,
+}
+
+/// A generated combinational circuit (single-cycle inference).
+pub struct CombCircuit {
+    pub netlist: Netlist,
+    pub active: Vec<usize>,
+    /// Cell count before the CSE+DCE cleanup (ablation A3).
+    pub raw_cells: usize,
+}
+
+/// Signed accumulator ranges for layer 1 (over the active features only)
+/// and layer 2 — used to size every datapath identically across the four
+/// architectures (fair comparison, no hidden overflow).
+pub struct AccWidths {
+    pub acc1: usize,
+    pub acc2: usize,
+}
+
+pub fn acc_widths(m: &QuantModel, active: &[usize]) -> AccWidths {
+    let mut lo1 = 0i64;
+    let mut hi1 = 0i64;
+    for h in 0..m.hidden {
+        let b = m.b1[h] as i64;
+        let mut lo = b.min(0);
+        let mut hi = b.max(0);
+        for &f in active {
+            let i = h * m.features + f;
+            let mag = 15i64 << m.w1p[i];
+            match m.w1s[i] {
+                1 => hi += mag,
+                -1 => lo -= mag,
+                _ => {}
+            }
+        }
+        lo1 = lo1.min(lo);
+        hi1 = hi1.max(hi);
+    }
+    let mut lo2 = 0i64;
+    let mut hi2 = 0i64;
+    for c in 0..m.classes {
+        let b = m.b2[c] as i64;
+        let mut lo = b.min(0);
+        let mut hi = b.max(0);
+        for h in 0..m.hidden {
+            let i = c * m.hidden + h;
+            let mag = 15i64 << m.w2p[i];
+            match m.w2s[i] {
+                1 => hi += mag,
+                -1 => lo -= mag,
+                _ => {}
+            }
+        }
+        lo2 = lo2.min(lo);
+        hi2 = hi2.max(hi);
+    }
+    AccWidths {
+        acc1: width_for_range(lo1, hi1),
+        acc2: width_for_range(lo2, hi2),
+    }
+}
+
+/// Bits needed for the weight power field.
+pub fn power_bits(pmax: u32) -> usize {
+    width_for_range(0, pmax as i64).max(1)
+}
+
+/// Bits for an unsigned index in `[0, n)`.
+pub fn index_bits(n: usize) -> usize {
+    if n <= 1 {
+        1
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// Encoded weight word for the mux/shift-register storage:
+/// `[p (pw bits), sub, nz]`.
+pub fn encode_weight(p: i32, s: i32, pw: usize) -> i64 {
+    let nz = (s != 0) as i64;
+    let sub = (s < 0) as i64;
+    (p as i64 & ((1 << pw) - 1)) | (sub << pw) | (nz << (pw + 1))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::model::QuantModel;
+    use crate::util::prng::Rng;
+
+    /// Random valid model for generator tests.
+    pub fn rand_model(seed: u64, features: usize, hidden: usize, classes: usize) -> QuantModel {
+        let mut r = Rng::new(seed);
+        let pmax = 6u32;
+        let mut w1p = vec![0i32; hidden * features];
+        let mut w1s = vec![0i32; hidden * features];
+        for i in 0..hidden * features {
+            w1p[i] = r.below(pmax as u64 + 1) as i32;
+            w1s[i] = [-1, 0, 1][r.usize_below(3)];
+        }
+        let mut w2p = vec![0i32; classes * hidden];
+        let mut w2s = vec![0i32; classes * hidden];
+        for i in 0..classes * hidden {
+            w2p[i] = r.below(pmax as u64 + 1) as i32;
+            w2s[i] = [-1, 0, 1][r.usize_below(3)];
+        }
+        QuantModel {
+            name: format!("rand{seed}"),
+            features,
+            classes,
+            hidden,
+            in_bits: 4,
+            w_bits: 8,
+            pmax,
+            trunc: (r.below(6) + 2) as u32,
+            seq_clock_ms: 100.0,
+            comb_clock_ms: 320.0,
+            float_acc: 0.0,
+            train_acc: 0.0,
+            test_acc: 0.0,
+            w1p,
+            w1s,
+            b1: (0..hidden).map(|_| r.i32_range(-300, 300)).collect(),
+            w2p,
+            w2s,
+            b2: (0..classes).map(|_| r.i32_range(-300, 300)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_cover_worst_case() {
+        let m = testutil::rand_model(3, 10, 4, 3);
+        let active: Vec<usize> = (0..10).collect();
+        let w = acc_widths(&m, &active);
+        // Worst case positive sum for any neuron must fit.
+        for h in 0..m.hidden {
+            let mut hi = (m.b1[h] as i64).max(0);
+            for f in 0..10 {
+                if m.w1s[h * 10 + f] == 1 {
+                    hi += 15 << m.w1p[h * 10 + f];
+                }
+            }
+            assert!(hi < (1 << (w.acc1 - 1)), "h={h}");
+        }
+    }
+
+    #[test]
+    fn index_bits_edges() {
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(8), 3);
+        assert_eq!(index_bits(9), 4);
+    }
+
+    #[test]
+    fn weight_encoding_fields() {
+        let pw = 3;
+        let w = encode_weight(5, -1, pw);
+        assert_eq!(w & 0b111, 5);
+        assert_eq!((w >> 3) & 1, 1); // sub
+        assert_eq!((w >> 4) & 1, 1); // nz
+        assert_eq!(encode_weight(2, 0, pw) >> 4, 0);
+    }
+}

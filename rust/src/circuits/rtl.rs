@@ -1,0 +1,422 @@
+//! Word-level RTL building blocks over the gate IR: ripple-carry
+//! adders/subtractors, barrel shifters, mux trees, comparators, counters,
+//! registers and the qReLU unit — the components Fig. 2/Fig. 3 compose.
+//!
+//! All words are LSB-first two's complement unless stated otherwise.
+
+use crate::netlist::{NetId, Netlist, Word, CONST0, CONST1};
+
+/// Zero-extend (unsigned) to `width`.
+pub fn zext(w: &Word, width: usize) -> Word {
+    let mut out = w.clone();
+    while out.len() < width {
+        out.push(CONST0);
+    }
+    out.truncate(width);
+    out
+}
+
+/// Sign-extend (two's complement) to `width`.
+pub fn sext(w: &Word, width: usize) -> Word {
+    let mut out = w.clone();
+    let msb = *out.last().unwrap_or(&CONST0);
+    while out.len() < width {
+        out.push(msb);
+    }
+    out.truncate(width);
+    out
+}
+
+/// Full adder on three bits; returns (sum, carry).
+pub fn full_adder(n: &mut Netlist, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+    let axb = n.xor2(a, b);
+    let s = n.xor2(axb, c);
+    let t1 = n.and2(a, b);
+    let t2 = n.and2(axb, c);
+    let cout = n.or2(t1, t2);
+    (s, cout)
+}
+
+/// Ripple-carry add with carry-in; output has the width of the inputs
+/// (caller sizes words to avoid overflow).
+pub fn add_cin(n: &mut Netlist, a: &Word, b: &Word, cin: NetId) -> Word {
+    assert_eq!(a.len(), b.len());
+    let mut carry = cin;
+    let mut out = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, c) = full_adder(n, a[i], b[i], carry);
+        out.push(s);
+        carry = c;
+    }
+    out
+}
+
+pub fn add(n: &mut Netlist, a: &Word, b: &Word) -> Word {
+    add_cin(n, a, b, CONST0)
+}
+
+/// a - b (two's complement, same width).
+pub fn sub(n: &mut Netlist, a: &Word, b: &Word) -> Word {
+    let nb: Word = b.iter().map(|&x| n.inv(x)).collect();
+    add_cin(n, a, &nb, CONST1)
+}
+
+/// a + (sub ? -b : b): conditional subtract (the neuron's ±product path,
+/// Fig. 2b: "multiplexer with and without inverters").
+pub fn addsub(n: &mut Netlist, a: &Word, b: &Word, sub_sel: NetId) -> Word {
+    assert_eq!(a.len(), b.len());
+    let bx: Word = b.iter().map(|&x| n.xor2(x, sub_sel)).collect();
+    add_cin(n, a, &bx, sub_sel)
+}
+
+/// Word-wise 2:1 mux.
+pub fn mux_word(n: &mut Netlist, sel: NetId, a: &Word, b: &Word) -> Word {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| n.mux2(sel, x, y))
+        .collect()
+}
+
+/// N:1 mux tree: `items[i]` selected when `sel == i`.  Items beyond the
+/// list repeat the last entry (don't-care).  Constant leaves collapse in
+/// the builder, which is exactly how hardwired-weight muxes get cheap
+/// (§3.1.4).
+pub fn mux_tree(n: &mut Netlist, sel: &Word, items: &[Word]) -> Word {
+    assert!(!items.is_empty());
+    let width = items[0].len();
+    debug_assert!(items.iter().all(|w| w.len() == width));
+    let mut layer: Vec<Word> = items.to_vec();
+    for &s in sel {
+        if layer.len() == 1 {
+            break;
+        }
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        for pair in layer.chunks(2) {
+            if pair.len() == 2 {
+                next.push(mux_word(n, s, &pair[0], &pair[1]));
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        layer = next;
+    }
+    assert_eq!(layer.len(), 1, "sel too narrow for {} items", items.len());
+    layer.pop().unwrap()
+}
+
+/// Left barrel shifter: `x << sh`, output `out_width` bits (unsigned x).
+pub fn barrel_shift_left(n: &mut Netlist, x: &Word, sh: &Word, out_width: usize) -> Word {
+    let mut cur = zext(x, out_width);
+    for (k, &s) in sh.iter().enumerate() {
+        let amount = 1usize << k;
+        if amount >= out_width {
+            // Shifting everything out: result must be 0 when s=1; the
+            // generators never produce this (sh is sized to pmax), but
+            // keep it correct anyway.
+            let zero = vec![CONST0; out_width];
+            cur = mux_word(n, s, &cur, &zero);
+            continue;
+        }
+        let mut shifted = vec![CONST0; amount];
+        shifted.extend_from_slice(&cur[..out_width - amount]);
+        cur = mux_word(n, s, &cur, &shifted);
+    }
+    cur
+}
+
+/// Signed greater-than: a > b (two's complement, equal widths).
+pub fn gt_signed(n: &mut Netlist, a: &Word, b: &Word) -> NetId {
+    // a > b  <=>  (b - a) is negative XOR overflow; compute b - a and take
+    // the "true sign" = msb ^ overflow. Simpler: extend one bit then sub.
+    let w = a.len() + 1;
+    let ax = sext(a, w);
+    let bx = sext(b, w);
+    let d = sub(n, &bx, &ax); // b - a
+    d[w - 1] // sign bit: 1 when b - a < 0 i.e. a > b
+}
+
+/// Equality against a constant.
+pub fn eq_const(n: &mut Netlist, w: &Word, value: u64) -> NetId {
+    let mut acc = CONST1;
+    for (i, &bit) in w.iter().enumerate() {
+        let want1 = (value >> i) & 1 == 1;
+        let term = if want1 { bit } else { n.inv(bit) };
+        acc = n.and2(acc, term);
+    }
+    acc
+}
+
+/// Unsigned `w < value` (constant bound) — used for phase decoding.
+pub fn lt_const(n: &mut Netlist, w: &Word, value: u64) -> NetId {
+    // Classic magnitude comparator against a constant, MSB down.
+    let mut lt = CONST0;
+    let mut eq = CONST1;
+    for (i, &bit) in w.iter().enumerate().rev() {
+        let c = (value >> i) & 1 == 1;
+        if c {
+            let nb = n.inv(bit);
+            let t = n.and2(eq, nb);
+            lt = n.or2(lt, t);
+            eq = n.and2(eq, bit);
+        } else {
+            let nb = n.inv(bit);
+            eq = n.and2(eq, nb);
+        }
+    }
+    lt
+}
+
+/// `lo <= w < hi` phase decode.
+pub fn in_range(n: &mut Netlist, w: &Word, lo: u64, hi: u64) -> NetId {
+    let below_hi = lt_const(n, w, hi);
+    if lo == 0 {
+        below_hi
+    } else {
+        let below_lo = lt_const(n, w, lo);
+        let ge_lo = n.inv(below_lo);
+        n.and2(ge_lo, below_hi)
+    }
+}
+
+/// A register word with enable + synchronous reset to a constant value.
+/// Returns `(q, cell_indices)`; connect data with [`connect_reg`].
+pub fn reg_word(
+    n: &mut Netlist,
+    width: usize,
+    en: NetId,
+    rst: NetId,
+    rstval: i64,
+) -> (Word, Vec<usize>) {
+    let mut q = Vec::with_capacity(width);
+    let mut idx = Vec::with_capacity(width);
+    for i in 0..width {
+        let bit = (rstval >> i) & 1 == 1;
+        let (qi, ci) = n.dff_deferred(en, rst, bit);
+        q.push(qi);
+        idx.push(ci);
+    }
+    (q, idx)
+}
+
+pub fn connect_reg(n: &mut Netlist, cells: &[usize], d: &Word) {
+    assert_eq!(cells.len(), d.len());
+    for (&c, &bit) in cells.iter().zip(d) {
+        n.set_dff_d(c, bit);
+    }
+}
+
+/// Free-running counter: increments every cycle when `en`, resets to 0.
+pub fn counter(n: &mut Netlist, width: usize, en: NetId, rst: NetId) -> Word {
+    let (q, cells) = reg_word(n, width, en, rst, 0);
+    let one = n.const_word(1, width);
+    let d = add(n, &q, &one);
+    connect_reg(n, &cells, &d);
+    q
+}
+
+/// qReLU (§3.2.1): `clamp(max(acc,0) >> trunc, 0, 15)` over a signed
+/// accumulator word; 4-bit output.
+pub fn qrelu_unit(n: &mut Netlist, acc: &Word, trunc: usize) -> Word {
+    let w = acc.len();
+    let sign = acc[w - 1];
+    // Saturate when any bit above the extracted window is set (positive).
+    let hi_start = trunc + 4;
+    let mut any_hi = CONST0;
+    for i in hi_start..w - 1 {
+        any_hi = n.or2(any_hi, acc[i]);
+    }
+    let npos = n.inv(sign);
+    let mut out = Vec::with_capacity(4);
+    for i in 0..4 {
+        let bit = if trunc + i < w - 1 { acc[trunc + i] } else { CONST0 };
+        // bit OR saturation, then gated by positive sign.
+        let sat = n.or2(bit, any_hi);
+        out.push(n.and2(sat, npos));
+    }
+    out
+}
+
+/// Exact number of bits to represent the signed range [lo, hi].
+pub fn width_for_range(lo: i64, hi: i64) -> usize {
+    let mut w = 1;
+    while ((-(1i64 << (w - 1))) > lo) || ((1i64 << (w - 1)) - 1 < hi) {
+        w += 1;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sim;
+
+    fn harness<F: FnOnce(&mut Netlist) -> (Vec<Word>, Word)>(f: F) -> (Netlist, Vec<Word>, Word) {
+        let mut n = Netlist::new("t");
+        let (ins, out) = f(&mut n);
+        n.add_output("y", out.clone());
+        (n, ins, out)
+    }
+
+    #[test]
+    fn adder_exhaustive_6bit() {
+        let (n, ins, out) = harness(|n| {
+            let a = n.add_input("a", 6);
+            let b = n.add_input("b", 6);
+            let y = add(n, &a, &b);
+            (vec![a, b], y)
+        });
+        let mut s = Sim::new(&n);
+        for a in -8i64..8 {
+            let lanes_b: Vec<i64> = (-32..32).collect();
+            s.set_word_all(&ins[0], a);
+            s.set_word_lanes(&ins[1], &lanes_b);
+            s.eval();
+            for (lane, &b) in lanes_b.iter().enumerate() {
+                let want = (a + b) & 0x3F;
+                let got = s.get_word_lane(&out, lane) as i64;
+                assert_eq!(got, want, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn addsub_matches_reference() {
+        let (n, ins, out) = harness(|n| {
+            let a = n.add_input("a", 8);
+            let b = n.add_input("b", 8);
+            let sel = n.add_input("s", 1);
+            let y = addsub(n, &a, &b, sel[0]);
+            (vec![a, b, sel], y)
+        });
+        let mut s = Sim::new(&n);
+        for (a, b) in [(5i64, 3i64), (-20, 7), (100, 100), (-128, 1), (0, -1)] {
+            for sel in [0i64, 1] {
+                s.set_word_all(&ins[0], a);
+                s.set_word_all(&ins[1], b);
+                s.set_word_all(&ins[2], sel);
+                s.eval();
+                let want = if sel == 1 { a - b } else { a + b };
+                assert_eq!(
+                    s.get_word_lane_signed(&out, 0),
+                    ((want + 128) & 0xFF) - 128,
+                    "a={a} b={b} sel={sel}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn barrel_shifter_all_amounts() {
+        let (n, ins, out) = harness(|n| {
+            let x = n.add_input("x", 4);
+            let sh = n.add_input("sh", 4);
+            let y = barrel_shift_left(n, &x, &sh, 20);
+            (vec![x, sh], y)
+        });
+        let mut s = Sim::new(&n);
+        for x in 0..16i64 {
+            for sh in 0..16i64 {
+                s.set_word_all(&ins[0], x);
+                s.set_word_all(&ins[1], sh);
+                s.eval();
+                let want = if sh >= 20 { 0 } else { (x << sh) & ((1 << 20) - 1) };
+                assert_eq!(s.get_word_lane(&out, 0) as i64, want, "x={x} sh={sh}");
+            }
+        }
+    }
+
+    #[test]
+    fn mux_tree_selects() {
+        let items: Vec<i64> = vec![3, 9, 1, 14, 7, 0, 12, 5];
+        let (n, ins, out) = harness(|n| {
+            let sel = n.add_input("sel", 3);
+            let words: Vec<Word> = items.iter().map(|&v| n.const_word(v, 4)).collect();
+            let y = mux_tree(n, &sel, &words);
+            (vec![sel], y)
+        });
+        let mut s = Sim::new(&n);
+        for (i, &want) in items.iter().enumerate() {
+            s.set_word_all(&ins[0], i as i64);
+            s.eval();
+            assert_eq!(s.get_word_lane(&out, 0) as i64, want, "sel={i}");
+        }
+    }
+
+    #[test]
+    fn gt_signed_cases() {
+        let (n, ins, out) = harness(|n| {
+            let a = n.add_input("a", 6);
+            let b = n.add_input("b", 6);
+            let y = gt_signed(n, &a, &b);
+            (vec![a, b], vec![y])
+        });
+        let mut s = Sim::new(&n);
+        for (a, b) in [(0i64, 0i64), (5, -5), (-5, 5), (-32, 31), (31, 30), (-1, -2)] {
+            s.set_word_all(&ins[0], a);
+            s.set_word_all(&ins[1], b);
+            s.eval();
+            assert_eq!(s.get_word_lane(&out, 0) == 1, a > b, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn range_decode() {
+        let (n, ins, out) = harness(|n| {
+            let w = n.add_input("w", 5);
+            let y = in_range(n, &w, 3, 11);
+            (vec![w], vec![y])
+        });
+        let mut s = Sim::new(&n);
+        for v in 0..32i64 {
+            s.set_word_all(&ins[0], v);
+            s.eval();
+            assert_eq!(s.get_word_lane(&out, 0) == 1, (3..11).contains(&v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn qrelu_unit_matches_model() {
+        use crate::model::qrelu as qrelu_sw;
+        let (n, ins, out) = harness(|n| {
+            let acc = n.add_input("acc", 12);
+            let y = qrelu_unit(n, &acc, 3);
+            (vec![acc], y)
+        });
+        let mut s = Sim::new(&n);
+        for v in (-2048i64..2048).step_by(7) {
+            s.set_word_all(&ins[0], v);
+            s.eval();
+            let want = qrelu_sw(v as i32, 3) as u64;
+            assert_eq!(s.get_word_lane(&out, 0), want, "acc={v}");
+        }
+    }
+
+    #[test]
+    fn counter_counts() {
+        let mut n = Netlist::new("t");
+        let en = n.add_input("en", 1)[0];
+        let rst = n.add_input("rst", 1)[0];
+        let q = counter(&mut n, 4, en, rst);
+        n.add_output("q", q.clone());
+        let mut s = Sim::new(&n);
+        s.set(en, !0);
+        s.set(rst, !0);
+        s.step();
+        assert_eq!(s.get_word_lane(&q, 0), 0);
+        s.set(rst, 0);
+        for want in 1..=15u64 {
+            s.step();
+            assert_eq!(s.get_word_lane(&q, 0), want);
+        }
+    }
+
+    #[test]
+    fn width_for_range_bounds() {
+        assert_eq!(width_for_range(0, 1), 2);
+        assert_eq!(width_for_range(-1, 0), 1);
+        assert_eq!(width_for_range(-8, 7), 4);
+        assert_eq!(width_for_range(-9, 7), 5);
+        assert_eq!(width_for_range(0, 255), 9);
+    }
+}

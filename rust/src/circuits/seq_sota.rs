@@ -1,0 +1,207 @@
+//! Conventional sequential MLP — the MICRO'20 [16]-style baseline
+//! (Fig. 3a): weights live in per-neuron circulating shift registers and
+//! hidden activations cross to the output layer through a parallel-load
+//! shift-register chain.  Identical datapath (barrel shifter, add/sub,
+//! accumulator) and controller to the proposed design, so the *only*
+//! difference Fig. 6 measures is register storage vs mux hardwiring.
+
+use crate::model::QuantModel;
+use crate::netlist::{Netlist, NetId, Word, CONST1};
+
+use super::rtl::{
+    addsub, barrel_shift_left, connect_reg, counter, eq_const, gt_signed, in_range, mux_tree,
+    mux_word, qrelu_unit, reg_word, zext,
+};
+use super::{acc_widths, encode_weight, index_bits, power_bits, SeqCircuit};
+
+/// A circulating shift register of `words.len()` entries; entry 0 is the
+/// readable head.  Reset loads the constant contents; `en` rotates by one.
+fn circulating_regfile(n: &mut Netlist, contents: &[i64], width: usize, en: NetId, rst: NetId) -> Word {
+    let k = contents.len();
+    let mut qs: Vec<Word> = Vec::with_capacity(k);
+    let mut cells: Vec<Vec<usize>> = Vec::with_capacity(k);
+    for &c in contents {
+        let (q, cs) = reg_word(n, width, en, rst, c);
+        qs.push(q);
+        cells.push(cs);
+    }
+    // word_i <= word_{i+1}; word_{k-1} <= word_0 (recirculate).
+    for i in 0..k {
+        let src = qs[(i + 1) % k].clone();
+        connect_reg(n, &cells[i], &src);
+    }
+    qs[0].clone()
+}
+
+/// Generate the conventional sequential design.
+pub fn generate(model: &QuantModel, active: &[usize]) -> SeqCircuit {
+    let mut n = Netlist::new(&format!("{}_seq_sota", model.name));
+    let nf = active.len();
+    let (h, c) = (model.hidden, model.classes);
+    let cycles = nf + h + c;
+    let w = acc_widths(model, active);
+    let pw = power_bits(model.pmax);
+
+    let x = n.add_input("x", 4);
+    let rst = n.add_input("rst", 1)[0];
+    let statew = index_bits(cycles + 1);
+    let state = counter(&mut n, statew, CONST1, rst);
+    let hidden_phase = in_range(&mut n, &state, 0, nf as u64);
+    let out_phase = in_range(&mut n, &state, nf as u64, (nf + h) as u64);
+    let arg_phase = in_range(&mut n, &state, (nf + h) as u64, cycles as u64);
+    let arg_idx = counter(&mut n, index_bits(c), arg_phase, rst);
+
+    // Hidden neurons: weight shift register + shared datapath.
+    let mut hid_vals = Vec::with_capacity(h);
+    for nh in 0..h {
+        let contents: Vec<i64> = active
+            .iter()
+            .map(|&f| {
+                let i = nh * model.features + f;
+                encode_weight(model.w1p[i], model.w1s[i], pw)
+            })
+            .collect();
+        let wsel = circulating_regfile(&mut n, &contents, pw + 2, hidden_phase, rst);
+        let p = wsel[..pw].to_vec();
+        let sub = wsel[pw];
+        let nz = wsel[pw + 1];
+        let term = barrel_shift_left(&mut n, &x, &p, w.acc1);
+        let en = n.and2(hidden_phase, nz);
+        let (q, cells) = reg_word(&mut n, w.acc1, en, rst, model.b1[nh] as i64);
+        let sum = addsub(&mut n, &q, &term, sub);
+        connect_reg(&mut n, &cells, &sum);
+        hid_vals.push(qrelu_unit(&mut n, &q, model.trunc as usize));
+    }
+
+    // Inter-layer shifting registers (the costly part [16]): parallel-load
+    // the qReLU outputs when the hidden phase ends, then shift one value
+    // per output cycle toward the head.
+    let load = eq_const(&mut n, &state, nf as u64); // first output cycle
+    let shift_en = n.or2(out_phase, load);
+    let mut chain_q: Vec<Word> = Vec::with_capacity(h);
+    let mut chain_cells: Vec<Vec<usize>> = Vec::with_capacity(h);
+    for _ in 0..h {
+        let (q, cs) = reg_word(&mut n, 4, shift_en, rst, 0);
+        chain_q.push(q);
+        chain_cells.push(cs);
+    }
+    for i in 0..h {
+        let shifted = if i + 1 < h {
+            chain_q[i + 1].clone()
+        } else {
+            vec![crate::netlist::CONST0; 4]
+        };
+        // During the load cycle hid[0] is consumed via the bypass below, so
+        // the chain captures hid[i+1] (pre-shifted by one); afterwards it
+        // shifts one value toward the head per output cycle.
+        let loaded = if i + 1 < h {
+            hid_vals[i + 1].clone()
+        } else {
+            vec![crate::netlist::CONST0; 4]
+        };
+        let d = mux_word(&mut n, load, &shifted, &loaded);
+        connect_reg(&mut n, &chain_cells[i], &d);
+    }
+    // NOTE on timing: `load` is asserted during the first output cycle, so
+    // the chain head holds hid[0] from the *second* output cycle on.  To
+    // keep the same total cycle count as the proposed design, output
+    // neurons consume hid[0] combinationally during the load cycle (the
+    // mux below) and the shifted chain afterwards — the standard bypass.
+    let head_bypass = mux_word(&mut n, load, &chain_q[0], &hid_vals[0]);
+
+    // Output neurons: weight shift registers + shared datapath over the
+    // chain head.
+    let mut out_accs = Vec::with_capacity(c);
+    for cc in 0..c {
+        let contents: Vec<i64> = (0..h)
+            .map(|j| {
+                let i = cc * h + j;
+                encode_weight(model.w2p[i], model.w2s[i], pw)
+            })
+            .collect();
+        let wsel = circulating_regfile(&mut n, &contents, pw + 2, out_phase, rst);
+        let p = wsel[..pw].to_vec();
+        let sub = wsel[pw];
+        let nz = wsel[pw + 1];
+        let term = barrel_shift_left(&mut n, &head_bypass, &p, w.acc2);
+        let en = n.and2(out_phase, nz);
+        let (q, cells) = reg_word(&mut n, w.acc2, en, rst, model.b2[cc] as i64);
+        let sum = addsub(&mut n, &q, &term, sub);
+        connect_reg(&mut n, &cells, &sum);
+        out_accs.push(q);
+    }
+
+    // Sequential argmax, same as the proposed design.
+    let cur = mux_tree(&mut n, &arg_idx, &out_accs);
+    let (best_q, best_cells) = reg_word(&mut n, w.acc2, crate::netlist::CONST0, rst, 0);
+    let (idx_q, idx_cells) = reg_word(&mut n, index_bits(c), crate::netlist::CONST0, rst, 0);
+    let gt = gt_signed(&mut n, &cur, &best_q);
+    let first = eq_const(&mut n, &arg_idx, 0);
+    let take = n.or2(first, gt);
+    let upd = n.and2(arg_phase, take);
+    for &ci in best_cells.iter().chain(&idx_cells) {
+        if let crate::netlist::Cell::Dff { en: slot, .. } = &mut n.cells[ci] {
+            *slot = upd;
+        }
+    }
+    connect_reg(&mut n, &best_cells, &cur);
+    let idx_d = zext(&arg_idx, index_bits(c));
+    connect_reg(&mut n, &idx_cells, &idx_d);
+
+    n.add_output("class_out", idx_q);
+    let raw_cells = n.cells.len();
+    crate::netlist::opt::optimize(&mut n);
+    SeqCircuit {
+        netlist: n,
+        cycles,
+        active: active.to_vec(),
+        raw_cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::testutil::rand_model;
+    use crate::sim::testbench;
+
+    #[test]
+    fn matches_functional_model() {
+        let m = rand_model(31, 7, 3, 3);
+        let active: Vec<usize> = (0..7).collect();
+        let circ = generate(&m, &active);
+        let mut r = crate::util::prng::Rng::new(2);
+        let samples = 30;
+        let xs: Vec<u8> = (0..samples * m.features).map(|_| r.below(16) as u8).collect();
+        let preds = testbench::run_sequential(&circ, &xs, samples, m.features);
+        for i in 0..samples {
+            let x: Vec<i32> = (0..m.features).map(|f| xs[i * m.features + f] as i32).collect();
+            let (want, _) = m.forward_exact(&x);
+            assert_eq!(preds[i] as usize, want, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn register_heavy_as_expected() {
+        // Weight storage alone: (nf*h + h*c) words of (pw+2) bits.
+        let m = rand_model(32, 16, 3, 2);
+        let active: Vec<usize> = (0..16).collect();
+        let circ = generate(&m, &active);
+        let pw = power_bits(m.pmax);
+        let weight_dffs = (16 * 3 + 3 * 2) * (pw + 2);
+        assert!(
+            circ.netlist.n_dffs() >= weight_dffs,
+            "dffs={} want >= {weight_dffs}",
+            circ.netlist.n_dffs()
+        );
+    }
+
+    #[test]
+    fn more_dffs_than_multicycle() {
+        let m = rand_model(33, 24, 4, 3);
+        let active: Vec<usize> = (0..24).collect();
+        let sota = generate(&m, &active);
+        let ours = super::super::seq_multicycle::generate(&m, &active);
+        assert!(sota.netlist.n_dffs() > 2 * ours.netlist.n_dffs());
+    }
+}

@@ -1,0 +1,366 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md
+//! §Substitutions).
+//!
+//! ```text
+//! printed-mlp pipeline  [--datasets a,b] [--threads N] [--native]
+//!                       [--no-cache] [--fit-subset N] [--config FILE]
+//! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
+//! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
+//! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N]
+//! printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S]
+//! printed-mlp info
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::{self, serve};
+use crate::data::ArtifactStore;
+use crate::report;
+
+/// Parsed flags: `--key value` or bare `--flag`.
+pub struct Flags {
+    pub positional: Vec<String>,
+    named: BTreeMap<String, String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let mut positional = Vec::new();
+        let mut named = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value = args
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    named.insert(name.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    named.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Flags { positional, named })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.named.contains_key(name)
+    }
+}
+
+const USAGE: &str = "printed-mlp — Sequential Printed MLP Circuits (ASPDAC'25) reproduction
+
+USAGE:
+  printed-mlp pipeline  [--datasets a,b,..] [--threads N] [--native]
+                        [--no-cache] [--fit-subset N] [--pop N] [--gens N]
+                        [--config FILE] [--fast]
+  printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
+  printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
+  printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
+  printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--sensors N]
+  printed-mlp info
+
+Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
+
+/// CLI entrypoint.
+pub fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let store = ArtifactStore::discover();
+    match cmd.as_str() {
+        "pipeline" => cmd_pipeline(&store, &flags),
+        "reproduce" => cmd_reproduce(&store, &flags),
+        "verilog" => cmd_verilog(&store, &flags),
+        "simulate" => cmd_simulate(&store, &flags),
+        "serve" => cmd_serve(&store, &flags),
+        "info" => cmd_info(&store),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+/// Build a PipelineConfig from config file + CLI overrides.
+pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
+    let mut conf = match flags.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(v) = flags.get("datasets") {
+        conf.set("pipeline.datasets", v);
+    }
+    if let Some(v) = flags.get("threads") {
+        conf.set("pipeline.threads", v);
+    }
+    if flags.has("native") {
+        conf.set("pipeline.use_pjrt", "false");
+    }
+    if flags.has("no-cache") {
+        conf.set("pipeline.cache", "false");
+    }
+    if let Some(v) = flags.get("fit-subset") {
+        conf.set("pipeline.fit_subset", v);
+    }
+    if let Some(v) = flags.get("pop") {
+        conf.set("nsga.pop_size", v);
+    }
+    if let Some(v) = flags.get("gens") {
+        conf.set("nsga.generations", v);
+    }
+    if flags.has("fast") {
+        // Quick smoke settings for demos/tests.
+        conf.set("pipeline.fit_subset", "192");
+        conf.set("nsga.pop_size", "12");
+        conf.set("nsga.generations", "8");
+    }
+    conf.pipeline()
+}
+
+fn require_artifacts(store: &ArtifactStore, datasets: &[String]) -> Result<()> {
+    for d in datasets {
+        if !store.has(d) {
+            bail!(
+                "artifacts for `{d}` not found under {} — run `make artifacts` first",
+                store.root.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(store: &ArtifactStore, flags: &Flags) -> Result<()> {
+    let cfg = pipeline_config(flags)?;
+    require_artifacts(store, &cfg.datasets)?;
+    let t0 = std::time::Instant::now();
+    let outs = coordinator::run_pipeline(store, &cfg)?;
+    println!(
+        "pipeline: {} datasets in {:.1}s ({} threads, {})",
+        outs.len(),
+        t0.elapsed().as_secs_f64(),
+        cfg.threads,
+        if cfg.use_pjrt { "PJRT" } else { "native" }
+    );
+    let md = report::full_report(&outs, &store.results_dir())?;
+    println!("{md}");
+    println!("CSV + report.md written to {}", store.results_dir().display());
+    Ok(())
+}
+
+fn cmd_reproduce(store: &ArtifactStore, flags: &Flags) -> Result<()> {
+    let exp = flags.get("exp").unwrap_or("all");
+    let cfg = pipeline_config(flags)?;
+    require_artifacts(store, &cfg.datasets)?;
+    let outs = coordinator::run_pipeline(store, &cfg)?;
+    let dir = store.results_dir();
+    let md = match exp {
+        "table1" => report::table1(&outs, &dir)?,
+        "fig6" => report::fig6(&outs, &dir)?,
+        "fig7" => report::fig7(&outs, &dir)?,
+        "fig8" => report::fig8(&outs, &dir)?,
+        "rfp" => report::rfp_summary(&outs, &dir)?,
+        "all" => report::full_report(&outs, &dir)?,
+        other => bail!("unknown experiment `{other}` (want table1|fig6|fig7|fig8|rfp|all; fig4 is `cargo bench --bench fig4_reg_vs_mux`)"),
+    };
+    println!("{md}");
+    Ok(())
+}
+
+/// Build one architecture for a dataset (full feature set, no RFP) —
+/// used by the verilog/simulate commands for quick inspection.
+fn build_arch(
+    store: &ArtifactStore,
+    name: &str,
+    arch: &str,
+) -> Result<(crate::netlist::Netlist, usize)> {
+    let model = store.model(name)?;
+    let ds = store.dataset(name)?;
+    let active: Vec<usize> = (0..model.features).collect();
+    Ok(match arch {
+        "ours" | "multicycle" => {
+            let c = crate::circuits::seq_multicycle::generate(&model, &active);
+            (c.netlist, c.cycles)
+        }
+        "sota" => {
+            let c = crate::circuits::seq_sota::generate(&model, &active);
+            (c.netlist, c.cycles)
+        }
+        "comb" | "combinational" => {
+            let c = crate::circuits::combinational::generate(&model, &active);
+            (c.netlist, 1)
+        }
+        "hybrid" => {
+            let tables = crate::approx::build_tables(
+                &model,
+                &ds.train.xs,
+                ds.train.len(),
+                &vec![1u8; model.features],
+            );
+            // Demo hybrid: approximate every other hidden neuron.
+            let approx: Vec<bool> = (0..model.hidden).map(|h| h % 2 == 0).collect();
+            let c = crate::circuits::hybrid::generate(&model, &active, &approx, &tables);
+            (c.netlist, c.cycles)
+        }
+        other => bail!("unknown arch `{other}` (want ours|hybrid|comb|sota)"),
+    })
+}
+
+fn cmd_verilog(store: &ArtifactStore, flags: &Flags) -> Result<()> {
+    let name = flags.get("dataset").ok_or_else(|| anyhow!("--dataset required"))?;
+    let arch = flags.get("arch").unwrap_or("ours");
+    let (netlist, _) = build_arch(store, name, arch)?;
+    let text = crate::netlist::verilog::emit(&netlist);
+    let rep = crate::tech::report(&netlist);
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+            println!(
+                "wrote {path}: {} cells ({} DFFs), {:.1} cm², {:.1} mW, depth {}",
+                rep.n_cells, rep.n_dffs, rep.area_cm2, rep.power_mw, rep.logic_depth
+            );
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
+    let name = flags.get("dataset").ok_or_else(|| anyhow!("--dataset required"))?;
+    let arch = flags.get("arch").unwrap_or("ours");
+    let samples: usize = flags.get("samples").unwrap_or("256").parse()?;
+    let model = store.model(name)?;
+    let ds = store.dataset(name)?;
+    let split = ds.test.head(samples);
+    let active: Vec<usize> = (0..model.features).collect();
+    let t0 = std::time::Instant::now();
+    let preds = match arch {
+        "comb" | "combinational" => {
+            let c = crate::circuits::combinational::generate(&model, &active);
+            crate::sim::testbench::run_combinational(&c, &split.xs, split.len(), model.features)
+        }
+        "sota" => {
+            let c = crate::circuits::seq_sota::generate(&model, &active);
+            crate::sim::testbench::run_sequential(&c, &split.xs, split.len(), model.features)
+        }
+        _ => {
+            let c = crate::circuits::seq_multicycle::generate(&model, &active);
+            crate::sim::testbench::run_sequential(&c, &split.xs, split.len(), model.features)
+        }
+    };
+    let acc = crate::sim::testbench::accuracy(&preds, &split.ys);
+    println!(
+        "{name}/{arch}: {} samples, gate-level accuracy {:.3} (recorded {:.3}), {:.2}s",
+        split.len(),
+        acc,
+        model.test_acc,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(store: &ArtifactStore, flags: &Flags) -> Result<()> {
+    let mut cfg = serve::ServeConfig::default();
+    if let Some(d) = flags.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(r) = flags.get("rate") {
+        cfg.rate_hz = r.parse()?;
+    }
+    if let Some(s) = flags.get("secs") {
+        cfg.duration = std::time::Duration::from_secs_f64(s.parse()?);
+    }
+    if let Some(s) = flags.get("sensors") {
+        cfg.sensors = s.parse()?;
+    }
+    require_artifacts(store, &[cfg.dataset.clone()])?;
+    let rep = serve::run(store, &cfg)?;
+    println!(
+        "serve {}: {} requests in {} batches | {:.0} req/s | mean batch {:.1} | p50 {:.2} ms | p99 {:.2} ms | acc {:.3}",
+        cfg.dataset, rep.requests, rep.batches, rep.throughput_rps, rep.mean_batch,
+        rep.p50_ms, rep.p99_ms, rep.accuracy
+    );
+    Ok(())
+}
+
+fn cmd_info(store: &ArtifactStore) -> Result<()> {
+    println!("artifacts root: {}", store.root.display());
+    for name in crate::data::DATASET_ORDER {
+        if !store.has(name) {
+            println!("  {name:<12} (missing — run `make artifacts`)");
+            continue;
+        }
+        let m = store.model(name)?;
+        let ds = store.dataset(name)?;
+        println!(
+            "  {name:<12} F={:<4} H={:<3} C={:<3} coeffs={:<5} train/test={}/{} trunc={} quant_acc={:.3}",
+            m.features,
+            m.hidden,
+            m.classes,
+            m.coefficients(),
+            ds.train.len(),
+            ds.test.len(),
+            m.trunc,
+            m.test_acc
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse_pairs_and_bools() {
+        let args: Vec<String> = ["--datasets", "a,b", "--native", "--threads", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        assert_eq!(f.get("datasets"), Some("a,b"));
+        assert!(f.has("native"));
+        assert_eq!(f.get("threads"), Some("4"));
+        assert!(f.positional.is_empty());
+    }
+
+    #[test]
+    fn pipeline_config_overrides() {
+        let args: Vec<String> = ["--fit-subset", "64", "--pop", "8", "--native"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = pipeline_config(&f).unwrap();
+        assert_eq!(cfg.fit_subset, 64);
+        assert_eq!(cfg.nsga.pop_size, 8);
+        assert!(!cfg.use_pjrt);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert!(run(vec![]).is_ok());
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal configuration file support (TOML subset): `key = value` pairs
+//! with optional `[section]` headers, `#` comments, strings, numbers,
+//! booleans and comma lists.  Feeds [`crate::coordinator::PipelineConfig`]
+//! and the serve mode; every key can be overridden on the CLI.
+//!
+//! Example (`printed-mlp.toml`):
+//! ```toml
+//! [pipeline]
+//! datasets = spectf, gas
+//! threads = 4
+//! fit_subset = 512
+//! rfp_strategy = bisect
+//! gate_level_accuracy = true
+//!
+//! [nsga]
+//! pop_size = 40
+//! generations = 30
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::PipelineConfig;
+use crate::nsga::NsgaConfig;
+use crate::rfp::Strategy;
+
+/// Parsed configuration: `section.key -> raw value string`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("{key}={v}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("{key}={v}")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.get(key)
+            .map(|v| match v {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("{key}: expected bool, got `{other}`"),
+            })
+            .transpose()
+    }
+
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+
+    /// Materialize the pipeline configuration with defaults filled in.
+    pub fn pipeline(&self) -> Result<PipelineConfig> {
+        let mut cfg = PipelineConfig::default();
+        if let Some(ds) = self.get_list("pipeline.datasets") {
+            for d in &ds {
+                if !crate::data::DATASET_ORDER.contains(&d.as_str()) {
+                    bail!("unknown dataset `{d}`");
+                }
+            }
+            cfg.datasets = ds;
+        }
+        if let Some(t) = self.get_usize("pipeline.threads")? {
+            cfg.threads = t.max(1);
+        }
+        if let Some(b) = self.get_bool("pipeline.use_pjrt")? {
+            cfg.use_pjrt = b;
+        }
+        if let Some(b) = self.get_bool("pipeline.gate_level_accuracy")? {
+            cfg.gate_level_accuracy = b;
+        }
+        if let Some(b) = self.get_bool("pipeline.cache")? {
+            cfg.cache = b;
+        }
+        if let Some(n) = self.get_usize("pipeline.fit_subset")? {
+            cfg.fit_subset = n;
+        }
+        if let Some(s) = self.get("pipeline.rfp_strategy") {
+            cfg.rfp_strategy = match s {
+                "greedy" => Strategy::Greedy,
+                "bisect" => Strategy::Bisect,
+                other => bail!("rfp_strategy: `{other}` (want greedy|bisect)"),
+            };
+        }
+        if let Some(ds) = self.get_list("pipeline.drops") {
+            cfg.drops = ds
+                .iter()
+                .map(|d| d.parse::<f64>().with_context(|| format!("drops: {d}")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        let mut nsga = NsgaConfig::default();
+        if let Some(n) = self.get_usize("nsga.pop_size")? {
+            nsga.pop_size = n.max(4);
+        }
+        if let Some(n) = self.get_usize("nsga.generations")? {
+            nsga.generations = n;
+        }
+        if let Some(p) = self.get_f64("nsga.mutation_prob")? {
+            nsga.mutation_prob = p;
+        }
+        if let Some(p) = self.get_f64("nsga.crossover_prob")? {
+            nsga.crossover_prob = p;
+        }
+        if let Some(s) = self.get_usize("nsga.seed")? {
+            nsga.seed = s as u64;
+        }
+        cfg.nsga = nsga;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            "# comment\n[pipeline]\nthreads = 3\nuse_pjrt = false\ndatasets = spectf, gas\n\n[nsga]\npop_size = 10\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("pipeline.threads").unwrap(), Some(3));
+        assert_eq!(c.get_bool("pipeline.use_pjrt").unwrap(), Some(false));
+        assert_eq!(
+            c.get_list("pipeline.datasets").unwrap(),
+            vec!["spectf".to_string(), "gas".to_string()]
+        );
+        let p = c.pipeline().unwrap();
+        assert_eq!(p.threads, 3);
+        assert!(!p.use_pjrt);
+        assert_eq!(p.nsga.pop_size, 10);
+    }
+
+    #[test]
+    fn rejects_unknown_dataset() {
+        let c = Config::parse("[pipeline]\ndatasets = nosuch\n").unwrap();
+        assert!(c.pipeline().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[broken\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = Config::default();
+        c.set("pipeline.fit_subset", "64");
+        assert_eq!(c.pipeline().unwrap().fit_subset, 64);
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let c = Config::default();
+        let p = c.pipeline().unwrap();
+        assert_eq!(p.datasets.len(), 7);
+    }
+}

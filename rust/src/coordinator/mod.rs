@@ -1,0 +1,528 @@
+//! Pipeline coordinator — the paper's "automated framework" as a leader /
+//! worker system.
+//!
+//! For each dataset the pipeline runs: load artifacts → RFP (Algorithm 1)
+//! → single-cycle tables (Eq. 1) → NSGA-II neuron-approximation search →
+//! generate the four architectures → synthesis-lite characterization →
+//! gate-level accuracy validation.  Datasets fan out across worker
+//! threads; each worker owns its own PJRT engine (the `xla` handles are
+//! `!Send`).  Stage outputs are cached to `artifacts/results/` as JSON so
+//! expensive stages (NSGA) are re-used across harness runs.
+
+pub mod serve;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::approx::{self, Selection};
+use crate::circuits::{combinational, hybrid, seq_multicycle, seq_sota};
+use crate::data::ArtifactStore;
+use crate::model::ApproxTables;
+use crate::nsga::NsgaConfig;
+use crate::rfp::{self, RfpResult, Strategy};
+use crate::runtime::{Engine, NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT};
+use crate::sim::testbench;
+use crate::tech::{self, CircuitReport};
+use crate::util::json::{self, Json};
+use crate::util::pool::{default_threads, scope_map};
+
+/// Pipeline configuration (see `config` for the file format).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub datasets: Vec<String>,
+    pub threads: usize,
+    pub use_pjrt: bool,
+    pub rfp_strategy: Strategy,
+    pub nsga: NsgaConfig,
+    /// Accuracy-drop budgets for Fig. 7 (fractions).
+    pub drops: Vec<f64>,
+    /// Training samples used for fitness evaluation (0 = all).
+    pub fit_subset: usize,
+    /// Validate ours/hybrid accuracy at gate level (slower, exact).
+    pub gate_level_accuracy: bool,
+    /// Reuse cached per-dataset outcomes from disk when present.
+    pub cache: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            datasets: crate::data::DATASET_ORDER.iter().map(|s| s.to_string()).collect(),
+            threads: default_threads(),
+            use_pjrt: true,
+            rfp_strategy: Strategy::Bisect,
+            nsga: NsgaConfig::default(),
+            drops: vec![0.01, 0.02, 0.05],
+            fit_subset: 512,
+            gate_level_accuracy: true,
+            cache: true,
+        }
+    }
+}
+
+/// Synthesis + validation record for one architecture instance.
+#[derive(Clone, Debug)]
+pub struct DesignReport {
+    pub arch: &'static str,
+    pub report: CircuitReport,
+    pub cycles: usize,
+    pub clock_ms: f64,
+    pub energy_mj: f64,
+    pub test_acc: f64,
+}
+
+/// Everything the harnesses need for one dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetOutcome {
+    pub name: String,
+    pub quant_test_acc: f64,
+    pub rfp: RfpResult,
+    pub tables: ApproxTables,
+    /// (drop budget, selection) pairs, one per configured budget.
+    pub selections: Vec<(f64, Selection)>,
+    /// comb / seq_sota / multicycle, plus one hybrid per drop budget
+    /// (named `hybrid@<drop>`).
+    pub comb: DesignReport,
+    pub sota: DesignReport,
+    pub ours: DesignReport,
+    pub hybrids: Vec<(f64, DesignReport)>,
+}
+
+/// An accuracy evaluator that prefers PJRT and falls back to the native
+/// functional model.
+enum Eval<'m> {
+    Pjrt(PjrtEvaluator),
+    Native(NativeEvaluator<'m>),
+}
+
+impl<'m> Eval<'m> {
+    fn accuracy(
+        &self,
+        split: &crate::data::Split,
+        fm: &[u8],
+        am: &[u8],
+        t: &ApproxTables,
+    ) -> f64 {
+        match self {
+            Eval::Pjrt(e) => e
+                .accuracy(split, fm, am, t)
+                .expect("PJRT evaluation failed mid-pipeline"),
+            Eval::Native(e) => e.accuracy(split, fm, am, t),
+        }
+    }
+}
+
+/// Run the full pipeline for one dataset.
+pub fn run_dataset(
+    store: &ArtifactStore,
+    name: &str,
+    cfg: &PipelineConfig,
+) -> Result<DatasetOutcome> {
+    let model = store.model(name)?;
+    let ds = store.dataset(name)?;
+
+    let engine = if cfg.use_pjrt { Some(Engine::cpu()?) } else { None };
+    let eval = match &engine {
+        Some(engine) => Eval::Pjrt(PjrtEvaluator::new(
+            engine,
+            &store.hlo_path(name, BATCH_THROUGHPUT),
+            &model,
+            BATCH_THROUGHPUT,
+        )?),
+        None => Eval::Native(NativeEvaluator { model: &model }),
+    };
+
+    let fit_split = if cfg.fit_subset > 0 {
+        ds.train.head(cfg.fit_subset)
+    } else {
+        ds.train.clone()
+    };
+    // §Perf: stage the fitness split's input literals once — RFP and NSGA
+    // evaluate the same split hundreds of times with different masks, and
+    // rebuilding the B×F input literal per call dominated the fitness path.
+    let prep = match &eval {
+        Eval::Pjrt(e) => Some(e.prepare(&fit_split)?),
+        Eval::Native(_) => None,
+    };
+    let fit_acc = |fm: &[u8], am: &[u8], t: &ApproxTables| -> f64 {
+        match (&eval, &prep) {
+            (Eval::Pjrt(e), Some(p)) => e
+                .accuracy_prepared(p, fm, am, t)
+                .expect("PJRT evaluation failed mid-pipeline"),
+            _ => eval.accuracy(&fit_split, fm, am, t),
+        }
+    };
+    let h = model.hidden;
+    let no_approx = vec![0u8; h];
+    let no_tables = ApproxTables::disabled(h);
+
+    // --- Stage 1: RFP (Algorithm 1) ----------------------------------------
+    let full_mask = vec![1u8; model.features];
+    let threshold = fit_acc(&full_mask, &no_approx, &no_tables);
+    let rfp = rfp::prune(&model, &fit_split, threshold, cfg.rfp_strategy, |mask| {
+        fit_acc(mask, &no_approx, &no_tables)
+    });
+
+    // --- Stage 2: single-cycle tables + NSGA-II ----------------------------
+    let tables = approx::build_tables(&model, &fit_split.xs, fit_split.len(), &rfp.feat_mask);
+    let baseline = rfp.accuracy;
+    let front = approx::explore(h, &cfg.nsga, |mask| {
+        fit_acc(&rfp.feat_mask, mask, &tables)
+    });
+    let selections: Vec<(f64, Selection)> = cfg
+        .drops
+        .iter()
+        .map(|&d| (d, approx::select(&front, baseline, d)))
+        .collect();
+
+    // --- Stage 3: circuits + synthesis-lite + validation -------------------
+    let active = &rfp.active;
+    let test = &ds.test;
+    let mk_seq_report = |circ: &crate::circuits::SeqCircuit,
+                         arch: &'static str,
+                         am: &[u8],
+                         tb: &ApproxTables|
+     -> DesignReport {
+        let rep = tech::report(&circ.netlist);
+        let acc = if cfg.gate_level_accuracy {
+            let preds = testbench::run_sequential(&circ, &test.xs, test.len(), model.features);
+            testbench::accuracy(&preds, &test.ys)
+        } else {
+            eval.accuracy(test, &rfp.feat_mask, am, tb)
+        };
+        DesignReport {
+            arch,
+            cycles: circ.cycles + 1, // + reset cycle
+            clock_ms: model.seq_clock_ms,
+            energy_mj: rep.energy_mj(circ.cycles + 1, model.seq_clock_ms),
+            test_acc: acc,
+            report: rep,
+        }
+    };
+
+    let ours_c = seq_multicycle::generate(&model, active);
+    let ours = mk_seq_report(&ours_c, "multicycle", &no_approx, &no_tables);
+
+    let sota_c = seq_sota::generate(&model, active);
+    let sota = mk_seq_report(&sota_c, "seq_sota", &no_approx, &no_tables);
+
+    let comb_c = combinational::generate(&model, active);
+    let comb = {
+        let rep = tech::report(&comb_c.netlist);
+        let acc = if cfg.gate_level_accuracy {
+            let preds = testbench::run_combinational(&comb_c, &test.xs, test.len(), model.features);
+            testbench::accuracy(&preds, &test.ys)
+        } else {
+            eval.accuracy(test, &rfp.feat_mask, &no_approx, &no_tables)
+        };
+        DesignReport {
+            arch: "combinational",
+            cycles: 1,
+            clock_ms: model.comb_clock_ms,
+            energy_mj: rep.energy_mj(1, model.comb_clock_ms),
+            test_acc: acc,
+            report: rep,
+        }
+    };
+
+    let mut hybrids = Vec::new();
+    for (drop, sel) in &selections {
+        let approx_b: Vec<bool> = sel.approx_mask.iter().map(|&m| m == 1).collect();
+        let circ = hybrid::generate(&model, active, &approx_b, &tables);
+        hybrids.push((
+            *drop,
+            mk_seq_report(&circ, "hybrid", &sel.approx_mask, &tables),
+        ));
+    }
+
+    Ok(DatasetOutcome {
+        name: name.to_string(),
+        quant_test_acc: model.test_acc,
+        rfp,
+        tables,
+        selections,
+        comb,
+        sota,
+        ours,
+        hybrids,
+    })
+}
+
+/// Fan the pipeline out over datasets (one worker thread each, each with
+/// its own PJRT engine), honoring the JSON stage cache.
+pub fn run_pipeline(store: &ArtifactStore, cfg: &PipelineConfig) -> Result<Vec<DatasetOutcome>> {
+    let results = scope_map(cfg.datasets.len(), cfg.threads, |i| {
+        let name = &cfg.datasets[i];
+        if cfg.cache {
+            if let Some(out) = load_cached(store, name, cfg) {
+                return Ok(out);
+            }
+        }
+        let out = run_dataset(store, name, cfg)
+            .with_context(|| format!("pipeline failed for dataset {name}"))?;
+        if cfg.cache {
+            let _ = save_cached(store, &out, cfg);
+        }
+        Ok(out)
+    });
+    results.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// Disk cache (artifacts/results/pipeline_<ds>.json)
+// ---------------------------------------------------------------------------
+
+fn cache_key(cfg: &PipelineConfig) -> String {
+    format!(
+        "v3-fit{}-pop{}-gen{}-{:?}",
+        cfg.fit_subset, cfg.nsga.pop_size, cfg.nsga.generations, cfg.rfp_strategy
+    )
+}
+
+fn cache_path(store: &ArtifactStore, name: &str) -> PathBuf {
+    store.results_dir().join(format!("pipeline_{name}.json"))
+}
+
+fn design_to_json(d: &DesignReport) -> Json {
+    json::obj(vec![
+        ("arch", json::s(d.arch)),
+        ("cells", json::num(d.report.n_cells as f64)),
+        ("dffs", json::num(d.report.n_dffs as f64)),
+        ("area_cm2", json::num(d.report.area_cm2)),
+        ("power_mw", json::num(d.report.power_mw)),
+        ("crit_path_ms", json::num(d.report.crit_path_ms)),
+        ("logic_depth", json::num(d.report.logic_depth as f64)),
+        ("cycles", json::num(d.cycles as f64)),
+        ("clock_ms", json::num(d.clock_ms)),
+        ("energy_mj", json::num(d.energy_mj)),
+        ("test_acc", json::num(d.test_acc)),
+    ])
+}
+
+fn design_from_json(j: &Json, arch: &'static str) -> Result<DesignReport> {
+    Ok(DesignReport {
+        arch,
+        report: CircuitReport {
+            name: arch.to_string(),
+            cells: Default::default(),
+            n_cells: j.get("cells")?.int()? as usize,
+            n_dffs: j.get("dffs")?.int()? as usize,
+            area_cm2: j.get("area_cm2")?.num()?,
+            power_mw: j.get("power_mw")?.num()?,
+            crit_path_ms: j.get("crit_path_ms")?.num()?,
+            logic_depth: j.get("logic_depth")?.int()? as usize,
+        },
+        cycles: j.get("cycles")?.int()? as usize,
+        clock_ms: j.get("clock_ms")?.num()?,
+        energy_mj: j.get("energy_mj")?.num()?,
+        test_acc: j.get("test_acc")?.num()?,
+    })
+}
+
+fn save_cached(store: &ArtifactStore, out: &DatasetOutcome, cfg: &PipelineConfig) -> Result<()> {
+    let sels = out
+        .selections
+        .iter()
+        .map(|(d, s)| {
+            json::obj(vec![
+                ("drop", json::num(*d)),
+                ("n_approx", json::num(s.n_approx as f64)),
+                ("accuracy", json::num(s.accuracy)),
+                (
+                    "mask",
+                    Json::Arr(s.approx_mask.iter().map(|&m| json::num(m as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let hybrids = out
+        .hybrids
+        .iter()
+        .map(|(d, r)| {
+            json::obj(vec![("drop", json::num(*d)), ("design", design_to_json(r))])
+        })
+        .collect();
+    let j = json::obj(vec![
+        ("key", json::s(&cache_key(cfg))),
+        ("name", json::s(&out.name)),
+        ("quant_test_acc", json::num(out.quant_test_acc)),
+        ("rfp_kept", json::num(out.rfp.kept as f64)),
+        ("rfp_total", json::num(out.rfp.order.len() as f64)),
+        ("rfp_acc", json::num(out.rfp.accuracy)),
+        ("rfp_threshold", json::num(out.rfp.threshold)),
+        ("rfp_evals", json::num(out.rfp.evals as f64)),
+        (
+            "rfp_order",
+            Json::Arr(out.rfp.order.iter().map(|&f| json::num(f as f64)).collect()),
+        ),
+        (
+            "tables",
+            json::obj(vec![
+                ("idx", Json::Arr(out.tables.idx.iter().map(|&v| json::num(v as f64)).collect())),
+                ("pos", Json::Arr(out.tables.pos.iter().map(|&v| json::num(v as f64)).collect())),
+                ("l1", Json::Arr(out.tables.l1.iter().map(|&v| json::num(v as f64)).collect())),
+                ("sign", Json::Arr(out.tables.sign.iter().map(|&v| json::num(v as f64)).collect())),
+                ("base", Json::Arr(out.tables.base.iter().map(|&v| json::num(v as f64)).collect())),
+            ]),
+        ),
+        ("selections", Json::Arr(sels)),
+        ("comb", design_to_json(&out.comb)),
+        ("sota", design_to_json(&out.sota)),
+        ("ours", design_to_json(&out.ours)),
+        ("hybrids", Json::Arr(hybrids)),
+    ]);
+    std::fs::create_dir_all(store.results_dir())?;
+    std::fs::write(cache_path(store, &out.name), j.to_string())?;
+    Ok(())
+}
+
+fn load_cached(store: &ArtifactStore, name: &str, cfg: &PipelineConfig) -> Option<DatasetOutcome> {
+    let text = std::fs::read_to_string(cache_path(store, name)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("key").ok()?.str().ok()? != cache_key(cfg) {
+        return None;
+    }
+    let order: Vec<usize> = j
+        .get("rfp_order")
+        .ok()?
+        .i32_vec()
+        .ok()?
+        .into_iter()
+        .map(|v| v as usize)
+        .collect();
+    let kept = j.get("rfp_kept").ok()?.int().ok()? as usize;
+    let total = j.get("rfp_total").ok()?.int().ok()? as usize;
+    let mut feat_mask = vec![0u8; total];
+    for &f in &order[..kept] {
+        feat_mask[f] = 1;
+    }
+    let t = j.get("tables").ok()?;
+    let tables = ApproxTables {
+        idx: t.get("idx").ok()?.i32_vec().ok()?,
+        pos: t.get("pos").ok()?.i32_vec().ok()?,
+        l1: t.get("l1").ok()?.i32_vec().ok()?,
+        sign: t.get("sign").ok()?.i32_vec().ok()?,
+        base: t.get("base").ok()?.i32_vec().ok()?,
+    };
+    let mut selections = Vec::new();
+    for s in j.get("selections").ok()?.arr().ok()? {
+        selections.push((
+            s.get("drop").ok()?.num().ok()?,
+            Selection {
+                approx_mask: s
+                    .get("mask")
+                    .ok()?
+                    .i32_vec()
+                    .ok()?
+                    .into_iter()
+                    .map(|v| v as u8)
+                    .collect(),
+                n_approx: s.get("n_approx").ok()?.int().ok()? as usize,
+                accuracy: s.get("accuracy").ok()?.num().ok()?,
+            },
+        ));
+    }
+    let mut hybrids = Vec::new();
+    for hj in j.get("hybrids").ok()?.arr().ok()? {
+        hybrids.push((
+            hj.get("drop").ok()?.num().ok()?,
+            design_from_json(hj.get("design").ok()?, "hybrid").ok()?,
+        ));
+    }
+    Some(DatasetOutcome {
+        name: name.to_string(),
+        quant_test_acc: j.get("quant_test_acc").ok()?.num().ok()?,
+        rfp: RfpResult {
+            active: order[..kept].to_vec(),
+            order,
+            kept,
+            feat_mask,
+            accuracy: j.get("rfp_acc").ok()?.num().ok()?,
+            threshold: j.get("rfp_threshold").ok()?.num().ok()?,
+            evals: j.get("rfp_evals").ok()?.int().ok()? as usize,
+        },
+        tables,
+        selections,
+        comb: design_from_json(j.get("comb").ok()?, "combinational").ok()?,
+        sota: design_from_json(j.get("sota").ok()?, "seq_sota").ok()?,
+        ours: design_from_json(j.get("ours").ok()?, "multicycle").ok()?,
+        hybrids,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.datasets.len(), 7);
+        assert!(c.threads >= 1);
+        assert_eq!(c.drops, vec![0.01, 0.02, 0.05]);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pmlp_cache_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("results")).unwrap();
+        let store = ArtifactStore::new(&dir);
+        let cfg = PipelineConfig::default();
+        let rep = CircuitReport {
+            name: "x".into(),
+            cells: Default::default(),
+            n_cells: 10,
+            n_dffs: 2,
+            area_cm2: 1.5,
+            power_mw: 0.7,
+            crit_path_ms: 12.0,
+            logic_depth: 9,
+        };
+        let d = DesignReport {
+            arch: "multicycle",
+            report: rep,
+            cycles: 50,
+            clock_ms: 100.0,
+            energy_mj: 3.5,
+            test_acc: 0.9,
+        };
+        let out = DatasetOutcome {
+            name: "toy".into(),
+            quant_test_acc: 0.91,
+            rfp: RfpResult {
+                order: vec![2, 0, 1],
+                kept: 2,
+                feat_mask: vec![1, 0, 1],
+                active: vec![2, 0],
+                accuracy: 0.9,
+                threshold: 0.89,
+                evals: 3,
+            },
+            tables: ApproxTables::disabled(2),
+            selections: vec![(
+                0.01,
+                Selection {
+                    approx_mask: vec![1, 0],
+                    n_approx: 1,
+                    accuracy: 0.89,
+                },
+            )],
+            comb: d.clone(),
+            sota: d.clone(),
+            ours: d.clone(),
+            hybrids: vec![(0.01, d.clone())],
+        };
+        save_cached(&store, &out, &cfg).unwrap();
+        let back = load_cached(&store, "toy", &cfg).expect("cache load");
+        assert_eq!(back.rfp.kept, 2);
+        assert_eq!(back.rfp.active, vec![2, 0]);
+        assert_eq!(back.selections[0].1.approx_mask, vec![1, 0]);
+        assert_eq!(back.ours.cycles, 50);
+        // Different key invalidates.
+        let mut cfg2 = cfg.clone();
+        cfg2.fit_subset = 99;
+        assert!(load_cached(&store, "toy", &cfg2).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,175 @@
+//! Multi-sensory streaming "serve" mode: the deployment story of the
+//! paper's intro (wearables streaming sensor frames), run against the
+//! PJRT-compiled classifier with a dynamic batcher — the L3 request path
+//! with Python nowhere in sight.
+//!
+//! Sensor threads push frames into a channel; the leader drains up to the
+//! compiled batch size (or until `max_wait` expires), executes one PJRT
+//! call, and records per-request latency.  This is the standard dynamic
+//! batching trade-off (throughput vs tail latency) in miniature.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::{ArtifactStore, Dataset};
+use crate::model::ApproxTables;
+use crate::runtime::{Engine, PjrtEvaluator, BATCH_THROUGHPUT};
+use crate::util::prng::Rng;
+use crate::util::stats;
+
+/// Serve-mode configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub dataset: String,
+    /// Offered load, frames per second across all sensors.
+    pub rate_hz: f64,
+    pub duration: Duration,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    pub sensors: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            dataset: "spectf".into(),
+            rate_hz: 2000.0,
+            duration: Duration::from_secs(3),
+            max_wait: Duration::from_millis(2),
+            sensors: 4,
+            seed: 7,
+        }
+    }
+}
+
+/// Latency/throughput summary of a serve run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub accuracy: f64,
+}
+
+struct Frame {
+    sample: usize,
+    enqueued: Instant,
+}
+
+/// Run the streaming workload; returns the latency/throughput report.
+pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServeReport> {
+    let model = store.model(&cfg.dataset)?;
+    let ds: Dataset = store.dataset(&cfg.dataset)?;
+    let engine = Engine::cpu()?;
+    let eval = PjrtEvaluator::new(
+        &engine,
+        &store.hlo_path(&cfg.dataset, BATCH_THROUGHPUT),
+        &model,
+        BATCH_THROUGHPUT,
+    )?;
+    let features = model.features;
+    let fm = vec![1u8; features];
+    let am = vec![0u8; model.hidden];
+    let tables = ApproxTables::disabled(model.hidden);
+
+    let (tx, rx) = mpsc::channel::<Frame>();
+    let deadline = Instant::now() + cfg.duration;
+
+    // Sensor threads: Poisson-ish arrivals at rate/sensors each.
+    std::thread::scope(|scope| -> Result<ServeReport> {
+        for s in 0..cfg.sensors {
+            let tx = tx.clone();
+            let per_sensor = cfg.rate_hz / cfg.sensors as f64;
+            let n_test = ds.test.len();
+            let seed = cfg.seed + s as u64;
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed);
+                while Instant::now() < deadline {
+                    // Exponential inter-arrival.
+                    let gap = -rng.f64().max(1e-12).ln() / per_sensor;
+                    std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+                    let sample = rng.usize_below(n_test);
+                    if tx
+                        .send(Frame {
+                            sample,
+                            enqueued: Instant::now(),
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        // Leader: dynamic batcher on this thread (PJRT handles are !Send).
+        let mut latencies = Vec::new();
+        let mut batches = 0usize;
+        let mut batch_sizes = Vec::new();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let started = Instant::now();
+        let mut xbuf: Vec<u8> = Vec::with_capacity(BATCH_THROUGHPUT * features);
+        let mut frames: Vec<Frame> = Vec::with_capacity(BATCH_THROUGHPUT);
+
+        'outer: loop {
+            frames.clear();
+            xbuf.clear();
+            // Block for the first frame (or finish when producers hang up).
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(f) => frames.push(f),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if Instant::now() >= deadline {
+                        break 'outer;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+            }
+            // Fill the batch until full or max_wait.
+            let wait_until = Instant::now() + cfg.max_wait;
+            while frames.len() < BATCH_THROUGHPUT {
+                let now = Instant::now();
+                if now >= wait_until {
+                    break;
+                }
+                match rx.recv_timeout(wait_until - now) {
+                    Ok(f) => frames.push(f),
+                    Err(_) => break,
+                }
+            }
+            for f in &frames {
+                xbuf.extend_from_slice(ds.test.row(f.sample));
+            }
+            let preds = eval.predict(&xbuf, frames.len(), &fm, &am, &tables)?;
+            let done = Instant::now();
+            batches += 1;
+            batch_sizes.push(frames.len() as f64);
+            for (f, &p) in frames.iter().zip(&preds) {
+                latencies.push((done - f.enqueued).as_secs_f64() * 1e3);
+                total += 1;
+                if p == ds.test.ys[f.sample] as i32 {
+                    correct += 1;
+                }
+            }
+        }
+
+        let elapsed = started.elapsed().as_secs_f64();
+        Ok(ServeReport {
+            requests: total,
+            batches,
+            throughput_rps: total as f64 / elapsed.max(1e-9),
+            mean_batch: stats::mean(&batch_sizes),
+            p50_ms: stats::percentile(&latencies, 50.0),
+            p99_ms: stats::percentile(&latencies, 99.0),
+            accuracy: correct as f64 / total.max(1) as f64,
+        })
+    })
+}

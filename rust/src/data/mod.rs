@@ -1,0 +1,279 @@
+//! Dataset registry and binary loader.
+//!
+//! Datasets are generated at build time by `python/compile/datasets.py`
+//! (deterministic synthetic multi-sensor data — see DESIGN.md
+//! §Substitutions) and stored in a compact little-endian binary format:
+//!
+//! ```text
+//! u32 magic "PMLP" | u32 version | u32 n_train | u32 n_test |
+//! u32 features | u32 classes |
+//! x_train (n_train*F u8) | y_train (n_train u16) | x_test | y_test
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: u32 = 0x504D_4C50; // "PMLP"
+pub const VERSION: u32 = 2;
+
+/// The seven paper datasets in Fig. 6 order (by coefficient count).
+pub const DATASET_ORDER: [&str; 7] = [
+    "spectf",
+    "arrhythmia",
+    "gas",
+    "epileptic",
+    "activity",
+    "parkinsons",
+    "har",
+];
+
+/// One split (train or test): row-major 4-bit inputs plus labels.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub xs: Vec<u8>,
+    pub ys: Vec<u16>,
+    pub features: usize,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.xs[i * self.features..(i + 1) * self.features]
+    }
+
+    /// A sub-split view (copy) of the first `n` samples.
+    pub fn head(&self, n: usize) -> Split {
+        let n = n.min(self.len());
+        Split {
+            xs: self.xs[..n * self.features].to_vec(),
+            ys: self.ys[..n].to_vec(),
+            features: self.features,
+        }
+    }
+}
+
+/// A loaded dataset (both splits + metadata).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub classes: usize,
+    pub train: Split,
+    pub test: Split,
+}
+
+fn read_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    if *off + 4 > b.len() {
+        bail!("truncated dataset file at byte {off}");
+    }
+    let v = u32::from_le_bytes(b[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let b = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_default();
+        let mut off = 0usize;
+        let magic = read_u32(&b, &mut off)?;
+        let version = read_u32(&b, &mut off)?;
+        if magic != MAGIC {
+            bail!("{}: bad magic {magic:#x}", path.display());
+        }
+        if version != VERSION {
+            bail!("{}: version {version}, want {VERSION}", path.display());
+        }
+        let n_train = read_u32(&b, &mut off)? as usize;
+        let n_test = read_u32(&b, &mut off)? as usize;
+        let features = read_u32(&b, &mut off)? as usize;
+        let classes = read_u32(&b, &mut off)? as usize;
+
+        let take = |off: &mut usize, n: usize| -> Result<Vec<u8>> {
+            if *off + n > b.len() {
+                bail!("truncated dataset payload");
+            }
+            let v = b[*off..*off + n].to_vec();
+            *off += n;
+            Ok(v)
+        };
+        let take_u16 = |off: &mut usize, n: usize| -> Result<Vec<u16>> {
+            if *off + 2 * n > b.len() {
+                bail!("truncated dataset labels");
+            }
+            let v = b[*off..*off + 2 * n]
+                .chunks_exact(2)
+                .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                .collect();
+            *off += 2 * n;
+            Ok(v)
+        };
+
+        let x_train = take(&mut off, n_train * features)?;
+        let y_train = take_u16(&mut off, n_train)?;
+        let x_test = take(&mut off, n_test * features)?;
+        let y_test = take_u16(&mut off, n_test)?;
+        if off != b.len() {
+            bail!("{}: {} trailing bytes", path.display(), b.len() - off);
+        }
+        for &x in x_train.iter().chain(&x_test) {
+            if x > 15 {
+                bail!("input value {x} exceeds 4-bit range");
+            }
+        }
+        for &y in y_train.iter().chain(&y_test) {
+            if y as usize >= classes {
+                bail!("label {y} out of range (classes={classes})");
+            }
+        }
+        Ok(Dataset {
+            name,
+            classes,
+            train: Split {
+                xs: x_train,
+                ys: y_train,
+                features,
+            },
+            test: Split {
+                xs: x_test,
+                ys: y_test,
+                features,
+            },
+        })
+    }
+}
+
+/// Resolves artifact paths; root defaults to `$PRINTED_MLP_ARTIFACTS` or
+/// `./artifacts`.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    pub root: PathBuf,
+}
+
+impl ArtifactStore {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        ArtifactStore { root: root.into() }
+    }
+
+    pub fn discover() -> Self {
+        let root = std::env::var("PRINTED_MLP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactStore::new(root)
+    }
+
+    pub fn dataset_path(&self, name: &str) -> PathBuf {
+        self.root.join("data").join(format!("{name}.bin"))
+    }
+
+    pub fn model_path(&self, name: &str) -> PathBuf {
+        self.root.join("models").join(format!("{name}.json"))
+    }
+
+    pub fn hlo_path(&self, name: &str, batch: usize) -> PathBuf {
+        self.root.join("hlo").join(format!("{name}_b{batch}.hlo.txt"))
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<Dataset> {
+        Dataset::load(&self.dataset_path(name))
+    }
+
+    pub fn model(&self, name: &str) -> Result<crate::model::QuantModel> {
+        crate::model::QuantModel::load(&self.model_path(name))
+    }
+
+    /// True when `make artifacts` has produced everything for `name`.
+    pub fn has(&self, name: &str) -> bool {
+        self.dataset_path(name).exists() && self.model_path(name).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(bytes: &[u8]) -> PathBuf {
+        let dir = std::env::temp_dir().join("printed_mlp_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("ds_{}.bin", std::process::id()));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    fn sample_file() -> Vec<u8> {
+        let mut b = Vec::new();
+        for v in [MAGIC, VERSION, 2u32, 1u32, 3u32, 2u32] {
+            b.extend(v.to_le_bytes());
+        }
+        b.extend([1u8, 2, 3, 4, 5, 6]); // x_train 2x3
+        b.extend(0u16.to_le_bytes());
+        b.extend(1u16.to_le_bytes()); // y_train
+        b.extend([7u8, 8, 9]); // x_test 1x3
+        b.extend(1u16.to_le_bytes()); // y_test
+        b
+    }
+
+    #[test]
+    fn loads_valid_file() {
+        let path = write_tmp(&sample_file());
+        let ds = Dataset::load(&path).unwrap();
+        assert_eq!(ds.train.len(), 2);
+        assert_eq!(ds.test.len(), 1);
+        assert_eq!(ds.train.row(1), &[4, 5, 6]);
+        assert_eq!(ds.classes, 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut f = sample_file();
+        f[0] = 0;
+        let path = write_tmp(&f);
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let f = sample_file();
+        let path = write_tmp(&f[..f.len() - 1]);
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+        let mut g = sample_file();
+        g.push(0);
+        let path = write_tmp(&g);
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_values() {
+        let mut f = sample_file();
+        f[24] = 16; // first x_train byte > 15
+        let path = write_tmp(&f);
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn head_takes_prefix() {
+        let path = write_tmp(&sample_file());
+        let ds = Dataset::load(&path).unwrap();
+        let h = ds.train.head(1);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.row(0), &[1, 2, 3]);
+        std::fs::remove_file(path).ok();
+    }
+}

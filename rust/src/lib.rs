@@ -1,0 +1,40 @@
+//! # printed-mlp
+//!
+//! Full-stack reproduction of *"Sequential Printed Multilayer Perceptron
+//! Circuits for Super-TinyML Multi-Sensory Applications"* (ASPDAC'25).
+//!
+//! The crate implements the paper's automated framework plus every
+//! substrate it depends on:
+//!
+//! - [`model`] — bit-exact functional model of pow2-quantized hybrid MLPs
+//!   (multi-cycle + single-cycle neurons, qReLU).
+//! - [`data`] — the seven multi-sensor dataset configurations and loaders.
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts.
+//! - [`rfp`] — Redundant Feature Pruning (Algorithm 1).
+//! - [`nsga`] — NSGA-II multi-objective optimizer.
+//! - [`approx`] — neuron-approximation framework (Eq. 1, Fig. 5).
+//! - [`netlist`] — gate-level IR, optimizer and Verilog emitter.
+//! - [`circuits`] — the four architectures: combinational [14], sequential
+//!   state-of-the-art [16], our multi-cycle sequential, and the hybrid.
+//! - [`tech`] — printed-EGFET cell library and synthesis-lite estimation.
+//! - [`sim`] — cycle-accurate netlist simulator (VCS substitute).
+//! - [`coordinator`] — pipeline orchestration and the streaming serve mode.
+//! - [`report`] — table/figure emitters for the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod approx;
+pub mod circuits;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod netlist;
+pub mod nsga;
+pub mod report;
+pub mod rfp;
+pub mod runtime;
+pub mod sim;
+pub mod tech;
+pub mod util;

@@ -1,0 +1,7 @@
+//! `printed-mlp` — leader entrypoint. See `cli` for subcommands.
+fn main() {
+    if let Err(e) = printed_mlp::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Offline statistical analysis: average expected products (Eq. 1),
+//! feature relevance for RFP, and the single-cycle neuron tables (Fig. 5).
+
+use crate::data::Split;
+use crate::model::{ApproxTables, QuantModel};
+
+/// Mean of each feature over a dataset split, in input units `[0, 15]`.
+pub fn feature_means(xs: &[u8], n: usize, features: usize) -> Vec<f64> {
+    let mut mu = vec![0.0f64; features];
+    for i in 0..n {
+        for f in 0..features {
+            mu[f] += xs[i * features + f] as f64;
+        }
+    }
+    for m in &mut mu {
+        *m /= n.max(1) as f64;
+    }
+    mu
+}
+
+/// Average expected product of feature `f` for hidden neuron `h` (Eq. 1):
+/// `avg_prod[h][f] = E[x_f] * |w_{h,f}|` with `|w| = 2^p` (0 when pruned).
+pub fn avg_products(model: &QuantModel, means: &[f64]) -> Vec<f64> {
+    let (h, fs) = (model.hidden, model.features);
+    let mut out = vec![0.0f64; h * fs];
+    for n in 0..h {
+        for f in 0..fs {
+            let i = n * fs + f;
+            if model.w1s[i] != 0 {
+                out[i] = means[f] * (1i64 << model.w1p[i]) as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Per-feature relevance for RFP (Algorithm 1): the average over hidden
+/// neurons of the absolute expected products.
+pub fn feature_relevance(model: &QuantModel, means: &[f64]) -> Vec<f64> {
+    let ap = avg_products(model, means);
+    let (h, fs) = (model.hidden, model.features);
+    let mut rel = vec![0.0f64; fs];
+    for f in 0..fs {
+        for n in 0..h {
+            rel[f] += ap[n * fs + f];
+        }
+        rel[f] /= h as f64;
+    }
+    rel
+}
+
+/// Feature order by decreasing relevance (ties break on index for
+/// determinism).
+pub fn relevance_order(rel: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..rel.len()).collect();
+    order.sort_by(|&a, &b| rel[b].partial_cmp(&rel[a]).unwrap().then(a.cmp(&b)));
+    order
+}
+
+/// Build the single-cycle neuron tables: for each hidden neuron pick the
+/// two most-important *active* inputs (highest avg_prod among
+/// `feat_mask==1`), record the expected leading-1 position of their
+/// products and the bit of the raw input that predicts it.
+///
+/// The hardwired `base` constant makes the single-cycle estimator
+/// *unbiased*: it is the bias plus the expected signed contribution of
+/// every active feature, minus the expected value of the two bit
+/// contributions (`sign * P(bit=1) * 2^l1`).  The probed bits then act as
+/// zero-mean corrections around the expectation — this is the §3.1.2
+/// "realignment with the multi-cycle neurons", and it costs no hardware
+/// because it folds into the accumulator's reset constant.
+pub fn approx_tables(
+    model: &QuantModel,
+    xs: &[u8],
+    n_samples: usize,
+    feat_mask: &[u8],
+) -> ApproxTables {
+    let (h, fs) = (model.hidden, model.features);
+    let means = feature_means(xs, n_samples, fs);
+    let ap = avg_products(model, &means);
+    let in_max_bit = model.in_bits as i32 - 1;
+    // Empirical probability that bit `pos` of feature `f` is set.
+    let bit_prob = |f: usize, pos: i32| -> f64 {
+        if n_samples == 0 {
+            return 0.5;
+        }
+        let mut cnt = 0usize;
+        for i in 0..n_samples {
+            if (xs[i * fs + f] >> pos) & 1 == 1 {
+                cnt += 1;
+            }
+        }
+        cnt as f64 / n_samples as f64
+    };
+    let mut t = ApproxTables::disabled(h);
+    for n in 0..h {
+        // Top-2 active features by avg_prod.
+        let mut best: [(f64, usize); 2] = [(-1.0, 0), (-1.0, 0)];
+        for f in 0..fs {
+            if feat_mask[f] == 0 || model.w1s[n * fs + f] == 0 {
+                continue;
+            }
+            let v = ap[n * fs + f];
+            if v > best[0].0 {
+                best[1] = best[0];
+                best[0] = (v, f);
+            } else if v > best[1].0 {
+                best[1] = (v, f);
+            }
+        }
+        for (k, &(v, f)) in best.iter().enumerate() {
+            if v <= 0.0 {
+                continue; // fewer than 2 usable inputs: leave sign=0 slot
+            }
+            let wi = n * fs + f;
+            let p = model.w1p[wi];
+            // Expected leading-1 of the product E[x_f]*2^p.
+            let l1 = v.max(1.0).log2().floor() as i32;
+            let slot = n * 2 + k;
+            t.idx[slot] = f as i32;
+            t.l1[slot] = l1;
+            // The probed input bit: leading-1 column minus the weight shift,
+            // clamped to the 4-bit input width.
+            t.pos[slot] = (l1 - p).clamp(0, in_max_bit);
+            t.sign[slot] = model.w1s[wi];
+        }
+        // Unbiased hardwired base (see doc comment above).
+        let mut base = model.b1[n] as f64;
+        for f in 0..fs {
+            let i = n * fs + f;
+            if feat_mask[f] == 0 || model.w1s[i] == 0 {
+                continue;
+            }
+            base += model.w1s[i] as f64 * means[f] * (1i64 << model.w1p[i]) as f64;
+        }
+        for k in 0..2 {
+            let slot = n * 2 + k;
+            if t.sign[slot] == 0 {
+                continue;
+            }
+            let pr = bit_prob(t.idx[slot] as usize, t.pos[slot]);
+            base -= t.sign[slot] as f64 * pr * (1i64 << t.l1[slot]) as f64;
+        }
+        t.base[n] = base.round() as i32;
+    }
+    t
+}
+
+/// Convenience: tables from a dataset split with a full feature mask.
+pub fn approx_tables_from_split(model: &QuantModel, split: &Split) -> ApproxTables {
+    approx_tables(model, &split.xs, split.len(), &vec![1u8; model.features])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantModel;
+
+    fn toy() -> QuantModel {
+        QuantModel {
+            name: "toy".into(),
+            features: 4,
+            classes: 2,
+            hidden: 2,
+            in_bits: 4,
+            w_bits: 8,
+            pmax: 6,
+            trunc: 0,
+            seq_clock_ms: 100.0,
+            comb_clock_ms: 320.0,
+            float_acc: 0.0,
+            train_acc: 0.0,
+            test_acc: 0.0,
+            // n0 weights: [2^0, -2^3, 0, 2^1], n1: [0, 2^0, 2^2, 0]
+            w1p: vec![0, 3, 0, 1, 0, 0, 2, 0],
+            w1s: vec![1, -1, 0, 1, 0, 1, 1, 0],
+            b1: vec![0, 0],
+            w2p: vec![0, 0, 0, 0],
+            w2s: vec![1, 1, 1, 1],
+            b2: vec![0, 0],
+        }
+    }
+
+    #[test]
+    fn means_are_columnwise() {
+        // 2 samples, 3 features
+        let xs = [1u8, 2, 3, 3, 2, 1];
+        let mu = feature_means(&xs, 2, 3);
+        assert_eq!(mu, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn avg_prod_eq1() {
+        let m = toy();
+        let means = vec![2.0, 4.0, 8.0, 1.0];
+        let ap = avg_products(&m, &means);
+        // n0: [2*1, 4*8, 0 (pruned), 1*2] = [2, 32, 0, 2]
+        assert_eq!(&ap[0..4], &[2.0, 32.0, 0.0, 2.0]);
+        // n1: [0, 4*1, 8*4, 0] = [0, 4, 32, 0]
+        assert_eq!(&ap[4..8], &[0.0, 4.0, 32.0, 0.0]);
+    }
+
+    #[test]
+    fn relevance_orders_by_mean_product() {
+        let m = toy();
+        let means = vec![2.0, 4.0, 8.0, 1.0];
+        let rel = feature_relevance(&m, &means);
+        // f1: (32+4)/2=18, f2: (0+32)/2=16, f0: 1, f3: 1
+        let order = relevance_order(&rel);
+        assert_eq!(order[0], 1);
+        assert_eq!(order[1], 2);
+    }
+
+    #[test]
+    fn tables_pick_top2_and_leading1() {
+        let m = toy();
+        let xs = [2u8, 4, 8, 1]; // one sample => means [2,4,8,1]
+        let t = approx_tables(&m, &xs, 1, &[1, 1, 1, 1]);
+        // neuron0 top2: f1 (32) then f0/f3 tie at 2.0 -> f0 first seen wins.
+        assert_eq!(t.idx[0], 1);
+        assert_eq!(t.l1[0], 5); // log2(32)
+        assert_eq!(t.pos[0], 2); // 5 - p(=3) = 2
+        assert_eq!(t.sign[0], -1);
+        assert_eq!(t.idx[1], 0);
+        assert_eq!(t.l1[1], 1); // log2(2)
+        assert_eq!(t.pos[1], 1); // 1 - 0
+    }
+
+    #[test]
+    fn masked_features_are_skipped() {
+        let m = toy();
+        let xs = [2u8, 4, 8, 1];
+        let t = approx_tables(&m, &xs, 1, &[1, 0, 1, 1]); // prune f1
+        assert_ne!(t.idx[0], 1, "pruned feature must not be selected");
+    }
+
+    #[test]
+    fn neuron_with_one_input_gets_single_slot() {
+        let mut m = toy();
+        // n1 keeps only f2.
+        m.w1s = vec![1, -1, 0, 1, 0, 0, 1, 0];
+        let xs = [2u8, 4, 8, 1];
+        let t = approx_tables(&m, &xs, 1, &[1, 1, 1, 1]);
+        assert_eq!(t.sign[2 * 1 + 1], 0, "second slot disabled");
+        assert_eq!(t.idx[2], 2);
+    }
+}

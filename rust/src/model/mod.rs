@@ -1,0 +1,383 @@
+//! Bit-exact functional model of the pow2-quantized hybrid MLP.
+//!
+//! This is the Rust mirror of `python/compile/kernels/ref.py`: identical
+//! int32 semantics (barrel-shift multiply, qReLU truncate+saturate,
+//! single-cycle leading-1 approximation), used to
+//!
+//! 1. cross-check the PJRT-executed JAX/Pallas artifacts,
+//! 2. drive the gate-level circuit generators (`circuits`), and
+//! 3. serve as an always-available fallback evaluator.
+//!
+//! See DESIGN.md §Functional semantics.
+
+pub mod importance;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Power-of-2 quantized two-layer MLP in circuit units.
+///
+/// Weight matrices are stored row-major: `w1p[h * features + f]` etc.
+/// Signs are in `{-1, 0, +1}`; `0` encodes a pruned (zero) weight, exactly
+/// as the bespoke circuit simply omits that term from the neuron's mux.
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    pub name: String,
+    pub features: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub in_bits: u32,
+    pub w_bits: u32,
+    pub pmax: u32,
+    pub trunc: u32,
+    pub seq_clock_ms: f64,
+    pub comb_clock_ms: f64,
+    pub float_acc: f64,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    pub w1p: Vec<i32>,
+    pub w1s: Vec<i32>,
+    pub b1: Vec<i32>,
+    pub w2p: Vec<i32>,
+    pub w2s: Vec<i32>,
+    pub b2: Vec<i32>,
+}
+
+/// Per-neuron single-cycle approximation tables (Fig. 5): the two
+/// most-important inputs, the probed bit position, the expected leading-1
+/// column the 1-bit sum is rewired to, and the weight sign.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ApproxTables {
+    /// `[h][k]` flattened as `h * 2 + k`.
+    pub idx: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub l1: Vec<i32>,
+    pub sign: Vec<i32>,
+    /// `[h]`: hardwired expected accumulator base — bias plus the rounded
+    /// expected contribution of every other active feature.  Realigns the
+    /// approximated accumulator with the multi-cycle neurons (§3.1.2) at
+    /// zero hardware cost (it folds into the reset constant).
+    pub base: Vec<i32>,
+}
+
+impl ApproxTables {
+    pub fn disabled(hidden: usize) -> Self {
+        ApproxTables {
+            idx: vec![0; hidden * 2],
+            pos: vec![0; hidden * 2],
+            l1: vec![0; hidden * 2],
+            sign: vec![0; hidden * 2],
+            base: vec![0; hidden],
+        }
+    }
+}
+
+/// Quantized ReLU: `clamp(max(acc, 0) >> trunc, 0, 15)` (§3.2.1).
+#[inline]
+pub fn qrelu(acc: i32, trunc: u32) -> i32 {
+    (acc.max(0) >> trunc).min(15)
+}
+
+impl QuantModel {
+    // -- loading -------------------------------------------------------------
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let (w1p, h1, f1) = j.get("w1_p")?.i32_matrix().context("w1_p")?;
+        let (w1s, h2, f2) = j.get("w1_s")?.i32_matrix().context("w1_s")?;
+        let (w2p, c1, hh1) = j.get("w2_p")?.i32_matrix().context("w2_p")?;
+        let (w2s, c2, hh2) = j.get("w2_s")?.i32_matrix().context("w2_s")?;
+        let m = QuantModel {
+            name: j.get("name")?.str()?.to_string(),
+            features: j.get("features")?.int()? as usize,
+            classes: j.get("classes")?.int()? as usize,
+            hidden: j.get("hidden")?.int()? as usize,
+            in_bits: j.get("in_bits")?.int()? as u32,
+            w_bits: j.get("w_bits")?.int()? as u32,
+            pmax: j.get("pmax")?.int()? as u32,
+            trunc: j.get("trunc")?.int()? as u32,
+            seq_clock_ms: j.get("seq_clock_ms")?.num()?,
+            comb_clock_ms: j.get("comb_clock_ms")?.num()?,
+            float_acc: j.get("float_acc")?.num()?,
+            train_acc: j.get("train_acc")?.num()?,
+            test_acc: j.get("test_acc")?.num()?,
+            w1p,
+            w1s,
+            b1: j.get("b1")?.i32_vec()?,
+            w2p,
+            w2s,
+            b2: j.get("b2")?.i32_vec()?,
+        };
+        if (h1, f1) != (m.hidden, m.features)
+            || (h2, f2) != (m.hidden, m.features)
+            || (c1, hh1) != (m.classes, m.hidden)
+            || (c2, hh2) != (m.classes, m.hidden)
+            || m.b1.len() != m.hidden
+            || m.b2.len() != m.classes
+        {
+            bail!("model `{}` has inconsistent shapes", m.name);
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Sanity-check quantization invariants (signs in {-1,0,1}, powers in
+    /// range). Enforced at load so every downstream consumer can trust it.
+    pub fn validate(&self) -> Result<()> {
+        for (s, p) in self.w1s.iter().chain(&self.w2s).zip(self.w1p.iter().chain(&self.w2p)) {
+            if !(-1..=1).contains(s) {
+                bail!("sign {s} out of range");
+            }
+            if *p < 0 || *p > self.pmax as i32 {
+                bail!("power {p} out of [0, {}]", self.pmax);
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of nonzero coefficients (weights + biases), the paper's model
+    /// size metric.
+    pub fn coefficients(&self) -> usize {
+        self.w1s.iter().chain(&self.w2s).filter(|s| **s != 0).count()
+            + self.b1.len()
+            + self.b2.len()
+    }
+
+    // -- forward -------------------------------------------------------------
+
+    /// Exact hidden-layer accumulator for one sample (multi-cycle neuron).
+    #[inline]
+    pub fn hidden_acc_exact(&self, x: &[i32], feat_mask: &[u8], h: usize) -> i32 {
+        let row = &self.w1p[h * self.features..(h + 1) * self.features];
+        let sgn = &self.w1s[h * self.features..(h + 1) * self.features];
+        let mut acc = self.b1[h];
+        for f in 0..self.features {
+            // s in {-1,0,1}: multiply keeps the loop branch-free.
+            acc += (feat_mask[f] as i32) * sgn[f] * (x[f] << row[f]);
+        }
+        acc
+    }
+
+    /// Single-cycle (approximated) accumulator for one sample (Fig. 2c).
+    #[inline]
+    pub fn hidden_acc_approx(
+        &self,
+        x: &[i32],
+        feat_mask: &[u8],
+        tables: &ApproxTables,
+        h: usize,
+    ) -> i32 {
+        let mut acc = tables.base[h];
+        for k in 0..2 {
+            let t = h * 2 + k;
+            let idx = tables.idx[t] as usize;
+            let bit = (x[idx] >> tables.pos[t]) & 1;
+            acc += (feat_mask[idx] as i32) * tables.sign[t] * (bit << tables.l1[t]);
+        }
+        acc
+    }
+
+    /// Full hybrid forward for one sample; returns (pred, logits).
+    pub fn forward(
+        &self,
+        x: &[i32],
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> (usize, Vec<i32>) {
+        debug_assert_eq!(x.len(), self.features);
+        let mut hid = vec![0i32; self.hidden];
+        for h in 0..self.hidden {
+            let acc = if approx_mask[h] == 1 {
+                self.hidden_acc_approx(x, feat_mask, tables, h)
+            } else {
+                self.hidden_acc_exact(x, feat_mask, h)
+            };
+            hid[h] = qrelu(acc, self.trunc);
+        }
+        let mut logits = vec![0i32; self.classes];
+        for c in 0..self.classes {
+            let row = &self.w2p[c * self.hidden..(c + 1) * self.hidden];
+            let sgn = &self.w2s[c * self.hidden..(c + 1) * self.hidden];
+            let mut acc = self.b2[c];
+            for h in 0..self.hidden {
+                acc += sgn[h] * (hid[h] << row[h]);
+            }
+            logits[c] = acc;
+        }
+        // Ties break to the lowest class index, matching jnp.argmax and the
+        // sequential argmax comparator (strict `>` update).
+        let mut best = 0usize;
+        for c in 1..self.classes {
+            if logits[c] > logits[best] {
+                best = c;
+            }
+        }
+        (best, logits)
+    }
+
+    /// Exact (no approximation, full feature set) convenience forward.
+    pub fn forward_exact(&self, x: &[i32]) -> (usize, Vec<i32>) {
+        let fm = vec![1u8; self.features];
+        let am = vec![0u8; self.hidden];
+        self.forward(x, &fm, &am, &ApproxTables::disabled(self.hidden))
+    }
+
+    /// Accuracy over a dataset slice (rows of `features` u8 inputs).
+    pub fn accuracy(
+        &self,
+        xs: &[u8],
+        ys: &[u16],
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> f64 {
+        let n = ys.len();
+        assert_eq!(xs.len(), n * self.features);
+        let mut correct = 0usize;
+        let mut x = vec![0i32; self.features];
+        for i in 0..n {
+            for f in 0..self.features {
+                x[f] = xs[i * self.features + f] as i32;
+            }
+            let (pred, _) = self.forward(&x, feat_mask, approx_mask, tables);
+            if pred == ys[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny hand-checkable model: 3 features, 2 hidden, 2 classes.
+    pub(crate) fn toy() -> QuantModel {
+        QuantModel {
+            name: "toy".into(),
+            features: 3,
+            classes: 2,
+            hidden: 2,
+            in_bits: 4,
+            w_bits: 8,
+            pmax: 6,
+            trunc: 1,
+            seq_clock_ms: 100.0,
+            comb_clock_ms: 320.0,
+            float_acc: 0.0,
+            train_acc: 0.0,
+            test_acc: 0.0,
+            // neuron0: +x0<<1 - x1; neuron1: +x2<<2
+            w1p: vec![1, 0, 0, 0, 0, 2],
+            w1s: vec![1, -1, 0, 0, 0, 1],
+            b1: vec![3, -4],
+            // class0: +h0; class1: +h1<<1
+            w2p: vec![0, 0, 0, 1],
+            w2s: vec![1, 0, 0, 1],
+            b2: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn qrelu_semantics() {
+        assert_eq!(qrelu(-5, 2), 0);
+        assert_eq!(qrelu(0, 0), 0);
+        assert_eq!(qrelu(15, 0), 15);
+        assert_eq!(qrelu(16, 0), 15); // saturation
+        assert_eq!(qrelu(63, 2), 15);
+        assert_eq!(qrelu(64, 3), 8);
+    }
+
+    #[test]
+    fn exact_forward_hand_computed() {
+        let m = toy();
+        let x = [2, 1, 3];
+        // n0: 3 + (2<<1) - 1 = 6 -> qrelu(6,1)=3 ; n1: -4 + (3<<2) = 8 -> 4
+        // c0: 3 ; c1: 1 + (4<<1) = 9 -> pred 1
+        let (pred, logits) = m.forward_exact(&x);
+        assert_eq!(logits, vec![3, 9]);
+        assert_eq!(pred, 1);
+    }
+
+    #[test]
+    fn feature_mask_zeroes_terms() {
+        let m = toy();
+        let x = [2, 1, 3];
+        let fm = [1u8, 0, 1]; // prune x1
+        let am = [0u8, 0];
+        let (_, logits) = m.forward(&x, &fm, &am, &ApproxTables::disabled(2));
+        // n0: 3 + 4 = 7 -> qrelu=3 ; unchanged n1 -> same as before except n0
+        assert_eq!(logits[0], 3);
+    }
+
+    #[test]
+    fn approx_neuron_uses_single_bits() {
+        let m = toy();
+        let x = [2, 1, 3];
+        let fm = [1u8; 3];
+        let am = [1u8, 0]; // approximate neuron 0
+        let t = ApproxTables {
+            idx: vec![0, 1, 0, 0],
+            pos: vec![1, 0, 0, 0],
+            l1: vec![2, 0, 0, 0],
+            sign: vec![1, -1, 0, 0],
+            base: vec![3, -4], // == biases: no expected-contribution realign
+        };
+        // n0 approx: 3 + bit(x0=2,pos1)=1 <<2 = +4, - bit(x1=1,pos0)=1 <<0 = -1 -> 6 -> qrelu 3
+        let (_, logits) = m.forward(&x, &fm, &am, &t);
+        assert_eq!(logits[0], 3);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        let mut m = toy();
+        m.b2 = vec![5, 5];
+        m.w2s = vec![0, 0, 0, 0];
+        let (pred, logits) = m.forward_exact(&[0, 0, 0]);
+        assert_eq!(logits, vec![5, 5]);
+        assert_eq!(pred, 0);
+    }
+
+    #[test]
+    fn coefficients_counts_nonzero() {
+        let m = toy();
+        // w1s nonzero: 3, w2s nonzero: 2, biases: 2+2
+        assert_eq!(m.coefficients(), 3 + 2 + 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let text = r#"{
+            "name":"t","features":2,"classes":2,"hidden":1,
+            "in_bits":4,"w_bits":8,"pmax":6,"trunc":0,
+            "seq_clock_ms":100,"comb_clock_ms":320,
+            "float_acc":0.9,"train_acc":0.8,"test_acc":0.7,
+            "w1_p":[[1,2]],"w1_s":[[1,-1]],"b1":[0],
+            "w2_p":[[0],[1]],"w2_s":[[1],[1]],"b2":[0,0]
+        }"#;
+        let m = QuantModel::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.features, 2);
+        assert_eq!(m.w1p, vec![1, 2]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_power() {
+        let text = r#"{
+            "name":"t","features":1,"classes":1,"hidden":1,
+            "in_bits":4,"w_bits":8,"pmax":6,"trunc":0,
+            "seq_clock_ms":100,"comb_clock_ms":320,
+            "float_acc":0,"train_acc":0,"test_acc":0,
+            "w1_p":[[9]],"w1_s":[[1]],"b1":[0],
+            "w2_p":[[0]],"w2_s":[[1]],"b2":[0]
+        }"#;
+        assert!(QuantModel::from_json(&Json::parse(text).unwrap()).is_err());
+    }
+}

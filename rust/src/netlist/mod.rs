@@ -1,0 +1,473 @@
+//! Gate-level netlist IR — the single source of truth for every circuit
+//! architecture.  The Verilog emitter prints it, the synthesis-lite
+//! estimator (`tech`) costs it, and the cycle-accurate simulator (`sim`)
+//! executes it; all three therefore always agree on the same gates.
+//!
+//! Primitive cells follow the printed-EGFET library of Bleier et al. [6]:
+//! INV / NAND2 / NOR2 / AND2 / OR2 / XOR2 / XNOR2 / MUX2 / DFF.  Every
+//! DFF has a synchronous load-enable and a synchronous reset to a constant
+//! bit (the multi-cycle neuron accumulator resets to its bias, §3.1.1).
+
+pub mod opt;
+pub mod verilog;
+
+/// A single-bit net, identified by index. Net 0 is constant-0, net 1 is
+/// constant-1.
+pub type NetId = u32;
+
+pub const CONST0: NetId = 0;
+pub const CONST1: NetId = 1;
+
+/// Combinational and sequential primitive cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cell {
+    Inv { a: NetId, y: NetId },
+    Buf { a: NetId, y: NetId },
+    Nand2 { a: NetId, b: NetId, y: NetId },
+    Nor2 { a: NetId, b: NetId, y: NetId },
+    And2 { a: NetId, b: NetId, y: NetId },
+    Or2 { a: NetId, b: NetId, y: NetId },
+    Xor2 { a: NetId, b: NetId, y: NetId },
+    Xnor2 { a: NetId, b: NetId, y: NetId },
+    /// y = sel ? b : a
+    Mux2 { a: NetId, b: NetId, sel: NetId, y: NetId },
+    /// q' = rst ? rstval : (en ? d : q) — synchronous, posedge.
+    Dff { d: NetId, q: NetId, en: NetId, rst: NetId, rstval: bool },
+}
+
+impl Cell {
+    /// Output net of this cell.
+    pub fn output(&self) -> NetId {
+        match *self {
+            Cell::Inv { y, .. }
+            | Cell::Buf { y, .. }
+            | Cell::Nand2 { y, .. }
+            | Cell::Nor2 { y, .. }
+            | Cell::And2 { y, .. }
+            | Cell::Or2 { y, .. }
+            | Cell::Xor2 { y, .. }
+            | Cell::Xnor2 { y, .. }
+            | Cell::Mux2 { y, .. } => y,
+            Cell::Dff { q, .. } => q,
+        }
+    }
+
+    /// Input nets (excluding clock, which is implicit).
+    pub fn inputs(&self) -> Vec<NetId> {
+        match *self {
+            Cell::Inv { a, .. } | Cell::Buf { a, .. } => vec![a],
+            Cell::Nand2 { a, b, .. }
+            | Cell::Nor2 { a, b, .. }
+            | Cell::And2 { a, b, .. }
+            | Cell::Or2 { a, b, .. }
+            | Cell::Xor2 { a, b, .. }
+            | Cell::Xnor2 { a, b, .. } => vec![a, b],
+            Cell::Mux2 { a, b, sel, .. } => vec![a, b, sel],
+            Cell::Dff { d, en, rst, .. } => vec![d, en, rst],
+        }
+    }
+
+    pub fn is_seq(&self) -> bool {
+        matches!(self, Cell::Dff { .. })
+    }
+
+    /// Library cell name (EGFET library naming).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Cell::Inv { .. } => "INV",
+            Cell::Buf { .. } => "BUF",
+            Cell::Nand2 { .. } => "NAND2",
+            Cell::Nor2 { .. } => "NOR2",
+            Cell::And2 { .. } => "AND2",
+            Cell::Or2 { .. } => "OR2",
+            Cell::Xor2 { .. } => "XOR2",
+            Cell::Xnor2 { .. } => "XNOR2",
+            Cell::Mux2 { .. } => "MUX2",
+            Cell::Dff { .. } => "DFF",
+        }
+    }
+}
+
+/// A multi-bit signal, LSB first.
+pub type Word = Vec<NetId>;
+
+/// Named port: a label plus the nets it binds, LSB first.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub name: String,
+    pub bits: Word,
+}
+
+/// A flat gate-level module.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    next_net: NetId,
+    pub cells: Vec<Cell>,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Netlist {
+        Netlist {
+            name: name.to_string(),
+            next_net: 2, // 0 and 1 are the constant nets
+            cells: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.next_net as usize
+    }
+
+    pub fn fresh(&mut self) -> NetId {
+        let id = self.next_net;
+        self.next_net += 1;
+        id
+    }
+
+    pub fn fresh_word(&mut self, width: usize) -> Word {
+        (0..width).map(|_| self.fresh()).collect()
+    }
+
+    pub fn add_input(&mut self, name: &str, width: usize) -> Word {
+        let bits = self.fresh_word(width);
+        self.inputs.push(Port {
+            name: name.to_string(),
+            bits: bits.clone(),
+        });
+        bits
+    }
+
+    pub fn add_output(&mut self, name: &str, bits: Word) {
+        self.outputs.push(Port {
+            name: name.to_string(),
+            bits,
+        });
+    }
+
+    // -- gate constructors (with local constant folding) --------------------
+
+    pub fn inv(&mut self, a: NetId) -> NetId {
+        match a {
+            CONST0 => CONST1,
+            CONST1 => CONST0,
+            _ => {
+                let y = self.fresh();
+                self.cells.push(Cell::Inv { a, y });
+                y
+            }
+        }
+    }
+
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        match (a, b) {
+            (CONST0, _) | (_, CONST0) => CONST0,
+            (CONST1, x) | (x, CONST1) => x,
+            _ if a == b => a,
+            _ => {
+                let y = self.fresh();
+                self.cells.push(Cell::And2 { a, b, y });
+                y
+            }
+        }
+    }
+
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        match (a, b) {
+            (CONST1, _) | (_, CONST1) => CONST1,
+            (CONST0, x) | (x, CONST0) => x,
+            _ if a == b => a,
+            _ => {
+                let y = self.fresh();
+                self.cells.push(Cell::Or2 { a, b, y });
+                y
+            }
+        }
+    }
+
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        match (a, b) {
+            (CONST0, _) | (_, CONST0) => CONST1,
+            (CONST1, x) | (x, CONST1) => self.inv(x),
+            _ => {
+                let y = self.fresh();
+                self.cells.push(Cell::Nand2 { a, b, y });
+                y
+            }
+        }
+    }
+
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        match (a, b) {
+            (CONST1, _) | (_, CONST1) => CONST0,
+            (CONST0, x) | (x, CONST0) => self.inv(x),
+            _ => {
+                let y = self.fresh();
+                self.cells.push(Cell::Nor2 { a, b, y });
+                y
+            }
+        }
+    }
+
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        match (a, b) {
+            (CONST0, x) | (x, CONST0) => x,
+            (CONST1, x) | (x, CONST1) => self.inv(x),
+            _ if a == b => CONST0,
+            _ => {
+                let y = self.fresh();
+                self.cells.push(Cell::Xor2 { a, b, y });
+                y
+            }
+        }
+    }
+
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        let x = self.xor2(a, b);
+        self.inv(x)
+    }
+
+    /// y = sel ? b : a
+    pub fn mux2(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        match (sel, a, b) {
+            (CONST0, a, _) => a,
+            (CONST1, _, b) => b,
+            (_, a, b) if a == b => a,
+            (s, CONST0, CONST1) => s,
+            (s, CONST1, CONST0) => self.inv(s),
+            // sel ? b : 0 == sel & b ; sel ? 1 : a == sel | a, etc.
+            (s, CONST0, b) => self.and2(s, b),
+            (s, a, CONST0) => {
+                let ns = self.inv(s);
+                self.and2(ns, a)
+            }
+            (s, CONST1, b) => {
+                let ns = self.inv(s);
+                self.or2(ns, b)
+            }
+            (s, a, CONST1) => self.or2(s, a),
+            (sel, a, b) => {
+                let y = self.fresh();
+                self.cells.push(Cell::Mux2 { a, b, sel, y });
+                y
+            }
+        }
+    }
+
+    /// Register with enable and synchronous reset-to-constant.
+    pub fn dff(&mut self, d: NetId, en: NetId, rst: NetId, rstval: bool) -> NetId {
+        let q = self.fresh();
+        self.cells.push(Cell::Dff {
+            d,
+            q,
+            en,
+            rst,
+            rstval,
+        });
+        q
+    }
+
+    /// Register whose `d` is connected later (for feedback paths such as
+    /// accumulators and counters).  Returns `(q, cell_index)`; call
+    /// [`Netlist::set_dff_d`] once the data input exists.
+    pub fn dff_deferred(&mut self, en: NetId, rst: NetId, rstval: bool) -> (NetId, usize) {
+        let q = self.fresh();
+        self.cells.push(Cell::Dff {
+            d: q, // placeholder: hold value until connected
+            q,
+            en,
+            rst,
+            rstval,
+        });
+        (q, self.cells.len() - 1)
+    }
+
+    pub fn set_dff_d(&mut self, cell_index: usize, d: NetId) {
+        match &mut self.cells[cell_index] {
+            Cell::Dff { d: slot, .. } => *slot = d,
+            other => panic!("set_dff_d on non-DFF cell {other:?}"),
+        }
+    }
+
+    /// Constant word of `width` bits (two's complement value).
+    pub fn const_word(&self, value: i64, width: usize) -> Word {
+        (0..width)
+            .map(|i| if (value >> i) & 1 == 1 { CONST1 } else { CONST0 })
+            .collect()
+    }
+
+    // -- stats ---------------------------------------------------------------
+
+    pub fn count_by_type(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for c in &self.cells {
+            *m.entry(c.type_name()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    pub fn n_dffs(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_seq()).count()
+    }
+
+    /// Topological order of combinational cell indices (Kahn).  DFF
+    /// outputs and primary inputs are sources; DFFs are excluded.  Panics
+    /// on combinational loops — generators must never create them.
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.n_nets();
+        let mut driver = vec![u32::MAX; n];
+        let mut n_comb = 0usize;
+        for (i, c) in self.cells.iter().enumerate() {
+            if !c.is_seq() {
+                driver[c.output() as usize] = i as u32;
+                n_comb += 1;
+            }
+        }
+        let mut indeg = vec![0u32; self.cells.len()];
+        let mut fanout: Vec<Vec<u32>> = vec![Vec::new(); self.cells.len()];
+        for (i, c) in self.cells.iter().enumerate() {
+            if c.is_seq() {
+                continue;
+            }
+            for inp in c.inputs() {
+                let d = driver[inp as usize];
+                if d != u32::MAX {
+                    fanout[d as usize].push(i as u32);
+                    indeg[i] += 1;
+                }
+            }
+        }
+        let mut queue: std::collections::VecDeque<u32> = (0..self.cells.len())
+            .filter(|&i| !self.cells[i].is_seq() && indeg[i] == 0)
+            .map(|i| i as u32)
+            .collect();
+        let mut order = Vec::with_capacity(n_comb);
+        while let Some(ci) = queue.pop_front() {
+            order.push(ci as usize);
+            for &nxt in &fanout[ci as usize] {
+                indeg[nxt as usize] -= 1;
+                if indeg[nxt as usize] == 0 {
+                    queue.push_back(nxt);
+                }
+            }
+        }
+        assert_eq!(
+            order.len(),
+            n_comb,
+            "combinational loop: {} of {} cells unordered",
+            n_comb - order.len(),
+            n_comb
+        );
+        order
+    }
+
+    /// Combinational depth (levels) — proxy for the critical path.
+    pub fn logic_depth(&self) -> usize {
+        let n = self.n_nets();
+        let mut level = vec![0usize; n];
+        let order = self.topo_order();
+        let mut max = 0;
+        for ci in order {
+            let c = &self.cells[ci];
+            let lvl = c
+                .inputs()
+                .iter()
+                .map(|&i| level[i as usize])
+                .max()
+                .unwrap_or(0)
+                + 1;
+            level[c.output() as usize] = lvl;
+            max = max.max(lvl);
+        }
+        max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_folding_in_constructors() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        assert_eq!(n.and2(a, CONST0), CONST0);
+        assert_eq!(n.and2(a, CONST1), a);
+        assert_eq!(n.or2(a, CONST1), CONST1);
+        assert_eq!(n.xor2(a, a), CONST0);
+        assert_eq!(n.mux2(CONST0, a, CONST1), a);
+        assert_eq!(n.cells.len(), 0, "no gates for folded ops");
+    }
+
+    #[test]
+    fn mux_with_constant_data_becomes_logic() {
+        let mut n = Netlist::new("t");
+        let s = n.add_input("s", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        // sel ? b : 0 -> AND
+        let y = n.mux2(s, CONST0, b);
+        assert!(matches!(n.cells.last(), Some(Cell::And2 { .. })));
+        assert_ne!(y, CONST0);
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let x = n.and2(a, b);
+        let y = n.or2(x, a);
+        let _z = n.xor2(y, x);
+        let order = n.topo_order();
+        assert_eq!(order.len(), 3);
+        let pos = |ci: usize| order.iter().position(|&c| c == ci).unwrap();
+        assert!(pos(0) < pos(1) && pos(1) < pos(2));
+    }
+
+    #[test]
+    fn dff_breaks_cycles() {
+        let mut n = Netlist::new("t");
+        // q feeds an inverter that feeds d: a classic toggle — legal
+        // because the DFF breaks the loop.
+        let d = n.fresh();
+        let q = n.dff(d, CONST1, CONST0, false);
+        let nq = n.inv(q);
+        // tie nq to d via a buf cell
+        n.cells.push(Cell::Buf { a: nq, y: d });
+        let order = n.topo_order(); // must not panic
+        assert_eq!(order.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "combinational loop")]
+    fn combinational_loop_detected() {
+        let mut n = Netlist::new("t");
+        let x = n.fresh();
+        let y = n.fresh();
+        n.cells.push(Cell::Inv { a: x, y });
+        n.cells.push(Cell::Inv { a: y, y: x });
+        n.topo_order();
+    }
+
+    #[test]
+    fn const_word_bits() {
+        let n = Netlist::new("t");
+        assert_eq!(n.const_word(5, 4), vec![CONST1, CONST0, CONST1, CONST0]);
+        assert_eq!(n.const_word(-1, 3), vec![CONST1, CONST1, CONST1]);
+    }
+
+    #[test]
+    fn logic_depth_counts_levels() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let x = n.and2(a, b);
+        let y = n.and2(x, b);
+        let _ = n.and2(y, a);
+        assert_eq!(n.logic_depth(), 3);
+    }
+}

@@ -1,0 +1,233 @@
+//! Redundant Feature Pruning — Algorithm 1 (§3.2.2).
+//!
+//! Ranks features by their average expected product (Eq. 1 relevance),
+//! then greedily finds the minimum prefix N of the ranked features whose
+//! accuracy meets the threshold (the quantized model's own accuracy).
+//! The evaluation callback runs the quantized MLP over the training set —
+//! through the PJRT artifact on the hot path (masks are runtime inputs,
+//! so no recompilation per step).
+//!
+//! `Strategy::Bisect` is our §Perf optimization: when the accuracy curve
+//! over N is monotone-ish, a galloping + binary search finds the same
+//! frontier in O(log F) evaluations instead of O(F); the result is
+//! post-validated against the threshold, and the greedy sweep remains the
+//! reference implementation.
+
+use crate::data::Split;
+use crate::model::{importance, QuantModel};
+
+/// Outcome of the pruning pass.
+#[derive(Clone, Debug)]
+pub struct RfpResult {
+    /// All features ordered by decreasing relevance.
+    pub order: Vec<usize>,
+    /// Number of features kept (`N` in Algorithm 1).
+    pub kept: usize,
+    /// Mask over the original feature indices.
+    pub feat_mask: Vec<u8>,
+    /// The kept features in arrival-schedule order (`order[..kept]`).
+    pub active: Vec<usize>,
+    /// Training accuracy achieved with the kept set.
+    pub accuracy: f64,
+    pub threshold: f64,
+    /// Number of accuracy evaluations performed.
+    pub evals: usize,
+}
+
+impl RfpResult {
+    /// Fraction of features retained (the paper reports 81% on average).
+    pub fn retention(&self) -> f64 {
+        self.kept as f64 / self.order.len().max(1) as f64
+    }
+}
+
+/// Search strategy for the minimum-N frontier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Paper-faithful greedy sweep (Algorithm 1): N = 1, 2, 3, ...
+    Greedy,
+    /// Galloping + binary search (§Perf optimization).
+    Bisect,
+}
+
+fn mask_for(order: &[usize], n: usize, features: usize) -> Vec<u8> {
+    let mut m = vec![0u8; features];
+    for &f in &order[..n] {
+        m[f] = 1;
+    }
+    m
+}
+
+/// Run Algorithm 1.  `eval(feat_mask) -> accuracy` must evaluate the
+/// quantized model on the training set.
+pub fn prune<F>(
+    model: &QuantModel,
+    train: &Split,
+    threshold: f64,
+    strategy: Strategy,
+    mut eval: F,
+) -> RfpResult
+where
+    F: FnMut(&[u8]) -> f64,
+{
+    let features = model.features;
+    let means = importance::feature_means(&train.xs, train.len(), features);
+    let rel = importance::feature_relevance(model, &means);
+    let order = importance::relevance_order(&rel);
+
+    let mut evals = 0usize;
+    let mut check = |n: usize, evals: &mut usize| -> f64 {
+        *evals += 1;
+        eval(&mask_for(&order, n, features))
+    };
+
+    let (kept, accuracy) = match strategy {
+        Strategy::Greedy => {
+            let mut found = (features, f64::NAN);
+            for n in 1..=features {
+                let acc = check(n, &mut evals);
+                if acc >= threshold {
+                    found = (n, acc);
+                    break;
+                }
+                if n == features {
+                    found = (features, acc);
+                }
+            }
+            found
+        }
+        Strategy::Bisect => {
+            // Gallop to an upper bound that meets the threshold.
+            let mut hi = 1usize;
+            let mut acc_hi = check(hi, &mut evals);
+            while acc_hi < threshold && hi < features {
+                hi = (hi * 2).min(features);
+                acc_hi = check(hi, &mut evals);
+            }
+            if acc_hi < threshold {
+                (features, acc_hi)
+            } else {
+                // Smallest n in (hi/2, hi] meeting the threshold.
+                let mut lo = hi / 2; // fails (or 0)
+                let mut best = (hi, acc_hi);
+                while hi - lo > 1 {
+                    let mid = (lo + hi) / 2;
+                    let acc = check(mid, &mut evals);
+                    if acc >= threshold {
+                        hi = mid;
+                        best = (mid, acc);
+                    } else {
+                        lo = mid;
+                    }
+                }
+                best
+            }
+        }
+    };
+
+    let feat_mask = mask_for(&order, kept, features);
+    RfpResult {
+        active: order[..kept].to_vec(),
+        order,
+        kept,
+        feat_mask,
+        accuracy,
+        threshold,
+        evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::testutil::rand_model;
+    use crate::util::prng::Rng;
+
+    fn toy_split(features: usize, n: usize, seed: u64) -> Split {
+        let mut r = Rng::new(seed);
+        Split {
+            xs: (0..n * features).map(|_| r.below(16) as u8).collect(),
+            ys: (0..n).map(|_| r.below(2) as u16).collect(),
+            features,
+        }
+    }
+
+    /// Synthetic accuracy curve: rises with the number of kept features.
+    fn curve_eval(mask: &[u8]) -> f64 {
+        let kept = mask.iter().filter(|&&m| m == 1).count();
+        0.5 + 0.5 * (kept as f64 / mask.len() as f64).min(0.8) / 0.8
+    }
+
+    #[test]
+    fn greedy_finds_minimum_prefix() {
+        let m = rand_model(51, 20, 3, 2);
+        let split = toy_split(20, 50, 1);
+        let r = prune(&m, &split, 0.9, Strategy::Greedy, curve_eval);
+        // 0.9 needs kept/20*0.625 >= 0.4 => kept >= 12.8 => 13
+        assert_eq!(r.kept, 13);
+        assert!(r.accuracy >= 0.9);
+        assert_eq!(r.evals, 13);
+        assert_eq!(r.active.len(), 13);
+        assert_eq!(r.feat_mask.iter().filter(|&&x| x == 1).count(), 13);
+    }
+
+    #[test]
+    fn bisect_agrees_with_greedy_on_monotone_curves() {
+        let m = rand_model(52, 33, 3, 2);
+        let split = toy_split(33, 50, 2);
+        for thr in [0.6, 0.75, 0.9, 0.99] {
+            let g = prune(&m, &split, thr, Strategy::Greedy, curve_eval);
+            let b = prune(&m, &split, thr, Strategy::Bisect, curve_eval);
+            assert_eq!(g.kept, b.kept, "thr={thr}");
+            assert!(b.evals <= g.evals, "bisect must not do more evals");
+        }
+    }
+
+    #[test]
+    fn unreachable_threshold_keeps_all() {
+        let m = rand_model(53, 10, 3, 2);
+        let split = toy_split(10, 50, 3);
+        for s in [Strategy::Greedy, Strategy::Bisect] {
+            let r = prune(&m, &split, 2.0, s, curve_eval);
+            assert_eq!(r.kept, 10);
+            assert_eq!(r.retention(), 1.0);
+        }
+    }
+
+    #[test]
+    fn order_is_by_relevance() {
+        // Features the model weighs heavily (and that have high means)
+        // must come first.
+        let mut m = rand_model(54, 4, 1, 2);
+        m.w1p = vec![0, 6, 0, 3];
+        m.w1s = vec![1, 1, 0, 1]; // f2 is dead weight
+        let split = Split {
+            xs: vec![8u8; 4 * 10], // uniform means
+            ys: vec![0; 10],
+            features: 4,
+        };
+        let r = prune(&m, &split, 0.0, Strategy::Greedy, |_| 1.0);
+        assert_eq!(r.order[0], 1); // 2^6 weight
+        assert_eq!(r.order[1], 3);
+        assert_eq!(r.order[3], 2); // zero weight last
+        assert_eq!(r.kept, 1, "threshold 0 met with one feature");
+    }
+
+    #[test]
+    fn real_model_eval_wiring() {
+        // End-to-end with the native evaluator on a random model: the
+        // threshold equals the full-model accuracy, so RFP must return a
+        // mask achieving at least it.
+        let m = rand_model(55, 16, 3, 3);
+        let split = toy_split(16, 80, 4);
+        let full_mask = vec![1u8; 16];
+        let am = vec![0u8; 3];
+        let t = crate::model::ApproxTables::disabled(3);
+        let full_acc = m.accuracy(&split.xs, &split.ys, &full_mask, &am, &t);
+        let r = prune(&m, &split, full_acc, Strategy::Greedy, |mask| {
+            m.accuracy(&split.xs, &split.ys, mask, &am, &t)
+        });
+        assert!(r.accuracy >= full_acc);
+        assert!(r.kept <= 16);
+    }
+}

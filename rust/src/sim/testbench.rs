@@ -1,0 +1,105 @@
+//! Testbenches: drive the generated circuits with dataset samples using
+//! the paper's I/O protocol and collect predictions.
+//!
+//! Sequential protocol (Fig. 3b): a 1-cycle reset pulse, then one 4-bit
+//! feature per cycle in the RFP schedule order, then `hidden + classes`
+//! drain cycles; `class_out` is valid after the final argmax cycle.
+//!
+//! 64 samples are simulated per pass (one per lane).
+
+use crate::circuits::{CombCircuit, SeqCircuit};
+use crate::netlist::{Netlist, Word};
+use crate::sim::Sim;
+
+fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
+    &n.inputs
+        .iter()
+        .find(|p| p.name == name)
+        .unwrap_or_else(|| panic!("missing input port {name}"))
+        .bits
+}
+
+fn output_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
+    &n.outputs
+        .iter()
+        .find(|p| p.name == name)
+        .unwrap_or_else(|| panic!("missing output port {name}"))
+        .bits
+}
+
+/// Run `n` samples (row-major `features`-wide 4-bit values) through a
+/// sequential circuit; returns predicted class per sample.
+pub fn run_sequential(circ: &SeqCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
+    let net = &circ.netlist;
+    let x = input_port(net, "x").clone();
+    let rst = input_port(net, "rst")[0];
+    let class_out = output_port(net, "class_out").clone();
+
+    let mut sim = Sim::new(net);
+    let mut preds = Vec::with_capacity(n);
+    let mut lane_vals = vec![0i64; Sim::LANES];
+
+    let mut base = 0usize;
+    while base < n {
+        let lanes = (n - base).min(Sim::LANES);
+        // Reset pulse.
+        sim.set(rst, !0u64);
+        sim.set_word_all(&x, 0);
+        sim.step();
+        sim.set(rst, 0);
+        // Hidden phase: feature active[t] on the bus at cycle t.
+        for t in 0..circ.cycles {
+            if t < circ.active.len() {
+                let f = circ.active[t];
+                for lane in 0..lanes {
+                    lane_vals[lane] = xs[(base + lane) * features + f] as i64;
+                }
+                sim.set_word_lanes(&x, &lane_vals[..lanes]);
+            } else {
+                sim.set_word_all(&x, 0);
+            }
+            sim.step();
+        }
+        sim.settle();
+        for lane in 0..lanes {
+            preds.push(sim.get_word_lane(&class_out, lane) as u16);
+        }
+        base += lanes;
+    }
+    preds
+}
+
+/// Run `n` samples through a combinational circuit (single evaluation).
+pub fn run_combinational(circ: &CombCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
+    let net = &circ.netlist;
+    let x_all = input_port(net, "x_all").clone();
+    let class_out = output_port(net, "class_out").clone();
+    assert_eq!(x_all.len(), 4 * circ.active.len());
+
+    let mut sim = Sim::new(net);
+    let mut preds = Vec::with_capacity(n);
+    let mut base = 0usize;
+    let mut lane_vals = vec![0i64; Sim::LANES];
+    while base < n {
+        let lanes = (n - base).min(Sim::LANES);
+        for (slot, &f) in circ.active.iter().enumerate() {
+            let word: Word = x_all[slot * 4..(slot + 1) * 4].to_vec();
+            for lane in 0..lanes {
+                lane_vals[lane] = xs[(base + lane) * features + f] as i64;
+            }
+            sim.set_word_lanes(&word, &lane_vals[..lanes]);
+        }
+        sim.eval();
+        for lane in 0..lanes {
+            preds.push(sim.get_word_lane(&class_out, lane) as u16);
+        }
+        base += lanes;
+    }
+    preds
+}
+
+/// Accuracy helper shared by the harnesses.
+pub fn accuracy(preds: &[u16], ys: &[u16]) -> f64 {
+    let correct = preds.iter().zip(ys).filter(|(p, y)| p == y).count();
+    correct as f64 / ys.len().max(1) as f64
+}

@@ -1,0 +1,14 @@
+//! Offline-friendly utilities (substitutes for crates unavailable in this
+//! environment — see DESIGN.md §Substitutions).
+//!
+//! - [`prng`] — xoshiro256** PRNG (rand substitute), deterministic.
+//! - [`json`] — minimal JSON parser/writer (serde substitute).
+//! - [`pool`] — scoped thread pool (tokio/rayon substitute) for fan-out.
+//! - [`propcheck`] — mini property-testing kit (proptest substitute).
+//! - [`stats`] — small summary-statistics helpers shared by benches.
+
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;

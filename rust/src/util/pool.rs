@@ -1,0 +1,91 @@
+//! Minimal scoped thread pool (rayon/tokio substitute).
+//!
+//! The coordinator fans dataset jobs and NSGA-II fitness evaluations out
+//! across cores with [`scope_map`]; workloads are coarse-grained, so a
+//! simple work-stealing-free chunked scheme is sufficient and keeps the
+//! implementation dependency-free.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (`PRINTED_MLP_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PRINTED_MLP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Apply `f` to every item index in parallel, collecting results in order.
+///
+/// `f` must be `Sync`; items are claimed with an atomic cursor so uneven
+/// job costs (e.g. HAR vs SPECTF) balance automatically.
+pub fn scope_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = scope_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        assert_eq!(scope_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<usize> = scope_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Just exercises the atomic-cursor path with skewed costs.
+        let out = scope_map(32, 4, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

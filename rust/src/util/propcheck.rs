@@ -1,0 +1,132 @@
+//! Mini property-testing kit (proptest substitute — unavailable offline).
+//!
+//! Runs a property over many PRNG-generated cases; on failure it performs
+//! a bounded greedy shrink by re-running the generator with smaller size
+//! hints, then reports the seed so the case can be replayed exactly.
+//!
+//! ```
+//! use printed_mlp::util::propcheck::{check, Gen};
+//! check("reverse twice is identity", 200, |g| {
+//!     let v = g.vec_i32(0..=64, -100..=100);
+//!     let mut r = v.clone();
+//!     r.reverse();
+//!     r.reverse();
+//!     r == v
+//! });
+//! ```
+
+use std::ops::RangeInclusive;
+
+use crate::util::prng::Rng;
+
+/// Case generator handed to properties; wraps the PRNG with size-aware
+/// convenience constructors.
+pub struct Gen {
+    rng: Rng,
+    /// Size budget in [0,1]; shrinking lowers it so generators produce
+    /// structurally smaller cases.
+    size: f64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, r: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*r.start(), *r.end());
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + self.rng.usize_below(scaled + 1)
+    }
+
+    pub fn i32_in(&mut self, r: RangeInclusive<i32>) -> i32 {
+        let (lo, hi) = (*r.start() as i64, *r.end() as i64);
+        (lo + self.rng.below((hi - lo + 1) as u64) as i64) as i32
+    }
+
+    pub fn vec_i32(&mut self, len: RangeInclusive<usize>, vals: RangeInclusive<i32>) -> Vec<i32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i32_in(vals.clone())).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the failing seed
+/// (after shrinking the size budget) if any case returns false.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> bool,
+{
+    let base = std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: 1.0,
+        };
+        if prop(&mut g) {
+            continue;
+        }
+        // Shrink: lower the size budget; keep the smallest failing size.
+        let mut failing_size = 1.0;
+        for step in 1..=8 {
+            let size = 1.0 - step as f64 / 8.0;
+            if size <= 0.0 {
+                break;
+            }
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                size,
+            };
+            if !prop(&mut g) {
+                failing_size = size;
+            }
+        }
+        panic!(
+            "property `{name}` failed: seed={seed} size={failing_size} \
+             (replay with PROPCHECK_SEED={seed})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 100, |g| {
+            let a = g.i32_in(-1000..=1000) as i64;
+            let b = g.i32_in(-1000..=1000) as i64;
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| false);
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 200, |g| {
+            let n = g.usize_in(3..=17);
+            let v = g.vec_i32(1..=9, -5..=5);
+            (3..=17).contains(&n)
+                && (1..=9).contains(&v.len())
+                && v.iter().all(|x| (-5..=5).contains(x))
+        });
+    }
+}

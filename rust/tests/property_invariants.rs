@@ -1,0 +1,194 @@
+//! Property-based tests (mini-propcheck; proptest is unavailable offline)
+//! over the coordinator-side invariants: routing/масks, NSGA Pareto
+//! properties, RFP frontier properties, netlist/simulator algebra, and
+//! the circuit/functional-model equivalence on random models.
+
+use printed_mlp::circuits::{combinational, rtl, seq_multicycle};
+use printed_mlp::model::importance;
+use printed_mlp::netlist::Netlist;
+use printed_mlp::nsga::{self, Individual};
+use printed_mlp::sim::{testbench, Sim};
+use printed_mlp::util::propcheck::{check, Gen};
+
+// testutil is #[cfg(test)] inside the crate; rebuild a tiny generator here.
+fn rand_model(g: &mut Gen, fmax: usize, hmax: usize, cmax: usize) -> printed_mlp::model::QuantModel {
+    let features = g.usize_in(2..=fmax).max(2);
+    let hidden = g.usize_in(1..=hmax).max(1);
+    let classes = g.usize_in(2..=cmax).max(2);
+    let pmax = 6u32;
+    let r = g.rng();
+    let mut w1p = Vec::new();
+    let mut w1s = Vec::new();
+    for _ in 0..hidden * features {
+        w1p.push(r.below(pmax as u64 + 1) as i32);
+        w1s.push([-1, 0, 1][r.usize_below(3)]);
+    }
+    let mut w2p = Vec::new();
+    let mut w2s = Vec::new();
+    for _ in 0..classes * hidden {
+        w2p.push(r.below(pmax as u64 + 1) as i32);
+        w2s.push([-1, 0, 1][r.usize_below(3)]);
+    }
+    printed_mlp::model::QuantModel {
+        name: "prop".into(),
+        features,
+        classes,
+        hidden,
+        in_bits: 4,
+        w_bits: 8,
+        pmax,
+        trunc: (r.below(6) + 1) as u32,
+        seq_clock_ms: 100.0,
+        comb_clock_ms: 320.0,
+        float_acc: 0.0,
+        train_acc: 0.0,
+        test_acc: 0.0,
+        w1p,
+        w1s,
+        b1: (0..hidden).map(|_| r.i32_range(-200, 200)).collect(),
+        w2p,
+        w2s,
+        b2: (0..classes).map(|_| r.i32_range(-200, 200)).collect(),
+    }
+}
+
+#[test]
+fn prop_multicycle_circuit_equals_model() {
+    check("multicycle == functional model", 12, |g| {
+        let m = rand_model(g, 10, 4, 4);
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = seq_multicycle::generate(&m, &active);
+        let samples = 8;
+        let xs: Vec<u8> = (0..samples * m.features)
+            .map(|_| g.rng().below(16) as u8)
+            .collect();
+        let preds = testbench::run_sequential(&circ, &xs, samples, m.features);
+        (0..samples).all(|i| {
+            let x: Vec<i32> = (0..m.features).map(|f| xs[i * m.features + f] as i32).collect();
+            preds[i] as usize == m.forward_exact(&x).0
+        })
+    });
+}
+
+#[test]
+fn prop_combinational_circuit_equals_model() {
+    check("combinational == functional model", 10, |g| {
+        let m = rand_model(g, 9, 3, 3);
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = combinational::generate(&m, &active);
+        let samples = 8;
+        let xs: Vec<u8> = (0..samples * m.features)
+            .map(|_| g.rng().below(16) as u8)
+            .collect();
+        let preds = testbench::run_combinational(&circ, &xs, samples, m.features);
+        (0..samples).all(|i| {
+            let x: Vec<i32> = (0..m.features).map(|f| xs[i * m.features + f] as i32).collect();
+            preds[i] as usize == m.forward_exact(&x).0
+        })
+    });
+}
+
+#[test]
+fn prop_hybrid_circuit_equals_model_under_masks() {
+    check("hybrid == functional model under random approx masks", 10, |g| {
+        let m = rand_model(g, 8, 4, 3);
+        let active: Vec<usize> = (0..m.features).collect();
+        let samples = 8;
+        let xs: Vec<u8> = (0..samples * m.features)
+            .map(|_| g.rng().below(16) as u8)
+            .collect();
+        let fm = vec![1u8; m.features];
+        let tables = importance::approx_tables(&m, &xs, samples, &fm);
+        let approx: Vec<bool> = (0..m.hidden).map(|_| g.bool()).collect();
+        let circ = printed_mlp::circuits::hybrid::generate(&m, &active, &approx, &tables);
+        let preds = testbench::run_sequential(&circ, &xs, samples, m.features);
+        let am: Vec<u8> = approx.iter().map(|&b| b as u8).collect();
+        (0..samples).all(|i| {
+            let x: Vec<i32> = (0..m.features).map(|f| xs[i * m.features + f] as i32).collect();
+            preds[i] as usize == m.forward(&x, &fm, &am, &tables).0
+        })
+    });
+}
+
+#[test]
+fn prop_rtl_adder_is_binary_addition() {
+    check("rtl add == i64 add (mod 2^w)", 60, |g| {
+        let w = g.usize_in(2..=16).max(2);
+        let a = g.i32_in(-(1 << (w - 1))..=(1 << (w - 1)) - 1) as i64;
+        let b = g.i32_in(-(1 << (w - 1))..=(1 << (w - 1)) - 1) as i64;
+        let mut n = Netlist::new("t");
+        let aw = n.add_input("a", w);
+        let bw = n.add_input("b", w);
+        let y = rtl::add(&mut n, &aw, &bw);
+        n.add_output("y", y.clone());
+        let mut s = Sim::new(&n);
+        s.set_word_all(&aw, a);
+        s.set_word_all(&bw, b);
+        s.eval();
+        let mask = (1i64 << w) - 1;
+        s.get_word_lane(&y, 0) as i64 == ((a + b) & mask)
+    });
+}
+
+#[test]
+fn prop_mux_tree_indexes() {
+    check("mux tree == array index", 40, |g| {
+        let nitems = g.usize_in(1..=20).max(1);
+        let width = g.usize_in(1..=8).max(1);
+        let items: Vec<i64> = (0..nitems)
+            .map(|_| g.rng().below(1 << width) as i64)
+            .collect();
+        let sel = g.rng().usize_below(nitems);
+        let selw = printed_mlp::circuits::index_bits(nitems);
+        let mut n = Netlist::new("t");
+        let sw = n.add_input("sel", selw);
+        let words: Vec<_> = items.iter().map(|&v| n.const_word(v, width)).collect();
+        let y = rtl::mux_tree(&mut n, &sw, &words);
+        n.add_output("y", y.clone());
+        let mut s = Sim::new(&n);
+        s.set_word_all(&sw, sel as i64);
+        s.eval();
+        s.get_word_lane(&y, 0) as i64 == items[sel]
+    });
+}
+
+#[test]
+fn prop_nsga_front_nondominated_and_sorted() {
+    check("NSGA front mutually non-dominated", 8, |g| {
+        let len = g.usize_in(3..=10).max(3);
+        let cfg = nsga::NsgaConfig {
+            pop_size: 12,
+            generations: 6,
+            seed: g.rng().next_u64(),
+            ..Default::default()
+        };
+        // Random linear objective weights per run.
+        let w1: f64 = g.f64_unit();
+        let front: Vec<Individual> = nsga::run(len, &cfg, |genome| {
+            let ones = genome.iter().filter(|&&b| b).count() as f64;
+            vec![ones * w1, (len as f64 - ones) * (1.0 - w1)]
+        });
+        front.iter().all(|a| {
+            front
+                .iter()
+                .all(|b| a.genome == b.genome || !nsga::dominates(&b.objectives, &a.objectives))
+        })
+    });
+}
+
+#[test]
+fn prop_qrelu_circuit_equals_function() {
+    check("qReLU unit == software qrelu", 40, |g| {
+        let w = g.usize_in(6..=20).max(6);
+        let trunc = g.usize_in(0..=10);
+        let v = g.i32_in(-(1 << (w - 1))..=(1 << (w - 1)) - 1);
+        let mut n = Netlist::new("t");
+        let acc = n.add_input("acc", w);
+        let y = rtl::qrelu_unit(&mut n, &acc, trunc);
+        n.add_output("y", y.clone());
+        let mut s = Sim::new(&n);
+        s.set_word_all(&acc, v as i64);
+        s.eval();
+        s.get_word_lane(&y, 0) as i32 == printed_mlp::model::qrelu(v, trunc as u32)
+    });
+}

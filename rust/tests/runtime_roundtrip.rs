@@ -1,0 +1,121 @@
+//! Cross-layer validation: the AOT-compiled JAX/Pallas artifact executed
+//! through PJRT must agree bit-exactly with the native Rust functional
+//! model on real datasets, including under feature masks and neuron
+//! approximation (the exact surface RFP and NSGA-II exercise).
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::model::importance;
+use printed_mlp::model::ApproxTables;
+use printed_mlp::runtime::{Engine, NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT};
+use printed_mlp::util::prng::Rng;
+
+fn store() -> Option<ArtifactStore> {
+    let s = ArtifactStore::discover();
+    if s.has("spectf") {
+        Some(s)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matches_native_exact() {
+    let Some(store) = store() else { return };
+    let engine = Engine::cpu().unwrap();
+    for name in ["spectf", "gas"] {
+        let model = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let eval = PjrtEvaluator::new(
+            &engine,
+            &store.hlo_path(name, BATCH_THROUGHPUT),
+            &model,
+            BATCH_THROUGHPUT,
+        )
+        .unwrap();
+        let native = NativeEvaluator { model: &model };
+
+        let split = ds.test.head(300); // covers a padded partial chunk
+        let fm = vec![1u8; model.features];
+        let am = vec![0u8; model.hidden];
+        let t = ApproxTables::disabled(model.hidden);
+        let got = eval.predict(&split.xs, split.len(), &fm, &am, &t).unwrap();
+        let want = native.predict(&split.xs, split.len(), &fm, &am, &t);
+        assert_eq!(got, want, "{name}: PJRT and native predictions diverge");
+    }
+}
+
+#[test]
+fn pjrt_matches_native_under_masks_and_approx() {
+    let Some(store) = store() else { return };
+    let engine = Engine::cpu().unwrap();
+    let name = "spectf";
+    let model = store.model(name).unwrap();
+    let ds = store.dataset(name).unwrap();
+    let eval = PjrtEvaluator::new(
+        &engine,
+        &store.hlo_path(name, BATCH_THROUGHPUT),
+        &model,
+        BATCH_THROUGHPUT,
+    )
+    .unwrap();
+    let native = NativeEvaluator { model: &model };
+    let split = ds.test.head(256);
+
+    let mut rng = Rng::new(2024);
+    for trial in 0..5 {
+        // Random feature mask (keep ~80%) and random approx mask.
+        let fm: Vec<u8> = (0..model.features)
+            .map(|_| if rng.chance(0.8) { 1 } else { 0 })
+            .collect();
+        let am: Vec<u8> = (0..model.hidden)
+            .map(|_| if rng.chance(0.5) { 1 } else { 0 })
+            .collect();
+        let tables = importance::approx_tables(&model, &split.xs, split.len(), &fm);
+
+        let got = eval.predict(&split.xs, split.len(), &fm, &am, &tables).unwrap();
+        let want = native.predict(&split.xs, split.len(), &fm, &am, &tables);
+        assert_eq!(got, want, "trial {trial}: divergence under masks");
+    }
+}
+
+#[test]
+fn pjrt_latency_artifact_works() {
+    let Some(store) = store() else { return };
+    let engine = Engine::cpu().unwrap();
+    let model = store.model("spectf").unwrap();
+    let ds = store.dataset("spectf").unwrap();
+    let eval = PjrtEvaluator::new(&engine, &store.hlo_path("spectf", 1), &model, 1).unwrap();
+    let native = NativeEvaluator { model: &model };
+    let fm = vec![1u8; model.features];
+    let am = vec![0u8; model.hidden];
+    let t = ApproxTables::disabled(model.hidden);
+    let split = ds.test.head(16);
+    let got = eval.predict(&split.xs, split.len(), &fm, &am, &t).unwrap();
+    assert_eq!(got, native.predict(&split.xs, split.len(), &fm, &am, &t));
+}
+
+#[test]
+fn accuracy_matches_recorded_test_acc() {
+    // The accuracy the Python trainer recorded (via the jnp oracle) must be
+    // reproduced by the Rust functional model — three implementations of
+    // the same semantics agreeing on the paper's headline metric.
+    let Some(store) = store() else { return };
+    for name in printed_mlp::data::DATASET_ORDER {
+        let model = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let native = NativeEvaluator { model: &model };
+        let fm = vec![1u8; model.features];
+        let am = vec![0u8; model.hidden];
+        let t = ApproxTables::disabled(model.hidden);
+        let acc = native.accuracy(&ds.test, &fm, &am, &t);
+        assert!(
+            // The Python side records float32 accuracies; allow f32 eps.
+            (acc - model.test_acc).abs() < 1e-6,
+            "{name}: native acc {acc} != recorded {}",
+            model.test_acc
+        );
+    }
+}
