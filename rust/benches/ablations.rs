@@ -14,50 +14,54 @@ mod harness;
 use printed_mlp::circuits::seq_multicycle;
 use printed_mlp::model::ApproxTables;
 use printed_mlp::rfp::{self, Strategy};
-use printed_mlp::runtime::{Engine, PjrtEvaluator, BATCH_THROUGHPUT};
+use printed_mlp::runtime::{PjrtEvaluator, BATCH_THROUGHPUT};
 use printed_mlp::tech;
 
 fn main() {
     let Some(store) = harness::require_artifacts() else { return };
-    let engine = Engine::cpu().unwrap();
+    // A1 and A4 drive RFP through PJRT; under the vendored xla stub they
+    // are skipped (with a note) while A2/A3 still run.
+    let engine = harness::require_pjrt();
 
     // --- A1: RFP on/off ------------------------------------------------------
-    harness::section("A1 — RFP on vs off (multi-cycle design)");
-    println!(
-        "{:>12} {:>6} {:>6} {:>11} {:>11} {:>10}",
-        "dataset", "F", "kept", "area off", "area on", "Δcycles"
-    );
-    for name in ["spectf", "gas", "har"] {
-        let m = store.model(name).unwrap();
-        let ds = store.dataset(name).unwrap();
-        let eval = PjrtEvaluator::new(
-            &engine,
-            &store.hlo_path(name, BATCH_THROUGHPUT),
-            &m,
-            BATCH_THROUGHPUT,
-        )
-        .unwrap();
-        let fit = ds.train.head(512);
-        let prep = eval.prepare(&fit).unwrap();
-        let am = vec![0u8; m.hidden];
-        let t = ApproxTables::disabled(m.hidden);
-        let thr = eval
-            .accuracy_prepared(&prep, &vec![1u8; m.features], &am, &t)
-            .unwrap();
-        let res = rfp::prune(&m, &fit, thr, Strategy::Bisect, |mask| {
-            eval.accuracy_prepared(&prep, mask, &am, &t).unwrap()
-        });
-        let all: Vec<usize> = (0..m.features).collect();
-        let off = tech::report(&seq_multicycle::generate(&m, &all).netlist);
-        let on = tech::report(&seq_multicycle::generate(&m, &res.active).netlist);
+    if let Some(engine) = &engine {
+        harness::section("A1 — RFP on vs off (multi-cycle design)");
         println!(
-            "{name:>12} {:>6} {:>6} {:>9.1} c {:>9.1} c {:>10}",
-            m.features,
-            res.kept,
-            off.area_cm2,
-            on.area_cm2,
-            m.features - res.kept
+            "{:>12} {:>6} {:>6} {:>11} {:>11} {:>10}",
+            "dataset", "F", "kept", "area off", "area on", "Δcycles"
         );
+        for name in ["spectf", "gas", "har"] {
+            let m = store.model(name).unwrap();
+            let ds = store.dataset(name).unwrap();
+            let eval = PjrtEvaluator::new(
+                engine,
+                &store.hlo_path(name, BATCH_THROUGHPUT),
+                &m,
+                BATCH_THROUGHPUT,
+            )
+            .unwrap();
+            let fit = ds.train.head(512);
+            let prep = eval.prepare(&fit).unwrap();
+            let am = vec![0u8; m.hidden];
+            let t = ApproxTables::disabled(m.hidden);
+            let thr = eval
+                .accuracy_prepared(&prep, &vec![1u8; m.features], &am, &t)
+                .unwrap();
+            let res = rfp::prune(&m, &fit, thr, Strategy::Bisect, |mask| {
+                eval.accuracy_prepared(&prep, mask, &am, &t).unwrap()
+            });
+            let all: Vec<usize> = (0..m.features).collect();
+            let off = tech::report(&seq_multicycle::generate(&m, &all).netlist);
+            let on = tech::report(&seq_multicycle::generate(&m, &res.active).netlist);
+            println!(
+                "{name:>12} {:>6} {:>6} {:>9.1} c {:>9.1} c {:>10}",
+                m.features,
+                res.kept,
+                off.area_cm2,
+                on.area_cm2,
+                m.features - res.kept
+            );
+        }
     }
 
     // --- A2: base realignment on/off ----------------------------------------
@@ -103,35 +107,37 @@ fn main() {
     }
 
     // --- A4: RFP strategy evals ----------------------------------------------
-    harness::section("A4 — RFP evals: greedy (paper) vs bisect (§Perf)");
-    println!("{:>12} {:>8} {:>8} {:>9} {:>9}", "dataset", "g.evals", "b.evals", "g.kept", "b.kept");
-    for name in ["spectf", "gas", "epileptic"] {
-        let m = store.model(name).unwrap();
-        let ds = store.dataset(name).unwrap();
-        let eval = PjrtEvaluator::new(
-            &engine,
-            &store.hlo_path(name, BATCH_THROUGHPUT),
-            &m,
-            BATCH_THROUGHPUT,
-        )
-        .unwrap();
-        let fit = ds.train.head(512);
-        let prep = eval.prepare(&fit).unwrap();
-        let am = vec![0u8; m.hidden];
-        let t = ApproxTables::disabled(m.hidden);
-        let thr = eval
-            .accuracy_prepared(&prep, &vec![1u8; m.features], &am, &t)
+    if let Some(engine) = &engine {
+        harness::section("A4 — RFP evals: greedy (paper) vs bisect (§Perf)");
+        println!("{:>12} {:>8} {:>8} {:>9} {:>9}", "dataset", "g.evals", "b.evals", "g.kept", "b.kept");
+        for name in ["spectf", "gas", "epileptic"] {
+            let m = store.model(name).unwrap();
+            let ds = store.dataset(name).unwrap();
+            let eval = PjrtEvaluator::new(
+                engine,
+                &store.hlo_path(name, BATCH_THROUGHPUT),
+                &m,
+                BATCH_THROUGHPUT,
+            )
             .unwrap();
-        let run = |s: Strategy| {
-            rfp::prune(&m, &fit, thr, s, |mask| {
-                eval.accuracy_prepared(&prep, mask, &am, &t).unwrap()
-            })
-        };
-        let g = run(Strategy::Greedy);
-        let b = run(Strategy::Bisect);
-        println!(
-            "{name:>12} {:>8} {:>8} {:>9} {:>9}",
-            g.evals, b.evals, g.kept, b.kept
-        );
+            let fit = ds.train.head(512);
+            let prep = eval.prepare(&fit).unwrap();
+            let am = vec![0u8; m.hidden];
+            let t = ApproxTables::disabled(m.hidden);
+            let thr = eval
+                .accuracy_prepared(&prep, &vec![1u8; m.features], &am, &t)
+                .unwrap();
+            let run = |s: Strategy| {
+                rfp::prune(&m, &fit, thr, s, |mask| {
+                    eval.accuracy_prepared(&prep, mask, &am, &t).unwrap()
+                })
+            };
+            let g = run(Strategy::Greedy);
+            let b = run(Strategy::Bisect);
+            println!(
+                "{name:>12} {:>8} {:>8} {:>9} {:>9}",
+                g.evals, b.evals, g.kept, b.kept
+            );
+        }
     }
 }

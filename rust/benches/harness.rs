@@ -44,6 +44,19 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// PJRT-gated entry: an engine when a client comes up, else a printed
+/// skip note (the vendored `xla` stub always fails — see rust/README.md).
+/// Lets the non-PJRT sections of a bench still run and report.
+pub fn require_pjrt() -> Option<printed_mlp::runtime::Engine> {
+    match printed_mlp::runtime::Engine::cpu() {
+        Ok(engine) => Some(engine),
+        Err(err) => {
+            println!("SKIP PJRT sections: {err:#}");
+            None
+        }
+    }
+}
+
 /// Artifact-gated entry: skip politely when `make artifacts` hasn't run.
 pub fn require_artifacts() -> Option<printed_mlp::data::ArtifactStore> {
     let store = printed_mlp::data::ArtifactStore::discover();

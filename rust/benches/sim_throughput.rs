@@ -1,0 +1,71 @@
+//! Sharded gate-level simulation throughput: 1 thread vs N threads on a
+//! seq_multicycle circuit (gate-evals/sec and speedup), plus the serial
+//! overhead of plan reuse.
+//!
+//! Artifact-free — the circuit comes from a random `QuantModel` — so this
+//! bench always runs, unlike the `make artifacts`-gated harnesses.  The
+//! acceptance bar for the sharding subsystem is >= 2x throughput at 4+
+//! threads vs 1 thread on multi-core hosts.
+
+mod harness;
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use common::rand_model;
+use printed_mlp::circuits::seq_multicycle;
+use printed_mlp::sim::{batch, testbench};
+use printed_mlp::util::pool;
+use printed_mlp::util::prng::Rng;
+
+fn main() {
+    harness::section("Sim sharding — seq_multicycle gate-evals/sec vs threads");
+
+    // HAR-class circuit: 48 active features, 16 hidden, 5 classes.
+    let m = rand_model(11, 48, 16, 5);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let n = 4096usize;
+    let mut rng = Rng::new(3);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| rng.below(16) as u8).collect();
+
+    let cycles = (circ.cycles + 1) as f64; // + reset cycle
+    let blocks = batch::n_blocks(n) as f64;
+    // Every block evaluates every cell once per cycle across 64 lanes.
+    let lane_gate_evals = circ.netlist.cells.len() as f64 * cycles * blocks * 64.0;
+    println!(
+        "circuit: {} cells, {} cycles/inference, {n} samples ({} blocks)",
+        circ.netlist.cells.len(),
+        circ.cycles + 1,
+        batch::n_blocks(n)
+    );
+
+    let avail = pool::default_threads();
+    let mut thread_counts = vec![1usize, 2, 4];
+    if !thread_counts.contains(&avail) {
+        thread_counts.push(avail);
+    }
+
+    let mut base_ms = 0.0f64;
+    for &threads in &thread_counts {
+        let r = harness::bench(
+            &format!("seq sim {n} samples, {threads:>2} thread(s)"),
+            3,
+            || {
+                let preds = testbench::run_sequential_threads(&circ, &xs, n, m.features, threads);
+                std::hint::black_box(preds.len());
+            },
+        );
+        if threads == 1 {
+            base_ms = r.mean_ms;
+        }
+        let speedup = if r.mean_ms > 0.0 { base_ms / r.mean_ms } else { 0.0 };
+        println!(
+            "         -> {:8.1} M lane-gate-evals/s | speedup {speedup:4.2}x vs 1 thread",
+            lane_gate_evals / r.mean_ms * 1e-3,
+        );
+    }
+    println!(
+        "note: PRINTED_MLP_THREADS caps the default worker count ({avail} here); \
+         the sharded and 1-thread runs are bit-identical (tests/sim_sharding.rs)."
+    );
+}

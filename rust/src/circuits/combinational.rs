@@ -162,11 +162,7 @@ pub fn generate(model: &QuantModel, active: &[usize]) -> CombCircuit {
     n.add_output("class_out", idx);
     let raw_cells = n.cells.len();
     crate::netlist::opt::optimize(&mut n);
-    CombCircuit {
-        netlist: n,
-        active: active.to_vec(),
-        raw_cells,
-    }
+    CombCircuit::new(n, active.to_vec(), raw_cells)
 }
 
 #[cfg(test)]

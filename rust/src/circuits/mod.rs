@@ -22,8 +22,11 @@ pub mod rtl;
 pub mod seq_multicycle;
 pub mod seq_sota;
 
+use std::sync::{Arc, OnceLock};
+
 use crate::model::QuantModel;
 use crate::netlist::Netlist;
+use crate::sim::SimPlan;
 use rtl::width_for_range;
 
 /// A generated sequential circuit plus its execution contract.
@@ -36,6 +39,28 @@ pub struct SeqCircuit {
     pub active: Vec<usize>,
     /// Cell count before the CSE+DCE cleanup (ablation A3).
     pub raw_cells: usize,
+    /// Lazily-built levelized simulation plan, shared by all sim shards.
+    sim_plan: OnceLock<Arc<SimPlan>>,
+}
+
+impl SeqCircuit {
+    pub fn new(netlist: Netlist, cycles: usize, active: Vec<usize>, raw_cells: usize) -> SeqCircuit {
+        SeqCircuit {
+            netlist,
+            cycles,
+            active,
+            raw_cells,
+            sim_plan: OnceLock::new(),
+        }
+    }
+
+    /// The circuit's levelized [`SimPlan`]: topo order + DFF extraction run
+    /// once on first use, then every simulator shard shares the `Arc`.
+    pub fn sim_plan(&self) -> Arc<SimPlan> {
+        self.sim_plan
+            .get_or_init(|| Arc::new(SimPlan::new(&self.netlist)))
+            .clone()
+    }
 }
 
 /// A generated combinational circuit (single-cycle inference).
@@ -44,6 +69,26 @@ pub struct CombCircuit {
     pub active: Vec<usize>,
     /// Cell count before the CSE+DCE cleanup (ablation A3).
     pub raw_cells: usize,
+    /// Lazily-built levelized simulation plan, shared by all sim shards.
+    sim_plan: OnceLock<Arc<SimPlan>>,
+}
+
+impl CombCircuit {
+    pub fn new(netlist: Netlist, active: Vec<usize>, raw_cells: usize) -> CombCircuit {
+        CombCircuit {
+            netlist,
+            active,
+            raw_cells,
+            sim_plan: OnceLock::new(),
+        }
+    }
+
+    /// The circuit's levelized [`SimPlan`] (see [`SeqCircuit::sim_plan`]).
+    pub fn sim_plan(&self) -> Arc<SimPlan> {
+        self.sim_plan
+            .get_or_init(|| Arc::new(SimPlan::new(&self.netlist)))
+            .clone()
+    }
 }
 
 /// Signed accumulator ranges for layer 1 (over the active features only)

@@ -141,12 +141,7 @@ fn generate_hybrid_opts(
     n.add_output("class_out", idx_q);
     let raw_cells = n.cells.len();
     crate::netlist::opt::optimize(&mut n);
-    SeqCircuit {
-        netlist: n,
-        cycles,
-        active: active.to_vec(),
-        raw_cells,
-    }
+    SeqCircuit::new(n, cycles, active.to_vec(), raw_cells)
 }
 
 /// Multi-cycle exact neuron (Fig. 2b): weight mux over hardwired

@@ -151,12 +151,7 @@ pub fn generate(model: &QuantModel, active: &[usize]) -> SeqCircuit {
     n.add_output("class_out", idx_q);
     let raw_cells = n.cells.len();
     crate::netlist::opt::optimize(&mut n);
-    SeqCircuit {
-        netlist: n,
-        cycles,
-        active: active.to_vec(),
-        raw_cells,
-    }
+    SeqCircuit::new(n, cycles, active.to_vec(), raw_cells)
 }
 
 #[cfg(test)]

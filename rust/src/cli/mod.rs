@@ -2,14 +2,18 @@
 //! §Substitutions).
 //!
 //! ```text
-//! printed-mlp pipeline  [--datasets a,b] [--threads N] [--native]
-//!                       [--no-cache] [--fit-subset N] [--config FILE]
+//! printed-mlp pipeline  [--datasets a,b] [--threads N] [--backend B]
+//!                       [--native] [--no-cache] [--fit-subset N]
+//!                       [--config FILE]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
-//! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N]
-//! printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S]
+//! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
+//! printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--backend B]
 //! printed-mlp info
 //! ```
+//!
+//! `B` selects the [`crate::runtime::Evaluator`] backend:
+//! `auto|native|pjrt|gatesim`.
 
 use std::collections::BTreeMap;
 
@@ -66,14 +70,19 @@ const USAGE: &str = "printed-mlp — Sequential Printed MLP Circuits (ASPDAC'25)
 
 USAGE:
   printed-mlp pipeline  [--datasets a,b,..] [--threads N] [--native]
+                        [--backend auto|native|pjrt|gatesim]
                         [--no-cache] [--fit-subset N] [--pop N] [--gens N]
                         [--config FILE] [--fast]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
+                        [--threads N]
   printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--sensors N]
+                        [--backend auto|native|pjrt|gatesim]
   printed-mlp info
 
+Backends: auto prefers PJRT and falls back to the native functional model;
+gatesim validates on the sharded gate-level netlist simulator.
 Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
 
 /// CLI entrypoint.
@@ -112,7 +121,10 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
         conf.set("pipeline.threads", v);
     }
     if flags.has("native") {
-        conf.set("pipeline.use_pjrt", "false");
+        conf.set("pipeline.backend", "native");
+    }
+    if let Some(v) = flags.get("backend") {
+        conf.set("pipeline.backend", v);
     }
     if flags.has("no-cache") {
         conf.set("pipeline.cache", "false");
@@ -153,11 +165,11 @@ fn cmd_pipeline(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     let t0 = std::time::Instant::now();
     let outs = coordinator::run_pipeline(store, &cfg)?;
     println!(
-        "pipeline: {} datasets in {:.1}s ({} threads, {})",
+        "pipeline: {} datasets in {:.1}s ({} threads, backend {})",
         outs.len(),
         t0.elapsed().as_secs_f64(),
         cfg.threads,
-        if cfg.use_pjrt { "PJRT" } else { "native" }
+        cfg.backend.label()
     );
     let md = report::full_report(&outs, &store.results_dir())?;
     println!("{md}");
@@ -246,6 +258,10 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     let name = flags.get("dataset").ok_or_else(|| anyhow!("--dataset required"))?;
     let arch = flags.get("arch").unwrap_or("ours");
     let samples: usize = flags.get("samples").unwrap_or("256").parse()?;
+    let threads: usize = match flags.get("threads") {
+        Some(v) => v.parse::<usize>()?.max(1),
+        None => crate::util::pool::default_threads(),
+    };
     let model = store.model(name)?;
     let ds = store.dataset(name)?;
     let split = ds.test.head(samples);
@@ -254,20 +270,38 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     let preds = match arch {
         "comb" | "combinational" => {
             let c = crate::circuits::combinational::generate(&model, &active);
-            crate::sim::testbench::run_combinational(&c, &split.xs, split.len(), model.features)
+            crate::sim::testbench::run_combinational_threads(
+                &c,
+                &split.xs,
+                split.len(),
+                model.features,
+                threads,
+            )
         }
         "sota" => {
             let c = crate::circuits::seq_sota::generate(&model, &active);
-            crate::sim::testbench::run_sequential(&c, &split.xs, split.len(), model.features)
+            crate::sim::testbench::run_sequential_threads(
+                &c,
+                &split.xs,
+                split.len(),
+                model.features,
+                threads,
+            )
         }
         _ => {
             let c = crate::circuits::seq_multicycle::generate(&model, &active);
-            crate::sim::testbench::run_sequential(&c, &split.xs, split.len(), model.features)
+            crate::sim::testbench::run_sequential_threads(
+                &c,
+                &split.xs,
+                split.len(),
+                model.features,
+                threads,
+            )
         }
     };
     let acc = crate::sim::testbench::accuracy(&preds, &split.ys);
     println!(
-        "{name}/{arch}: {} samples, gate-level accuracy {:.3} (recorded {:.3}), {:.2}s",
+        "{name}/{arch}: {} samples, gate-level accuracy {:.3} (recorded {:.3}), {:.2}s ({threads} sim threads)",
         split.len(),
         acc,
         model.test_acc,
@@ -290,11 +324,14 @@ fn cmd_serve(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     if let Some(s) = flags.get("sensors") {
         cfg.sensors = s.parse()?;
     }
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = b.parse()?;
+    }
     require_artifacts(store, &[cfg.dataset.clone()])?;
     let rep = serve::run(store, &cfg)?;
     println!(
-        "serve {}: {} requests in {} batches | {:.0} req/s | mean batch {:.1} | p50 {:.2} ms | p99 {:.2} ms | acc {:.3}",
-        cfg.dataset, rep.requests, rep.batches, rep.throughput_rps, rep.mean_batch,
+        "serve {} [{}]: {} requests in {} batches | {:.0} req/s | mean batch {:.1} | p50 {:.2} ms | p99 {:.2} ms | acc {:.3}",
+        cfg.dataset, rep.backend, rep.requests, rep.batches, rep.throughput_rps, rep.mean_batch,
         rep.p50_ms, rep.p99_ms, rep.accuracy
     );
     Ok(())
@@ -351,7 +388,19 @@ mod tests {
         let cfg = pipeline_config(&f).unwrap();
         assert_eq!(cfg.fit_subset, 64);
         assert_eq!(cfg.nsga.pop_size, 8);
-        assert!(!cfg.use_pjrt);
+        assert_eq!(cfg.backend, crate::runtime::Backend::Native);
+    }
+
+    #[test]
+    fn backend_flag_selects_backend() {
+        let args: Vec<String> = ["--backend", "gatesim"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = pipeline_config(&f).unwrap();
+        assert_eq!(cfg.backend, crate::runtime::Backend::GateSim);
+
+        let args: Vec<String> = ["--backend", "nosuch"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert!(pipeline_config(&f).is_err());
     }
 
     #[test]

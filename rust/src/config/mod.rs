@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::PipelineConfig;
 use crate::nsga::NsgaConfig;
 use crate::rfp::Strategy;
+use crate::runtime::Backend;
 
 /// Parsed configuration: `section.key -> raw value string`.
 #[derive(Clone, Debug, Default)]
@@ -120,7 +121,14 @@ impl Config {
             cfg.threads = t.max(1);
         }
         if let Some(b) = self.get_bool("pipeline.use_pjrt")? {
-            cfg.use_pjrt = b;
+            // Back-compat alias from the pre-backend config format.  An
+            // explicit `use_pjrt = true` keeps its old hard requirement
+            // (fail if no PJRT client) rather than degrading to Auto's
+            // silent native fallback.
+            cfg.backend = if b { Backend::Pjrt } else { Backend::Native };
+        }
+        if let Some(s) = self.get("pipeline.backend") {
+            cfg.backend = s.parse().with_context(|| format!("pipeline.backend={s}"))?;
         }
         if let Some(b) = self.get_bool("pipeline.gate_level_accuracy")? {
             cfg.gate_level_accuracy = b;
@@ -183,8 +191,16 @@ mod tests {
         );
         let p = c.pipeline().unwrap();
         assert_eq!(p.threads, 3);
-        assert!(!p.use_pjrt);
+        assert_eq!(p.backend, Backend::Native);
         assert_eq!(p.nsga.pop_size, 10);
+    }
+
+    #[test]
+    fn backend_key_parses_and_wins_over_alias() {
+        let c = Config::parse("[pipeline]\nuse_pjrt = false\nbackend = gatesim\n").unwrap();
+        assert_eq!(c.pipeline().unwrap().backend, Backend::GateSim);
+        let c = Config::parse("[pipeline]\nbackend = warp-drive\n").unwrap();
+        assert!(c.pipeline().is_err());
     }
 
     #[test]

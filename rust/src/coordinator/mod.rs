@@ -21,7 +21,9 @@ use crate::data::ArtifactStore;
 use crate::model::ApproxTables;
 use crate::nsga::NsgaConfig;
 use crate::rfp::{self, RfpResult, Strategy};
-use crate::runtime::{Engine, NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT};
+use crate::runtime::{
+    Backend, Evaluator, GateSimEvaluator, NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT,
+};
 use crate::sim::testbench;
 use crate::tech::{self, CircuitReport};
 use crate::util::json::{self, Json};
@@ -32,7 +34,9 @@ use crate::util::pool::{default_threads, scope_map};
 pub struct PipelineConfig {
     pub datasets: Vec<String>,
     pub threads: usize,
-    pub use_pjrt: bool,
+    /// Evaluator backend for the fitness/accuracy loops (`Auto` prefers
+    /// PJRT and falls back to the bit-exact native model).
+    pub backend: Backend,
     pub rfp_strategy: Strategy,
     pub nsga: NsgaConfig,
     /// Accuracy-drop budgets for Fig. 7 (fractions).
@@ -50,7 +54,7 @@ impl Default for PipelineConfig {
         PipelineConfig {
             datasets: crate::data::DATASET_ORDER.iter().map(|s| s.to_string()).collect(),
             threads: default_threads(),
-            use_pjrt: true,
+            backend: Backend::Auto,
             rfp_strategy: Strategy::Bisect,
             nsga: NsgaConfig::default(),
             drops: vec![0.01, 0.02, 0.05],
@@ -89,14 +93,23 @@ pub struct DatasetOutcome {
     pub hybrids: Vec<(f64, DesignReport)>,
 }
 
-/// An accuracy evaluator that prefers PJRT and falls back to the native
-/// functional model.
+/// The selected fitness/accuracy evaluator.  PJRT is kept as a concrete
+/// variant because its prepared-input fast path (§Perf: staged device
+/// literals) is backend-specific; everything else goes through the
+/// [`Evaluator`] trait object.
 enum Eval<'m> {
     Pjrt(PjrtEvaluator),
-    Native(NativeEvaluator<'m>),
+    Dyn(Box<dyn Evaluator + 'm>),
 }
 
 impl<'m> Eval<'m> {
+    fn as_dyn(&self) -> &(dyn Evaluator + 'm) {
+        match self {
+            Eval::Pjrt(e) => e,
+            Eval::Dyn(b) => b.as_ref(),
+        }
+    }
+
     fn accuracy(
         &self,
         split: &crate::data::Split,
@@ -104,12 +117,9 @@ impl<'m> Eval<'m> {
         am: &[u8],
         t: &ApproxTables,
     ) -> f64 {
-        match self {
-            Eval::Pjrt(e) => e
-                .accuracy(split, fm, am, t)
-                .expect("PJRT evaluation failed mid-pipeline"),
-            Eval::Native(e) => e.accuracy(split, fm, am, t),
-        }
+        self.as_dyn()
+            .accuracy(split, fm, am, t)
+            .expect("evaluation failed mid-pipeline")
     }
 }
 
@@ -122,15 +132,30 @@ pub fn run_dataset(
     let model = store.model(name)?;
     let ds = store.dataset(name)?;
 
-    let engine = if cfg.use_pjrt { Some(Engine::cpu()?) } else { None };
-    let eval = match &engine {
-        Some(engine) => Eval::Pjrt(PjrtEvaluator::new(
-            engine,
+    // Datasets fan out across up to min(threads, n_datasets) workers, so
+    // anything inside run_dataset that spawns its own sim workers gets the
+    // thread budget divided between in-flight datasets (ceil, min 1) —
+    // otherwise every dataset would spawn cfg.threads CPU-bound threads
+    // and oversubscribe to threads².
+    let in_flight = cfg.threads.min(cfg.datasets.len()).max(1);
+    let sim_threads = (cfg.threads.max(1) + in_flight - 1) / in_flight;
+
+    // Backend selection: `Auto` probes for a PJRT client and falls back
+    // to native; the engine must outlive any PJRT evaluator built on it.
+    let (engine, backend) = cfg.backend.resolve()?;
+    let eval: Eval = match backend {
+        Backend::Pjrt => Eval::Pjrt(PjrtEvaluator::new(
+            engine.as_ref().expect("pjrt backend implies an engine"),
             &store.hlo_path(name, BATCH_THROUGHPUT),
             &model,
             BATCH_THROUGHPUT,
         )?),
-        None => Eval::Native(NativeEvaluator { model: &model }),
+        Backend::Native => Eval::Dyn(Box::new(NativeEvaluator { model: &model })),
+        Backend::GateSim => Eval::Dyn(Box::new(GateSimEvaluator::with_threads(
+            &model,
+            sim_threads,
+        ))),
+        Backend::Auto => unreachable!("resolve() returns a concrete backend"),
     };
 
     let fit_split = if cfg.fit_subset > 0 {
@@ -143,7 +168,7 @@ pub fn run_dataset(
     // rebuilding the B×F input literal per call dominated the fitness path.
     let prep = match &eval {
         Eval::Pjrt(e) => Some(e.prepare(&fit_split)?),
-        Eval::Native(_) => None,
+        Eval::Dyn(_) => None,
     };
     let fit_acc = |fm: &[u8], am: &[u8], t: &ApproxTables| -> f64 {
         match (&eval, &prep) {
@@ -179,6 +204,8 @@ pub fn run_dataset(
     // --- Stage 3: circuits + synthesis-lite + validation -------------------
     let active = &rfp.active;
     let test = &ds.test;
+    // Gate-level validation runs the sharded simulator on the same
+    // divided budget as the GateSim fitness evaluator above.
     let mk_seq_report = |circ: &crate::circuits::SeqCircuit,
                          arch: &'static str,
                          am: &[u8],
@@ -186,7 +213,13 @@ pub fn run_dataset(
      -> DesignReport {
         let rep = tech::report(&circ.netlist);
         let acc = if cfg.gate_level_accuracy {
-            let preds = testbench::run_sequential(&circ, &test.xs, test.len(), model.features);
+            let preds = testbench::run_sequential_threads(
+                circ,
+                &test.xs,
+                test.len(),
+                model.features,
+                sim_threads,
+            );
             testbench::accuracy(&preds, &test.ys)
         } else {
             eval.accuracy(test, &rfp.feat_mask, am, tb)
@@ -211,7 +244,13 @@ pub fn run_dataset(
     let comb = {
         let rep = tech::report(&comb_c.netlist);
         let acc = if cfg.gate_level_accuracy {
-            let preds = testbench::run_combinational(&comb_c, &test.xs, test.len(), model.features);
+            let preds = testbench::run_combinational_threads(
+                &comb_c,
+                &test.xs,
+                test.len(),
+                model.features,
+                sim_threads,
+            );
             testbench::accuracy(&preds, &test.ys)
         } else {
             eval.accuracy(test, &rfp.feat_mask, &no_approx, &no_tables)

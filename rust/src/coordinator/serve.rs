@@ -1,12 +1,13 @@
 //! Multi-sensory streaming "serve" mode: the deployment story of the
-//! paper's intro (wearables streaming sensor frames), run against the
-//! PJRT-compiled classifier with a dynamic batcher — the L3 request path
-//! with Python nowhere in sight.
+//! paper's intro (wearables streaming sensor frames), run against a
+//! dynamic batcher — the L3 request path with Python nowhere in sight.
 //!
 //! Sensor threads push frames into a channel; the leader drains up to the
-//! compiled batch size (or until `max_wait` expires), executes one PJRT
-//! call, and records per-request latency.  This is the standard dynamic
-//! batching trade-off (throughput vs tail latency) in miniature.
+//! compiled batch size (or until `max_wait` expires), executes one batch
+//! on the selected [`Evaluator`] backend (PJRT, native functional model,
+//! or the sharded gate-level simulator), and records per-request latency.
+//! This is the standard dynamic batching trade-off (throughput vs tail
+//! latency) in miniature.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -15,7 +16,9 @@ use anyhow::Result;
 
 use crate::data::{ArtifactStore, Dataset};
 use crate::model::ApproxTables;
-use crate::runtime::{Engine, PjrtEvaluator, BATCH_THROUGHPUT};
+use crate::runtime::{
+    Backend, Evaluator, GateSimEvaluator, NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT,
+};
 use crate::util::prng::Rng;
 use crate::util::stats;
 
@@ -30,6 +33,8 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     pub sensors: usize,
     pub seed: u64,
+    /// Evaluator backend on the request path.
+    pub backend: Backend,
 }
 
 impl Default for ServeConfig {
@@ -41,6 +46,7 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             sensors: 4,
             seed: 7,
+            backend: Backend::Auto,
         }
     }
 }
@@ -48,6 +54,8 @@ impl Default for ServeConfig {
 /// Latency/throughput summary of a serve run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Resolved backend that actually served the run.
+    pub backend: &'static str,
     pub requests: usize,
     pub batches: usize,
     pub throughput_rps: f64,
@@ -66,13 +74,19 @@ struct Frame {
 pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServeReport> {
     let model = store.model(&cfg.dataset)?;
     let ds: Dataset = store.dataset(&cfg.dataset)?;
-    let engine = Engine::cpu()?;
-    let eval = PjrtEvaluator::new(
-        &engine,
-        &store.hlo_path(&cfg.dataset, BATCH_THROUGHPUT),
-        &model,
-        BATCH_THROUGHPUT,
-    )?;
+    // Backend selection; the engine (if any) must outlive the evaluator.
+    let (engine, backend) = cfg.backend.resolve()?;
+    let eval: Box<dyn Evaluator + '_> = match backend {
+        Backend::Pjrt => Box::new(PjrtEvaluator::new(
+            engine.as_ref().expect("pjrt backend implies an engine"),
+            &store.hlo_path(&cfg.dataset, BATCH_THROUGHPUT),
+            &model,
+            BATCH_THROUGHPUT,
+        )?),
+        Backend::Native => Box::new(NativeEvaluator { model: &model }),
+        Backend::GateSim => Box::new(GateSimEvaluator::new(&model)),
+        Backend::Auto => unreachable!("resolve() returns a concrete backend"),
+    };
     let features = model.features;
     let fm = vec![1u8; features];
     let am = vec![0u8; model.hidden];
@@ -163,6 +177,7 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServeReport> {
 
         let elapsed = started.elapsed().as_secs_f64();
         Ok(ServeReport {
+            backend: eval.name(),
             requests: total,
             batches,
             throughput_rps: total as f64 / elapsed.max(1e-9),

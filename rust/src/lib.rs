@@ -9,7 +9,11 @@
 //! - [`model`] — bit-exact functional model of pow2-quantized hybrid MLPs
 //!   (multi-cycle + single-cycle neurons, qReLU).
 //! - [`data`] — the seven multi-sensor dataset configurations and loaders.
-//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts.
+//! - [`runtime`] — the unified [`runtime::Evaluator`] backend abstraction:
+//!   native functional model, PJRT executor for the AOT-compiled
+//!   JAX/Pallas artifacts, and the gate-level simulator, selectable with
+//!   `--backend native|pjrt|gatesim` (auto prefers PJRT, falls back to
+//!   native).
 //! - [`rfp`] — Redundant Feature Pruning (Algorithm 1).
 //! - [`nsga`] — NSGA-II multi-objective optimizer.
 //! - [`approx`] — neuron-approximation framework (Eq. 1, Fig. 5).
@@ -17,11 +21,15 @@
 //! - [`circuits`] — the four architectures: combinational [14], sequential
 //!   state-of-the-art [16], our multi-cycle sequential, and the hybrid.
 //! - [`tech`] — printed-EGFET cell library and synthesis-lite estimation.
-//! - [`sim`] — cycle-accurate netlist simulator (VCS substitute).
+//! - [`sim`] — cycle-accurate netlist simulator (VCS substitute), 64
+//!   samples packed per word and sharded across worker threads over a
+//!   shared levelized [`sim::SimPlan`] (see [`sim::batch`]);
+//!   `PRINTED_MLP_THREADS` caps the worker count.
 //! - [`coordinator`] — pipeline orchestration and the streaming serve mode.
 //! - [`report`] — table/figure emitters for the paper's evaluation.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index.
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `rust/README.md` for backend selection and threading guidance.
 
 pub mod approx;
 pub mod circuits;

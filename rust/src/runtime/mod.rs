@@ -1,182 +1,109 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
-//! them from the Rust hot path (Python is never on the request path).
+//! Model-evaluation backends behind the unified [`Evaluator`] trait.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`.
+//! Three interchangeable implementations of "predict a batch under
+//! feature/approximation masks", selectable end-to-end via
+//! `--backend native|pjrt|gatesim` on the CLI (or [`Backend::Auto`], the
+//! default, which prefers PJRT and falls back to native):
 //!
-//! The `xla` crate's handles wrap raw PJRT pointers and are `!Send`, so an
-//! [`Engine`] lives on one thread; the coordinator creates one engine per
-//! worker when it fans out (CPU clients are cheap).  Executables are cached
-//! per (dataset, batch) inside the engine.
+//! - [`NativeEvaluator`] — the bit-exact Rust functional model; always
+//!   available, no artifacts needed.
+//! - [`PjrtEvaluator`] (in [`pjrt`]) — executes the AOT-compiled
+//!   JAX/Pallas artifacts through PJRT; fastest for fitness sweeps.
+//! - [`GateSimEvaluator`] — generates the paper's multi-cycle sequential
+//!   circuit for the requested masks and simulates the netlist with the
+//!   sharded gate-level simulator; the ground truth the other two are
+//!   validated against.
+//!
+//! All three agree bit-exactly on predictions (see
+//! `tests/runtime_roundtrip.rs` and `tests/backend_equivalence.rs`).
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
+pub mod pjrt;
 
-use anyhow::{Context, Result};
+use std::str::FromStr;
+use std::sync::{Arc, Mutex};
 
+use anyhow::{bail, ensure, Result};
+
+use crate::circuits::{seq_multicycle, SeqCircuit};
 use crate::data::Split;
 use crate::model::{ApproxTables, QuantModel};
+use crate::sim::testbench;
+use crate::util::pool;
 
-/// Batch sizes lowered at AOT time (see python/compile/aot.py).
-pub const BATCH_LATENCY: usize = 1;
-pub const BATCH_THROUGHPUT: usize = 256;
+pub use pjrt::{Engine, PjrtEvaluator, PreparedInput, BATCH_LATENCY, BATCH_THROUGHPUT};
 
-/// A PJRT CPU client plus an executable cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<(String, usize), Rc<xla::PjRtLoadedExecutable>>>,
+/// Which evaluation backend the coordinator / serve mode should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT when a client can be created, else native (the default).
+    Auto,
+    Native,
+    Pjrt,
+    GateSim,
 }
 
-impl Engine {
-    pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            cache: RefCell::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text artifact (cached by key).
-    pub fn load_hlo(
-        &self,
-        key: &str,
-        batch: usize,
-        path: &Path,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(&(key.to_string(), batch)) {
-            return Ok(exe.clone());
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+            Backend::GateSim => "gatesim",
         }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?,
-        );
-        self.cache
-            .borrow_mut()
-            .insert((key.to_string(), batch), exe.clone());
-        Ok(exe)
+    }
+
+    /// Resolve `Auto` to a concrete backend, probing for a PJRT client.
+    ///
+    /// Returns the engine (when the resolved backend is PJRT) alongside
+    /// the concrete choice; callers keep the engine alive for the lifetime
+    /// of any [`PjrtEvaluator`] they build from it.
+    pub fn resolve(self) -> Result<(Option<Engine>, Backend)> {
+        match self {
+            Backend::Auto => match Engine::cpu() {
+                Ok(engine) => Ok((Some(engine), Backend::Pjrt)),
+                Err(err) => {
+                    eprintln!("note: PJRT unavailable ({err:#}); using the native evaluator");
+                    Ok((None, Backend::Native))
+                }
+            },
+            Backend::Pjrt => Ok((Some(Engine::cpu()?), Backend::Pjrt)),
+            other => Ok((None, other)),
+        }
     }
 }
 
-fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
+impl FromStr for Backend {
+    type Err = anyhow::Error;
 
-/// A compiled hybrid-MLP evaluator bound to one model + one batch size.
-///
-/// Weights are converted to literals once; masks and approximation tables
-/// are runtime arguments, so RFP sweeps and NSGA-II generations never
-/// recompile (the whole point of the mask-based artifact design).
-pub struct PjrtEvaluator {
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    batch: usize,
-    features: usize,
-    hidden: usize,
-    #[allow(dead_code)]
-    classes: usize,
-    // Cached weight literals in mlp_forward argument order.
-    w1p: xla::Literal,
-    w1s: xla::Literal,
-    b1: xla::Literal,
-    w2p: xla::Literal,
-    w2s: xla::Literal,
-    b2: xla::Literal,
-}
-
-impl PjrtEvaluator {
-    pub fn new(
-        engine: &Engine,
-        hlo_path: &Path,
-        model: &QuantModel,
-        batch: usize,
-    ) -> Result<PjrtEvaluator> {
-        let exe = engine.load_hlo(&model.name, batch, hlo_path)?;
-        let (f, h, c) = (model.features as i64, model.hidden as i64, model.classes as i64);
-        Ok(PjrtEvaluator {
-            exe,
-            batch,
-            features: model.features,
-            hidden: model.hidden,
-            classes: model.classes,
-            w1p: lit_i32(&model.w1p, &[h, f])?,
-            w1s: lit_i32(&model.w1s, &[h, f])?,
-            b1: lit_i32(&model.b1, &[h])?,
-            w2p: lit_i32(&model.w2p, &[c, h])?,
-            w2s: lit_i32(&model.w2s, &[c, h])?,
-            b2: lit_i32(&model.b2, &[c])?,
+    fn from_str(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "auto" => Backend::Auto,
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            "gatesim" | "gate-sim" | "sim" => Backend::GateSim,
+            other => bail!("unknown backend `{other}` (want auto|native|pjrt|gatesim)"),
         })
     }
+}
 
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
+/// Batch prediction under feature/approximation masks — the one interface
+/// RFP, NSGA-II, gate-level validation, and serve mode all consume.
+pub trait Evaluator {
+    /// Short backend name for logs and reports.
+    fn name(&self) -> &'static str;
 
-    /// Predict classes for `n` row-major samples (4-bit inputs).
-    ///
-    /// Inputs are chunked to the compiled batch size; the final partial
-    /// chunk is zero-padded and the padding predictions discarded.
-    pub fn predict(
+    /// Predict classes for `n` row-major 4-bit samples.
+    fn predict(
         &self,
         xs: &[u8],
         n: usize,
         feat_mask: &[u8],
         approx_mask: &[u8],
         tables: &ApproxTables,
-    ) -> Result<Vec<i32>> {
-        assert_eq!(xs.len(), n * self.features);
-        assert_eq!(feat_mask.len(), self.features);
-        assert_eq!(approx_mask.len(), self.hidden);
-        let (f, h) = (self.features as i64, self.hidden as i64);
+    ) -> Result<Vec<i32>>;
 
-        let fm: Vec<i32> = feat_mask.iter().map(|&v| v as i32).collect();
-        let am: Vec<i32> = approx_mask.iter().map(|&v| v as i32).collect();
-        let fm = lit_i32(&fm, &[f])?;
-        let am = lit_i32(&am, &[h])?;
-        let idx = lit_i32(&tables.idx, &[h, 2])?;
-        let pos = lit_i32(&tables.pos, &[h, 2])?;
-        let l1 = lit_i32(&tables.l1, &[h, 2])?;
-        let sign = lit_i32(&tables.sign, &[h, 2])?;
-        let base = lit_i32(&tables.base, &[h])?;
-
-        let mut preds = Vec::with_capacity(n);
-        let mut xbuf = vec![0i32; self.batch * self.features];
-        let mut done = 0usize;
-        while done < n {
-            let take = (n - done).min(self.batch);
-            for i in 0..take * self.features {
-                xbuf[i] = xs[done * self.features + i] as i32;
-            }
-            for v in xbuf[take * self.features..].iter_mut() {
-                *v = 0;
-            }
-            let x = lit_i32(&xbuf, &[self.batch as i64, f])?;
-            let args = [
-                &x, &self.w1p, &self.w1s, &self.b1, &self.w2p, &self.w2s, &self.b2, &fm, &am,
-                &idx, &pos, &l1, &sign, &base,
-            ];
-            let out = self.exe.execute::<&xla::Literal>(&args)?[0][0]
-                .to_literal_sync()?
-                .to_tuple()?;
-            anyhow::ensure!(out.len() == 2, "expected (pred, logits) tuple");
-            let chunk = out[0].to_vec::<i32>()?;
-            preds.extend_from_slice(&chunk[..take]);
-            done += take;
-        }
-        Ok(preds)
-    }
-
-    /// Accuracy over a split under the given design decisions.
-    pub fn accuracy(
+    /// Accuracy over a split (default: predict + compare labels).
+    fn accuracy(
         &self,
         split: &Split,
         feat_mask: &[u8],
@@ -190,106 +117,6 @@ impl PjrtEvaluator {
             .filter(|(p, y)| **p == **y as i32)
             .count();
         Ok(correct as f64 / split.len().max(1) as f64)
-    }
-
-    /// Pre-stage a split's input chunks as device literals (§Perf).
-    ///
-    /// RFP sweeps and NSGA-II generations evaluate the *same* training
-    /// split hundreds of times with different masks; rebuilding the
-    /// `B × F` int32 input literal on every call dominated the fitness
-    /// path (~1 MiB of copies per evaluation on HAR).  Preparing the
-    /// chunks once and varying only the small mask/table literals cuts
-    /// that cost to zero.
-    pub fn prepare(&self, split: &Split) -> Result<PreparedInput> {
-        let n = split.len();
-        let f = self.features;
-        let mut chunks = Vec::new();
-        let mut xbuf = vec![0i32; self.batch * f];
-        let mut done = 0usize;
-        while done < n {
-            let take = (n - done).min(self.batch);
-            for i in 0..take * f {
-                xbuf[i] = split.xs[done * f + i] as i32;
-            }
-            for v in xbuf[take * f..].iter_mut() {
-                *v = 0;
-            }
-            chunks.push((lit_i32(&xbuf, &[self.batch as i64, f as i64])?, take));
-            done += take;
-        }
-        Ok(PreparedInput {
-            chunks,
-            n,
-            ys: split.ys.clone(),
-        })
-    }
-
-    /// Predict over a prepared input (see [`PjrtEvaluator::prepare`]).
-    pub fn predict_prepared(
-        &self,
-        prep: &PreparedInput,
-        feat_mask: &[u8],
-        approx_mask: &[u8],
-        tables: &ApproxTables,
-    ) -> Result<Vec<i32>> {
-        let (f, h) = (self.features as i64, self.hidden as i64);
-        let fm: Vec<i32> = feat_mask.iter().map(|&v| v as i32).collect();
-        let am: Vec<i32> = approx_mask.iter().map(|&v| v as i32).collect();
-        let fm = lit_i32(&fm, &[f])?;
-        let am = lit_i32(&am, &[h])?;
-        let idx = lit_i32(&tables.idx, &[h, 2])?;
-        let pos = lit_i32(&tables.pos, &[h, 2])?;
-        let l1 = lit_i32(&tables.l1, &[h, 2])?;
-        let sign = lit_i32(&tables.sign, &[h, 2])?;
-        let base = lit_i32(&tables.base, &[h])?;
-        let mut preds = Vec::with_capacity(prep.n);
-        for (x, take) in &prep.chunks {
-            let args = [
-                x, &self.w1p, &self.w1s, &self.b1, &self.w2p, &self.w2s, &self.b2, &fm, &am,
-                &idx, &pos, &l1, &sign, &base,
-            ];
-            let out = self.exe.execute::<&xla::Literal>(&args)?[0][0]
-                .to_literal_sync()?
-                .to_tuple()?;
-            anyhow::ensure!(out.len() == 2, "expected (pred, logits) tuple");
-            let chunk = out[0].to_vec::<i32>()?;
-            preds.extend_from_slice(&chunk[..*take]);
-        }
-        Ok(preds)
-    }
-
-    /// Accuracy over a prepared input.
-    pub fn accuracy_prepared(
-        &self,
-        prep: &PreparedInput,
-        feat_mask: &[u8],
-        approx_mask: &[u8],
-        tables: &ApproxTables,
-    ) -> Result<f64> {
-        let preds = self.predict_prepared(prep, feat_mask, approx_mask, tables)?;
-        let correct = preds
-            .iter()
-            .zip(&prep.ys)
-            .filter(|(p, y)| **p == **y as i32)
-            .count();
-        Ok(correct as f64 / prep.n.max(1) as f64)
-    }
-}
-
-/// Input chunks staged as literals, plus the labels for accuracy.
-pub struct PreparedInput {
-    chunks: Vec<(xla::Literal, usize)>,
-    n: usize,
-    ys: Vec<u16>,
-}
-
-impl PreparedInput {
-    pub fn len(&self) -> usize {
-        self.n
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.n == 0
     }
 }
 
@@ -329,5 +156,185 @@ impl<'m> NativeEvaluator<'m> {
     ) -> f64 {
         self.model
             .accuracy(&split.xs, &split.ys, feat_mask, approx_mask, tables)
+    }
+}
+
+impl<'m> Evaluator for NativeEvaluator<'m> {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn predict(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Vec<i32>> {
+        Ok(NativeEvaluator::predict(self, xs, n, feat_mask, approx_mask, tables))
+    }
+
+    fn accuracy(
+        &self,
+        split: &Split,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<f64> {
+        Ok(NativeEvaluator::accuracy(self, split, feat_mask, approx_mask, tables))
+    }
+}
+
+/// Cache key for the generated circuit: a circuit is only valid for the
+/// exact masks/tables it was generated with.
+#[derive(PartialEq)]
+struct GateSimKey {
+    feat_mask: Vec<u8>,
+    approx_mask: Vec<u8>,
+    tables: ApproxTables,
+}
+
+/// Gate-level evaluator: generates the paper's multi-cycle sequential
+/// (or hybrid, when the approximation mask is nonzero) circuit for the
+/// requested masks and simulates the netlist, sharded across threads.
+///
+/// Exact w.r.t. the functional model by construction (the generators are
+/// bit-exact — `tests/backend_equivalence.rs`), and artifact-free: it
+/// needs only the [`QuantModel`], so it runs everywhere the native
+/// evaluator does.  The circuit (and its levelized [`crate::sim::SimPlan`])
+/// is cached per mask/table combination and regenerated on change, so
+/// this backend suits final validation and modest sweeps rather than the
+/// inner NSGA fitness loop where every call changes the mask.
+pub struct GateSimEvaluator {
+    model: QuantModel,
+    threads: usize,
+    cached: Mutex<Option<(GateSimKey, Arc<SeqCircuit>)>>,
+}
+
+impl GateSimEvaluator {
+    pub fn new(model: &QuantModel) -> GateSimEvaluator {
+        Self::with_threads(model, pool::default_threads())
+    }
+
+    pub fn with_threads(model: &QuantModel, threads: usize) -> GateSimEvaluator {
+        GateSimEvaluator {
+            model: model.clone(),
+            threads: threads.max(1),
+            cached: Mutex::new(None),
+        }
+    }
+
+    fn circuit(
+        &self,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Arc<SeqCircuit>> {
+        let key = GateSimKey {
+            feat_mask: feat_mask.to_vec(),
+            approx_mask: approx_mask.to_vec(),
+            tables: tables.clone(),
+        };
+        let mut slot = self.cached.lock().unwrap();
+        if let Some((k, circ)) = slot.as_ref() {
+            if *k == key {
+                return Ok(circ.clone());
+            }
+        }
+        let active: Vec<usize> = feat_mask
+            .iter()
+            .enumerate()
+            .filter(|&(_, &m)| m == 1)
+            .map(|(f, _)| f)
+            .collect();
+        ensure!(!active.is_empty(), "gatesim: feature mask prunes every input");
+        let approx: Vec<bool> = approx_mask.iter().map(|&a| a == 1).collect();
+        let circ = Arc::new(seq_multicycle::generate_hybrid(
+            &self.model,
+            &active,
+            &approx,
+            tables,
+        ));
+        *slot = Some((key, circ.clone()));
+        Ok(circ)
+    }
+}
+
+impl Evaluator for GateSimEvaluator {
+    fn name(&self) -> &'static str {
+        "gatesim"
+    }
+
+    fn predict(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Vec<i32>> {
+        ensure!(
+            xs.len() == n * self.model.features,
+            "gatesim: expected {} input values, got {}",
+            n * self.model.features,
+            xs.len()
+        );
+        ensure!(
+            feat_mask.len() == self.model.features && approx_mask.len() == self.model.hidden,
+            "gatesim: mask shapes do not match the model"
+        );
+        let circ = self.circuit(feat_mask, approx_mask, tables)?;
+        let preds =
+            testbench::run_sequential_threads(&circ, xs, n, self.model.features, self.threads);
+        Ok(preds.into_iter().map(|p| p as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::testutil::rand_model;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn backend_labels_roundtrip() {
+        for b in [Backend::Auto, Backend::Native, Backend::Pjrt, Backend::GateSim] {
+            assert_eq!(b.label().parse::<Backend>().unwrap(), b);
+        }
+        assert!("nosuch".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_a_concrete_backend() {
+        let (_engine, backend) = Backend::Auto.resolve().unwrap();
+        assert!(matches!(backend, Backend::Pjrt | Backend::Native));
+    }
+
+    #[test]
+    fn gatesim_matches_native_on_random_model() {
+        let m = rand_model(51, 6, 3, 3);
+        let native = NativeEvaluator { model: &m };
+        let gate = GateSimEvaluator::with_threads(&m, 2);
+        let n = 70; // forces a partial final 64-lane block
+        let mut r = Rng::new(8);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let got = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
+        let want = NativeEvaluator::predict(&native, &xs, n, &fm, &am, &t);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gatesim_rejects_empty_feature_mask() {
+        let m = rand_model(52, 4, 2, 2);
+        let gate = GateSimEvaluator::new(&m);
+        let fm = vec![0u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let xs = vec![0u8; 2 * m.features];
+        assert!(Evaluator::predict(&gate, &xs, 2, &fm, &am, &t).is_err());
     }
 }

@@ -1,0 +1,326 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust hot path (Python is never on the request path).
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.
+//!
+//! The `xla` crate's handles wrap raw PJRT pointers and are `!Send`, so an
+//! [`Engine`] lives on one thread; the coordinator creates one engine per
+//! worker when it fans out (CPU clients are cheap).  Executables are cached
+//! per (dataset, batch) inside the engine.
+//!
+//! In offline builds the `xla` dependency is a vendored stub whose client
+//! constructor fails; [`crate::runtime::Backend::resolve`] catches that
+//! and falls back to the native evaluator.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::data::Split;
+use crate::model::{ApproxTables, QuantModel};
+use crate::runtime::Evaluator;
+
+/// Batch sizes lowered at AOT time (see python/compile/aot.py).
+pub const BATCH_LATENCY: usize = 1;
+pub const BATCH_THROUGHPUT: usize = 256;
+
+/// A PJRT CPU client plus an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<(String, usize), Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by key).
+    pub fn load_hlo(
+        &self,
+        key: &str,
+        batch: usize,
+        path: &Path,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&(key.to_string(), batch)) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert((key.to_string(), batch), exe.clone());
+        Ok(exe)
+    }
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// A compiled hybrid-MLP evaluator bound to one model + one batch size.
+///
+/// Weights are converted to literals once; masks and approximation tables
+/// are runtime arguments, so RFP sweeps and NSGA-II generations never
+/// recompile (the whole point of the mask-based artifact design).
+pub struct PjrtEvaluator {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    batch: usize,
+    features: usize,
+    hidden: usize,
+    #[allow(dead_code)]
+    classes: usize,
+    // Cached weight literals in mlp_forward argument order.
+    w1p: xla::Literal,
+    w1s: xla::Literal,
+    b1: xla::Literal,
+    w2p: xla::Literal,
+    w2s: xla::Literal,
+    b2: xla::Literal,
+}
+
+impl PjrtEvaluator {
+    pub fn new(
+        engine: &Engine,
+        hlo_path: &Path,
+        model: &QuantModel,
+        batch: usize,
+    ) -> Result<PjrtEvaluator> {
+        let exe = engine.load_hlo(&model.name, batch, hlo_path)?;
+        let (f, h, c) = (model.features as i64, model.hidden as i64, model.classes as i64);
+        Ok(PjrtEvaluator {
+            exe,
+            batch,
+            features: model.features,
+            hidden: model.hidden,
+            classes: model.classes,
+            w1p: lit_i32(&model.w1p, &[h, f])?,
+            w1s: lit_i32(&model.w1s, &[h, f])?,
+            b1: lit_i32(&model.b1, &[h])?,
+            w2p: lit_i32(&model.w2p, &[c, h])?,
+            w2s: lit_i32(&model.w2s, &[c, h])?,
+            b2: lit_i32(&model.b2, &[c])?,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Predict classes for `n` row-major samples (4-bit inputs).
+    ///
+    /// Inputs are chunked to the compiled batch size; the final partial
+    /// chunk is zero-padded and the padding predictions discarded.
+    pub fn predict(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Vec<i32>> {
+        assert_eq!(xs.len(), n * self.features);
+        assert_eq!(feat_mask.len(), self.features);
+        assert_eq!(approx_mask.len(), self.hidden);
+        let (f, h) = (self.features as i64, self.hidden as i64);
+
+        let fm: Vec<i32> = feat_mask.iter().map(|&v| v as i32).collect();
+        let am: Vec<i32> = approx_mask.iter().map(|&v| v as i32).collect();
+        let fm = lit_i32(&fm, &[f])?;
+        let am = lit_i32(&am, &[h])?;
+        let idx = lit_i32(&tables.idx, &[h, 2])?;
+        let pos = lit_i32(&tables.pos, &[h, 2])?;
+        let l1 = lit_i32(&tables.l1, &[h, 2])?;
+        let sign = lit_i32(&tables.sign, &[h, 2])?;
+        let base = lit_i32(&tables.base, &[h])?;
+
+        let mut preds = Vec::with_capacity(n);
+        let mut xbuf = vec![0i32; self.batch * self.features];
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(self.batch);
+            for i in 0..take * self.features {
+                xbuf[i] = xs[done * self.features + i] as i32;
+            }
+            for v in xbuf[take * self.features..].iter_mut() {
+                *v = 0;
+            }
+            let x = lit_i32(&xbuf, &[self.batch as i64, f])?;
+            let args = [
+                &x, &self.w1p, &self.w1s, &self.b1, &self.w2p, &self.w2s, &self.b2, &fm, &am,
+                &idx, &pos, &l1, &sign, &base,
+            ];
+            let out = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            anyhow::ensure!(out.len() == 2, "expected (pred, logits) tuple");
+            let chunk = out[0].to_vec::<i32>()?;
+            preds.extend_from_slice(&chunk[..take]);
+            done += take;
+        }
+        Ok(preds)
+    }
+
+    /// Accuracy over a split under the given design decisions.
+    pub fn accuracy(
+        &self,
+        split: &Split,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<f64> {
+        let preds = self.predict(&split.xs, split.len(), feat_mask, approx_mask, tables)?;
+        let correct = preds
+            .iter()
+            .zip(&split.ys)
+            .filter(|(p, y)| **p == **y as i32)
+            .count();
+        Ok(correct as f64 / split.len().max(1) as f64)
+    }
+
+    /// Pre-stage a split's input chunks as device literals (§Perf).
+    ///
+    /// RFP sweeps and NSGA-II generations evaluate the *same* training
+    /// split hundreds of times with different masks; rebuilding the
+    /// `B × F` int32 input literal on every call dominated the fitness
+    /// path (~1 MiB of copies per evaluation on HAR).  Preparing the
+    /// chunks once and varying only the small mask/table literals cuts
+    /// that cost to zero.
+    pub fn prepare(&self, split: &Split) -> Result<PreparedInput> {
+        let n = split.len();
+        let f = self.features;
+        let mut chunks = Vec::new();
+        let mut xbuf = vec![0i32; self.batch * f];
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(self.batch);
+            for i in 0..take * f {
+                xbuf[i] = split.xs[done * f + i] as i32;
+            }
+            for v in xbuf[take * f..].iter_mut() {
+                *v = 0;
+            }
+            chunks.push((lit_i32(&xbuf, &[self.batch as i64, f as i64])?, take));
+            done += take;
+        }
+        Ok(PreparedInput {
+            chunks,
+            n,
+            ys: split.ys.clone(),
+        })
+    }
+
+    /// Predict over a prepared input (see [`PjrtEvaluator::prepare`]).
+    pub fn predict_prepared(
+        &self,
+        prep: &PreparedInput,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Vec<i32>> {
+        let (f, h) = (self.features as i64, self.hidden as i64);
+        let fm: Vec<i32> = feat_mask.iter().map(|&v| v as i32).collect();
+        let am: Vec<i32> = approx_mask.iter().map(|&v| v as i32).collect();
+        let fm = lit_i32(&fm, &[f])?;
+        let am = lit_i32(&am, &[h])?;
+        let idx = lit_i32(&tables.idx, &[h, 2])?;
+        let pos = lit_i32(&tables.pos, &[h, 2])?;
+        let l1 = lit_i32(&tables.l1, &[h, 2])?;
+        let sign = lit_i32(&tables.sign, &[h, 2])?;
+        let base = lit_i32(&tables.base, &[h])?;
+        let mut preds = Vec::with_capacity(prep.n);
+        for (x, take) in &prep.chunks {
+            let args = [
+                x, &self.w1p, &self.w1s, &self.b1, &self.w2p, &self.w2s, &self.b2, &fm, &am,
+                &idx, &pos, &l1, &sign, &base,
+            ];
+            let out = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            anyhow::ensure!(out.len() == 2, "expected (pred, logits) tuple");
+            let chunk = out[0].to_vec::<i32>()?;
+            preds.extend_from_slice(&chunk[..*take]);
+        }
+        Ok(preds)
+    }
+
+    /// Accuracy over a prepared input.
+    pub fn accuracy_prepared(
+        &self,
+        prep: &PreparedInput,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<f64> {
+        let preds = self.predict_prepared(prep, feat_mask, approx_mask, tables)?;
+        let correct = preds
+            .iter()
+            .zip(&prep.ys)
+            .filter(|(p, y)| **p == **y as i32)
+            .count();
+        Ok(correct as f64 / prep.n.max(1) as f64)
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn predict(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Vec<i32>> {
+        PjrtEvaluator::predict(self, xs, n, feat_mask, approx_mask, tables)
+    }
+
+    fn accuracy(
+        &self,
+        split: &Split,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<f64> {
+        PjrtEvaluator::accuracy(self, split, feat_mask, approx_mask, tables)
+    }
+}
+
+/// Input chunks staged as literals, plus the labels for accuracy.
+pub struct PreparedInput {
+    chunks: Vec<(xla::Literal, usize)>,
+    n: usize,
+    ys: Vec<u16>,
+}
+
+impl PreparedInput {
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}

@@ -8,26 +8,41 @@
 //! (topologically ordered) compiled evaluation pass.  A full test-set
 //! accuracy run of the largest circuit is a few million lane-parallel
 //! gate evaluations.
+//!
+//! §Sharding: the levelization pass is factored into an immutable
+//! [`SimPlan`] so an `n`-sample workload can be split into 64-lane blocks
+//! dispatched across worker threads (see [`batch`]), each worker owning a
+//! cheap [`Sim`] (two `u64` vectors) over the shared plan.  Every
+//! primitive-cell update is a bitwise, per-lane operation, so a sample's
+//! outputs depend only on its own lane — sharded and serial runs are
+//! bit-identical by construction (enforced by `tests/sim_sharding.rs`).
 
+pub mod batch;
 pub mod testbench;
 
-use crate::netlist::{Cell, NetId, Netlist, Word};
+use std::sync::Arc;
 
-/// Packed 64-lane two-valued simulator state.
-pub struct Sim {
+use crate::netlist::{Cell, NetId, Netlist};
+
+/// Immutable levelized evaluation plan for one netlist, shareable across
+/// simulator instances and threads.
+///
+/// Building a plan runs the Kahn topological sort and DFF extraction once;
+/// every [`Sim`] created from the same `Arc<SimPlan>` then reads the cell
+/// array and ordering in place.  That is what makes sharded simulation
+/// cheap: N workers cost one plan plus N small mutable state vectors, not
+/// N topo sorts and cell-array clones.
+pub struct SimPlan {
     cells: Vec<Cell>,
     /// Combinational cell indices in topological order.
     order: Vec<u32>,
     /// DFF cell indices.
     dffs: Vec<u32>,
-    /// Current value of every net, one bit per lane.
-    vals: Vec<u64>,
-    /// Scratch for the two-phase register update.
-    next_q: Vec<u64>,
+    n_nets: usize,
 }
 
-impl Sim {
-    pub fn new(n: &Netlist) -> Sim {
+impl SimPlan {
+    pub fn new(n: &Netlist) -> SimPlan {
         let order = n.topo_order().into_iter().map(|i| i as u32).collect();
         let dffs = n
             .cells
@@ -36,15 +51,56 @@ impl Sim {
             .filter(|(_, c)| c.is_seq())
             .map(|(i, _)| i as u32)
             .collect::<Vec<_>>();
-        let mut vals = vec![0u64; n.n_nets()];
-        vals[1] = !0u64; // CONST1
-        Sim {
+        SimPlan {
             cells: n.cells.clone(),
             order,
-            next_q: vec![0; dffs.len()],
             dffs,
+            n_nets: n.n_nets(),
+        }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn n_dffs(&self) -> usize {
+        self.dffs.len()
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.n_nets
+    }
+}
+
+/// Packed 64-lane two-valued simulator state over a shared [`SimPlan`].
+pub struct Sim {
+    plan: Arc<SimPlan>,
+    /// Current value of every net, one bit per lane.
+    vals: Vec<u64>,
+    /// Scratch for the two-phase register update.
+    next_q: Vec<u64>,
+}
+
+impl Sim {
+    pub fn new(n: &Netlist) -> Sim {
+        Sim::from_plan(Arc::new(SimPlan::new(n)))
+    }
+
+    /// Fresh simulator state over a shared plan — the sharded entry point:
+    /// workers each call this with a clone of one `Arc<SimPlan>`.
+    pub fn from_plan(plan: Arc<SimPlan>) -> Sim {
+        let mut vals = vec![0u64; plan.n_nets];
+        vals[1] = !0u64; // CONST1
+        Sim {
+            next_q: vec![0; plan.dffs.len()],
+            plan,
             vals,
         }
+    }
+
+    /// The shared levelized plan this simulator executes.
+    pub fn plan(&self) -> &Arc<SimPlan> {
+        &self.plan
     }
 
     /// Number of parallel lanes.
@@ -63,7 +119,7 @@ impl Sim {
 
     /// Drive a word with per-lane integer values (bit i of value v goes to
     /// lane `lane` of net `word[i]`).
-    pub fn set_word_lanes(&mut self, word: &Word, values: &[i64]) {
+    pub fn set_word_lanes(&mut self, word: &[NetId], values: &[i64]) {
         assert!(values.len() <= Self::LANES);
         for (bit, &net) in word.iter().enumerate() {
             let mut packed = 0u64;
@@ -75,7 +131,7 @@ impl Sim {
     }
 
     /// Broadcast one value to all lanes of a word.
-    pub fn set_word_all(&mut self, word: &Word, value: i64) {
+    pub fn set_word_all(&mut self, word: &[NetId], value: i64) {
         for (bit, &net) in word.iter().enumerate() {
             let v = if (value >> bit) & 1 == 1 { !0u64 } else { 0u64 };
             self.set(net, v);
@@ -83,7 +139,7 @@ impl Sim {
     }
 
     /// Read a word back for one lane, two's-complement sign-extended.
-    pub fn get_word_lane_signed(&self, word: &Word, lane: usize) -> i64 {
+    pub fn get_word_lane_signed(&self, word: &[NetId], lane: usize) -> i64 {
         let mut v: i64 = 0;
         for (bit, &net) in word.iter().enumerate() {
             if (self.vals[net as usize] >> lane) & 1 == 1 {
@@ -98,7 +154,7 @@ impl Sim {
     }
 
     /// Read a word back for one lane, unsigned.
-    pub fn get_word_lane(&self, word: &Word, lane: usize) -> u64 {
+    pub fn get_word_lane(&self, word: &[NetId], lane: usize) -> u64 {
         let mut v: u64 = 0;
         for (bit, &net) in word.iter().enumerate() {
             if (self.vals[net as usize] >> lane) & 1 == 1 {
@@ -110,8 +166,9 @@ impl Sim {
 
     /// Propagate combinational logic.
     pub fn eval(&mut self) {
-        for &ci in &self.order {
-            let c = self.cells[ci as usize];
+        let plan = &*self.plan;
+        for &ci in &plan.order {
+            let c = plan.cells[ci as usize];
             let v = &mut self.vals;
             match c {
                 Cell::Inv { a, y } => v[y as usize] = !v[a as usize],
@@ -141,14 +198,15 @@ impl Sim {
     /// reading outputs after the last step.
     pub fn step(&mut self) {
         self.eval();
-        for (slot, &ci) in self.dffs.iter().enumerate() {
+        let plan = &*self.plan;
+        for (slot, &ci) in plan.dffs.iter().enumerate() {
             if let Cell::Dff {
                 d,
                 q,
                 en,
                 rst,
                 rstval,
-            } = self.cells[ci as usize]
+            } = plan.cells[ci as usize]
             {
                 let v = &self.vals;
                 let rv = if rstval { !0u64 } else { 0u64 };
@@ -156,8 +214,8 @@ impl Sim {
                 self.next_q[slot] = (v[rst as usize] & rv) | (!v[rst as usize] & held);
             }
         }
-        for (slot, &ci) in self.dffs.iter().enumerate() {
-            let q = self.cells[ci as usize].output();
+        for (slot, &ci) in plan.dffs.iter().enumerate() {
+            let q = plan.cells[ci as usize].output();
             self.vals[q as usize] = self.next_q[slot];
         }
     }
@@ -170,8 +228,9 @@ impl Sim {
     /// Reset all registers to their reset values (as if rst had been held
     /// high for one cycle), then propagate.
     pub fn reset(&mut self) {
-        for &ci in self.dffs.iter() {
-            if let Cell::Dff { q, rstval, .. } = self.cells[ci as usize] {
+        let plan = &*self.plan;
+        for &ci in plan.dffs.iter() {
+            if let Cell::Dff { q, rstval, .. } = plan.cells[ci as usize] {
                 self.vals[q as usize] = if rstval { !0u64 } else { 0u64 };
             }
         }
@@ -273,5 +332,28 @@ mod tests {
         for (lane, &v) in vals.iter().enumerate() {
             assert_eq!(s.get_word_lane_signed(&w, lane), v);
         }
+    }
+
+    #[test]
+    fn shared_plan_sims_are_independent_and_equal() {
+        // Two Sims over one plan behave exactly like two fresh Sims.
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let y = n.and2(a, b);
+        n.add_output("y", vec![y]);
+        let plan = Arc::new(SimPlan::new(&n));
+        let mut s1 = Sim::from_plan(plan.clone());
+        let mut s2 = Sim::from_plan(plan.clone());
+        s1.set(a, 0b11);
+        s1.set(b, 0b01);
+        s2.set(a, 0b10);
+        s2.set(b, 0b10);
+        s1.eval();
+        s2.eval();
+        assert_eq!(s1.get(y) & 0b11, 0b01);
+        assert_eq!(s2.get(y) & 0b11, 0b10);
+        assert_eq!(plan.n_cells(), 1);
+        assert_eq!(plan.n_dffs(), 0);
     }
 }

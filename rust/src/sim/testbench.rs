@@ -5,11 +5,19 @@
 //! feature per cycle in the RFP schedule order, then `hidden + classes`
 //! drain cycles; `class_out` is valid after the final argmax cycle.
 //!
-//! 64 samples are simulated per pass (one per lane).
+//! 64 samples are simulated per pass (one per lane), and passes are
+//! sharded across worker threads via [`batch::run_sharded`]: the circuit's
+//! levelized [`crate::sim::SimPlan`] is built once (cached on the circuit)
+//! and shared read-only by every worker.  `run_sequential` /
+//! `run_combinational` use [`pool::default_threads`]
+//! (`PRINTED_MLP_THREADS` overrides); the `*_threads` variants take an
+//! explicit count — `1` is the exact serial path the differential tests
+//! compare against.
 
 use crate::circuits::{CombCircuit, SeqCircuit};
 use crate::netlist::{Netlist, Word};
-use crate::sim::Sim;
+use crate::sim::{batch, Sim};
+use crate::util::pool;
 
 fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
     &n.inputs
@@ -28,20 +36,28 @@ fn output_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
 }
 
 /// Run `n` samples (row-major `features`-wide 4-bit values) through a
-/// sequential circuit; returns predicted class per sample.
+/// sequential circuit; returns predicted class per sample.  Sharded
+/// across [`pool::default_threads`] workers.
 pub fn run_sequential(circ: &SeqCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
+    run_sequential_threads(circ, xs, n, features, pool::default_threads())
+}
+
+/// [`run_sequential`] with an explicit worker count (`1` = serial path).
+pub fn run_sequential_threads(
+    circ: &SeqCircuit,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+) -> Vec<u16> {
     let net = &circ.netlist;
     let x = input_port(net, "x").clone();
     let rst = input_port(net, "rst")[0];
     let class_out = output_port(net, "class_out").clone();
+    let plan = circ.sim_plan();
 
-    let mut sim = Sim::new(net);
-    let mut preds = Vec::with_capacity(n);
-    let mut lane_vals = vec![0i64; Sim::LANES];
-
-    let mut base = 0usize;
-    while base < n {
-        let lanes = (n - base).min(Sim::LANES);
+    batch::run_sharded(&plan, n, threads, |sim, base, lanes| {
+        let mut lane_vals = [0i64; Sim::LANES];
         // Reset pulse.
         sim.set(rst, !0u64);
         sim.set_word_all(&x, 0);
@@ -61,41 +77,45 @@ pub fn run_sequential(circ: &SeqCircuit, xs: &[u8], n: usize, features: usize) -
             sim.step();
         }
         sim.settle();
-        for lane in 0..lanes {
-            preds.push(sim.get_word_lane(&class_out, lane) as u16);
-        }
-        base += lanes;
-    }
-    preds
+        (0..lanes)
+            .map(|lane| sim.get_word_lane(&class_out, lane) as u16)
+            .collect()
+    })
 }
 
-/// Run `n` samples through a combinational circuit (single evaluation).
+/// Run `n` samples through a combinational circuit (single evaluation per
+/// 64-lane block).  Sharded across [`pool::default_threads`] workers.
 pub fn run_combinational(circ: &CombCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
+    run_combinational_threads(circ, xs, n, features, pool::default_threads())
+}
+
+/// [`run_combinational`] with an explicit worker count (`1` = serial path).
+pub fn run_combinational_threads(
+    circ: &CombCircuit,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+) -> Vec<u16> {
     let net = &circ.netlist;
     let x_all = input_port(net, "x_all").clone();
     let class_out = output_port(net, "class_out").clone();
     assert_eq!(x_all.len(), 4 * circ.active.len());
+    let plan = circ.sim_plan();
 
-    let mut sim = Sim::new(net);
-    let mut preds = Vec::with_capacity(n);
-    let mut base = 0usize;
-    let mut lane_vals = vec![0i64; Sim::LANES];
-    while base < n {
-        let lanes = (n - base).min(Sim::LANES);
+    batch::run_sharded(&plan, n, threads, |sim, base, lanes| {
+        let mut lane_vals = [0i64; Sim::LANES];
         for (slot, &f) in circ.active.iter().enumerate() {
-            let word: Word = x_all[slot * 4..(slot + 1) * 4].to_vec();
             for lane in 0..lanes {
                 lane_vals[lane] = xs[(base + lane) * features + f] as i64;
             }
-            sim.set_word_lanes(&word, &lane_vals[..lanes]);
+            sim.set_word_lanes(&x_all[slot * 4..(slot + 1) * 4], &lane_vals[..lanes]);
         }
         sim.eval();
-        for lane in 0..lanes {
-            preds.push(sim.get_word_lane(&class_out, lane) as u16);
-        }
-        base += lanes;
-    }
-    preds
+        (0..lanes)
+            .map(|lane| sim.get_word_lane(&class_out, lane) as u16)
+            .collect()
+    })
 }
 
 /// Accuracy helper shared by the harnesses.

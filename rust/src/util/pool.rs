@@ -29,24 +29,43 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    scope_map_with(n, threads, || (), move |_, i| f(i))
+}
+
+/// [`scope_map`] with per-worker state: each worker calls `init` once when
+/// it starts and threads the state through every item it claims.
+///
+/// This is what lets expensive worker setup (e.g. a gate-level simulator's
+/// lane state in `sim::batch`) be paid once per worker instead of once per
+/// item; the state never crosses threads, so it needs no `Send`/`Sync`.
+pub fn scope_map_with<S, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut state, i);
+                    *slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                *slots[i].lock().unwrap() = Some(v);
             });
         }
     });
@@ -87,5 +106,66 @@ mod tests {
             i
         });
         assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn with_state_inits_once_per_worker() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inits = AtomicUsize::new(0);
+        let out = scope_map_with(
+            64,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize // per-worker counter of items it processed
+            },
+            |seen, i| {
+                *seen += 1;
+                i * 2
+            },
+        );
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+        let n_inits = inits.load(Ordering::Relaxed);
+        assert!(
+            (1..=4).contains(&n_inits),
+            "state must be created per worker, not per item (got {n_inits})"
+        );
+    }
+
+    #[test]
+    fn more_threads_than_items_clamps_and_orders() {
+        // threads is clamped to the item count; results stay in order.
+        let out = scope_map(3, 64, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        // A panicking worker must surface through thread::scope's join
+        // (not deadlock or return partial results).
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scope_map(8, 4, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the caller");
+    }
+
+    #[test]
+    fn env_var_forces_thread_count() {
+        // PRINTED_MLP_THREADS=1 forces the serial path everywhere
+        // default_threads() feeds a pool (sim sharding included); 0 and
+        // garbage fall back safely.
+        std::env::set_var("PRINTED_MLP_THREADS", "1");
+        assert_eq!(default_threads(), 1);
+        std::env::set_var("PRINTED_MLP_THREADS", "0");
+        assert_eq!(default_threads(), 1, "0 clamps to 1");
+        std::env::set_var("PRINTED_MLP_THREADS", "not-a-number");
+        assert!(default_threads() >= 1);
+        std::env::remove_var("PRINTED_MLP_THREADS");
+        assert!(default_threads() >= 1);
     }
 }

@@ -19,12 +19,20 @@ pub fn geomean(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (nearest-rank) of an unsorted slice.
+///
+/// Sorts under IEEE-754 total order (`f64::total_cmp`), so NaN inputs
+/// are handled deterministically instead of panicking the way the
+/// previous `partial_cmp().unwrap()` comparator did on any NaN (e.g. a
+/// ratio metric dividing by a zero baseline).  Under total order NaNs
+/// sort to the extremes by sign bit — negative NaN before -inf, positive
+/// NaN after +inf — so a NaN in the data surfaces in the end percentiles
+/// rather than aborting the whole report.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -65,5 +73,42 @@ mod tests {
     #[test]
     fn stddev_basic() {
         assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 100.0), 7.5);
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // Regression: the old partial_cmp().unwrap() comparator panicked
+        // on NaN.  Under total order NaNs land at the extremes by sign
+        // bit: positive NaN after +inf, negative NaN before -inf.
+        let xs = [1.0, f64::NAN, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // A sign-flipped NaN (what 0.0/0.0 produces on x86-SSE) must not
+        // panic either; it sorts first, so the top percentile is finite.
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1u64 << 63));
+        let xs = [1.0, neg_nan, 3.0];
+        assert!(percentile(&xs, 0.0).is_nan());
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+    }
+
+    #[test]
+    fn mean_geomean_stddev_edges() {
+        assert_eq!(mean(&[42.0]), 42.0);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[4.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(stddev(&[3.0]), 0.0);
     }
 }

@@ -1,0 +1,93 @@
+//! Backend equivalence: the [`GateSimEvaluator`] (generated multi-cycle
+//! circuit + sharded netlist simulation) must agree bit-exactly with the
+//! [`NativeEvaluator`] (functional model) on random `QuantModel`s — under
+//! full masks, random feature masks, and hybrid approximation masks.
+//!
+//! Unlike `runtime_roundtrip.rs`, this suite is artifact-free (no `make
+//! artifacts` needed), so the three-backend agreement guarantee is
+//! checked in tier-1 on every run.
+
+mod common;
+
+use common::rand_model;
+use printed_mlp::model::{importance, ApproxTables};
+use printed_mlp::runtime::{Backend, Evaluator, GateSimEvaluator, NativeEvaluator};
+use printed_mlp::util::prng::Rng;
+
+#[test]
+fn gatesim_matches_native_exact() {
+    for seed in [1u64, 2, 3] {
+        let m = rand_model(seed, 9, 4, 3);
+        let native = NativeEvaluator { model: &m };
+        let gate = GateSimEvaluator::with_threads(&m, 4);
+        let n = 100; // partial final 64-lane block
+        let mut r = Rng::new(seed ^ 0xABCD);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let got = gate.predict(&xs, n, &fm, &am, &t).unwrap();
+        let want = native.predict(&xs, n, &fm, &am, &t);
+        assert_eq!(got, want, "seed {seed}: gatesim and native diverge");
+    }
+}
+
+#[test]
+fn gatesim_matches_native_under_masks_and_approx() {
+    let m = rand_model(7, 10, 4, 3);
+    let native = NativeEvaluator { model: &m };
+    // One evaluator across trials: exercises the mask-keyed circuit cache
+    // (rebuild on change, reuse on repeat).
+    let gate = GateSimEvaluator::new(&m);
+    let n = 80;
+    let mut r = Rng::new(99);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    for trial in 0..3 {
+        // Random feature mask (always keep feature 0 so the schedule is
+        // nonempty) and random approximation mask with real tables.
+        let fm: Vec<u8> = (0..m.features)
+            .map(|f| if f == 0 || r.chance(0.8) { 1 } else { 0 })
+            .collect();
+        let am: Vec<u8> = (0..m.hidden).map(|_| if r.chance(0.5) { 1 } else { 0 }).collect();
+        let tables = importance::approx_tables(&m, &xs, n, &fm);
+        let got = gate.predict(&xs, n, &fm, &am, &tables).unwrap();
+        let want = native.predict(&xs, n, &fm, &am, &tables);
+        assert_eq!(got, want, "trial {trial}: divergence under masks/approx");
+
+        // Repeat with identical masks: must hit the circuit cache and
+        // still agree.
+        let again = gate.predict(&xs, n, &fm, &am, &tables).unwrap();
+        assert_eq!(again, want, "trial {trial}: cached circuit diverges");
+    }
+}
+
+#[test]
+fn trait_accuracy_agrees_across_backends() {
+    let m = rand_model(13, 8, 3, 3);
+    let native = NativeEvaluator { model: &m };
+    let gate = GateSimEvaluator::with_threads(&m, 2);
+    let n = 70;
+    let mut r = Rng::new(5);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let ys: Vec<u16> = (0..n).map(|_| r.below(m.classes as u64) as u16).collect();
+    let split = printed_mlp::data::Split {
+        xs,
+        ys,
+        features: m.features,
+    };
+    let fm = vec![1u8; m.features];
+    let am = vec![0u8; m.hidden];
+    let t = ApproxTables::disabled(m.hidden);
+    let a = Evaluator::accuracy(&native, &split, &fm, &am, &t).unwrap();
+    let b = Evaluator::accuracy(&gate, &split, &fm, &am, &t).unwrap();
+    assert_eq!(a, b, "accuracy must be identical, not just close");
+}
+
+#[test]
+fn backend_resolution_is_concrete() {
+    let (_engine, b) = Backend::Auto.resolve().unwrap();
+    assert!(matches!(b, Backend::Native | Backend::Pjrt));
+    // Explicit backends pass through untouched.
+    assert_eq!(Backend::GateSim.resolve().unwrap().1, Backend::GateSim);
+    assert_eq!(Backend::Native.resolve().unwrap().1, Backend::Native);
+}

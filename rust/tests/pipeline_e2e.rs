@@ -79,7 +79,7 @@ fn pipeline_native_matches_pjrt_decisions() {
     let Some(store) = store() else { return };
     let mut cfg = fast_cfg();
     let a = run_dataset(&store, "spectf", &cfg).unwrap();
-    cfg.use_pjrt = false;
+    cfg.backend = printed_mlp::runtime::Backend::Native;
     let b = run_dataset(&store, "spectf", &cfg).unwrap();
     assert_eq!(a.rfp.kept, b.rfp.kept);
     assert_eq!(a.rfp.order, b.rfp.order);

@@ -1,0 +1,202 @@
+//! Differential tests for sharded gate-level simulation: the
+//! multi-threaded block-sharded testbench paths must be bit-identical to
+//! a deliberately naive single-threaded, single-sample reference loop —
+//! on random models, including n < 64 and n not a multiple of 64 (partial
+//! final 64-lane block).
+//!
+//! Artifact-free (random `QuantModel`s from the mini-propcheck kit), so
+//! this suite runs in tier-1.
+
+mod common;
+
+use std::sync::Arc;
+
+// Fixed-seed model builder for the non-property tests.
+use common::rand_model as fixed_model;
+use printed_mlp::circuits::{combinational, seq_multicycle, CombCircuit, SeqCircuit};
+use printed_mlp::model::QuantModel;
+use printed_mlp::netlist::Port;
+use printed_mlp::sim::{testbench, Sim};
+use printed_mlp::util::prng::Rng;
+use printed_mlp::util::propcheck::{check, Gen};
+
+// testutil is #[cfg(test)] inside the crate; rebuild a tiny generator here.
+fn rand_model(g: &mut Gen, fmax: usize, hmax: usize, cmax: usize) -> QuantModel {
+    let features = g.usize_in(2..=fmax).max(2);
+    let hidden = g.usize_in(1..=hmax).max(1);
+    let classes = g.usize_in(2..=cmax).max(2);
+    let pmax = 6u32;
+    let r = g.rng();
+    let mut w1p = Vec::new();
+    let mut w1s = Vec::new();
+    for _ in 0..hidden * features {
+        w1p.push(r.below(pmax as u64 + 1) as i32);
+        w1s.push([-1, 0, 1][r.usize_below(3)]);
+    }
+    let mut w2p = Vec::new();
+    let mut w2s = Vec::new();
+    for _ in 0..classes * hidden {
+        w2p.push(r.below(pmax as u64 + 1) as i32);
+        w2s.push([-1, 0, 1][r.usize_below(3)]);
+    }
+    QuantModel {
+        name: "shard".into(),
+        features,
+        classes,
+        hidden,
+        in_bits: 4,
+        w_bits: 8,
+        pmax,
+        trunc: (r.below(6) + 1) as u32,
+        seq_clock_ms: 100.0,
+        comb_clock_ms: 320.0,
+        float_acc: 0.0,
+        train_acc: 0.0,
+        test_acc: 0.0,
+        w1p,
+        w1s,
+        b1: (0..hidden).map(|_| r.i32_range(-200, 200)).collect(),
+        w2p,
+        w2s,
+        b2: (0..classes).map(|_| r.i32_range(-200, 200)).collect(),
+    }
+}
+
+
+fn port<'a>(ports: &'a [Port], name: &str) -> &'a [u32] {
+    &ports
+        .iter()
+        .find(|p| p.name == name)
+        .unwrap_or_else(|| panic!("missing port {name}"))
+        .bits
+}
+
+/// Reference implementation: one sample at a time through its own
+/// simulator pass, lane 0 only — deliberately the dumbest correct loop,
+/// sharing no code with the sharded path beyond `Sim` itself.
+fn ref_sequential(circ: &SeqCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
+    let net = &circ.netlist;
+    let x = port(&net.inputs, "x").to_vec();
+    let rst = port(&net.inputs, "rst")[0];
+    let class_out = port(&net.outputs, "class_out").to_vec();
+    let mut preds = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut sim = Sim::new(net);
+        sim.set(rst, !0u64);
+        sim.set_word_all(&x, 0);
+        sim.step();
+        sim.set(rst, 0);
+        for t in 0..circ.cycles {
+            if t < circ.active.len() {
+                let f = circ.active[t];
+                sim.set_word_lanes(&x, &[xs[i * features + f] as i64]);
+            } else {
+                sim.set_word_all(&x, 0);
+            }
+            sim.step();
+        }
+        sim.settle();
+        preds.push(sim.get_word_lane(&class_out, 0) as u16);
+    }
+    preds
+}
+
+/// Per-sample combinational reference (lane 0 only).
+fn ref_combinational(circ: &CombCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
+    let net = &circ.netlist;
+    let x_all = port(&net.inputs, "x_all").to_vec();
+    let class_out = port(&net.outputs, "class_out").to_vec();
+    let mut preds = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut sim = Sim::new(net);
+        for (slot, &f) in circ.active.iter().enumerate() {
+            sim.set_word_lanes(&x_all[slot * 4..(slot + 1) * 4], &[xs[i * features + f] as i64]);
+        }
+        sim.eval();
+        preds.push(sim.get_word_lane(&class_out, 0) as u16);
+    }
+    preds
+}
+
+fn mismatches(a: &[u16], b: &[u16]) -> usize {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+#[test]
+fn sharded_sequential_matches_reference() {
+    check("sharded seq == per-sample reference", 6, |g| {
+        let m = rand_model(g, 8, 3, 3);
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = seq_multicycle::generate(&m, &active);
+        // Deliberately awkward sizes: n < 64, one exact block, partial tail.
+        let n = [7usize, 64, 70][g.usize_in(0..=2).min(2)];
+        let xs: Vec<u8> = (0..n * m.features).map(|_| g.rng().below(16) as u8).collect();
+        let want = ref_sequential(&circ, &xs, n, m.features);
+        let serial = testbench::run_sequential_threads(&circ, &xs, n, m.features, 1);
+        let sharded = testbench::run_sequential_threads(&circ, &xs, n, m.features, 4);
+        mismatches(&want, &serial) == 0 && mismatches(&want, &sharded) == 0
+    });
+}
+
+#[test]
+fn sharded_combinational_matches_reference() {
+    check("sharded comb == per-sample reference", 5, |g| {
+        let m = rand_model(g, 7, 3, 3);
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = combinational::generate(&m, &active);
+        let n = [5usize, 64, 66][g.usize_in(0..=2).min(2)];
+        let xs: Vec<u8> = (0..n * m.features).map(|_| g.rng().below(16) as u8).collect();
+        let want = ref_combinational(&circ, &xs, n, m.features);
+        let serial = testbench::run_combinational_threads(&circ, &xs, n, m.features, 1);
+        let sharded = testbench::run_combinational_threads(&circ, &xs, n, m.features, 3);
+        mismatches(&want, &serial) == 0 && mismatches(&want, &sharded) == 0
+    });
+}
+
+#[test]
+fn partial_final_block_at_scale() {
+    // n = 130 = two full 64-lane blocks + a 2-lane partial block, with
+    // more workers than blocks; zero prediction mismatches required.
+    let m = fixed_model(21, 10, 4, 4);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let n = 130;
+    let mut r = Rng::new(77);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let want = ref_sequential(&circ, &xs, n, m.features);
+    for threads in [1usize, 2, 3, 8] {
+        let got = testbench::run_sequential_threads(&circ, &xs, n, m.features, threads);
+        assert_eq!(
+            mismatches(&want, &got),
+            0,
+            "threads={threads}: sharded run diverged from reference"
+        );
+    }
+}
+
+#[test]
+fn tiny_n_below_one_block() {
+    let m = fixed_model(22, 6, 2, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    for n in [1usize, 2, 63] {
+        let mut r = Rng::new(n as u64);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let want = ref_sequential(&circ, &xs, n, m.features);
+        let got = testbench::run_sequential_threads(&circ, &xs, n, m.features, 8);
+        assert_eq!(want, got, "n={n}");
+    }
+}
+
+#[test]
+fn sim_plan_is_built_once_and_shared() {
+    let m = fixed_model(23, 5, 2, 2);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let p1 = circ.sim_plan();
+    let p2 = circ.sim_plan();
+    assert!(Arc::ptr_eq(&p1, &p2), "plan must be cached on the circuit");
+    assert_eq!(p1.n_cells(), circ.netlist.cells.len());
+    assert_eq!(p1.n_nets(), circ.netlist.n_nets());
+}

@@ -1,0 +1,225 @@
+//! Minimal offline substitute for the `anyhow` crate (crates.io is
+//! unavailable in this build environment — see DESIGN.md §Substitutions).
+//!
+//! Implements exactly the API surface `printed_mlp` uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` /
+//! `bail!` / `ensure!` macros.  Error chains are stored as flattened
+//! strings; `{:#}` formatting prints the full `outer: inner: ...` chain
+//! like the real crate, and `{:?}` prints a `Caused by:` listing.
+//!
+//! Like real anyhow, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that is what lets the blanket
+//! `From<E: std::error::Error>` conversion coexist with the identity
+//! behaviour of `?` on `Result<_, Error>`.
+
+use std::fmt;
+
+/// A flattened error chain; `chain[0]` is the outermost message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion used by [`crate::Context`]: covers both plain
+    /// `std::error::Error` types and [`crate::Error`] itself (which does
+    /// not implement `std::error::Error`, so the impls cannot overlap).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` (any error convertible to [`Error`]) and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e: Error = io_err().into();
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: missing thing");
+        assert_eq!(e.root_cause(), "missing thing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: missing thing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "slot 3");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        fn inner() -> Result<()> {
+            bail!("inner failure");
+        }
+        let e = inner().context("outer step").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer step: inner failure");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "bad flag {}", ok);
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "bad flag false");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+}

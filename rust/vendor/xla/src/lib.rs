@@ -1,0 +1,131 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links libxla/PJRT and is unavailable in this offline
+//! build environment, so this stub mirrors exactly the API surface
+//! `printed_mlp::runtime::pjrt` compiles against.  Every entry point that
+//! would touch the runtime returns an error from [`PjRtClient::cpu`]
+//! onward, which the coordinator's `Backend::Auto` resolution catches to
+//! fall back to the bit-exact native evaluator.
+//!
+//! To use real PJRT execution, point the `xla` dependency in the root
+//! `Cargo.toml` at the actual xla-rs crate — the type and method names
+//! here match, so no `printed_mlp` source changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error carrying a description of the unavailable operation.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT/XLA runtime unavailable in this offline build \
+         (vendored stub — see rust/README.md to link the real xla crate)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        ))
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub: execution always fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub: constructible so evaluator setup code compiles,
+/// but all data movement fails).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_construction_is_ok() {
+        let lit = Literal::vec1(&[1i32, 2, 3]).reshape(&[3]).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+}
