@@ -6,16 +6,21 @@
 //!       when approximating each dataset's single best neuron
 //!   A3  netlist optimizer (CSE+DCE) contribution to the hardwired designs
 //!   A4  RFP search strategy — greedy (paper) vs bisect (§Perf), evals
+//!   A5  NSGA memo cache on/off — unique fitness evaluations, hit rate,
+//!       and wall-clock on the parallel native search path (§Perf)
 //!
 //! Run with `cargo bench --bench ablations`.
 
 mod harness;
 
+use printed_mlp::approx;
 use printed_mlp::circuits::seq_multicycle;
 use printed_mlp::model::ApproxTables;
+use printed_mlp::nsga::NsgaConfig;
 use printed_mlp::rfp::{self, Strategy};
 use printed_mlp::runtime::{PjrtEvaluator, BATCH_THROUGHPUT};
 use printed_mlp::tech;
+use printed_mlp::util::pool;
 
 fn main() {
     let Some(store) = harness::require_artifacts() else { return };
@@ -139,5 +144,47 @@ fn main() {
                 g.evals, b.evals, g.kept, b.kept
             );
         }
+    }
+
+    // --- A5: NSGA memo cache on/off -----------------------------------------
+    // Parallel native search path (PJRT-free): what the genome memo saves
+    // in unique fitness evaluations and wall-clock, fronts bit-identical.
+    harness::section("A5 — NSGA memo cache on vs off (native parallel, pop 16 × gen 10)");
+    let threads = pool::default_threads();
+    println!(
+        "{:>12} {:>10} {:>10} {:>9} {:>9}",
+        "dataset", "evals off", "evals on", "hit rate", "speedup"
+    );
+    for name in ["spectf", "gas"] {
+        let m = store.model(name).unwrap();
+        let ds = store.dataset(name).unwrap();
+        let fit = ds.train.head(256);
+        let fm = vec![1u8; m.features];
+        let tables = approx::build_tables(&m, &fit.xs, fit.len(), &fm);
+        let mut cfg = NsgaConfig {
+            pop_size: 16,
+            generations: 10,
+            ..Default::default()
+        };
+        cfg.memoize = false;
+        let t0 = std::time::Instant::now();
+        let (front_off, off) = approx::explore_parallel(&m, &fit, &fm, &tables, &cfg, threads);
+        let secs_off = t0.elapsed().as_secs_f64();
+        cfg.memoize = true;
+        let t1 = std::time::Instant::now();
+        let (front_on, on) = approx::explore_parallel(&m, &fit, &fm, &tables, &cfg, threads);
+        let secs_on = t1.elapsed().as_secs_f64();
+        assert_eq!(front_off.len(), front_on.len(), "memo must not change the front");
+        for (a, b) in front_off.iter().zip(&front_on) {
+            assert_eq!(a.genome, b.genome, "memo must not change the front");
+            assert_eq!(a.objectives, b.objectives, "memo must not change the front");
+        }
+        println!(
+            "{name:>12} {:>10} {:>10} {:>8.0}% {:>8.2}x",
+            off.evals,
+            on.evals,
+            100.0 * on.hit_rate(),
+            secs_off / secs_on.max(1e-9)
+        );
     }
 }

@@ -1,0 +1,102 @@
+//! NSGA-II approximation-search throughput: genome-evals/sec at 1..N
+//! fitness-batch threads (native-model fitness, memo cache off so every
+//! requested genome costs a full training-set pass), plus the memo-cache
+//! hit rate and its end-to-end speedup at full threads.
+//!
+//! Artifact-free — the model and training split are synthetic — so this
+//! bench always runs, unlike the `make artifacts`-gated harnesses.  The
+//! acceptance bar mirrors the sim-sharding bench: >= 2x genome-evals/sec
+//! at 4+ threads vs 1 thread on multi-core hosts, with bit-identical
+//! fronts at every thread count (enforced by `tests/nsga_parallel.rs`).
+
+mod harness;
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use common::rand_model;
+use printed_mlp::approx;
+use printed_mlp::data::Split;
+use printed_mlp::nsga::NsgaConfig;
+use printed_mlp::util::pool;
+use printed_mlp::util::prng::Rng;
+
+fn main() {
+    harness::section("NSGA-II search — genome-evals/sec vs fitness threads (native)");
+
+    // HAR-class search: 48 features, 24 hidden neurons (genome bits).
+    let m = rand_model(21, 48, 24, 5);
+    let n = 512usize;
+    let mut rng = Rng::new(9);
+    let split = Split {
+        xs: (0..n * m.features).map(|_| rng.below(16) as u8).collect(),
+        ys: (0..n).map(|_| rng.below(m.classes as u64) as u16).collect(),
+        features: m.features,
+    };
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+
+    // Cache off: genome-evals/sec measures raw fitness throughput.
+    let uncached = NsgaConfig {
+        pop_size: 24,
+        generations: 12,
+        memoize: false,
+        ..Default::default()
+    };
+    let evals_per_run = (uncached.pop_size * (uncached.generations + 1)) as f64;
+    println!(
+        "search: pop {} × gen {} = {:.0} genome evals/run, {} samples/eval, {} genome bits",
+        uncached.pop_size, uncached.generations, evals_per_run, n, m.hidden
+    );
+
+    let avail = pool::default_threads();
+    let mut thread_counts = vec![1usize, 2, 4];
+    if !thread_counts.contains(&avail) {
+        thread_counts.push(avail);
+    }
+
+    let mut base_ms = 0.0f64;
+    for &threads in &thread_counts {
+        let r = harness::bench(
+            &format!("NSGA pop24×gen12 cache off, {threads:>2} thread(s)"),
+            3,
+            || {
+                let (front, stats) =
+                    approx::explore_parallel(&m, &split, &fm, &tables, &uncached, threads);
+                assert_eq!(stats.evals as f64, evals_per_run);
+                std::hint::black_box(front.len());
+            },
+        );
+        if threads == 1 {
+            base_ms = r.mean_ms;
+        }
+        println!(
+            "          {:>10.0} genome-evals/sec, speedup {:>5.2}x vs 1 thread",
+            evals_per_run / (r.mean_ms / 1e3),
+            base_ms / r.mean_ms.max(1e-9)
+        );
+    }
+
+    // Cache on at full threads: crossover/mutation re-produce genomes
+    // across generations, and each hit skips a full training-set pass.
+    let cached = NsgaConfig {
+        memoize: true,
+        ..uncached.clone()
+    };
+    let r = harness::bench(
+        &format!("NSGA pop24×gen12 cache on,  {avail:>2} thread(s)"),
+        3,
+        || {
+            let (front, _stats) =
+                approx::explore_parallel(&m, &split, &fm, &tables, &cached, avail);
+            std::hint::black_box(front.len());
+        },
+    );
+    let (_, stats) = approx::explore_parallel(&m, &split, &fm, &tables, &cached, avail);
+    println!(
+        "          memo: {} unique evals / {} requested ({:.0}% hit rate), {:>10.0} effective genome-evals/sec",
+        stats.evals,
+        stats.requested,
+        100.0 * stats.hit_rate(),
+        stats.requested as f64 / (r.mean_ms / 1e3)
+    );
+}

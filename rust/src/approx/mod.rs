@@ -7,8 +7,10 @@
 //! (1%/2%/5% in Fig. 7) is the Pareto solution with the most approximated
 //! neurons whose accuracy stays within the budget.
 
+use crate::data::Split;
 use crate::model::{importance, ApproxTables, QuantModel};
-use crate::nsga::{self, Individual, NsgaConfig};
+use crate::nsga::{self, FitnessEval, Individual, NsgaConfig, SearchStats};
+use crate::util::pool;
 
 /// A chosen hybrid configuration.
 #[derive(Clone, Debug)]
@@ -40,6 +42,78 @@ where
         let acc = eval(&mask);
         vec![genome.iter().filter(|&&b| b).count() as f64, acc]
     })
+}
+
+/// Parallel batch fitness for the approximation search (DESIGN.md §Perf):
+/// a generation's genomes fan out across worker threads via
+/// [`pool::scope_map_with`], each worker owning its own model +
+/// [`ApproxTables`] clone.  The native forward pass is `&self`-pure, so
+/// the clones are not about contention today — they keep each worker's
+/// evaluator state private (mirroring `sim::batch`'s per-worker lanes) so
+/// future backends with mutable scratch state slot in unchanged, and one
+/// clone per worker per generation is noise next to a single
+/// training-set pass.  Objectives match [`explore`]'s exactly —
+/// (#approximated neurons, training accuracy on the split) — and fitness
+/// is a pure function of the genome, so [`nsga::run_batched`] over this
+/// evaluator is bit-identical to the serial path at equal seeds.
+pub struct ParallelFitness<'a> {
+    model: &'a QuantModel,
+    split: &'a Split,
+    feat_mask: &'a [u8],
+    tables: &'a ApproxTables,
+    threads: usize,
+}
+
+impl<'a> ParallelFitness<'a> {
+    pub fn new(
+        model: &'a QuantModel,
+        split: &'a Split,
+        feat_mask: &'a [u8],
+        tables: &'a ApproxTables,
+        threads: usize,
+    ) -> Self {
+        ParallelFitness {
+            model,
+            split,
+            feat_mask,
+            tables,
+            threads: threads.max(1),
+        }
+    }
+}
+
+impl FitnessEval for ParallelFitness<'_> {
+    fn eval_batch(&mut self, genomes: &[Vec<bool>]) -> Vec<Vec<f64>> {
+        let (model, split) = (self.model, self.split);
+        let (feat_mask, tables) = (self.feat_mask, self.tables);
+        pool::scope_map_with(
+            genomes.len(),
+            self.threads,
+            || (model.clone(), tables.clone()),
+            move |state, i| {
+                let (m, t) = state;
+                let mask: Vec<u8> = genomes[i].iter().map(|&b| b as u8).collect();
+                let acc = m.accuracy(&split.xs, &split.ys, feat_mask, &mask, t);
+                vec![genomes[i].iter().filter(|&&b| b).count() as f64, acc]
+            },
+        )
+    }
+}
+
+/// [`explore`] through the parallel, memoized batch path: NSGA-II with
+/// per-generation offspring slates evaluated by [`ParallelFitness`] over
+/// `threads` workers.  Returns the front plus [`SearchStats`] (unique
+/// evaluations vs memo hits).
+pub fn explore_parallel(
+    model: &QuantModel,
+    split: &Split,
+    feat_mask: &[u8],
+    tables: &ApproxTables,
+    cfg: &NsgaConfig,
+    threads: usize,
+) -> (Vec<Individual>, SearchStats) {
+    let mut fitness = ParallelFitness::new(model, split, feat_mask, tables, threads);
+    nsga::run_batched(model.hidden, cfg, &mut fitness)
 }
 
 /// Pick the most-approximated Pareto solution within the accuracy budget.
@@ -134,6 +208,39 @@ mod tests {
         let sel = select(&front, 0.9, 0.01);
         assert_eq!(sel.n_approx, 0);
         assert_eq!(sel.approx_mask, vec![0, 0]);
+    }
+
+    #[test]
+    fn parallel_explore_matches_serial() {
+        let m = rand_model(17, 10, 5, 3);
+        let mut r = Rng::new(5);
+        let n = 48;
+        let xs: Vec<u8> = (0..n * 10).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(3) as u16).collect();
+        let split = Split {
+            xs,
+            ys,
+            features: 10,
+        };
+        let fm = vec![1u8; 10];
+        let tables = build_tables(&m, &split.xs, n, &fm);
+        let cfg = NsgaConfig {
+            pop_size: 10,
+            generations: 6,
+            ..Default::default()
+        };
+        let serial = explore(m.hidden, &cfg, |mask| {
+            m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+        });
+        for threads in [1usize, 3] {
+            let (par, stats) = explore_parallel(&m, &split, &fm, &tables, &cfg, threads);
+            assert_eq!(serial.len(), par.len(), "front size ({threads} threads)");
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.genome, b.genome);
+                assert_eq!(a.objectives, b.objectives);
+            }
+            assert_eq!(stats.evals + stats.cache_hits, stats.requested);
+        }
     }
 
     #[test]

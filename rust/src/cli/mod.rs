@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! printed-mlp pipeline  [--datasets a,b] [--threads N] [--backend B]
+//!                       [--search-threads N] [--no-nsga-cache]
 //!                       [--native] [--no-cache] [--fit-subset N]
 //!                       [--config FILE]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
@@ -71,6 +72,7 @@ const USAGE: &str = "printed-mlp — Sequential Printed MLP Circuits (ASPDAC'25)
 USAGE:
   printed-mlp pipeline  [--datasets a,b,..] [--threads N] [--native]
                         [--backend auto|native|pjrt|gatesim]
+                        [--search-threads N] [--no-nsga-cache]
                         [--no-cache] [--fit-subset N] [--pop N] [--gens N]
                         [--config FILE] [--fast]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
@@ -83,6 +85,10 @@ USAGE:
 
 Backends: auto prefers PJRT and falls back to the native functional model;
 gatesim validates on the sharded gate-level netlist simulator.
+On the native backend the NSGA-II approximation search fans each
+generation's fitness batch across --search-threads workers (0 = auto)
+with a genome memo cache (--no-nsga-cache disables it); results are
+bit-identical to the serial search at the same seed.
 Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
 
 /// CLI entrypoint.
@@ -119,6 +125,12 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
     }
     if let Some(v) = flags.get("threads") {
         conf.set("pipeline.threads", v);
+    }
+    if let Some(v) = flags.get("search-threads") {
+        conf.set("pipeline.search_threads", v);
+    }
+    if flags.has("no-nsga-cache") {
+        conf.set("nsga.memoize", "false");
     }
     if flags.has("native") {
         conf.set("pipeline.backend", "native");
@@ -389,6 +401,22 @@ mod tests {
         assert_eq!(cfg.fit_subset, 64);
         assert_eq!(cfg.nsga.pop_size, 8);
         assert_eq!(cfg.backend, crate::runtime::Backend::Native);
+    }
+
+    #[test]
+    fn search_threads_and_nsga_cache_flags() {
+        let args: Vec<String> = ["--search-threads", "3", "--no-nsga-cache"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = pipeline_config(&f).unwrap();
+        assert_eq!(cfg.search_threads, 3);
+        assert!(!cfg.nsga.memoize);
+        // Defaults when the flags are absent.
+        let cfg = pipeline_config(&Flags::parse(&[]).unwrap()).unwrap();
+        assert_eq!(cfg.search_threads, 0);
+        assert!(cfg.nsga.memoize);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! [pipeline]
 //! datasets = spectf, gas
 //! threads = 4
+//! search_threads = 4      # NSGA fitness-batch workers (0 = auto)
 //! fit_subset = 512
 //! rfp_strategy = bisect
 //! gate_level_accuracy = true
@@ -15,6 +16,7 @@
 //! [nsga]
 //! pop_size = 40
 //! generations = 30
+//! memoize = true          # genome→objectives cache (perf only)
 //! ```
 
 use std::collections::BTreeMap;
@@ -120,6 +122,9 @@ impl Config {
         if let Some(t) = self.get_usize("pipeline.threads")? {
             cfg.threads = t.max(1);
         }
+        if let Some(t) = self.get_usize("pipeline.search_threads")? {
+            cfg.search_threads = t;
+        }
         if let Some(b) = self.get_bool("pipeline.use_pjrt")? {
             // Back-compat alias from the pre-backend config format.  An
             // explicit `use_pjrt = true` keeps its old hard requirement
@@ -168,6 +173,9 @@ impl Config {
         if let Some(s) = self.get_usize("nsga.seed")? {
             nsga.seed = s as u64;
         }
+        if let Some(b) = self.get_bool("nsga.memoize")? {
+            nsga.memoize = b;
+        }
         cfg.nsga = nsga;
         Ok(cfg)
     }
@@ -201,6 +209,18 @@ mod tests {
         assert_eq!(c.pipeline().unwrap().backend, Backend::GateSim);
         let c = Config::parse("[pipeline]\nbackend = warp-drive\n").unwrap();
         assert!(c.pipeline().is_err());
+    }
+
+    #[test]
+    fn search_threads_and_memoize_keys() {
+        let c = Config::parse("[pipeline]\nsearch_threads = 6\n").unwrap();
+        assert_eq!(c.pipeline().unwrap().search_threads, 6);
+        let c = Config::parse("[nsga]\nmemoize = false\n").unwrap();
+        assert!(!c.pipeline().unwrap().nsga.memoize);
+        // Defaults: auto-derived search threads, cache on.
+        let d = Config::default().pipeline().unwrap();
+        assert_eq!(d.search_threads, 0);
+        assert!(d.nsga.memoize);
     }
 
     #[test]

@@ -39,6 +39,11 @@ pub struct PipelineConfig {
     pub backend: Backend,
     pub rfp_strategy: Strategy,
     pub nsga: NsgaConfig,
+    /// Worker threads for the NSGA-II fitness batch on the native backend
+    /// (0 = derive from the divided per-dataset thread budget, like the
+    /// sim shards).  The PJRT path stays serial — its prepared-input fast
+    /// path holds `!Send` device handles.
+    pub search_threads: usize,
     /// Accuracy-drop budgets for Fig. 7 (fractions).
     pub drops: Vec<f64>,
     /// Training samples used for fitness evaluation (0 = all).
@@ -57,6 +62,7 @@ impl Default for PipelineConfig {
             backend: Backend::Auto,
             rfp_strategy: Strategy::Bisect,
             nsga: NsgaConfig::default(),
+            search_threads: 0,
             drops: vec![0.01, 0.02, 0.05],
             fit_subset: 512,
             gate_level_accuracy: true,
@@ -192,9 +198,30 @@ pub fn run_dataset(
     // --- Stage 2: single-cycle tables + NSGA-II ----------------------------
     let tables = approx::build_tables(&model, &fit_split.xs, fit_split.len(), &rfp.feat_mask);
     let baseline = rfp.accuracy;
-    let front = approx::explore(h, &cfg.nsga, |mask| {
-        fit_acc(&rfp.feat_mask, mask, &tables)
-    });
+    // §Perf: on the native backend each generation's offspring slate fans
+    // out across search workers (per-worker model + tables clones) with a
+    // genome→objectives memo — bit-identical to the serial path at equal
+    // seeds (tests/nsga_parallel.rs).  PJRT and gatesim keep the serial
+    // reference loop: PJRT's prepared-input handles are `!Send`, and the
+    // gatesim evaluator regenerates its circuit per mask anyway.
+    let search_threads = if cfg.search_threads > 0 {
+        cfg.search_threads
+    } else {
+        sim_threads
+    };
+    let front = if backend == Backend::Native {
+        let (front, _stats) = approx::explore_parallel(
+            &model,
+            &fit_split,
+            &rfp.feat_mask,
+            &tables,
+            &cfg.nsga,
+            search_threads,
+        );
+        front
+    } else {
+        approx::explore(h, &cfg.nsga, |mask| fit_acc(&rfp.feat_mask, mask, &tables))
+    };
     let selections: Vec<(f64, Selection)> = cfg
         .drops
         .iter()

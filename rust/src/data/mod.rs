@@ -2,12 +2,54 @@
 //!
 //! Datasets are generated at build time by `python/compile/datasets.py`
 //! (deterministic synthetic multi-sensor data — see DESIGN.md
-//! §Substitutions) and stored in a compact little-endian binary format:
+//! §Substitutions) and stored in the PMLP binary format.
 //!
-//! ```text
-//! u32 magic "PMLP" | u32 version | u32 n_train | u32 n_test |
-//! u32 features | u32 classes |
-//! x_train (n_train*F u8) | y_train (n_train u16) | x_test | y_test
+//! # The PMLP binary dataset format
+//!
+//! Everything is little-endian, with no padding or alignment between
+//! fields.  A 24-byte header is followed by four tightly packed payload
+//! sections:
+//!
+//! | offset | size            | field     | contents                            |
+//! |--------|-----------------|-----------|-------------------------------------|
+//! | 0      | 4               | magic     | `0x504D_4C50` (ASCII `"PMLP"`)      |
+//! | 4      | 4               | version   | [`VERSION`] (currently 2)           |
+//! | 8      | 4               | n_train   | number of training samples          |
+//! | 12     | 4               | n_test    | number of test samples              |
+//! | 16     | 4               | features  | feature count `F` per sample        |
+//! | 20     | 4               | classes   | label arity                         |
+//! | 24     | `n_train * F`   | x_train   | row-major `u8` inputs, each in 0..=15 |
+//! | …      | `2 * n_train`   | y_train   | `u16` labels, each `< classes`      |
+//! | …      | `n_test * F`    | x_test    | as x_train                          |
+//! | …      | `2 * n_test`    | y_test    | as y_train                          |
+//!
+//! Inputs are 4-bit sensor words (the paper's ADC width), so any byte
+//! above 15 is rejected, as are out-of-range labels, truncated payloads,
+//! and trailing bytes.  [`Dataset::to_bytes`] serializes and
+//! [`Dataset::from_bytes`] parses/validates; [`Dataset::load`] is the
+//! file-backed wrapper the [`ArtifactStore`] uses.
+//!
+//! Round-tripping a tiny in-memory dataset:
+//!
+//! ```
+//! use printed_mlp::data::{Dataset, Split};
+//!
+//! let ds = Dataset {
+//!     name: "tiny".into(),
+//!     classes: 2,
+//!     train: Split { xs: vec![1, 2, 3, 4, 5, 6], ys: vec![0, 1], features: 3 },
+//!     test: Split { xs: vec![15, 0, 7], ys: vec![1], features: 3 },
+//! };
+//! let bytes = ds.to_bytes();
+//! let magic = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+//! assert_eq!(magic, printed_mlp::data::MAGIC);
+//! let back = Dataset::from_bytes("tiny", &bytes).unwrap();
+//! assert_eq!(back.classes, 2);
+//! assert_eq!(back.train.xs, ds.train.xs);
+//! assert_eq!(back.train.ys, ds.train.ys);
+//! assert_eq!(back.test.xs, ds.test.xs);
+//! assert_eq!(back.test.ys, ds.test.ys);
+//! assert_eq!(back.train.row(1), &[4, 5, 6]);
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -79,25 +121,34 @@ fn read_u32(b: &[u8], off: &mut usize) -> Result<u32> {
 }
 
 impl Dataset {
+    /// Load and validate a PMLP-format file; the dataset name is the
+    /// file stem.
     pub fn load(path: &Path) -> Result<Dataset> {
         let b = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
         let name = path
             .file_stem()
             .map(|s| s.to_string_lossy().to_string())
             .unwrap_or_default();
+        Self::from_bytes(&name, &b).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse and validate a PMLP-format byte buffer (see the module docs
+    /// for the layout).  Rejects bad magic/version, truncated or trailing
+    /// bytes, inputs outside the 4-bit range, and out-of-range labels.
+    pub fn from_bytes(name: &str, b: &[u8]) -> Result<Dataset> {
         let mut off = 0usize;
-        let magic = read_u32(&b, &mut off)?;
-        let version = read_u32(&b, &mut off)?;
+        let magic = read_u32(b, &mut off)?;
+        let version = read_u32(b, &mut off)?;
         if magic != MAGIC {
-            bail!("{}: bad magic {magic:#x}", path.display());
+            bail!("{name}: bad magic {magic:#x}");
         }
         if version != VERSION {
-            bail!("{}: version {version}, want {VERSION}", path.display());
+            bail!("{name}: version {version}, want {VERSION}");
         }
-        let n_train = read_u32(&b, &mut off)? as usize;
-        let n_test = read_u32(&b, &mut off)? as usize;
-        let features = read_u32(&b, &mut off)? as usize;
-        let classes = read_u32(&b, &mut off)? as usize;
+        let n_train = read_u32(b, &mut off)? as usize;
+        let n_test = read_u32(b, &mut off)? as usize;
+        let features = read_u32(b, &mut off)? as usize;
+        let classes = read_u32(b, &mut off)? as usize;
 
         let take = |off: &mut usize, n: usize| -> Result<Vec<u8>> {
             if *off + n > b.len() {
@@ -124,7 +175,7 @@ impl Dataset {
         let x_test = take(&mut off, n_test * features)?;
         let y_test = take_u16(&mut off, n_test)?;
         if off != b.len() {
-            bail!("{}: {} trailing bytes", path.display(), b.len() - off);
+            bail!("{name}: {} trailing bytes", b.len() - off);
         }
         for &x in x_train.iter().chain(&x_test) {
             if x > 15 {
@@ -137,7 +188,7 @@ impl Dataset {
             }
         }
         Ok(Dataset {
-            name,
+            name: name.to_string(),
             classes,
             train: Split {
                 xs: x_train,
@@ -150,6 +201,31 @@ impl Dataset {
                 features,
             },
         })
+    }
+
+    /// Serialize to the PMLP binary format (see the module docs); the
+    /// exact inverse of [`Dataset::from_bytes`] for valid datasets.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        for v in [
+            MAGIC,
+            VERSION,
+            self.train.len() as u32,
+            self.test.len() as u32,
+            self.train.features as u32,
+            self.classes as u32,
+        ] {
+            b.extend(v.to_le_bytes());
+        }
+        b.extend_from_slice(&self.train.xs);
+        for &y in &self.train.ys {
+            b.extend(y.to_le_bytes());
+        }
+        b.extend_from_slice(&self.test.xs);
+        for &y in &self.test.ys {
+            b.extend(y.to_le_bytes());
+        }
+        b
     }
 }
 
@@ -234,6 +310,19 @@ mod tests {
         assert_eq!(ds.train.row(1), &[4, 5, 6]);
         assert_eq!(ds.classes, 2);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip_in_memory() {
+        let ds = Dataset::from_bytes("mem", &sample_file()).unwrap();
+        let bytes = ds.to_bytes();
+        assert_eq!(bytes, sample_file(), "to_bytes inverts from_bytes");
+        let back = Dataset::from_bytes("mem", &bytes).unwrap();
+        assert_eq!(back.train.xs, ds.train.xs);
+        assert_eq!(back.train.ys, ds.train.ys);
+        assert_eq!(back.test.xs, ds.test.xs);
+        assert_eq!(back.test.ys, ds.test.ys);
+        assert_eq!(back.classes, ds.classes);
     }
 
     #[test]

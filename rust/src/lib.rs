@@ -15,8 +15,12 @@
 //!   `--backend native|pjrt|gatesim` (auto prefers PJRT, falls back to
 //!   native).
 //! - [`rfp`] — Redundant Feature Pruning (Algorithm 1).
-//! - [`nsga`] — NSGA-II multi-objective optimizer.
-//! - [`approx`] — neuron-approximation framework (Eq. 1, Fig. 5).
+//! - [`nsga`] — NSGA-II multi-objective optimizer: serial reference
+//!   [`nsga::run`] plus the parallel, memoized batch driver
+//!   [`nsga::run_batched`] (bit-identical fronts at equal seeds).
+//! - [`approx`] — neuron-approximation framework (Eq. 1, Fig. 5), with
+//!   [`approx::ParallelFitness`] fanning each generation's fitness batch
+//!   across worker threads (`--search-threads`).
 //! - [`netlist`] — gate-level IR, optimizer and Verilog emitter.
 //! - [`circuits`] — the four architectures: combinational [14], sequential
 //!   state-of-the-art [16], our multi-cycle sequential, and the hybrid.

@@ -7,6 +7,23 @@
 //! distance, binary-tournament selection on (rank, crowding), uniform
 //! crossover and bit-flip mutation, plus the paper's biased initial
 //! population (each initial solution approximates exactly one neuron).
+//!
+//! Two drivers share those building blocks (see DESIGN.md §Perf):
+//!
+//! - [`run`] — the serial reference: one `FnMut` fitness call per genome.
+//! - [`run_batched`] — collects each generation's offspring first, then
+//!   hands the whole slate to a [`FitnessEval`] in one call, so the
+//!   evaluator can fan the batch out across worker threads (e.g.
+//!   [`crate::approx::ParallelFitness`]).  A genome→objectives memo table
+//!   ([`NsgaConfig::memoize`]) skips re-evaluating genomes that uniform
+//!   crossover and bit-flip mutation re-produce across generations.
+//!
+//! Genome generation is RNG-driven and stays serial in both drivers;
+//! fitness evaluation is pure per genome.  The two therefore consume
+//! identical RNG streams and return bit-identical final fronts at equal
+//! seeds — enforced differentially by `tests/nsga_parallel.rs`.
+
+use std::collections::HashMap;
 
 use crate::util::prng::Rng;
 
@@ -112,6 +129,11 @@ pub struct NsgaConfig {
     pub crossover_prob: f64,
     pub mutation_prob: f64, // per bit
     pub seed: u64,
+    /// Memoize genome→objectives (fitness must be deterministic per
+    /// genome, which holds for every evaluator in this crate).  Purely a
+    /// perf toggle: hits skip a full training-set pass without changing
+    /// the search trajectory.
+    pub memoize: bool,
 }
 
 impl Default for NsgaConfig {
@@ -122,8 +144,122 @@ impl Default for NsgaConfig {
             crossover_prob: 0.9,
             mutation_prob: 0.05,
             seed: 0xA5D0,
+            memoize: true,
         }
     }
+}
+
+/// Batch fitness interface for [`run_batched`]: evaluate a whole slate of
+/// genomes at once, returning one objective vector per genome, in order.
+///
+/// Implementations may evaluate the slate in any order (or concurrently —
+/// see [`crate::approx::ParallelFitness`]) but must be deterministic per
+/// genome: the search calls this once per generation with only the
+/// genomes the memo cache could not answer.
+pub trait FitnessEval {
+    fn eval_batch(&mut self, genomes: &[Vec<bool>]) -> Vec<Vec<f64>>;
+}
+
+/// Adapts a serial `FnMut(&[bool]) -> Vec<f64>` fitness closure to the
+/// batch interface (evaluates genomes one at a time, in order).
+pub struct SerialFitness<F>(pub F);
+
+impl<F: FnMut(&[bool]) -> Vec<f64>> FitnessEval for SerialFitness<F> {
+    fn eval_batch(&mut self, genomes: &[Vec<bool>]) -> Vec<Vec<f64>> {
+        genomes.iter().map(|g| (self.0)(g)).collect()
+    }
+}
+
+/// Evaluation accounting for one [`run_batched`] search.
+#[derive(Clone, Debug, Default)]
+pub struct SearchStats {
+    /// Genomes whose objectives the memo cache answered.
+    pub cache_hits: usize,
+    /// Genomes actually handed to the [`FitnessEval`].
+    pub evals: usize,
+    /// Total genomes the search asked for (`evals + cache_hits`).
+    pub requested: usize,
+}
+
+impl SearchStats {
+    /// Fraction of requested evaluations the memo cache absorbed.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requested == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.requested as f64
+        }
+    }
+}
+
+/// Evaluate one generation's genomes through the memo cache, batching
+/// every miss into a single [`FitnessEval::eval_batch`] call.  Within a
+/// batch, duplicate genomes are evaluated once and also count as hits.
+fn eval_genomes<E: FitnessEval + ?Sized>(
+    genomes: Vec<Vec<bool>>,
+    memoize: bool,
+    memo: &mut HashMap<Vec<bool>, Vec<f64>>,
+    stats: &mut SearchStats,
+    eval: &mut E,
+) -> Vec<Individual> {
+    use std::collections::hash_map::Entry;
+    stats.requested += genomes.len();
+    // Per genome: Ok(objectives) answered by the memo, Err(k) = k-th
+    // entry of the pending batch.
+    let mut pending: Vec<Vec<bool>> = Vec::new();
+    let mut slots: Vec<Result<Vec<f64>, usize>> = Vec::with_capacity(genomes.len());
+    let mut staged: HashMap<Vec<bool>, usize> = HashMap::new();
+    for g in &genomes {
+        if memoize {
+            if let Some(o) = memo.get(g) {
+                stats.cache_hits += 1;
+                slots.push(Ok(o.clone()));
+                continue;
+            }
+            match staged.entry(g.clone()) {
+                Entry::Occupied(e) => {
+                    stats.cache_hits += 1;
+                    slots.push(Err(*e.get()));
+                    continue;
+                }
+                Entry::Vacant(v) => {
+                    v.insert(pending.len());
+                }
+            }
+        }
+        slots.push(Err(pending.len()));
+        pending.push(g.clone());
+    }
+    let objs = eval.eval_batch(&pending);
+    assert_eq!(
+        objs.len(),
+        pending.len(),
+        "FitnessEval returned {} objective vectors for {} genomes",
+        objs.len(),
+        pending.len()
+    );
+    stats.evals += pending.len();
+    if memoize {
+        for (g, o) in pending.iter().zip(&objs) {
+            memo.insert(g.clone(), o.clone());
+        }
+    }
+    genomes
+        .into_iter()
+        .zip(slots)
+        .map(|(genome, slot)| {
+            let objectives = match slot {
+                Ok(o) => o,
+                Err(k) => objs[k].clone(),
+            };
+            Individual {
+                genome,
+                objectives,
+                rank: 0,
+                crowding: 0.0,
+            }
+        })
+        .collect()
 }
 
 fn tournament<'a>(pop: &'a [Individual], rng: &mut Rng) -> &'a Individual {
@@ -147,15 +283,19 @@ pub fn run<F>(genome_len: usize, cfg: &NsgaConfig, mut fitness: F) -> Vec<Indivi
 where
     F: FnMut(&[bool]) -> Vec<f64>,
 {
-    use std::collections::HashMap;
     let mut rng = Rng::new(cfg.seed);
     let mut memo: HashMap<Vec<bool>, Vec<f64>> = HashMap::new();
-    let eval = |g: &Vec<bool>, memo: &mut HashMap<Vec<bool>, Vec<f64>>, f: &mut F| {
-        if let Some(o) = memo.get(g) {
-            return o.clone();
+    let memoize = cfg.memoize;
+    let eval = move |g: &Vec<bool>, memo: &mut HashMap<Vec<bool>, Vec<f64>>, f: &mut F| {
+        if memoize {
+            if let Some(o) = memo.get(g) {
+                return o.clone();
+            }
         }
         let o = f(g);
-        memo.insert(g.clone(), o.clone());
+        if memoize {
+            memo.insert(g.clone(), o.clone());
+        }
         o
     };
 
@@ -254,6 +394,107 @@ where
     out
 }
 
+/// [`run`] with generation-batched fitness: every generation's offspring
+/// slate is produced first (serial, RNG-driven), then evaluated through
+/// the memo cache in a single [`FitnessEval::eval_batch`] call, which a
+/// parallel evaluator can fan out across worker threads.
+///
+/// Bit-identical to [`run`] at equal seeds: genome generation consumes
+/// the same RNG stream (fitness never touches the RNG), and objectives
+/// are a pure function of the genome, so deferring and reordering their
+/// evaluation cannot change selection.  `tests/nsga_parallel.rs` enforces
+/// this differentially.
+///
+/// Returns the deduplicated final first front plus [`SearchStats`]
+/// (unique evaluations vs memo hits).
+pub fn run_batched<E: FitnessEval + ?Sized>(
+    genome_len: usize,
+    cfg: &NsgaConfig,
+    eval: &mut E,
+) -> (Vec<Individual>, SearchStats) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut memo: HashMap<Vec<bool>, Vec<f64>> = HashMap::new();
+    let mut stats = SearchStats::default();
+
+    // Biased initial population — identical construction to [`run`].
+    let mut genomes: Vec<Vec<bool>> = Vec::with_capacity(cfg.pop_size);
+    genomes.push(vec![false; genome_len]);
+    for i in 0..genome_len.min(cfg.pop_size.saturating_sub(1)) {
+        let mut g = vec![false; genome_len];
+        g[i] = true;
+        genomes.push(g);
+    }
+    while genomes.len() < cfg.pop_size {
+        let g: Vec<bool> = (0..genome_len).map(|_| rng.chance(0.25)).collect();
+        genomes.push(g);
+    }
+    let mut pop = eval_genomes(genomes, cfg.memoize, &mut memo, &mut stats, eval);
+
+    for _gen in 0..cfg.generations {
+        let fronts = non_dominated_sort(&mut pop);
+        for f in &fronts {
+            crowding_distance(&mut pop, f);
+        }
+        // Offspring genomes first (same RNG consumption as [`run`],
+        // which interleaves fitness calls that never touch the RNG)...
+        let mut offspring: Vec<Vec<bool>> = Vec::with_capacity(cfg.pop_size);
+        while offspring.len() < cfg.pop_size {
+            let p1 = tournament(&pop, &mut rng).genome.clone();
+            let p2 = tournament(&pop, &mut rng).genome.clone();
+            let mut c = if rng.chance(cfg.crossover_prob) {
+                // Uniform crossover.
+                p1.iter()
+                    .zip(&p2)
+                    .map(|(&a, &b)| if rng.chance(0.5) { a } else { b })
+                    .collect::<Vec<bool>>()
+            } else {
+                p1
+            };
+            for bit in c.iter_mut() {
+                if rng.chance(cfg.mutation_prob) {
+                    *bit = !*bit;
+                }
+            }
+            offspring.push(c);
+        }
+        // ...then one batched evaluation for the whole generation.
+        let children = eval_genomes(offspring, cfg.memoize, &mut memo, &mut stats, eval);
+        // Environmental selection over parents + children.
+        pop.extend(children);
+        let fronts = non_dominated_sort(&mut pop);
+        for f in &fronts {
+            crowding_distance(&mut pop, f);
+        }
+        let mut next: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+        for front in &fronts {
+            if next.len() + front.len() <= cfg.pop_size {
+                for &i in front {
+                    next.push(pop[i].clone());
+                }
+            } else {
+                let mut rest: Vec<usize> = front.clone();
+                rest.sort_by(|&a, &b| pop[b].crowding.partial_cmp(&pop[a].crowding).unwrap());
+                for &i in rest.iter().take(cfg.pop_size - next.len()) {
+                    next.push(pop[i].clone());
+                }
+                break;
+            }
+        }
+        pop = next;
+    }
+
+    // Final first front, deduplicated.
+    let fronts = non_dominated_sort(&mut pop);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for &i in &fronts[0] {
+        if seen.insert(pop[i].genome.clone()) {
+            out.push(pop[i].clone());
+        }
+    }
+    (out, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,6 +583,83 @@ mod tests {
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.genome, y.genome);
+        }
+    }
+
+    #[test]
+    fn run_batched_matches_run() {
+        let cfg = NsgaConfig {
+            pop_size: 14,
+            generations: 12,
+            ..Default::default()
+        };
+        let f = |g: &[bool]| {
+            vec![
+                g.iter().filter(|&&b| b).count() as f64,
+                g.iter().take_while(|&&b| !b).count() as f64,
+            ]
+        };
+        let serial = run(10, &cfg, f);
+        let (batched, stats) = run_batched(10, &cfg, &mut SerialFitness(f));
+        assert_eq!(serial.len(), batched.len());
+        for (a, b) in serial.iter().zip(&batched) {
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.objectives, b.objectives);
+        }
+        assert_eq!(stats.requested, cfg.pop_size * (cfg.generations + 1));
+        assert_eq!(stats.evals + stats.cache_hits, stats.requested);
+    }
+
+    #[test]
+    fn memo_dedups_within_and_across_batches() {
+        // genome_len 2 → at most 4 distinct genomes, but pop_size 8: the
+        // very first batch already holds duplicates (pigeonhole), so the
+        // memo must absorb hits and cap unique evaluations at 4.
+        let cfg = NsgaConfig {
+            pop_size: 8,
+            generations: 4,
+            ..Default::default()
+        };
+        let mut calls = 0usize;
+        let mut fit = SerialFitness(|g: &[bool]| {
+            calls += 1;
+            vec![g.iter().filter(|&&b| b).count() as f64]
+        });
+        let (_front, stats) = run_batched(2, &cfg, &mut fit);
+        drop(fit);
+        assert_eq!(calls, stats.evals);
+        assert!(stats.evals <= 4, "only 4 distinct 2-bit genomes exist");
+        assert!(stats.cache_hits > 0);
+        assert_eq!(stats.evals + stats.cache_hits, stats.requested);
+        assert!(stats.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn cache_disabled_reevaluates_but_front_identical() {
+        let on = NsgaConfig {
+            pop_size: 10,
+            generations: 6,
+            ..Default::default()
+        };
+        let off = NsgaConfig {
+            memoize: false,
+            ..on.clone()
+        };
+        let f = |g: &[bool]| {
+            vec![
+                g.iter().filter(|&&b| b).count() as f64,
+                g.iter().take_while(|&&b| !b).count() as f64,
+            ]
+        };
+        let (a, sa) = run_batched(6, &on, &mut SerialFitness(f));
+        let (b, sb) = run_batched(6, &off, &mut SerialFitness(f));
+        assert_eq!(sb.cache_hits, 0);
+        assert_eq!(sb.evals, sb.requested);
+        assert!(sa.evals <= sb.evals);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.genome, y.genome);
+            assert_eq!(x.objectives, y.objectives);
         }
     }
 

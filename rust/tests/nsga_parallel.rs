@@ -1,0 +1,306 @@
+//! Differential + invariant suite for the parallel, memoized NSGA-II
+//! approximation search.
+//!
+//! The contract under test (DESIGN.md §Perf): `nsga::run_batched` over
+//! `approx::ParallelFitness` — per-generation offspring batches fanned
+//! across worker threads with per-worker model/table clones, plus a
+//! genome→objectives memo cache — returns a **bit-identical** final
+//! Pareto front to the serial reference `nsga::run` at the same seed,
+//! for every thread count and with the cache on or off.
+//!
+//! Also covers the NSGA-II structural invariants: non-dominated-sort
+//! rank correctness on hand-built and random fronts, crowding-distance
+//! boundary handling, and seed determinism.
+//!
+//! Artifact-free (random `QuantModel`s), so this suite runs in tier-1.
+
+mod common;
+
+use common::rand_model;
+use printed_mlp::approx;
+use printed_mlp::data::Split;
+use printed_mlp::model::QuantModel;
+use printed_mlp::nsga::{
+    self, crowding_distance, dominates, non_dominated_sort, Individual, NsgaConfig, SerialFitness,
+};
+use printed_mlp::util::prng::Rng;
+use printed_mlp::util::propcheck::{check, Gen};
+
+/// Random 4-bit training split for `model`, fully determined by `seed`.
+fn rand_split(seed: u64, model: &QuantModel, n: usize) -> Split {
+    let mut r = Rng::new(seed);
+    Split {
+        xs: (0..n * model.features).map(|_| r.below(16) as u8).collect(),
+        ys: (0..n).map(|_| r.below(model.classes as u64) as u16).collect(),
+        features: model.features,
+    }
+}
+
+fn assert_fronts_identical(a: &[Individual], b: &[Individual], what: &str) {
+    assert_eq!(a.len(), b.len(), "front size differs: {what}");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.genome, y.genome, "genome differs: {what}");
+        assert_eq!(x.objectives, y.objectives, "objectives differ: {what}");
+    }
+}
+
+fn mk(objectives: Vec<f64>) -> Individual {
+    Individual {
+        genome: vec![],
+        objectives,
+        rank: 0,
+        crowding: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Differential: serial reference vs parallel + memoized batch path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_memoized_front_bit_identical_to_serial() {
+    let m = rand_model(33, 16, 8, 4);
+    let split = rand_split(7, &m, 96);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    let cfg = NsgaConfig {
+        pop_size: 16,
+        generations: 10,
+        ..Default::default()
+    };
+    // The serial reference path, exactly as the coordinator's PJRT arm
+    // drives it: one fitness closure call per genome through nsga::run.
+    let serial = approx::explore(m.hidden, &cfg, |mask| {
+        m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+    });
+    for threads in [1usize, 2, 4, 8] {
+        let (parallel, stats) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, threads);
+        assert_fronts_identical(&serial, &parallel, &format!("{threads} threads, cache on"));
+        assert_eq!(stats.evals + stats.cache_hits, stats.requested);
+        assert_eq!(stats.requested, cfg.pop_size * (cfg.generations + 1));
+    }
+}
+
+#[test]
+fn cache_off_is_still_bit_identical() {
+    let m = rand_model(34, 12, 6, 3);
+    let split = rand_split(11, &m, 64);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    let base = NsgaConfig {
+        pop_size: 12,
+        generations: 8,
+        ..Default::default()
+    };
+    let serial = approx::explore(m.hidden, &base, |mask| {
+        m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+    });
+    let uncached = NsgaConfig {
+        memoize: false,
+        ..base.clone()
+    };
+    for threads in [1usize, 4] {
+        let (parallel, stats) =
+            approx::explore_parallel(&m, &split, &fm, &tables, &uncached, threads);
+        assert_fronts_identical(&serial, &parallel, &format!("{threads} threads, cache off"));
+        assert_eq!(stats.cache_hits, 0, "disabled cache must record no hits");
+        assert_eq!(stats.evals, stats.requested);
+    }
+}
+
+#[test]
+fn memo_only_skips_work_never_changes_results() {
+    // Same search with and without the memo, serial closure evaluator:
+    // identical fronts, strictly no more unique evaluations with the memo.
+    let cfg_on = NsgaConfig {
+        pop_size: 14,
+        generations: 10,
+        ..Default::default()
+    };
+    let cfg_off = NsgaConfig {
+        memoize: false,
+        ..cfg_on.clone()
+    };
+    let f = |g: &[bool]| {
+        let ones = g.iter().filter(|&&b| b).count() as f64;
+        vec![ones, g.len() as f64 - ones]
+    };
+    let (on, s_on) = nsga::run_batched(9, &cfg_on, &mut SerialFitness(f));
+    let (off, s_off) = nsga::run_batched(9, &cfg_off, &mut SerialFitness(f));
+    assert_fronts_identical(&on, &off, "memo on vs off");
+    assert!(s_on.evals <= s_off.evals);
+    assert_eq!(s_off.evals, s_off.requested);
+}
+
+#[test]
+fn batched_matches_serial_across_seeds() {
+    let f = |g: &[bool]| {
+        vec![
+            g.iter().filter(|&&b| b).count() as f64,
+            g.iter().take_while(|&&b| !b).count() as f64,
+        ]
+    };
+    for seed in [1u64, 77, 4242, 0xA5D0] {
+        let cfg = NsgaConfig {
+            pop_size: 14,
+            generations: 12,
+            seed,
+            ..Default::default()
+        };
+        let serial = nsga::run(10, &cfg, f);
+        let (batched, _) = nsga::run_batched(10, &cfg, &mut SerialFitness(f));
+        assert_fronts_identical(&serial, &batched, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn parallel_search_is_seed_deterministic() {
+    // Two runs at the same seed and thread count agree exactly — and so
+    // do runs at *different* thread counts (thread count only changes
+    // who computes each objective, never what is computed).
+    let m = rand_model(35, 10, 5, 3);
+    let split = rand_split(3, &m, 48);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    let cfg = NsgaConfig {
+        pop_size: 10,
+        generations: 6,
+        ..Default::default()
+    };
+    let (a, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, 4);
+    let (b, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, 4);
+    assert_fronts_identical(&a, &b, "same seed, same threads");
+    let (c, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, 2);
+    assert_fronts_identical(&a, &c, "same seed, different threads");
+}
+
+// ---------------------------------------------------------------------------
+// NSGA-II structural invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank_correctness_on_hand_built_fronts() {
+    // Three nested fronts with known membership.
+    let mut pop = vec![
+        mk(vec![4.0, 1.0]), // front 0 (extreme)
+        mk(vec![1.0, 4.0]), // front 0 (extreme)
+        mk(vec![3.0, 3.0]), // front 0 (knee)
+        mk(vec![2.0, 2.0]), // front 1 (dominated by the knee only)
+        mk(vec![3.0, 0.5]), // front 1 (dominated by [4,1] and [3,3])
+        mk(vec![1.0, 1.0]), // front 2
+        mk(vec![0.0, 0.0]), // front 3
+    ];
+    let fronts = non_dominated_sort(&mut pop);
+    assert_eq!(fronts.len(), 4);
+    assert_eq!(fronts[0], vec![0, 1, 2]);
+    assert_eq!(fronts[1], vec![3, 4]);
+    assert_eq!(fronts[2], vec![5]);
+    assert_eq!(fronts[3], vec![6]);
+    for (rank, front) in fronts.iter().enumerate() {
+        for &i in front {
+            assert_eq!(pop[i].rank, rank);
+        }
+    }
+}
+
+#[test]
+fn rank_invariants_on_random_populations() {
+    check("non-dominated sort rank invariants", 150, |g: &mut Gen| {
+        let n = g.usize_in(1..=24);
+        let m = g.usize_in(1..=3);
+        let mut pop: Vec<Individual> = (0..n)
+            .map(|_| mk((0..m).map(|_| g.i32_in(0..=4) as f64).collect()))
+            .collect();
+        let fronts = non_dominated_sort(&mut pop);
+        // Every individual lands in exactly one front.
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        if total != n {
+            return false;
+        }
+        // No domination within a front; ranks match front index.
+        for (rank, front) in fronts.iter().enumerate() {
+            for &i in front {
+                if pop[i].rank != rank {
+                    return false;
+                }
+                for &j in front {
+                    if i != j && dominates(&pop[i].objectives, &pop[j].objectives) {
+                        return false;
+                    }
+                }
+            }
+        }
+        // Every member of front k > 0 is dominated by someone in front k-1.
+        for k in 1..fronts.len() {
+            for &i in &fronts[k] {
+                let covered = fronts[k - 1]
+                    .iter()
+                    .any(|&j| dominates(&pop[j].objectives, &pop[i].objectives));
+                if !covered {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn crowding_boundary_handling() {
+    // Fronts of size 1 and 2: every member is a boundary point.
+    let mut pop = vec![mk(vec![1.0, 2.0])];
+    crowding_distance(&mut pop, &[0]);
+    assert!(pop[0].crowding.is_infinite());
+
+    let mut pop = vec![mk(vec![1.0, 2.0]), mk(vec![2.0, 1.0])];
+    crowding_distance(&mut pop, &[0, 1]);
+    assert!(pop[0].crowding.is_infinite() && pop[1].crowding.is_infinite());
+
+    // Degenerate front (all objectives identical): the guarded span must
+    // keep interior distances finite and NaN-free.
+    let mut pop: Vec<Individual> = (0..5).map(|_| mk(vec![3.0, 3.0])).collect();
+    let front: Vec<usize> = (0..5).collect();
+    crowding_distance(&mut pop, &front);
+    let interior = pop.iter().filter(|i| i.crowding.is_finite()).count();
+    assert_eq!(interior, 3, "exactly the non-extreme members stay finite");
+    assert!(pop.iter().all(|i| !i.crowding.is_nan()));
+
+    // Interior points of a spread front get positive, finite crowding;
+    // extremes are infinite regardless of objective count.
+    let mut pop = vec![
+        mk(vec![0.0, 6.0]),
+        mk(vec![1.0, 4.0]),
+        mk(vec![4.0, 1.0]),
+        mk(vec![6.0, 0.0]),
+    ];
+    let front: Vec<usize> = (0..4).collect();
+    crowding_distance(&mut pop, &front);
+    assert!(pop[0].crowding.is_infinite() && pop[3].crowding.is_infinite());
+    assert!(pop[1].crowding.is_finite() && pop[1].crowding > 0.0);
+    assert!(pop[2].crowding.is_finite() && pop[2].crowding > 0.0);
+}
+
+#[test]
+fn run_is_seed_deterministic_and_seed_sensitive() {
+    let f = |g: &[bool]| vec![g.iter().filter(|&&b| b).count() as f64];
+    let cfg = NsgaConfig {
+        pop_size: 12,
+        generations: 8,
+        ..Default::default()
+    };
+    let a = nsga::run(8, &cfg, f);
+    let b = nsga::run(8, &cfg, f);
+    assert_fronts_identical(&a, &b, "same seed, nsga::run");
+    // A different seed must still yield a valid mutually non-dominated
+    // front (genomes may or may not coincide — only validity is asserted).
+    let other = NsgaConfig {
+        seed: 0xBEEF,
+        ..cfg.clone()
+    };
+    let c = nsga::run(8, &other, f);
+    for x in &c {
+        for y in &c {
+            assert!(!dominates(&x.objectives, &y.objectives) || x.genome == y.genome);
+        }
+    }
+}
