@@ -2,7 +2,8 @@
 //! (EXPERIMENTS.md §Perf records before/after for each optimization).
 //!
 //! Covered paths:
-//!   L3a  gate-level simulator (64-lane packed, levelized)
+//!   L3a  gate-level simulator (64-lane packed; interpreted vs compiled
+//!        micro-op plan, incl. the one-off plan-compile cost)
 //!   L3b  PJRT batched inference (RFP/NSGA fitness engine)
 //!   L3c  PJRT single-sample latency (serve mode)
 //!   L3d  native functional model (fallback evaluator)
@@ -11,34 +12,70 @@
 
 mod harness;
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use printed_mlp::circuits::{combinational, seq_multicycle};
 use printed_mlp::model::ApproxTables;
 use printed_mlp::rfp::{self, Strategy};
 use printed_mlp::runtime::{NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT};
-use printed_mlp::sim::testbench;
+use printed_mlp::sim::{testbench, SimPlan};
 
 fn main() {
     let Some(store) = harness::require_artifacts() else { return };
     harness::section("Perf — hot paths");
 
-    // L3a: simulator throughput on the largest circuit.  Pinned to one
-    // thread so the per-thread hot-path metric stays comparable with the
-    // EXPERIMENTS.md §Perf records taken before sharding landed; the
-    // multi-thread scaling measurement lives in `sim_throughput`.
+    // L3a: simulator throughput on the largest circuit, interpreted vs
+    // micro-op-compiled plan.  Pinned to one thread so the per-thread
+    // hot-path metric stays comparable with the DESIGN.md §Perf records
+    // taken before sharding landed; the multi-thread scaling measurement
+    // lives in `sim_throughput`.
     let m = store.model("har").unwrap();
     let ds = store.dataset("har").unwrap();
     let active: Vec<usize> = (0..m.features).collect();
     let circ = seq_multicycle::generate(&m, &active);
     let split = ds.test.head(128);
-    let r = harness::bench("L3a sim multicycle har, 128 samples × 582 cyc, 1thr", 5, || {
-        let preds =
-            testbench::run_sequential_threads(&circ, &split.xs, split.len(), m.features, 1);
-        std::hint::black_box(preds.len());
-    });
-    let gate_evals = circ.netlist.cells.len() as f64 * 582.0 * 2.0; // 2 chunks of 64 lanes
+    let interp = Arc::new(SimPlan::new(&circ.netlist));
+    let t0 = Instant::now();
+    let compiled = Arc::new(SimPlan::compiled(&circ.netlist));
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cp = compiled.compiled_plan().unwrap();
     println!(
-        "         -> {:.1} M lane-gate-evals/s",
-        gate_evals * (128.0 / 64.0) / r.mean_ms * 1e-3
+        "L3a plan compile: {compile_ms:.2} ms -> {} micro-ops of {} comb cells, {} dense nets",
+        cp.n_ops(),
+        circ.netlist.cells.len() - interp.n_dffs(),
+        cp.n_dense_nets()
+    );
+    let gate_evals = circ.netlist.cells.len() as f64 * 582.0 * 2.0; // 2 chunks of 64 lanes
+    let mut pair_ms = [0.0f64; 2];
+    for (pi, &(label, plan)) in [("interp", &interp), ("compiled", &compiled)]
+        .iter()
+        .enumerate()
+    {
+        let r = harness::bench(
+            &format!("L3a sim multicycle har, 128smp × 582cyc, 1thr, {label}"),
+            5,
+            || {
+                let preds = testbench::run_sequential_plan(
+                    &circ,
+                    plan,
+                    &split.xs,
+                    split.len(),
+                    m.features,
+                    1,
+                );
+                std::hint::black_box(preds.len());
+            },
+        );
+        pair_ms[pi] = r.mean_ms;
+        println!(
+            "         -> {:.1} M lane-gate-evals/s",
+            gate_evals * (128.0 / 64.0) / r.mean_ms * 1e-3
+        );
+    }
+    println!(
+        "         == compiled is {:.2}x interpreted (single thread)",
+        pair_ms[0] / pair_ms[1]
     );
 
     let fm = vec![1u8; m.features];

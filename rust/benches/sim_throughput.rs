@@ -1,19 +1,26 @@
-//! Sharded gate-level simulation throughput: 1 thread vs N threads on a
-//! seq_multicycle circuit (gate-evals/sec and speedup), plus the serial
-//! overhead of plan reuse.
+//! Sharded gate-level simulation throughput: compiled (micro-op stream)
+//! vs interpreted (levelized `Vec<Cell>` walk) plans at 1..N threads on a
+//! seq_multicycle circuit — gate-evals/sec, thread-scaling speedup, the
+//! compiled-vs-interpreted speedup at every thread count, and the one-off
+//! plan-compile cost.
 //!
 //! Artifact-free — the circuit comes from a random `QuantModel` — so this
 //! bench always runs, unlike the `make artifacts`-gated harnesses.  The
-//! acceptance bar for the sharding subsystem is >= 2x throughput at 4+
-//! threads vs 1 thread on multi-core hosts.
+//! acceptance bars: >= 2x throughput at 4+ threads vs 1 thread on
+//! multi-core hosts (sharding), and > 1.0x single-thread compiled vs
+//! interpreted (plan compilation); both paths are bit-identical
+//! (tests/sim_compiled.rs, tests/sim_sharding.rs).
 
 mod harness;
 #[path = "../tests/common/mod.rs"]
 mod common;
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use common::rand_model;
 use printed_mlp::circuits::seq_multicycle;
-use printed_mlp::sim::{batch, testbench};
+use printed_mlp::sim::{batch, testbench, SimPlan};
 use printed_mlp::util::pool;
 use printed_mlp::util::prng::Rng;
 
@@ -28,15 +35,36 @@ fn main() {
     let mut rng = Rng::new(3);
     let xs: Vec<u8> = (0..n * m.features).map(|_| rng.below(16) as u8).collect();
 
+    // Plans: the interpreted oracle and the compiled micro-op stream,
+    // with the one-off compile cost measured.
+    let t0 = Instant::now();
+    let interp = Arc::new(SimPlan::new(&circ.netlist));
+    let levelize_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let compiled = Arc::new(SimPlan::compiled(&circ.netlist));
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cp = compiled.compiled_plan().expect("compiled plan");
+
     let cycles = (circ.cycles + 1) as f64; // + reset cycle
     let blocks = batch::n_blocks(n) as f64;
-    // Every block evaluates every cell once per cycle across 64 lanes.
+    // Every block evaluates every cell once per cycle across 64 lanes
+    // (interpreted-path normalization, so both paths stay comparable with
+    // the pre-compilation records).
     let lane_gate_evals = circ.netlist.cells.len() as f64 * cycles * blocks * 64.0;
     println!(
         "circuit: {} cells, {} cycles/inference, {n} samples ({} blocks)",
         circ.netlist.cells.len(),
         circ.cycles + 1,
         batch::n_blocks(n)
+    );
+    println!(
+        "plan: levelize {levelize_ms:.2} ms | compile {compile_ms:.2} ms -> \
+         {} micro-ops (of {} comb cells), {} regs, {} dense nets (of {})",
+        cp.n_ops(),
+        circ.netlist.cells.len() - interp.n_dffs(),
+        cp.n_state(),
+        cp.n_dense_nets(),
+        circ.netlist.n_nets()
     );
 
     let avail = pool::default_threads();
@@ -45,27 +73,42 @@ fn main() {
         thread_counts.push(avail);
     }
 
-    let mut base_ms = 0.0f64;
+    let mut base_ms = [0.0f64; 2]; // [interpreted, compiled] 1-thread means
     for &threads in &thread_counts {
-        let r = harness::bench(
-            &format!("seq sim {n} samples, {threads:>2} thread(s)"),
-            3,
-            || {
-                let preds = testbench::run_sequential_threads(&circ, &xs, n, m.features, threads);
-                std::hint::black_box(preds.len());
-            },
-        );
-        if threads == 1 {
-            base_ms = r.mean_ms;
+        let mut pair_ms = [0.0f64; 2];
+        for (pi, &(label, plan)) in [("interp", &interp), ("compiled", &compiled)]
+            .iter()
+            .enumerate()
+        {
+            let r = harness::bench(
+                &format!("seq sim {n} samples, {threads:>2} thr, {label}"),
+                3,
+                || {
+                    let preds =
+                        testbench::run_sequential_plan(&circ, plan, &xs, n, m.features, threads);
+                    std::hint::black_box(preds.len());
+                },
+            );
+            if threads == 1 {
+                base_ms[pi] = r.mean_ms;
+            }
+            pair_ms[pi] = r.mean_ms;
+            let speedup = if r.mean_ms > 0.0 { base_ms[pi] / r.mean_ms } else { 0.0 };
+            println!(
+                "         -> {:8.1} M lane-gate-evals/s | speedup {speedup:4.2}x vs 1 thread",
+                lane_gate_evals / r.mean_ms * 1e-3,
+            );
         }
-        let speedup = if r.mean_ms > 0.0 { base_ms / r.mean_ms } else { 0.0 };
-        println!(
-            "         -> {:8.1} M lane-gate-evals/s | speedup {speedup:4.2}x vs 1 thread",
-            lane_gate_evals / r.mean_ms * 1e-3,
-        );
+        if pair_ms[1] > 0.0 {
+            println!(
+                "         == compiled is {:4.2}x interpreted at {threads} thread(s)",
+                pair_ms[0] / pair_ms[1]
+            );
+        }
     }
     println!(
         "note: PRINTED_MLP_THREADS caps the default worker count ({avail} here); \
-         the sharded and 1-thread runs are bit-identical (tests/sim_sharding.rs)."
+         sharded, serial, compiled and interpreted runs are all bit-identical \
+         (tests/sim_sharding.rs, tests/sim_compiled.rs)."
     );
 }

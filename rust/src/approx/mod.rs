@@ -254,7 +254,7 @@ mod tests {
         let ys: Vec<u16> = (0..n).map(|_| r.below(3) as u16).collect();
         let fm = vec![1u8; 12];
         let tables = build_tables(&m, &xs, n, &fm);
-        let baseline = m.accuracy(&xs, &ys, &fm, &vec![0u8; 4], &tables);
+        let baseline = m.accuracy(&xs, &ys, &fm, &[0u8; 4], &tables);
         let cfg = NsgaConfig {
             pop_size: 12,
             generations: 8,

@@ -43,7 +43,7 @@ mod tests {
         let m = rand_model(42, 40, 4, 3);
         let active: Vec<usize> = (0..40).collect();
         let xs: Vec<u8> = (0..64 * 40).map(|i| (i % 16) as u8).collect();
-        let tables = importance::approx_tables(&m, &xs, 64, &vec![1u8; 40]);
+        let tables = importance::approx_tables(&m, &xs, 64, &[1u8; 40]);
 
         let exact = super::super::seq_multicycle::generate(&m, &active);
         let hybrid = super::generate(&m, &active, &[true, true, true, false], &tables);

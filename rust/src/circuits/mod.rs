@@ -54,11 +54,13 @@ impl SeqCircuit {
         }
     }
 
-    /// The circuit's levelized [`SimPlan`]: topo order + DFF extraction run
-    /// once on first use, then every simulator shard shares the `Arc`.
+    /// The circuit's levelized [`SimPlan`]: topo order + DFF extraction
+    /// (plus micro-op compilation unless [`crate::sim::compile_default`]
+    /// is off) run once on first use, then every simulator shard shares
+    /// the `Arc`.
     pub fn sim_plan(&self) -> Arc<SimPlan> {
         self.sim_plan
-            .get_or_init(|| Arc::new(SimPlan::new(&self.netlist)))
+            .get_or_init(|| Arc::new(SimPlan::with_default_mode(&self.netlist)))
             .clone()
     }
 }
@@ -86,7 +88,7 @@ impl CombCircuit {
     /// The circuit's levelized [`SimPlan`] (see [`SeqCircuit::sim_plan`]).
     pub fn sim_plan(&self) -> Arc<SimPlan> {
         self.sim_plan
-            .get_or_init(|| Arc::new(SimPlan::new(&self.netlist)))
+            .get_or_init(|| Arc::new(SimPlan::with_default_mode(&self.netlist)))
             .clone()
     }
 }

@@ -7,8 +7,8 @@
 use crate::netlist::{NetId, Netlist, Word, CONST0, CONST1};
 
 /// Zero-extend (unsigned) to `width`.
-pub fn zext(w: &Word, width: usize) -> Word {
-    let mut out = w.clone();
+pub fn zext(w: &[NetId], width: usize) -> Word {
+    let mut out = w.to_vec();
     while out.len() < width {
         out.push(CONST0);
     }
@@ -17,8 +17,8 @@ pub fn zext(w: &Word, width: usize) -> Word {
 }
 
 /// Sign-extend (two's complement) to `width`.
-pub fn sext(w: &Word, width: usize) -> Word {
-    let mut out = w.clone();
+pub fn sext(w: &[NetId], width: usize) -> Word {
+    let mut out = w.to_vec();
     let msb = *out.last().unwrap_or(&CONST0);
     while out.len() < width {
         out.push(msb);
@@ -39,7 +39,7 @@ pub fn full_adder(n: &mut Netlist, a: NetId, b: NetId, c: NetId) -> (NetId, NetI
 
 /// Ripple-carry add with carry-in; output has the width of the inputs
 /// (caller sizes words to avoid overflow).
-pub fn add_cin(n: &mut Netlist, a: &Word, b: &Word, cin: NetId) -> Word {
+pub fn add_cin(n: &mut Netlist, a: &[NetId], b: &[NetId], cin: NetId) -> Word {
     assert_eq!(a.len(), b.len());
     let mut carry = cin;
     let mut out = Vec::with_capacity(a.len());
@@ -51,26 +51,26 @@ pub fn add_cin(n: &mut Netlist, a: &Word, b: &Word, cin: NetId) -> Word {
     out
 }
 
-pub fn add(n: &mut Netlist, a: &Word, b: &Word) -> Word {
+pub fn add(n: &mut Netlist, a: &[NetId], b: &[NetId]) -> Word {
     add_cin(n, a, b, CONST0)
 }
 
 /// a - b (two's complement, same width).
-pub fn sub(n: &mut Netlist, a: &Word, b: &Word) -> Word {
+pub fn sub(n: &mut Netlist, a: &[NetId], b: &[NetId]) -> Word {
     let nb: Word = b.iter().map(|&x| n.inv(x)).collect();
     add_cin(n, a, &nb, CONST1)
 }
 
 /// a + (sub ? -b : b): conditional subtract (the neuron's ±product path,
 /// Fig. 2b: "multiplexer with and without inverters").
-pub fn addsub(n: &mut Netlist, a: &Word, b: &Word, sub_sel: NetId) -> Word {
+pub fn addsub(n: &mut Netlist, a: &[NetId], b: &[NetId], sub_sel: NetId) -> Word {
     assert_eq!(a.len(), b.len());
     let bx: Word = b.iter().map(|&x| n.xor2(x, sub_sel)).collect();
     add_cin(n, a, &bx, sub_sel)
 }
 
 /// Word-wise 2:1 mux.
-pub fn mux_word(n: &mut Netlist, sel: NetId, a: &Word, b: &Word) -> Word {
+pub fn mux_word(n: &mut Netlist, sel: NetId, a: &[NetId], b: &[NetId]) -> Word {
     assert_eq!(a.len(), b.len());
     a.iter()
         .zip(b)
@@ -82,7 +82,7 @@ pub fn mux_word(n: &mut Netlist, sel: NetId, a: &Word, b: &Word) -> Word {
 /// list repeat the last entry (don't-care).  Constant leaves collapse in
 /// the builder, which is exactly how hardwired-weight muxes get cheap
 /// (§3.1.4).
-pub fn mux_tree(n: &mut Netlist, sel: &Word, items: &[Word]) -> Word {
+pub fn mux_tree(n: &mut Netlist, sel: &[NetId], items: &[Word]) -> Word {
     assert!(!items.is_empty());
     let width = items[0].len();
     debug_assert!(items.iter().all(|w| w.len() == width));
@@ -106,7 +106,7 @@ pub fn mux_tree(n: &mut Netlist, sel: &Word, items: &[Word]) -> Word {
 }
 
 /// Left barrel shifter: `x << sh`, output `out_width` bits (unsigned x).
-pub fn barrel_shift_left(n: &mut Netlist, x: &Word, sh: &Word, out_width: usize) -> Word {
+pub fn barrel_shift_left(n: &mut Netlist, x: &[NetId], sh: &[NetId], out_width: usize) -> Word {
     let mut cur = zext(x, out_width);
     for (k, &s) in sh.iter().enumerate() {
         let amount = 1usize << k;
@@ -126,7 +126,7 @@ pub fn barrel_shift_left(n: &mut Netlist, x: &Word, sh: &Word, out_width: usize)
 }
 
 /// Signed greater-than: a > b (two's complement, equal widths).
-pub fn gt_signed(n: &mut Netlist, a: &Word, b: &Word) -> NetId {
+pub fn gt_signed(n: &mut Netlist, a: &[NetId], b: &[NetId]) -> NetId {
     // a > b  <=>  (b - a) is negative XOR overflow; compute b - a and take
     // the "true sign" = msb ^ overflow. Simpler: extend one bit then sub.
     let w = a.len() + 1;
@@ -137,7 +137,7 @@ pub fn gt_signed(n: &mut Netlist, a: &Word, b: &Word) -> NetId {
 }
 
 /// Equality against a constant.
-pub fn eq_const(n: &mut Netlist, w: &Word, value: u64) -> NetId {
+pub fn eq_const(n: &mut Netlist, w: &[NetId], value: u64) -> NetId {
     let mut acc = CONST1;
     for (i, &bit) in w.iter().enumerate() {
         let want1 = (value >> i) & 1 == 1;
@@ -148,7 +148,7 @@ pub fn eq_const(n: &mut Netlist, w: &Word, value: u64) -> NetId {
 }
 
 /// Unsigned `w < value` (constant bound) — used for phase decoding.
-pub fn lt_const(n: &mut Netlist, w: &Word, value: u64) -> NetId {
+pub fn lt_const(n: &mut Netlist, w: &[NetId], value: u64) -> NetId {
     // Classic magnitude comparator against a constant, MSB down.
     let mut lt = CONST0;
     let mut eq = CONST1;
@@ -168,7 +168,7 @@ pub fn lt_const(n: &mut Netlist, w: &Word, value: u64) -> NetId {
 }
 
 /// `lo <= w < hi` phase decode.
-pub fn in_range(n: &mut Netlist, w: &Word, lo: u64, hi: u64) -> NetId {
+pub fn in_range(n: &mut Netlist, w: &[NetId], lo: u64, hi: u64) -> NetId {
     let below_hi = lt_const(n, w, hi);
     if lo == 0 {
         below_hi
@@ -199,7 +199,7 @@ pub fn reg_word(
     (q, idx)
 }
 
-pub fn connect_reg(n: &mut Netlist, cells: &[usize], d: &Word) {
+pub fn connect_reg(n: &mut Netlist, cells: &[usize], d: &[NetId]) {
     assert_eq!(cells.len(), d.len());
     for (&c, &bit) in cells.iter().zip(d) {
         n.set_dff_d(c, bit);
@@ -217,7 +217,7 @@ pub fn counter(n: &mut Netlist, width: usize, en: NetId, rst: NetId) -> Word {
 
 /// qReLU (§3.2.1): `clamp(max(acc,0) >> trunc, 0, 15)` over a signed
 /// accumulator word; 4-bit output.
-pub fn qrelu_unit(n: &mut Netlist, acc: &Word, trunc: usize) -> Word {
+pub fn qrelu_unit(n: &mut Netlist, acc: &[NetId], trunc: usize) -> Word {
     let w = acc.len();
     let sign = acc[w - 1];
     // Saturate when any bit above the extracted window is set (positive).

@@ -160,8 +160,8 @@ fn exact_neuron(
     model: &QuantModel,
     active: &[usize],
     nh: usize,
-    state: &crate::netlist::Word,
-    x: &crate::netlist::Word,
+    state: &[crate::netlist::NetId],
+    x: &[crate::netlist::NetId],
     hidden_phase: crate::netlist::NetId,
     rst: crate::netlist::NetId,
     accw: usize,
@@ -250,7 +250,7 @@ fn approx_neuron(
     active: &[usize],
     tables: &ApproxTables,
     nh: usize,
-    state: &crate::netlist::Word,
+    state: &[crate::netlist::NetId],
     hidden_phase: crate::netlist::NetId,
     rst: crate::netlist::NetId,
     accw: usize,
@@ -279,7 +279,7 @@ fn approx_neuron(
         let bit_in = x[tables.pos[t] as usize];
         // 1-bit register captures the probed bit when the input arrives.
         let (bit_q, cell) = reg_word(n, 1, en, rst, 0);
-        connect_reg(n, &cell, &vec![bit_in]);
+        connect_reg(n, &cell, &[bit_in]);
         // Rewire to the leading-1 column and add/sub into the constant acc.
         let l1 = tables.l1[t] as usize;
         let mut term = vec![CONST0; accw];

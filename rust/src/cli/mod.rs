@@ -5,10 +5,11 @@
 //! printed-mlp pipeline  [--datasets a,b] [--threads N] [--backend B]
 //!                       [--search-threads N] [--no-nsga-cache]
 //!                       [--native] [--no-cache] [--fit-subset N]
-//!                       [--config FILE]
+//!                       [--no-compile-sim] [--config FILE]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
 //! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
+//!                       [--no-compile-sim]
 //! printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--backend B]
 //! printed-mlp info
 //! ```
@@ -74,11 +75,11 @@ USAGE:
                         [--backend auto|native|pjrt|gatesim]
                         [--search-threads N] [--no-nsga-cache]
                         [--no-cache] [--fit-subset N] [--pop N] [--gens N]
-                        [--config FILE] [--fast]
+                        [--no-compile-sim] [--config FILE] [--fast]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
-                        [--threads N]
+                        [--threads N] [--no-compile-sim]
   printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--sensors N]
                         [--backend auto|native|pjrt|gatesim]
   printed-mlp info
@@ -89,6 +90,10 @@ On the native backend the NSGA-II approximation search fans each
 generation's fitness batch across --search-threads workers (0 = auto)
 with a genome memo cache (--no-nsga-cache disables it); results are
 bit-identical to the serial search at the same seed.
+Gate-level simulation compiles each netlist into a strength-reduced
+micro-op stream (sim.compile config key); --no-compile-sim (or
+PRINTED_MLP_NO_COMPILE_SIM=1) falls back to the interpreted reference
+simulator, which is bit-identical but slower.
 Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
 
 /// CLI entrypoint.
@@ -140,6 +145,9 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
     }
     if flags.has("no-cache") {
         conf.set("pipeline.cache", "false");
+    }
+    if flags.has("no-compile-sim") {
+        conf.set("sim.compile", "false");
     }
     if let Some(v) = flags.get("fit-subset") {
         conf.set("pipeline.fit_subset", v);
@@ -269,6 +277,9 @@ fn cmd_verilog(store: &ArtifactStore, flags: &Flags) -> Result<()> {
 fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     let name = flags.get("dataset").ok_or_else(|| anyhow!("--dataset required"))?;
     let arch = flags.get("arch").unwrap_or("ours");
+    if flags.has("no-compile-sim") {
+        crate::sim::set_compile_default(false);
+    }
     let samples: usize = flags.get("samples").unwrap_or("256").parse()?;
     let threads: usize = match flags.get("threads") {
         Some(v) => v.parse::<usize>()?.max(1),
@@ -417,6 +428,15 @@ mod tests {
         let cfg = pipeline_config(&Flags::parse(&[]).unwrap()).unwrap();
         assert_eq!(cfg.search_threads, 0);
         assert!(cfg.nsga.memoize);
+    }
+
+    #[test]
+    fn no_compile_sim_flag_disables_compiled_plans() {
+        let args: Vec<String> = ["--no-compile-sim"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert!(!pipeline_config(&f).unwrap().sim_compile);
+        // Default stays on.
+        assert!(pipeline_config(&Flags::parse(&[]).unwrap()).unwrap().sim_compile);
     }
 
     #[test]

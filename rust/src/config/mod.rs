@@ -17,6 +17,9 @@
 //! pop_size = 40
 //! generations = 30
 //! memoize = true          # genome→objectives cache (perf only)
+//!
+//! [sim]
+//! compile = true          # micro-op-compiled gate-level sim (perf only)
 //! ```
 
 use std::collections::BTreeMap;
@@ -177,6 +180,9 @@ impl Config {
             nsga.memoize = b;
         }
         cfg.nsga = nsga;
+        if let Some(b) = self.get_bool("sim.compile")? {
+            cfg.sim_compile = b;
+        }
         Ok(cfg)
     }
 }
@@ -221,6 +227,14 @@ mod tests {
         let d = Config::default().pipeline().unwrap();
         assert_eq!(d.search_threads, 0);
         assert!(d.nsga.memoize);
+    }
+
+    #[test]
+    fn sim_compile_key() {
+        let c = Config::parse("[sim]\ncompile = false\n").unwrap();
+        assert!(!c.pipeline().unwrap().sim_compile);
+        // Default: compiled plans on.
+        assert!(Config::default().pipeline().unwrap().sim_compile);
     }
 
     #[test]

@@ -50,6 +50,10 @@ pub struct PipelineConfig {
     pub fit_subset: usize,
     /// Validate ours/hybrid accuracy at gate level (slower, exact).
     pub gate_level_accuracy: bool,
+    /// Compile gate-level sim plans to the micro-op stream (§Perf).  Off
+    /// (`--no-compile-sim` / `sim.compile = false`) forces the
+    /// interpreted reference path everywhere the pipeline simulates.
+    pub sim_compile: bool,
     /// Reuse cached per-dataset outcomes from disk when present.
     pub cache: bool,
 }
@@ -66,6 +70,7 @@ impl Default for PipelineConfig {
             drops: vec![0.01, 0.02, 0.05],
             fit_subset: 512,
             gate_level_accuracy: true,
+            sim_compile: true,
             cache: true,
         }
     }
@@ -144,7 +149,7 @@ pub fn run_dataset(
     // otherwise every dataset would spawn cfg.threads CPU-bound threads
     // and oversubscribe to threads².
     let in_flight = cfg.threads.min(cfg.datasets.len()).max(1);
-    let sim_threads = (cfg.threads.max(1) + in_flight - 1) / in_flight;
+    let sim_threads = cfg.threads.max(1).div_ceil(in_flight);
 
     // Backend selection: `Auto` probes for a PJRT client and falls back
     // to native; the engine must outlive any PJRT evaluator built on it.
@@ -318,6 +323,9 @@ pub fn run_dataset(
 /// Fan the pipeline out over datasets (one worker thread each, each with
 /// its own PJRT engine), honoring the JSON stage cache.
 pub fn run_pipeline(store: &ArtifactStore, cfg: &PipelineConfig) -> Result<Vec<DatasetOutcome>> {
+    // Plans the circuit wrappers build lazily inside the workers follow
+    // the process-wide compile default; apply the config before fan-out.
+    crate::sim::set_compile_default(cfg.sim_compile);
     let results = scope_map(cfg.datasets.len(), cfg.threads, |i| {
         let name = &cfg.datasets[i];
         if cfg.cache {

@@ -27,8 +27,11 @@
 //! - [`tech`] — printed-EGFET cell library and synthesis-lite estimation.
 //! - [`sim`] — cycle-accurate netlist simulator (VCS substitute), 64
 //!   samples packed per word and sharded across worker threads over a
-//!   shared levelized [`sim::SimPlan`] (see [`sim::batch`]);
-//!   `PRINTED_MLP_THREADS` caps the worker count.
+//!   shared levelized [`sim::SimPlan`] (see [`sim::batch`]); plans
+//!   compile by default into a strength-reduced, densely renumbered
+//!   micro-op stream ([`sim::SimPlan::compiled`]; `--no-compile-sim`
+//!   falls back to the interpreted oracle).  `PRINTED_MLP_THREADS` caps
+//!   the worker count.
 //! - [`coordinator`] — pipeline orchestration and the streaming serve mode.
 //! - [`report`] — table/figure emitters for the paper's evaluation.
 //!

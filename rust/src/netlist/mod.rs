@@ -52,19 +52,38 @@ impl Cell {
         }
     }
 
-    /// Input nets (excluding clock, which is implicit).
-    pub fn inputs(&self) -> Vec<NetId> {
+    /// Input nets (excluding clock, which is implicit), as a fixed array
+    /// plus the live count — the non-allocating accessor the hot paths
+    /// (topo sort, levelization, DCE, synthesis-lite costing) iterate with.
+    #[inline]
+    pub fn input_array(&self) -> ([NetId; 3], usize) {
         match *self {
-            Cell::Inv { a, .. } | Cell::Buf { a, .. } => vec![a],
+            Cell::Inv { a, .. } | Cell::Buf { a, .. } => ([a, 0, 0], 1),
             Cell::Nand2 { a, b, .. }
             | Cell::Nor2 { a, b, .. }
             | Cell::And2 { a, b, .. }
             | Cell::Or2 { a, b, .. }
             | Cell::Xor2 { a, b, .. }
-            | Cell::Xnor2 { a, b, .. } => vec![a, b],
-            Cell::Mux2 { a, b, sel, .. } => vec![a, b, sel],
-            Cell::Dff { d, en, rst, .. } => vec![d, en, rst],
+            | Cell::Xnor2 { a, b, .. } => ([a, b, 0], 2),
+            Cell::Mux2 { a, b, sel, .. } => ([a, b, sel], 3),
+            Cell::Dff { d, en, rst, .. } => ([d, en, rst], 3),
         }
+    }
+
+    /// Visit every input net without allocating (see [`Cell::input_array`]).
+    #[inline]
+    pub fn for_each_input<F: FnMut(NetId)>(&self, mut f: F) {
+        let (ins, n) = self.input_array();
+        for &i in &ins[..n] {
+            f(i);
+        }
+    }
+
+    /// Input nets (excluding clock, which is implicit).  Allocates a `Vec`
+    /// per call — prefer [`Cell::for_each_input`] on hot paths.
+    pub fn inputs(&self) -> Vec<NetId> {
+        let (ins, n) = self.input_array();
+        ins[..n].to_vec()
     }
 
     pub fn is_seq(&self) -> bool {
@@ -317,8 +336,14 @@ impl Netlist {
     /// Topological order of combinational cell indices (Kahn).  DFF
     /// outputs and primary inputs are sources; DFFs are excluded.  Panics
     /// on combinational loops — generators must never create them.
+    ///
+    /// §Perf: the driver→consumer adjacency is a flat CSR (prefix-summed
+    /// offsets + one edge array) built in two counting passes with
+    /// [`Cell::for_each_input`], so ordering the largest (HAR-class)
+    /// netlists performs O(1) allocations instead of one `Vec` per cell.
     pub fn topo_order(&self) -> Vec<usize> {
         let n = self.n_nets();
+        let n_cells = self.cells.len();
         let mut driver = vec![u32::MAX; n];
         let mut n_comb = 0usize;
         for (i, c) in self.cells.iter().enumerate() {
@@ -327,28 +352,49 @@ impl Netlist {
                 n_comb += 1;
             }
         }
-        let mut indeg = vec![0u32; self.cells.len()];
-        let mut fanout: Vec<Vec<u32>> = vec![Vec::new(); self.cells.len()];
+        // Pass 1: per-driver out-degree.
+        let mut offsets = vec![0u32; n_cells + 1];
+        for c in self.cells.iter() {
+            if c.is_seq() {
+                continue;
+            }
+            c.for_each_input(|inp| {
+                let d = driver[inp as usize];
+                if d != u32::MAX {
+                    offsets[d as usize + 1] += 1;
+                }
+            });
+        }
+        // Prefix sum → CSR offsets.
+        for i in 0..n_cells {
+            offsets[i + 1] += offsets[i];
+        }
+        // Pass 2: fill the flat edge array (cursor restores the offsets).
+        let mut edges = vec![0u32; offsets[n_cells] as usize];
+        let mut cursor: Vec<u32> = offsets[..n_cells].to_vec();
+        let mut indeg = vec![0u32; n_cells];
         for (i, c) in self.cells.iter().enumerate() {
             if c.is_seq() {
                 continue;
             }
-            for inp in c.inputs() {
+            c.for_each_input(|inp| {
                 let d = driver[inp as usize];
                 if d != u32::MAX {
-                    fanout[d as usize].push(i as u32);
+                    edges[cursor[d as usize] as usize] = i as u32;
+                    cursor[d as usize] += 1;
                     indeg[i] += 1;
                 }
-            }
+            });
         }
-        let mut queue: std::collections::VecDeque<u32> = (0..self.cells.len())
+        let mut queue: std::collections::VecDeque<u32> = (0..n_cells)
             .filter(|&i| !self.cells[i].is_seq() && indeg[i] == 0)
             .map(|i| i as u32)
             .collect();
         let mut order = Vec::with_capacity(n_comb);
         while let Some(ci) = queue.pop_front() {
             order.push(ci as usize);
-            for &nxt in &fanout[ci as usize] {
+            let (lo, hi) = (offsets[ci as usize] as usize, offsets[ci as usize + 1] as usize);
+            for &nxt in &edges[lo..hi] {
                 indeg[nxt as usize] -= 1;
                 if indeg[nxt as usize] == 0 {
                     queue.push_back(nxt);
@@ -373,13 +419,9 @@ impl Netlist {
         let mut max = 0;
         for ci in order {
             let c = &self.cells[ci];
-            let lvl = c
-                .inputs()
-                .iter()
-                .map(|&i| level[i as usize])
-                .max()
-                .unwrap_or(0)
-                + 1;
+            let mut lvl = 0usize;
+            c.for_each_input(|i| lvl = lvl.max(level[i as usize]));
+            let lvl = lvl + 1;
             level[c.output() as usize] = lvl;
             max = max.max(lvl);
         }

@@ -1,17 +1,250 @@
-//! Netlist cleanup: dead-cell elimination (mark-and-sweep from primary
-//! outputs and register inputs).  Constant folding happens eagerly in the
-//! builder constructors; after bespoke hardwiring collapses most of the
-//! weight muxes to constants, DCE sweeps away the unreachable remainder —
-//! this is the "synthesis" step that makes hardwired designs small, and it
-//! mirrors what Design Compiler does to constant-driven logic.
+//! Netlist cleanup: constant folding + buffer/double-inverter collapsing
+//! ([`fold_collapse`]), structural sharing ([`cse`]), inverter fusion
+//! ([`fuse_inversions`]) and dead-cell elimination ([`dce`],
+//! mark-and-sweep from primary outputs).  Constant folding happens eagerly
+//! in the builder constructors; after bespoke hardwiring collapses most of
+//! the weight muxes to constants, these passes sweep away the remainder —
+//! the "synthesis" step that makes hardwired designs small, mirroring what
+//! Design Compiler does to constant-driven logic.
+//!
+//! The same passes double as the plan-time strength reduction of the
+//! compiled simulator ([`crate::sim::SimPlan::compiled`]): every cell they
+//! remove is a micro-op the simulator never executes, so [`fold_collapse`]
+//! also returns the net-replacement map the plan's external port map is
+//! built from.
 
-use super::{Cell, Netlist};
+use super::{Cell, NetId, Netlist, CONST0, CONST1};
 
 /// Statistics returned by [`dce`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DceStats {
     pub cells_before: usize,
     pub cells_after: usize,
+}
+
+/// Outcome of one [`fold_collapse`] cell visit (internal).
+enum Folded {
+    /// Output net is an alias of another (possibly constant) net.
+    Alias(NetId),
+    /// Cell survives, possibly strength-reduced, with rewired inputs.
+    Keep(Cell),
+}
+
+/// Reduce an inversion of `a` driving `y`: constants fold, a double
+/// inversion collapses to the original source, anything else keeps an
+/// INV cell.  `inv_src[t]` is the input of the surviving INV that drives
+/// net `t` (`u32::MAX` when `t` is not an INV output).
+fn mk_inv(a: NetId, y: NetId, inv_src: &[NetId]) -> Folded {
+    match a {
+        CONST0 => Folded::Alias(CONST1),
+        CONST1 => Folded::Alias(CONST0),
+        _ if inv_src[a as usize] != u32::MAX => Folded::Alias(inv_src[a as usize]),
+        _ => Folded::Keep(Cell::Inv { a, y }),
+    }
+}
+
+/// Constant folding + buffer and double-inverter chain collapsing, in one
+/// topological pass.
+///
+/// Rewrites every combinational cell with its inputs resolved through the
+/// running replacement map, then:
+/// - folds gates with constant inputs (`AND(x,1) → x`, `NOR(x,1) → 0`,
+///   `XOR(x,1) → INV(x)`, mux data/select constants, …) and same-input
+///   idempotence (`AND(x,x) → x`, `XOR(x,x) → 0`);
+/// - elides every `BUF` (pure aliasing) and collapses `INV(INV(x)) → x`;
+/// - strength-reduces to `INV` where a single inverter expresses the
+///   remainder (`NAND(x,1)`, `NOR(x,x)`, `MUX(s,1,0)`, …).
+///
+/// DFF inputs and output ports are rewired through the final map; DFFs
+/// themselves are never folded (their q nets are sequential sources).
+/// Returns the replacement map (`original net → surviving net`, identity
+/// where unchanged — constants are nets 0/1, so folds to constants are
+/// plain aliases) so callers building external-id translations (the
+/// compiled sim plan) can compose it.  Idempotent.
+pub fn fold_collapse(n: &mut Netlist) -> Vec<NetId> {
+    let nets = n.n_nets();
+    let mut repl: Vec<NetId> = (0..nets as u32).collect();
+    let mut inv_src: Vec<NetId> = vec![u32::MAX; nets];
+    let order = n.topo_order();
+    let mut removed = vec![false; n.cells.len()];
+    for ci in order {
+        let c = n.cells[ci];
+        let r = |x: NetId| repl[x as usize];
+        let out = match c {
+            Cell::Buf { a, y: _ } => Folded::Alias(r(a)),
+            Cell::Inv { a, y } => mk_inv(r(a), y, &inv_src),
+            Cell::And2 { a, b, y } => {
+                let (a, b) = (r(a), r(b));
+                match (a, b) {
+                    (CONST0, _) | (_, CONST0) => Folded::Alias(CONST0),
+                    (CONST1, x) | (x, CONST1) => Folded::Alias(x),
+                    _ if a == b => Folded::Alias(a),
+                    _ => Folded::Keep(Cell::And2 { a, b, y }),
+                }
+            }
+            Cell::Or2 { a, b, y } => {
+                let (a, b) = (r(a), r(b));
+                match (a, b) {
+                    (CONST1, _) | (_, CONST1) => Folded::Alias(CONST1),
+                    (CONST0, x) | (x, CONST0) => Folded::Alias(x),
+                    _ if a == b => Folded::Alias(a),
+                    _ => Folded::Keep(Cell::Or2 { a, b, y }),
+                }
+            }
+            Cell::Nand2 { a, b, y } => {
+                let (a, b) = (r(a), r(b));
+                match (a, b) {
+                    (CONST0, _) | (_, CONST0) => Folded::Alias(CONST1),
+                    (CONST1, x) | (x, CONST1) => mk_inv(x, y, &inv_src),
+                    _ if a == b => mk_inv(a, y, &inv_src),
+                    _ => Folded::Keep(Cell::Nand2 { a, b, y }),
+                }
+            }
+            Cell::Nor2 { a, b, y } => {
+                let (a, b) = (r(a), r(b));
+                match (a, b) {
+                    (CONST1, _) | (_, CONST1) => Folded::Alias(CONST0),
+                    (CONST0, x) | (x, CONST0) => mk_inv(x, y, &inv_src),
+                    _ if a == b => mk_inv(a, y, &inv_src),
+                    _ => Folded::Keep(Cell::Nor2 { a, b, y }),
+                }
+            }
+            Cell::Xor2 { a, b, y } => {
+                let (a, b) = (r(a), r(b));
+                match (a, b) {
+                    _ if a == b => Folded::Alias(CONST0),
+                    (CONST0, x) | (x, CONST0) => Folded::Alias(x),
+                    (CONST1, x) | (x, CONST1) => mk_inv(x, y, &inv_src),
+                    _ => Folded::Keep(Cell::Xor2 { a, b, y }),
+                }
+            }
+            Cell::Xnor2 { a, b, y } => {
+                let (a, b) = (r(a), r(b));
+                match (a, b) {
+                    _ if a == b => Folded::Alias(CONST1),
+                    (CONST1, x) | (x, CONST1) => Folded::Alias(x),
+                    (CONST0, x) | (x, CONST0) => mk_inv(x, y, &inv_src),
+                    _ => Folded::Keep(Cell::Xnor2 { a, b, y }),
+                }
+            }
+            // y = sel ? b : a
+            Cell::Mux2 { a, b, sel, y } => {
+                let (a, b, sel) = (r(a), r(b), r(sel));
+                match (sel, a, b) {
+                    (CONST0, a, _) => Folded::Alias(a),
+                    (CONST1, _, b) => Folded::Alias(b),
+                    (_, a, b) if a == b => Folded::Alias(a),
+                    (s, CONST0, CONST1) => Folded::Alias(s),
+                    (s, CONST1, CONST0) => mk_inv(s, y, &inv_src),
+                    // sel ? b : 0 == sel & b ; sel ? 1 : a == sel | a.
+                    // (The inverted-select cases need a fresh INV net, so
+                    // they are left as muxes with a constant data leg.)
+                    (s, CONST0, b) => Folded::Keep(Cell::And2 { a: s, b, y }),
+                    (s, a, CONST1) => Folded::Keep(Cell::Or2 { a: s, b: a, y }),
+                    (sel, a, b) => Folded::Keep(Cell::Mux2 { a, b, sel, y }),
+                }
+            }
+            Cell::Dff { .. } => unreachable!("DFF in comb topo order"),
+        };
+        match out {
+            Folded::Alias(t) => {
+                repl[c.output() as usize] = t;
+                removed[ci] = true;
+            }
+            Folded::Keep(c2) => {
+                if let Cell::Inv { a, y } = c2 {
+                    inv_src[y as usize] = a;
+                }
+                n.cells[ci] = c2;
+            }
+        }
+    }
+    // Rewire the sequential cells and output ports through the final map.
+    for c in n.cells.iter_mut() {
+        if let Cell::Dff { d, en, rst, .. } = c {
+            *d = repl[*d as usize];
+            *en = repl[*en as usize];
+            *rst = repl[*rst as usize];
+        }
+    }
+    for port in n.outputs.iter_mut() {
+        for b in port.bits.iter_mut() {
+            *b = repl[*b as usize];
+        }
+    }
+    let mut kept = Vec::with_capacity(n.cells.len());
+    for (i, c) in n.cells.iter().enumerate() {
+        if !removed[i] {
+            kept.push(*c);
+        }
+    }
+    n.cells = kept;
+    repl
+}
+
+/// Fuse a lone inverter into its single-fanout producer: `INV(AND(a,b))`
+/// becomes `NAND(a,b)` writing the inverter's output directly (and the
+/// complementary rewrites for OR/XOR/NAND/NOR/XNOR).  Printed-EGFET NAND
+/// and NOR are *cheaper* than AND/OR, so this is an area win as well as
+/// one fewer simulator micro-op per fused pair.
+///
+/// Only fires when the producer's output has exactly one reader (the
+/// inverter) and is not an output-port bit, so external observers never
+/// lose a net.  Returns the number of inverters fused away.
+pub fn fuse_inversions(n: &mut Netlist) -> usize {
+    let nets = n.n_nets();
+    let mut fanout = vec![0u32; nets];
+    for c in n.cells.iter() {
+        c.for_each_input(|i| fanout[i as usize] += 1);
+    }
+    for port in &n.outputs {
+        for &b in &port.bits {
+            fanout[b as usize] += 1;
+        }
+    }
+    let mut driver = vec![u32::MAX; nets];
+    for (i, c) in n.cells.iter().enumerate() {
+        if !c.is_seq() {
+            driver[c.output() as usize] = i as u32;
+        }
+    }
+    let mut removed = vec![false; n.cells.len()];
+    let mut fused = 0usize;
+    for ci in 0..n.cells.len() {
+        let Cell::Inv { a, y } = n.cells[ci] else {
+            continue;
+        };
+        let di = driver[a as usize];
+        if di == u32::MAX || fanout[a as usize] != 1 {
+            continue;
+        }
+        let complement = match n.cells[di as usize] {
+            Cell::And2 { a, b, .. } => Some(Cell::Nand2 { a, b, y }),
+            Cell::Or2 { a, b, .. } => Some(Cell::Nor2 { a, b, y }),
+            Cell::Xor2 { a, b, .. } => Some(Cell::Xnor2 { a, b, y }),
+            Cell::Nand2 { a, b, .. } => Some(Cell::And2 { a, b, y }),
+            Cell::Nor2 { a, b, .. } => Some(Cell::Or2 { a, b, y }),
+            Cell::Xnor2 { a, b, .. } => Some(Cell::Xor2 { a, b, y }),
+            // INV/BUF chains are fold_collapse's job; muxes and DFFs
+            // have no single-cell complement in the library.
+            _ => None,
+        };
+        if let Some(c2) = complement {
+            n.cells[di as usize] = c2;
+            removed[ci] = true;
+            fused += 1;
+        }
+    }
+    if fused > 0 {
+        let mut kept = Vec::with_capacity(n.cells.len() - fused);
+        for (i, c) in n.cells.iter().enumerate() {
+            if !removed[i] {
+                kept.push(*c);
+            }
+        }
+        n.cells = kept;
+    }
+    fused
 }
 
 /// Remove every cell whose output transitively drives no primary output
@@ -43,12 +276,12 @@ pub fn dce(n: &mut Netlist) -> DceStats {
             continue;
         }
         live[ci] = true;
-        for inp in n.cells[ci].inputs() {
+        n.cells[ci].for_each_input(|inp| {
             let d = driver[inp as usize];
             if d != u32::MAX && !live[d as usize] {
                 stack.push(d);
             }
-        }
+        });
     }
 
     let mut kept = Vec::with_capacity(n.cells.len());
@@ -157,8 +390,13 @@ fn rewire(mut c: Cell, repl: &[u32]) -> Cell {
     c
 }
 
-/// Standard cleanup pipeline used by all circuit generators.
+/// Standard cleanup pipeline used by all circuit generators: constant
+/// fold + buffer/double-inverter collapse, share structural duplicates,
+/// then sweep dead logic.  ([`fuse_inversions`] is applied separately at
+/// sim-plan compile time, where opcode count — not library area — is the
+/// objective.)
 pub fn optimize(n: &mut Netlist) -> DceStats {
+    fold_collapse(n);
     cse(n);
     dce(n)
 }
@@ -209,6 +447,108 @@ mod tests {
             .filter(|c| matches!(c, Cell::And2 { .. }))
             .count();
         assert_eq!(and_count, 1);
+    }
+
+    #[test]
+    fn fold_collapse_elides_buffers_and_double_inverters() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        // a -> BUF -> INV -> INV -> BUF -> y : collapses to y == a.
+        let b1 = n.fresh();
+        n.cells.push(Cell::Buf { a, y: b1 });
+        let i1 = n.fresh();
+        n.cells.push(Cell::Inv { a: b1, y: i1 });
+        let i2 = n.fresh();
+        n.cells.push(Cell::Inv { a: i1, y: i2 });
+        let b2 = n.fresh();
+        n.cells.push(Cell::Buf { a: i2, y: b2 });
+        n.add_output("y", vec![b2]);
+        let repl = fold_collapse(&mut n);
+        assert_eq!(n.outputs[0].bits[0], a, "output rewired to the source");
+        assert_eq!(repl[b2 as usize], a);
+        assert_eq!(repl[i2 as usize], a);
+        // The inner INV survives fold (it is merely unread now)…
+        assert_eq!(n.cells.len(), 1);
+        assert!(matches!(n.cells[0], Cell::Inv { .. }));
+        // …and DCE sweeps it, leaving pure wiring.
+        dce(&mut n);
+        assert!(n.cells.is_empty());
+    }
+
+    #[test]
+    fn fold_collapse_folds_constants_through_gates() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        // Pushed raw so the builder's eager folding can't intercept.
+        let y1 = n.fresh();
+        n.cells.push(Cell::And2 { a, b: CONST1, y: y1 }); // -> a
+        let y2 = n.fresh();
+        n.cells.push(Cell::Or2 { a: y1, b: CONST1, y: y2 }); // -> 1
+        let y3 = n.fresh();
+        n.cells.push(Cell::Xor2 { a: y2, b, y: y3 }); // XOR(1,b) -> INV(b)
+        let y4 = n.fresh();
+        n.cells.push(Cell::Nand2 { a: y1, b: y1, y: y4 }); // NAND(a,a) -> INV(a)
+        let y5 = n.fresh();
+        n.cells.push(Cell::Mux2 { a: CONST0, b, sel: y2, y: y5 }); // sel==1 -> b
+        n.add_output("y3", vec![y3]);
+        n.add_output("y4", vec![y4]);
+        n.add_output("y5", vec![y5]);
+        let repl = fold_collapse(&mut n);
+        assert_eq!(repl[y1 as usize], a);
+        assert_eq!(repl[y2 as usize], CONST1);
+        assert_eq!(repl[y5 as usize], b);
+        assert_eq!(n.cells.len(), 2, "only the two INVs remain");
+        assert!(matches!(n.cells[0], Cell::Inv { a: x, .. } if x == b));
+        assert!(matches!(n.cells[1], Cell::Inv { a: x, .. } if x == a));
+    }
+
+    #[test]
+    fn fuse_inversions_complements_single_fanout_producers() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let x = n.and2(a, b);
+        let y = n.inv(x);
+        n.add_output("y", vec![y]);
+        assert_eq!(fuse_inversions(&mut n), 1);
+        assert_eq!(n.cells.len(), 1);
+        assert!(matches!(n.cells[0], Cell::Nand2 { .. }));
+        assert_eq!(n.cells[0].output(), y, "fused gate drives the INV's net");
+    }
+
+    #[test]
+    fn fuse_inversions_respects_fanout_and_ports() {
+        // x has two readers -> no fusion; z is an output port -> no fusion.
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let x = n.and2(a, b);
+        let inv1 = n.inv(x);
+        let keep = n.or2(x, a);
+        let z = n.xor2(a, b);
+        let inv2 = n.inv(z);
+        n.add_output("inv1", vec![inv1]);
+        n.add_output("keep", vec![keep]);
+        n.add_output("z", vec![z]);
+        n.add_output("inv2", vec![inv2]);
+        assert_eq!(fuse_inversions(&mut n), 0);
+        assert_eq!(n.cells.len(), 5);
+    }
+
+    #[test]
+    fn fold_collapse_is_idempotent_and_rewires_dffs() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let buf = n.fresh();
+        n.cells.push(Cell::Buf { a, y: buf });
+        let q = n.dff(buf, CONST1, crate::netlist::CONST0, false);
+        n.add_output("q", vec![q]);
+        fold_collapse(&mut n);
+        assert!(matches!(n.cells[0], Cell::Dff { d, .. } if d == a));
+        let c1 = n.cells.clone();
+        fold_collapse(&mut n);
+        assert_eq!(n.cells, c1);
     }
 
     #[test]

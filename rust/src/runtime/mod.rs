@@ -202,10 +202,12 @@ struct GateSimKey {
 /// Exact w.r.t. the functional model by construction (the generators are
 /// bit-exact — `tests/backend_equivalence.rs`), and artifact-free: it
 /// needs only the [`QuantModel`], so it runs everywhere the native
-/// evaluator does.  The circuit (and its levelized [`crate::sim::SimPlan`])
-/// is cached per mask/table combination and regenerated on change, so
-/// this backend suits final validation and modest sweeps rather than the
-/// inner NSGA fitness loop where every call changes the mask.
+/// evaluator does.  The circuit (and its levelized [`crate::sim::SimPlan`],
+/// compiled to the strength-reduced micro-op stream unless
+/// [`crate::sim::compile_default`] is off — `--no-compile-sim`) is cached
+/// per mask/table combination and regenerated on change, so this backend
+/// suits final validation and modest sweeps rather than the inner NSGA
+/// fitness loop where every call changes the mask.
 pub struct GateSimEvaluator {
     model: QuantModel,
     threads: usize,

@@ -10,8 +10,10 @@
 //!
 //! Scheduling: blocks are claimed from an atomic cursor
 //! ([`scope_map_with`]), so uneven per-block cost balances automatically;
-//! the plan is built once and shared read-only, and each worker allocates
-//! its two `u64` state vectors once, not once per block.
+//! the plan — including a compiled plan's micro-op stream and port map
+//! ([`crate::sim::SimPlan::compiled`]), which is built once per netlist,
+//! never per worker — is shared read-only, and each worker allocates its
+//! two `u64` state vectors once, not once per block.
 
 use std::sync::Arc;
 
@@ -20,7 +22,7 @@ use crate::util::pool::scope_map_with;
 
 /// Number of 64-lane blocks needed for `n` samples.
 pub fn n_blocks(n: usize) -> usize {
-    (n + Sim::LANES - 1) / Sim::LANES
+    n.div_ceil(Sim::LANES)
 }
 
 /// Run `n` samples through `drive`, sharded across up to `threads`

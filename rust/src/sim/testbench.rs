@@ -7,12 +7,15 @@
 //!
 //! 64 samples are simulated per pass (one per lane), and passes are
 //! sharded across worker threads via [`batch::run_sharded`]: the circuit's
-//! levelized [`crate::sim::SimPlan`] is built once (cached on the circuit)
-//! and shared read-only by every worker.  `run_sequential` /
-//! `run_combinational` use [`pool::default_threads`]
-//! (`PRINTED_MLP_THREADS` overrides); the `*_threads` variants take an
-//! explicit count — `1` is the exact serial path the differential tests
-//! compare against.
+//! levelized [`crate::sim::SimPlan`] is built once (cached on the circuit,
+//! compiled to the micro-op stream unless
+//! [`crate::sim::compile_default`] is off) and shared read-only by every
+//! worker.  `run_sequential` / `run_combinational` use
+//! [`pool::default_threads`] (`PRINTED_MLP_THREADS` overrides); the
+//! `*_threads` variants take an explicit count — `1` is the exact serial
+//! path the differential tests compare against — and the `*_plan`
+//! variants take an explicit plan, which is how the benches drive the
+//! compiled and interpreted paths over the same netlist.
 
 use crate::circuits::{CombCircuit, SeqCircuit};
 use crate::netlist::{Netlist, Word};
@@ -50,13 +53,26 @@ pub fn run_sequential_threads(
     features: usize,
     threads: usize,
 ) -> Vec<u16> {
+    run_sequential_plan(circ, &circ.sim_plan(), xs, n, features, threads)
+}
+
+/// [`run_sequential_threads`] over an explicit plan instead of the
+/// circuit's cached one — how the benches drive the compiled and
+/// interpreted paths side by side over the same netlist.
+pub fn run_sequential_plan(
+    circ: &SeqCircuit,
+    plan: &std::sync::Arc<crate::sim::SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+) -> Vec<u16> {
     let net = &circ.netlist;
     let x = input_port(net, "x").clone();
     let rst = input_port(net, "rst")[0];
     let class_out = output_port(net, "class_out").clone();
-    let plan = circ.sim_plan();
 
-    batch::run_sharded(&plan, n, threads, |sim, base, lanes| {
+    batch::run_sharded(plan, n, threads, |sim, base, lanes| {
         let mut lane_vals = [0i64; Sim::LANES];
         // Reset pulse.
         sim.set(rst, !0u64);
@@ -97,13 +113,25 @@ pub fn run_combinational_threads(
     features: usize,
     threads: usize,
 ) -> Vec<u16> {
+    run_combinational_plan(circ, &circ.sim_plan(), xs, n, features, threads)
+}
+
+/// [`run_combinational_threads`] over an explicit plan (see
+/// [`run_sequential_plan`]).
+pub fn run_combinational_plan(
+    circ: &CombCircuit,
+    plan: &std::sync::Arc<crate::sim::SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+) -> Vec<u16> {
     let net = &circ.netlist;
     let x_all = input_port(net, "x_all").clone();
     let class_out = output_port(net, "class_out").clone();
     assert_eq!(x_all.len(), 4 * circ.active.len());
-    let plan = circ.sim_plan();
 
-    batch::run_sharded(&plan, n, threads, |sim, base, lanes| {
+    batch::run_sharded(plan, n, threads, |sim, base, lanes| {
         let mut lane_vals = [0i64; Sim::LANES];
         for (slot, &f) in circ.active.iter().enumerate() {
             for lane in 0..lanes {

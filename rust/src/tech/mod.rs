@@ -114,12 +114,9 @@ pub fn report(n: &Netlist) -> CircuitReport {
     for ci in order {
         let c = &n.cells[ci];
         let d = cell_spec(c.type_name()).delay_ms;
-        let t = c
-            .inputs()
-            .iter()
-            .map(|&i| arrive[i as usize])
-            .fold(0.0f64, f64::max)
-            + d;
+        let mut t = 0.0f64;
+        c.for_each_input(|i| t = t.max(arrive[i as usize]));
+        let t = t + d;
         arrive[c.output() as usize] = t;
         crit = crit.max(t);
     }
