@@ -1,21 +1,31 @@
-//! Multi-sensory streaming demo: wearable-style sensors stream frames at a
-//! configurable rate into the Rust coordinator, which dynamically batches
-//! them onto the AOT-compiled PJRT classifier and reports latency
-//! percentiles and throughput — the deployment story of the paper's
-//! intro, with Python nowhere on the request path.
+//! Multi-sensory streaming demo: wearable-style sensors stream frames at
+//! a configurable rate into the multi-tenant model server, which hosts
+//! one model per dataset behind per-model dynamic-batching queues and
+//! reports per-model latency percentiles, shed counts, and throughput —
+//! the deployment story of the paper's intro, with Python nowhere on the
+//! request path.
 //!
 //! ```bash
-//! cargo run --release --example sensor_stream [dataset] [rate_hz] [secs]
+//! cargo run --release --example sensor_stream [datasets] [rate_hz] [secs] [scenario]
+//! # e.g. against real artifacts:
+//! cargo run --release --example sensor_stream spectf,arrhythmia,gas 2000 3 fanin
+//! # or artifact-free with synthetic models:
+//! cargo run --release --example sensor_stream synthetic 5000 1 bursty
 //! ```
 
-use printed_mlp::coordinator::serve::{run, ServeConfig};
 use printed_mlp::data::ArtifactStore;
+use printed_mlp::server::{run, ServeConfig};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = ServeConfig::default();
     if let Some(d) = args.first() {
-        cfg.dataset = d.clone();
+        if d == "synthetic" {
+            cfg.synthetic = true;
+            cfg.datasets = vec!["syn0".into(), "syn1".into(), "syn2".into()];
+        } else {
+            cfg.datasets = d.split(',').map(|s| s.trim().to_string()).collect();
+        }
     }
     if let Some(r) = args.get(1).and_then(|s| s.parse().ok()) {
         cfg.rate_hz = r;
@@ -23,23 +33,42 @@ fn main() -> anyhow::Result<()> {
     if let Some(s) = args.get(2).and_then(|s| s.parse::<f64>().ok()) {
         cfg.duration = std::time::Duration::from_secs_f64(s);
     }
+    if let Some(sc) = args.get(3) {
+        cfg.scenario = sc.parse()?;
+    }
 
     let store = ArtifactStore::discover();
     println!(
-        "streaming {} at {:.0} frames/s from {} sensors for {:.1}s (batch wait {:?})",
-        cfg.dataset,
+        "streaming {} [{}] at {:.0} frames/s from {} sensors for {:.1}s (batch wait {:?})",
+        cfg.datasets.join("+"),
+        cfg.scenario.label(),
         cfg.rate_hz,
         cfg.sensors,
         cfg.duration.as_secs_f64(),
         cfg.max_wait
     );
     let rep = run(&store, &cfg)?;
+    for m in &rep.models {
+        println!(
+            "  {:<12} {:>6} req | shed {:>4} | {:>7.0} req/s | mean batch {:>5.1} | \
+             p50 {:>6.2} ms | p99 {:>6.2} ms | acc {:.3}",
+            m.name,
+            m.requests,
+            m.shed,
+            m.throughput_rps,
+            m.mean_batch,
+            m.p50_ms,
+            m.p99_ms,
+            m.accuracy
+        );
+    }
     println!(
-        "served {} requests in {} batches (mean batch {:.1})",
-        rep.requests, rep.batches, rep.mean_batch
+        "total: {} requests ({} shed) at {:.0} req/s on {} workers [{}]",
+        rep.total_requests(),
+        rep.total_shed(),
+        rep.total_rps(),
+        rep.workers,
+        rep.backend
     );
-    println!("throughput: {:.0} req/s", rep.throughput_rps);
-    println!("latency   : p50 {:.2} ms, p99 {:.2} ms", rep.p50_ms, rep.p99_ms);
-    println!("accuracy  : {:.3}", rep.accuracy);
     Ok(())
 }

@@ -1,0 +1,70 @@
+//! serve_scaling — multi-tenant server throughput and tail latency vs
+//! drain-worker count.
+//!
+//! Artifact-free: hosts three deterministic synthetic models
+//! (`model::synth`) behind the real registry/batcher/loadgen stack on
+//! the **gatesim** backend — per-batch inference is real work (netlist
+//! simulation), so one worker saturates and the sweep measures drain
+//! scaling rather than the load generator.  Reports req/s, worst-model
+//! p50/p99, and shed counts at 1..N workers.  Expected shape: shed
+//! falls and p99 drops as workers are added until the offered rate (or
+//! the core count) is absorbed; accuracy pins at 1.000 (self-labeled
+//! splits + bit-exact backend — any other value is a correctness bug,
+//! not noise).
+
+mod harness;
+
+use std::time::Duration;
+
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::runtime::Backend;
+use printed_mlp::server::{self, Scenario, ServeConfig};
+use printed_mlp::util::pool;
+
+fn main() {
+    harness::section("serve_scaling — req/s and p99 vs workers (3 synthetic models, gatesim, steady)");
+    let store = ArtifactStore::discover(); // unused in synthetic mode
+    let max_workers = pool::default_threads();
+    let mut workers = 1usize;
+    let mut counts = Vec::new();
+    while workers <= max_workers {
+        counts.push(workers);
+        workers *= 2;
+    }
+    if counts.last() != Some(&max_workers) {
+        counts.push(max_workers);
+    }
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "workers", "req/s", "p50 ms", "p99 ms", "shed", "acc"
+    );
+    for &w in &counts {
+        let cfg = ServeConfig {
+            datasets: vec!["syn0".into(), "syn1".into(), "syn2".into()],
+            scenario: Scenario::Steady,
+            rate_hz: 8_000.0,
+            duration: Duration::from_millis(400),
+            sensors: 4,
+            workers: w,
+            queue_cap: 8192,
+            backend: Backend::GateSim,
+            synthetic: true,
+            ..ServeConfig::default()
+        };
+        let rep = server::run(&store, &cfg).expect("synthetic serve run");
+        let p50 = rep.models.iter().map(|m| m.p50_ms).fold(0.0f64, f64::max);
+        let p99 = rep.models.iter().map(|m| m.p99_ms).fold(0.0f64, f64::max);
+        let acc = rep.models.iter().map(|m| m.accuracy).fold(1.0f64, f64::min);
+        println!(
+            "{:>8} {:>10.0} {:>10.2} {:>10.2} {:>8} {:>8.3}",
+            w,
+            rep.total_rps(),
+            p50,
+            p99,
+            rep.total_shed(),
+            acc
+        );
+        assert_eq!(acc, 1.0, "synthetic serving must stay bit-exact");
+    }
+    println!("\n(worst per-model p50/p99 shown; shed >0 means the offered rate beat the pool)");
+}

@@ -10,7 +10,9 @@
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
 //! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
 //!                       [--no-compile-sim]
-//! printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--backend B]
+//! printed-mlp serve     [--datasets a,b,..] [--scenario S] [--rate HZ] [--secs S]
+//!                       [--workers N] [--queue-cap N] [--batch N] [--backend B]
+//!                       [--synthetic] [--config FILE]
 //! printed-mlp info
 //! ```
 //!
@@ -22,9 +24,10 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Config;
-use crate::coordinator::{self, serve};
+use crate::coordinator;
 use crate::data::ArtifactStore;
 use crate::report;
+use crate::server;
 
 /// Parsed flags: `--key value` or bare `--flag`.
 pub struct Flags {
@@ -80,12 +83,21 @@ USAGE:
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
                         [--threads N] [--no-compile-sim]
-  printed-mlp serve     [--dataset NAME] [--rate HZ] [--secs S] [--sensors N]
-                        [--backend auto|native|pjrt|gatesim]
+  printed-mlp serve     [--datasets a,b,..] [--scenario steady|bursty|ramp|fanin]
+                        [--rate HZ] [--secs S] [--sensors N] [--workers N]
+                        [--batch N] [--queue-cap N] [--max-wait-ms MS]
+                        [--slo-ms MS] [--seed N] [--backend native|gatesim]
+                        [--synthetic] [--config FILE]
   printed-mlp info
 
 Backends: auto prefers PJRT and falls back to the native functional model;
 gatesim validates on the sharded gate-level netlist simulator.
+Serve hosts every --datasets model concurrently behind per-model bounded
+batching queues drained by a --workers pool; overflow is shed and counted.
+Scenarios: steady (fixed rate, round-robin), bursty (Poisson on/off),
+ramp (0.1x -> 2x rate over the run), fanin (each sensor window feeds every
+model).  --synthetic serves deterministic self-labeled models with no
+artifacts (accuracy 1.000 expected on an exact backend).
 On the native backend the NSGA-II approximation search fans each
 generation's fitness batch across --search-threads workers (0 = auto)
 with a genome memo cache (--no-nsga-cache disables it); results are
@@ -333,30 +345,64 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Build a ServeConfig from config file + CLI overrides (mirrors
+/// [`pipeline_config`]).
+pub fn serve_config(flags: &Flags) -> Result<server::ServeConfig> {
+    let mut conf = match flags.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    // `--dataset` stays as a single-model alias of `--datasets`.
+    if let Some(v) = flags.get("datasets").or_else(|| flags.get("dataset")) {
+        conf.set("serve.datasets", v);
+    }
+    if let Some(v) = flags.get("scenario") {
+        conf.set("serve.scenario", v);
+    }
+    if let Some(v) = flags.get("rate") {
+        conf.set("serve.rate_hz", v);
+    }
+    if let Some(v) = flags.get("secs") {
+        conf.set("serve.secs", v);
+    }
+    if let Some(v) = flags.get("sensors") {
+        conf.set("serve.sensors", v);
+    }
+    if let Some(v) = flags.get("workers") {
+        conf.set("serve.workers", v);
+    }
+    if let Some(v) = flags.get("batch") {
+        conf.set("serve.batch", v);
+    }
+    if let Some(v) = flags.get("queue-cap") {
+        conf.set("serve.queue_cap", v);
+    }
+    if let Some(v) = flags.get("max-wait-ms") {
+        conf.set("serve.max_wait_ms", v);
+    }
+    if let Some(v) = flags.get("slo-ms") {
+        conf.set("serve.slo_ms", v);
+    }
+    if let Some(v) = flags.get("seed") {
+        conf.set("serve.seed", v);
+    }
+    if let Some(v) = flags.get("backend") {
+        conf.set("serve.backend", v);
+    }
+    if flags.has("synthetic") {
+        conf.set("serve.synthetic", "true");
+    }
+    conf.serve()
+}
+
 fn cmd_serve(store: &ArtifactStore, flags: &Flags) -> Result<()> {
-    let mut cfg = serve::ServeConfig::default();
-    if let Some(d) = flags.get("dataset") {
-        cfg.dataset = d.to_string();
+    let cfg = serve_config(flags)?;
+    if !cfg.synthetic {
+        require_artifacts(store, &cfg.datasets)?;
     }
-    if let Some(r) = flags.get("rate") {
-        cfg.rate_hz = r.parse()?;
-    }
-    if let Some(s) = flags.get("secs") {
-        cfg.duration = std::time::Duration::from_secs_f64(s.parse()?);
-    }
-    if let Some(s) = flags.get("sensors") {
-        cfg.sensors = s.parse()?;
-    }
-    if let Some(b) = flags.get("backend") {
-        cfg.backend = b.parse()?;
-    }
-    require_artifacts(store, &[cfg.dataset.clone()])?;
-    let rep = serve::run(store, &cfg)?;
-    println!(
-        "serve {} [{}]: {} requests in {} batches | {:.0} req/s | mean batch {:.1} | p50 {:.2} ms | p99 {:.2} ms | acc {:.3}",
-        cfg.dataset, rep.backend, rep.requests, rep.batches, rep.throughput_rps, rep.mean_batch,
-        rep.p50_ms, rep.p99_ms, rep.accuracy
-    );
+    let rep = server::run(store, &cfg)?;
+    let md = report::serve_report(&rep, &store.results_dir())?;
+    println!("{md}");
     Ok(())
 }
 
@@ -449,6 +495,40 @@ mod tests {
         let args: Vec<String> = ["--backend", "nosuch"].iter().map(|s| s.to_string()).collect();
         let f = Flags::parse(&args).unwrap();
         assert!(pipeline_config(&f).is_err());
+    }
+
+    #[test]
+    fn serve_config_overrides() {
+        let args: Vec<String> = [
+            "--datasets", "a,b,c", "--scenario", "ramp", "--rate", "123", "--secs", "0.25",
+            "--workers", "2", "--queue-cap", "17", "--batch", "8", "--synthetic", "--backend",
+            "gatesim",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = serve_config(&f).unwrap();
+        assert_eq!(cfg.datasets, vec!["a".to_string(), "b".into(), "c".into()]);
+        assert_eq!(cfg.scenario, crate::server::Scenario::Ramp);
+        assert_eq!(cfg.rate_hz, 123.0);
+        assert_eq!(cfg.duration, std::time::Duration::from_secs_f64(0.25));
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.queue_cap, 17);
+        assert_eq!(cfg.batch, 8);
+        assert!(cfg.synthetic);
+        assert_eq!(cfg.backend, crate::runtime::Backend::GateSim);
+    }
+
+    #[test]
+    fn serve_single_dataset_alias() {
+        let args: Vec<String> = ["--dataset", "spectf"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = serve_config(&f).unwrap();
+        assert_eq!(cfg.datasets, vec!["spectf".to_string()]);
+        // Defaults host three datasets.
+        let cfg = serve_config(&Flags::parse(&[]).unwrap()).unwrap();
+        assert_eq!(cfg.datasets.len(), 3);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Minimal configuration file support (TOML subset): `key = value` pairs
 //! with optional `[section]` headers, `#` comments, strings, numbers,
 //! booleans and comma lists.  Feeds [`crate::coordinator::PipelineConfig`]
-//! and the serve mode; every key can be overridden on the CLI.
+//! and [`crate::server::ServeConfig`]; every key can be overridden on the
+//! CLI.
 //!
 //! Example (`printed-mlp.toml`):
 //! ```toml
@@ -20,9 +21,24 @@
 //!
 //! [sim]
 //! compile = true          # micro-op-compiled gate-level sim (perf only)
+//!
+//! [serve]
+//! datasets = spectf, arrhythmia, gas
+//! scenario = steady       # steady | bursty | ramp | fanin
+//! rate_hz = 2000
+//! secs = 3
+//! sensors = 4
+//! workers = 0             # drain workers (0 = one per core)
+//! batch = 64
+//! queue_cap = 1024        # bounded per-model queue; overflow is shed
+//! max_wait_ms = 2
+//! slo_ms = 50
+//! backend = native        # native | gatesim (pjrt is thread-bound)
+//! synthetic = false       # artifact-free deterministic models
 //! ```
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -30,6 +46,7 @@ use crate::coordinator::PipelineConfig;
 use crate::nsga::NsgaConfig;
 use crate::rfp::Strategy;
 use crate::runtime::Backend;
+use crate::server::ServeConfig;
 
 /// Parsed configuration: `section.key -> raw value string`.
 #[derive(Clone, Debug, Default)]
@@ -185,6 +202,63 @@ impl Config {
         }
         Ok(cfg)
     }
+
+    /// Materialize the serve configuration with defaults filled in.
+    /// Dataset names are validated against the registry at load time
+    /// (synthetic mode accepts arbitrary names), not here.
+    pub fn serve(&self) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(ds) = self.get_list("serve.datasets") {
+            cfg.datasets = ds;
+        }
+        if let Some(s) = self.get("serve.scenario") {
+            cfg.scenario = s.parse().with_context(|| format!("serve.scenario={s}"))?;
+        }
+        if let Some(v) = self.get_f64("serve.rate_hz")? {
+            cfg.rate_hz = v.max(1e-3);
+        }
+        if let Some(v) = self.get_f64("serve.secs")? {
+            cfg.duration = Duration::from_secs_f64(v.max(0.0));
+        }
+        if let Some(v) = self.get_f64("serve.max_wait_ms")? {
+            cfg.max_wait = Duration::from_secs_f64(v.max(0.0) / 1e3);
+        }
+        if let Some(n) = self.get_usize("serve.sensors")? {
+            cfg.sensors = n.max(1);
+        }
+        if let Some(n) = self.get_usize("serve.workers")? {
+            cfg.workers = n;
+        }
+        if let Some(n) = self.get_usize("serve.batch")? {
+            cfg.batch = n.max(1);
+        }
+        if let Some(n) = self.get_usize("serve.queue_cap")? {
+            cfg.queue_cap = n.max(1);
+        }
+        if let Some(v) = self.get_f64("serve.slo_ms")? {
+            cfg.slo_ms = v;
+        }
+        if let Some(n) = self.get_usize("serve.seed")? {
+            cfg.seed = n as u64;
+        }
+        // serve.backend wins; otherwise inherit the pipeline backend so a
+        // one-line `[pipeline] backend = gatesim` config steers both.
+        // Inherited PJRT is skipped (valid for the pipeline, but the serve
+        // worker pool would reject it) — serve keeps its auto→native
+        // default; an explicit serve.backend = pjrt still errors at run.
+        if let Some(s) = self.get("serve.backend") {
+            cfg.backend = s.parse().with_context(|| format!("serve.backend={s}"))?;
+        } else if let Some(s) = self.get("pipeline.backend") {
+            let b: Backend = s.parse().with_context(|| format!("pipeline.backend={s}"))?;
+            if b != Backend::Pjrt {
+                cfg.backend = b;
+            }
+        }
+        if let Some(b) = self.get_bool("serve.synthetic")? {
+            cfg.synthetic = b;
+        }
+        Ok(cfg)
+    }
 }
 
 #[cfg(test)]
@@ -235,6 +309,49 @@ mod tests {
         assert!(!c.pipeline().unwrap().sim_compile);
         // Default: compiled plans on.
         assert!(Config::default().pipeline().unwrap().sim_compile);
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let c = Config::parse(
+            "[serve]\ndatasets = a, b, c\nscenario = fanin\nrate_hz = 500\nsecs = 0.5\n\
+             workers = 3\nbatch = 16\nqueue_cap = 9\nmax_wait_ms = 4\nslo_ms = 20\n\
+             backend = gatesim\nsynthetic = true\n",
+        )
+        .unwrap();
+        let s = c.serve().unwrap();
+        assert_eq!(s.datasets, vec!["a".to_string(), "b".into(), "c".into()]);
+        assert_eq!(s.scenario, crate::server::Scenario::FanIn);
+        assert_eq!(s.rate_hz, 500.0);
+        assert_eq!(s.duration, Duration::from_secs_f64(0.5));
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.batch, 16);
+        assert_eq!(s.queue_cap, 9);
+        assert_eq!(s.max_wait, Duration::from_secs_f64(0.004));
+        assert_eq!(s.slo_ms, 20.0);
+        assert_eq!(s.backend, Backend::GateSim);
+        assert!(s.synthetic);
+        // Unknown scenario errors.
+        let c = Config::parse("[serve]\nscenario = chaos\n").unwrap();
+        assert!(c.serve().is_err());
+    }
+
+    #[test]
+    fn serve_inherits_pipeline_backend() {
+        let c = Config::parse("[pipeline]\nbackend = gatesim\n").unwrap();
+        assert_eq!(c.serve().unwrap().backend, Backend::GateSim);
+        // serve.backend wins over the pipeline key.
+        let c = Config::parse("[pipeline]\nbackend = gatesim\n[serve]\nbackend = native\n").unwrap();
+        assert_eq!(c.serve().unwrap().backend, Backend::Native);
+        // Inherited PJRT is skipped (the serve pool would reject it);
+        // serve keeps its auto default instead of hard-failing.
+        let c = Config::parse("[pipeline]\nbackend = pjrt\n").unwrap();
+        assert_eq!(c.serve().unwrap().backend, Backend::Auto);
+        // Defaults: three datasets, steady, auto backend.
+        let d = Config::default().serve().unwrap();
+        assert_eq!(d.datasets.len(), 3);
+        assert_eq!(d.backend, Backend::Auto);
+        assert!(!d.synthetic);
     }
 
     #[test]

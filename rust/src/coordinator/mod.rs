@@ -9,8 +9,6 @@
 //! `!Send`).  Stage outputs are cached to `artifacts/results/` as JSON so
 //! expensive stages (NSGA) are re-used across harness runs.
 
-pub mod serve;
-
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
@@ -22,7 +20,7 @@ use crate::model::ApproxTables;
 use crate::nsga::NsgaConfig;
 use crate::rfp::{self, RfpResult, Strategy};
 use crate::runtime::{
-    Backend, Evaluator, GateSimEvaluator, NativeEvaluator, PjrtEvaluator, BATCH_THROUGHPUT,
+    build_evaluator, Backend, BuiltEvaluator, EvalOpts, Evaluator, BATCH_THROUGHPUT,
 };
 use crate::sim::testbench;
 use crate::tech::{self, CircuitReport};
@@ -104,36 +102,6 @@ pub struct DatasetOutcome {
     pub hybrids: Vec<(f64, DesignReport)>,
 }
 
-/// The selected fitness/accuracy evaluator.  PJRT is kept as a concrete
-/// variant because its prepared-input fast path (§Perf: staged device
-/// literals) is backend-specific; everything else goes through the
-/// [`Evaluator`] trait object.
-enum Eval<'m> {
-    Pjrt(PjrtEvaluator),
-    Dyn(Box<dyn Evaluator + 'm>),
-}
-
-impl<'m> Eval<'m> {
-    fn as_dyn(&self) -> &(dyn Evaluator + 'm) {
-        match self {
-            Eval::Pjrt(e) => e,
-            Eval::Dyn(b) => b.as_ref(),
-        }
-    }
-
-    fn accuracy(
-        &self,
-        split: &crate::data::Split,
-        fm: &[u8],
-        am: &[u8],
-        t: &ApproxTables,
-    ) -> f64 {
-        self.as_dyn()
-            .accuracy(split, fm, am, t)
-            .expect("evaluation failed mid-pipeline")
-    }
-}
-
 /// Run the full pipeline for one dataset.
 pub fn run_dataset(
     store: &ArtifactStore,
@@ -153,21 +121,19 @@ pub fn run_dataset(
 
     // Backend selection: `Auto` probes for a PJRT client and falls back
     // to native; the engine must outlive any PJRT evaluator built on it.
+    // Construction goes through the shared `runtime::build_evaluator`
+    // factory (the serve-mode registry uses the same one).
     let (engine, backend) = cfg.backend.resolve()?;
-    let eval: Eval = match backend {
-        Backend::Pjrt => Eval::Pjrt(PjrtEvaluator::new(
-            engine.as_ref().expect("pjrt backend implies an engine"),
-            &store.hlo_path(name, BATCH_THROUGHPUT),
-            &model,
-            BATCH_THROUGHPUT,
-        )?),
-        Backend::Native => Eval::Dyn(Box::new(NativeEvaluator { model: &model })),
-        Backend::GateSim => Eval::Dyn(Box::new(GateSimEvaluator::with_threads(
-            &model,
+    let eval = build_evaluator(
+        backend,
+        engine.as_ref(),
+        &model,
+        &EvalOpts {
+            hlo_path: Some(store.hlo_path(name, BATCH_THROUGHPUT)),
+            batch: BATCH_THROUGHPUT,
             sim_threads,
-        ))),
-        Backend::Auto => unreachable!("resolve() returns a concrete backend"),
-    };
+        },
+    )?;
 
     let fit_split = if cfg.fit_subset > 0 {
         ds.train.head(cfg.fit_subset)
@@ -178,15 +144,18 @@ pub fn run_dataset(
     // evaluate the same split hundreds of times with different masks, and
     // rebuilding the B×F input literal per call dominated the fitness path.
     let prep = match &eval {
-        Eval::Pjrt(e) => Some(e.prepare(&fit_split)?),
-        Eval::Dyn(_) => None,
+        BuiltEvaluator::Pjrt(e) => Some(e.prepare(&fit_split)?),
+        BuiltEvaluator::Shared(_) => None,
     };
     let fit_acc = |fm: &[u8], am: &[u8], t: &ApproxTables| -> f64 {
         match (&eval, &prep) {
-            (Eval::Pjrt(e), Some(p)) => e
+            (BuiltEvaluator::Pjrt(e), Some(p)) => e
                 .accuracy_prepared(p, fm, am, t)
                 .expect("PJRT evaluation failed mid-pipeline"),
-            _ => eval.accuracy(&fit_split, fm, am, t),
+            _ => eval
+                .as_dyn()
+                .accuracy(&fit_split, fm, am, t)
+                .expect("evaluation failed mid-pipeline"),
         }
     };
     let h = model.hidden;
@@ -254,7 +223,9 @@ pub fn run_dataset(
             );
             testbench::accuracy(&preds, &test.ys)
         } else {
-            eval.accuracy(test, &rfp.feat_mask, am, tb)
+            eval.as_dyn()
+                .accuracy(test, &rfp.feat_mask, am, tb)
+                .expect("evaluation failed mid-pipeline")
         };
         DesignReport {
             arch,
@@ -285,7 +256,9 @@ pub fn run_dataset(
             );
             testbench::accuracy(&preds, &test.ys)
         } else {
-            eval.accuracy(test, &rfp.feat_mask, &no_approx, &no_tables)
+            eval.as_dyn()
+                .accuracy(test, &rfp.feat_mask, &no_approx, &no_tables)
+                .expect("evaluation failed mid-pipeline")
         };
         DesignReport {
             arch: "combinational",

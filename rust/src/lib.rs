@@ -32,7 +32,12 @@
 //!   micro-op stream ([`sim::SimPlan::compiled`]; `--no-compile-sim`
 //!   falls back to the interpreted oracle).  `PRINTED_MLP_THREADS` caps
 //!   the worker count.
-//! - [`coordinator`] — pipeline orchestration and the streaming serve mode.
+//! - [`coordinator`] — pipeline orchestration across datasets.
+//! - [`server`] — the multi-tenant model server: [`server::ModelRegistry`]
+//!   (per-dataset artifacts loaded once, shared read-only), per-model
+//!   dynamic-batching queues with bounded capacity and shed counters
+//!   drained by a worker pool, and scenario-driven load generation
+//!   (steady / bursty / ramp / multi-sensory fanin).
 //! - [`report`] — table/figure emitters for the paper's evaluation.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
@@ -50,6 +55,7 @@ pub mod nsga;
 pub mod report;
 pub mod rfp;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod tech;
 pub mod util;

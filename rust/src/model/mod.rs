@@ -11,6 +11,7 @@
 //! See DESIGN.md §Functional semantics.
 
 pub mod importance;
+pub mod synth;
 
 use anyhow::{bail, Context, Result};
 
@@ -227,6 +228,31 @@ impl QuantModel {
         let fm = vec![1u8; self.features];
         let am = vec![0u8; self.hidden];
         self.forward(x, &fm, &am, &ApproxTables::disabled(self.hidden))
+    }
+
+    /// Predict classes for `n` row-major 4-bit samples into `out`
+    /// (cleared first) — the one u8-row → i32 decode loop shared by the
+    /// native evaluator's batch paths and synthetic-split labeling.
+    pub fn predict_rows_into(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+        out: &mut Vec<i32>,
+    ) {
+        let f = self.features;
+        debug_assert_eq!(xs.len(), n * f);
+        out.clear();
+        out.reserve(n);
+        let mut x = vec![0i32; f];
+        for i in 0..n {
+            for (xj, &v) in x.iter_mut().zip(&xs[i * f..(i + 1) * f]) {
+                *xj = v as i32;
+            }
+            out.push(self.forward(&x, feat_mask, approx_mask, tables).0 as i32);
+        }
     }
 
     /// Accuracy over a dataset slice (rows of `features` u8 inputs).

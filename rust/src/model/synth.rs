@@ -1,0 +1,93 @@
+//! Deterministic synthetic models and datasets.
+//!
+//! One generator shared by the integration tests/benches (via
+//! `rust/tests/common`), the serve smoke path (`printed-mlp serve
+//! --synthetic`), and the `serve_scaling` bench — all places that need a
+//! valid [`QuantModel`] plus traffic without `make artifacts`.  Outputs
+//! are fully determined by the seed, so cross-harness comparisons stay
+//! bit-exact.
+
+use crate::data::Split;
+use crate::model::{ApproxTables, QuantModel};
+use crate::util::prng::Rng;
+
+/// Random valid pow2-quantized model (signs in {-1,0,1}, powers in
+/// [0, pmax]); fully determined by `seed`.
+pub fn rand_model(seed: u64, features: usize, hidden: usize, classes: usize) -> QuantModel {
+    let mut r = Rng::new(seed);
+    let pmax = 6u32;
+    let mut w1p = vec![0i32; hidden * features];
+    let mut w1s = vec![0i32; hidden * features];
+    for i in 0..hidden * features {
+        w1p[i] = r.below(pmax as u64 + 1) as i32;
+        w1s[i] = [-1, 0, 1][r.usize_below(3)];
+    }
+    let mut w2p = vec![0i32; classes * hidden];
+    let mut w2s = vec![0i32; classes * hidden];
+    for i in 0..classes * hidden {
+        w2p[i] = r.below(pmax as u64 + 1) as i32;
+        w2s[i] = [-1, 0, 1][r.usize_below(3)];
+    }
+    QuantModel {
+        name: format!("rand{seed}"),
+        features,
+        classes,
+        hidden,
+        in_bits: 4,
+        w_bits: 8,
+        pmax,
+        trunc: (r.below(6) + 1) as u32,
+        seq_clock_ms: 100.0,
+        comb_clock_ms: 320.0,
+        float_acc: 0.0,
+        train_acc: 0.0,
+        test_acc: 0.0,
+        w1p,
+        w1s,
+        b1: (0..hidden).map(|_| r.i32_range(-300, 300)).collect(),
+        w2p,
+        w2s,
+        b2: (0..classes).map(|_| r.i32_range(-300, 300)).collect(),
+    }
+}
+
+/// Random 4-bit split of `n` samples, labeled with the model's own
+/// full-mask predictions — so any exact evaluator scores accuracy 1.0 on
+/// it, which turns serve-mode accuracy into a correctness check.
+pub fn rand_split(model: &QuantModel, seed: u64, n: usize) -> Split {
+    let mut r = Rng::new(seed);
+    let f = model.features;
+    let xs: Vec<u8> = (0..n * f).map(|_| r.below(16) as u8).collect();
+    let fm = vec![1u8; f];
+    let am = vec![0u8; model.hidden];
+    let tables = ApproxTables::disabled(model.hidden);
+    let mut preds = Vec::new();
+    model.predict_rows_into(&xs, n, &fm, &am, &tables, &mut preds);
+    let ys: Vec<u16> = preds.into_iter().map(|p| p as u16).collect();
+    Split { xs, ys, features: f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_valid() {
+        let a = rand_model(9, 8, 5, 3);
+        let b = rand_model(9, 8, 5, 3);
+        assert_eq!(a.w1p, b.w1p);
+        assert_eq!(a.b2, b.b2);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn split_labels_are_model_predictions() {
+        let m = rand_model(4, 6, 4, 3);
+        let s = rand_split(&m, 77, 20);
+        assert_eq!(s.len(), 20);
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        assert_eq!(m.accuracy(&s.xs, &s.ys, &fm, &am, &t), 1.0);
+    }
+}

@@ -272,6 +272,74 @@ pub fn rfp_summary(outs: &[DatasetOutcome], results_dir: &Path) -> Result<String
     Ok(md)
 }
 
+/// Serve-mode summary: one row per hosted model plus run totals
+/// (markdown + `serve.csv`).
+pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Result<String> {
+    let mut md = String::new();
+    let _ = writeln!(
+        md,
+        "\n## Serve — {} scenario, backend {}, {} workers, {:.2}s\n",
+        rep.scenario.label(),
+        rep.backend,
+        rep.workers,
+        rep.elapsed_s
+    );
+    let _ = writeln!(
+        md,
+        "| Model | requests | answered | shed | batches | mean batch | req/s | p50 ms | p99 ms | SLO>{:.0}ms | accuracy |",
+        rep.models.first().map(|m| m.slo_ms).unwrap_or(0.0)
+    );
+    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for m in &rep.models {
+        let _ = writeln!(
+            md,
+            "| {} | {} | {} | {} | {} | {:.1} | {:.0} | {:.2} | {:.2} | {} | {:.3} |",
+            m.name,
+            m.requests,
+            m.answered,
+            m.shed,
+            m.batches,
+            m.mean_batch,
+            m.throughput_rps,
+            m.p50_ms,
+            m.p99_ms,
+            m.slo_violations,
+            m.accuracy
+        );
+        rows.push(format!(
+            "{},{},{},{},{},{:.2},{:.1},{:.3},{:.3},{},{:.4}",
+            m.name,
+            m.requests,
+            m.answered,
+            m.shed,
+            m.batches,
+            m.mean_batch,
+            m.throughput_rps,
+            m.p50_ms,
+            m.p99_ms,
+            m.slo_violations,
+            m.accuracy
+        ));
+    }
+    let _ = writeln!(
+        md,
+        "\nTotals: **{}** requests, **{}** answered, **{}** shed, **{:.0}** req/s across {} models.",
+        rep.total_requests(),
+        rep.total_answered(),
+        rep.total_shed(),
+        rep.total_rps(),
+        rep.models.len()
+    );
+    write_csv(
+        results_dir,
+        "serve.csv",
+        "model,requests,answered,shed,batches,mean_batch,rps,p50_ms,p99_ms,slo_violations,accuracy",
+        &rows,
+    )?;
+    Ok(md)
+}
+
 /// All experiment sections in one report.
 pub fn full_report(outs: &[DatasetOutcome], results_dir: &Path) -> Result<String> {
     let mut md = String::from("# printed-mlp — paper reproduction report\n");
@@ -303,5 +371,39 @@ mod tests {
         let max_a = PAPER_TABLE1.iter().map(|r| r.area_gain).fold(0.0, f64::max);
         assert_eq!(min_a, 3.8);
         assert_eq!(max_a, 18.5);
+    }
+
+    #[test]
+    fn serve_report_renders_and_writes_csv() {
+        use crate::server::{ModelReport, Scenario, ServerReport};
+        let rep = ServerReport {
+            backend: "native",
+            scenario: Scenario::Steady,
+            workers: 2,
+            elapsed_s: 1.0,
+            models: vec![ModelReport {
+                name: "toy".into(),
+                requests: 10,
+                answered: 9,
+                shed: 1,
+                batches: 3,
+                mean_batch: 3.0,
+                throughput_rps: 9.0,
+                p50_ms: 1.5,
+                p99_ms: 4.0,
+                slo_ms: 50.0,
+                slo_violations: 0,
+                accuracy: 1.0,
+            }],
+        };
+        let dir = std::env::temp_dir().join(format!("pmlp_serve_rep_{}", std::process::id()));
+        let md = serve_report(&rep, &dir).unwrap();
+        assert!(md.contains("steady"));
+        assert!(md.contains("| toy | 10 | 9 | 1 |"));
+        assert!(md.contains("**1** shed"));
+        let csv = std::fs::read_to_string(dir.join("serve.csv")).unwrap();
+        assert!(csv.starts_with("model,requests"));
+        assert!(csv.contains("toy,10,9,1,3"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

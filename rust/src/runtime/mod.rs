@@ -19,10 +19,11 @@
 
 pub mod pjrt;
 
+use std::path::PathBuf;
 use std::str::FromStr;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::circuits::{seq_multicycle, SeqCircuit};
 use crate::data::Split;
@@ -86,6 +87,95 @@ impl FromStr for Backend {
     }
 }
 
+/// Options for [`build_evaluator`]; each backend reads the fields it
+/// needs and ignores the rest.
+#[derive(Clone, Debug)]
+pub struct EvalOpts {
+    /// HLO text artifact to compile (PJRT only; required there).
+    pub hlo_path: Option<PathBuf>,
+    /// AOT batch size the HLO was lowered at (PJRT only).
+    pub batch: usize,
+    /// Simulator shard threads (gatesim only; 0 = [`pool::default_threads`]).
+    pub sim_threads: usize,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts {
+            hlo_path: None,
+            batch: BATCH_THROUGHPUT,
+            sim_threads: 0,
+        }
+    }
+}
+
+/// An evaluator built by [`build_evaluator`].
+///
+/// PJRT stays a concrete variant because its prepared-input fast path
+/// (§Perf: staged device literals) is backend-specific and its handles
+/// are `!Send`; everything else is a shareable trait object that worker
+/// pools (the serve batcher, sim shards) can hit concurrently.
+pub enum BuiltEvaluator<'m> {
+    Pjrt(PjrtEvaluator),
+    Shared(Box<dyn Evaluator + Send + Sync + 'm>),
+}
+
+impl<'m> BuiltEvaluator<'m> {
+    pub fn as_dyn(&self) -> &(dyn Evaluator + 'm) {
+        match self {
+            BuiltEvaluator::Pjrt(e) => e,
+            BuiltEvaluator::Shared(b) => b.as_ref(),
+        }
+    }
+
+    /// Unwrap the thread-shareable box, rejecting PJRT (whose handles are
+    /// bound to the constructing thread).
+    pub fn into_shared(self) -> Result<Box<dyn Evaluator + Send + Sync + 'm>> {
+        match self {
+            BuiltEvaluator::Shared(b) => Ok(b),
+            BuiltEvaluator::Pjrt(_) => {
+                bail!("PJRT evaluator handles are thread-bound (!Send) and cannot be shared")
+            }
+        }
+    }
+}
+
+/// The one place an [`Evaluator`] is constructed from a resolved
+/// [`Backend`] — the coordinator pipeline and the serve-mode registry
+/// both go through here instead of hand-matching backends.
+///
+/// `backend` must already be concrete (call [`Backend::resolve`] first);
+/// `engine` is required iff the backend is PJRT and must outlive the
+/// returned evaluator.
+pub fn build_evaluator<'m>(
+    backend: Backend,
+    engine: Option<&Engine>,
+    model: &'m QuantModel,
+    opts: &EvalOpts,
+) -> Result<BuiltEvaluator<'m>> {
+    Ok(match backend {
+        Backend::Pjrt => {
+            let engine =
+                engine.ok_or_else(|| anyhow!("pjrt backend requires an engine (resolve first)"))?;
+            let hlo = opts
+                .hlo_path
+                .as_ref()
+                .ok_or_else(|| anyhow!("pjrt backend requires an HLO artifact path"))?;
+            BuiltEvaluator::Pjrt(PjrtEvaluator::new(engine, hlo, model, opts.batch)?)
+        }
+        Backend::Native => BuiltEvaluator::Shared(Box::new(NativeEvaluator { model })),
+        Backend::GateSim => {
+            let threads = if opts.sim_threads == 0 {
+                pool::default_threads()
+            } else {
+                opts.sim_threads
+            };
+            BuiltEvaluator::Shared(Box::new(GateSimEvaluator::with_threads(model, threads)))
+        }
+        Backend::Auto => bail!("resolve Backend::Auto to a concrete backend before building"),
+    })
+}
+
 /// Batch prediction under feature/approximation masks — the one interface
 /// RFP, NSGA-II, gate-level validation, and serve mode all consume.
 pub trait Evaluator {
@@ -101,6 +191,26 @@ pub trait Evaluator {
         approx_mask: &[u8],
         tables: &ApproxTables,
     ) -> Result<Vec<i32>>;
+
+    /// [`Evaluator::predict`] into a caller-owned buffer, so hot loops
+    /// (the serve batcher drains thousands of batches per second) reuse
+    /// one allocation instead of taking a fresh `Vec` per batch.  The
+    /// default falls back to `predict`; backends override to write in
+    /// place (the native backend does).
+    fn predict_into(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        let preds = self.predict(xs, n, feat_mask, approx_mask, tables)?;
+        out.clear();
+        out.extend_from_slice(&preds);
+        Ok(())
+    }
 
     /// Accuracy over a split (default: predict + compare labels).
     fn accuracy(
@@ -135,16 +245,9 @@ impl<'m> NativeEvaluator<'m> {
         approx_mask: &[u8],
         tables: &ApproxTables,
     ) -> Vec<i32> {
-        let f = self.model.features;
-        let mut x = vec![0i32; f];
-        (0..n)
-            .map(|i| {
-                for j in 0..f {
-                    x[j] = xs[i * f + j] as i32;
-                }
-                self.model.forward(&x, feat_mask, approx_mask, tables).0 as i32
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.model.predict_rows_into(xs, n, feat_mask, approx_mask, tables, &mut out);
+        out
     }
 
     pub fn accuracy(
@@ -173,6 +276,19 @@ impl<'m> Evaluator for NativeEvaluator<'m> {
         tables: &ApproxTables,
     ) -> Result<Vec<i32>> {
         Ok(NativeEvaluator::predict(self, xs, n, feat_mask, approx_mask, tables))
+    }
+
+    fn predict_into(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        self.model.predict_rows_into(xs, n, feat_mask, approx_mask, tables, out);
+        Ok(())
     }
 
     fn accuracy(
@@ -327,6 +443,42 @@ mod tests {
         let got = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
         let want = NativeEvaluator::predict(&native, &xs, n, &fm, &am, &t);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn predict_into_matches_predict_and_reuses_buffer() {
+        let m = rand_model(53, 7, 4, 3);
+        let native = NativeEvaluator { model: &m };
+        let n = 9;
+        let mut r = Rng::new(11);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let want = Evaluator::predict(&native, &xs, n, &fm, &am, &t).unwrap();
+        // Pre-filled buffer: must be cleared, not appended to.
+        let mut out = vec![-7i32; 3];
+        native.predict_into(&xs, n, &fm, &am, &t, &mut out).unwrap();
+        assert_eq!(out, want);
+        // Default-impl path (gatesim) agrees too.
+        let gate = GateSimEvaluator::with_threads(&m, 1);
+        let mut out2 = Vec::new();
+        gate.predict_into(&xs, n, &fm, &am, &t, &mut out2).unwrap();
+        assert_eq!(out2, want);
+    }
+
+    #[test]
+    fn build_evaluator_factory_covers_shared_backends() {
+        let m = rand_model(54, 6, 3, 2);
+        let native = build_evaluator(Backend::Native, None, &m, &EvalOpts::default()).unwrap();
+        assert_eq!(native.as_dyn().name(), "native");
+        let gate = build_evaluator(Backend::GateSim, None, &m, &EvalOpts::default()).unwrap();
+        assert_eq!(gate.as_dyn().name(), "gatesim");
+        // Shared variants unwrap into Send+Sync boxes.
+        assert!(native.into_shared().is_ok());
+        // Auto must be resolved first; PJRT needs an engine.
+        assert!(build_evaluator(Backend::Auto, None, &m, &EvalOpts::default()).is_err());
+        assert!(build_evaluator(Backend::Pjrt, None, &m, &EvalOpts::default()).is_err());
     }
 
     #[test]

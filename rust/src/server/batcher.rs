@@ -1,0 +1,247 @@
+//! Per-model dynamic-batching queues and the worker pool that drains
+//! them.
+//!
+//! Each hosted model owns one bounded [`BatchQueue`]; load-generator
+//! threads push [`Frame`]s and a pool of drain workers (reusing
+//! [`pool::scope_map_with`] so per-worker scratch buffers are allocated
+//! once) pops up to `batch` frames at a time and runs them through the
+//! model's shared [`Evaluator`].  Backpressure is load shedding: a push
+//! into a full queue drops the frame and bumps the model's shed counter —
+//! the queue never blocks a sensor thread and never grows without bound.
+//!
+//! The linger rule is the classic dynamic-batching trade-off in one
+//! `if`: a worker takes a sub-full batch only once the oldest waiting
+//! frame has aged past `max_wait` (or the server is draining to exit),
+//! otherwise it leaves the frames to accumulate into a fuller batch.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::Evaluator;
+use crate::server::registry::ModelEntry;
+use crate::util::pool;
+
+/// One in-flight inference request.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    /// Unique per run; lets tests assert exactly-once answering.
+    pub id: u64,
+    /// Row index into the model's test split.
+    pub sample: usize,
+    pub enqueued: Instant,
+}
+
+/// Per-model request-path counters and latency samples.
+#[derive(Debug, Default)]
+pub struct ModelStats {
+    pub submitted: AtomicUsize,
+    pub shed: AtomicUsize,
+    pub answered: AtomicUsize,
+    pub correct: AtomicUsize,
+    pub batches: AtomicUsize,
+    pub slo_violations: AtomicUsize,
+    pub latencies_ms: Mutex<Vec<f64>>,
+    /// `(frame id, prediction)` pairs; filled only when
+    /// [`DrainConfig::collect_responses`] is set (tests).
+    pub responses: Mutex<Vec<(u64, i32)>>,
+}
+
+/// Bounded FIFO of pending frames for one model.
+pub struct BatchQueue {
+    capacity: usize,
+    q: Mutex<VecDeque<Frame>>,
+    pub stats: ModelStats,
+}
+
+impl BatchQueue {
+    pub fn new(capacity: usize) -> BatchQueue {
+        BatchQueue {
+            capacity: capacity.max(1),
+            q: Mutex::new(VecDeque::new()),
+            stats: ModelStats::default(),
+        }
+    }
+
+    /// Enqueue a frame; returns `false` (and counts a shed) when the
+    /// queue is at capacity.  Every push counts as submitted either way.
+    pub fn push(&self, frame: Frame) -> bool {
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.q.lock().unwrap();
+        if q.len() >= self.capacity {
+            drop(q);
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        q.push_back(frame);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.lock().unwrap().is_empty()
+    }
+
+    /// Pop up to `max` frames into `out`.  A sub-full batch is released
+    /// only when its oldest frame has waited at least `linger` or
+    /// `force` is set (server draining to exit); returns the number of
+    /// frames taken.
+    pub fn pop_batch(
+        &self,
+        max: usize,
+        linger: Duration,
+        force: bool,
+        out: &mut Vec<Frame>,
+    ) -> usize {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            return 0;
+        }
+        if !force && q.len() < max {
+            let oldest = q.front().expect("nonempty queue").enqueued;
+            if oldest.elapsed() < linger {
+                return 0;
+            }
+        }
+        let take = q.len().min(max);
+        for _ in 0..take {
+            out.push(q.pop_front().expect("len checked"));
+        }
+        take
+    }
+}
+
+/// Drain-loop tuning knobs.
+#[derive(Clone, Debug)]
+pub struct DrainConfig {
+    pub workers: usize,
+    /// Max frames per executed batch.
+    pub batch: usize,
+    /// Max time a sub-full batch lingers before it is released.
+    pub max_wait: Duration,
+    /// Per-frame latency SLO; frames above it count as violations.
+    pub slo_ms: f64,
+    /// Record `(frame id, prediction)` pairs (tests only).
+    pub collect_responses: bool,
+}
+
+impl Default for DrainConfig {
+    fn default() -> Self {
+        DrainConfig {
+            workers: 1,
+            batch: 64,
+            max_wait: Duration::from_millis(2),
+            slo_ms: 50.0,
+            collect_responses: false,
+        }
+    }
+}
+
+/// Execute one popped batch on the model's evaluator and record stats.
+fn process_batch(
+    queue: &BatchQueue,
+    entry: &ModelEntry,
+    eval: &dyn Evaluator,
+    cfg: &DrainConfig,
+    frames: &[Frame],
+    xbuf: &mut Vec<u8>,
+    preds: &mut Vec<i32>,
+) -> Result<()> {
+    xbuf.clear();
+    for fr in frames {
+        xbuf.extend_from_slice(entry.test.row(fr.sample));
+    }
+    eval.predict_into(
+        xbuf,
+        frames.len(),
+        &entry.feat_mask,
+        &entry.approx_mask,
+        &entry.tables,
+        preds,
+    )?;
+    let done = Instant::now();
+    let st = &queue.stats;
+    st.batches.fetch_add(1, Ordering::Relaxed);
+    st.answered.fetch_add(frames.len(), Ordering::Relaxed);
+    {
+        let mut lat = st.latencies_ms.lock().unwrap();
+        for (fr, &p) in frames.iter().zip(preds.iter()) {
+            let ms = (done - fr.enqueued).as_secs_f64() * 1e3;
+            lat.push(ms);
+            if ms > cfg.slo_ms {
+                st.slo_violations.fetch_add(1, Ordering::Relaxed);
+            }
+            if p == entry.test.ys[fr.sample] as i32 {
+                st.correct.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    if cfg.collect_responses {
+        let mut rs = st.responses.lock().unwrap();
+        for (fr, &p) in frames.iter().zip(preds.iter()) {
+            rs.push((fr.id, p));
+        }
+    }
+    Ok(())
+}
+
+/// Drain every queue with a pool of `cfg.workers` threads until `stop`
+/// is set **and** all queues are empty; each popped frame is answered
+/// exactly once.  Workers sweep the models round-robin from a per-worker
+/// offset so all models make progress even with one worker, and park
+/// briefly when a full sweep finds nothing.
+pub fn drain(
+    queues: &[BatchQueue],
+    entries: &[Arc<ModelEntry>],
+    evals: &[Box<dyn Evaluator + Send + Sync + '_>],
+    cfg: &DrainConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let n = queues.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let workers = cfg.workers.max(1);
+    // batch = 0 would pop nothing forever and make the exit condition
+    // (stop + empty queues) unreachable; clamp here so every caller of
+    // the public DrainConfig is safe, not just server::run.
+    let batch = cfg.batch.max(1);
+    let results: Vec<Result<()>> = pool::scope_map_with(
+        workers,
+        workers,
+        || (Vec::<Frame>::new(), Vec::<u8>::new(), Vec::<i32>::new()),
+        |scratch, w| {
+            let (frames, xbuf, preds) = scratch;
+            loop {
+                // Read before the sweep: frames seen after `stop` was set
+                // still drain (producers are done once it is set), and the
+                // exit check below re-verifies emptiness.
+                let stopping = stop.load(Ordering::Acquire);
+                let mut did_work = false;
+                for k in 0..n {
+                    let m = (w + k) % n;
+                    frames.clear();
+                    if queues[m].pop_batch(batch, cfg.max_wait, stopping, frames) == 0 {
+                        continue;
+                    }
+                    did_work = true;
+                    let eval = evals[m].as_ref();
+                    process_batch(&queues[m], &entries[m], eval, cfg, frames, xbuf, preds)?;
+                }
+                if !did_work {
+                    if stopping && queues.iter().all(|q| q.is_empty()) {
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        },
+    );
+    results.into_iter().collect()
+}

@@ -1,0 +1,173 @@
+//! Scenario-driven load generation: sensor threads that turn a traffic
+//! shape into [`Frame`]s pushed at the per-model [`BatchQueue`]s.
+//!
+//! Four shapes (`--scenario`):
+//!
+//! - `steady` — fixed inter-arrival at the offered rate, frames routed
+//!   round-robin across models.  The zero-drama baseline: at the default
+//!   rate nothing sheds and accuracy equals the direct evaluator's.
+//! - `bursty` — Poisson arrivals (exponential gaps) modulated by an
+//!   on/off square wave: 250 ms bursts at 1.8× the offered rate followed
+//!   by 250 ms lulls at 0.2× (duty pair averages to 1.0, so the mean
+//!   offered rate stays `rate_hz`).  Exercises queue growth and shedding.
+//! - `ramp` — rate climbs linearly from 0.1× to 2× the offered rate over
+//!   the run, so the server crosses its saturation point mid-run.
+//! - `fanin` — the paper's multi-sensory story: each event is one frame
+//!   *window* fanned out to **every** hosted model simultaneously (the
+//!   wearable's shared sensor window feeding several bespoke
+//!   classifiers).  `rate_hz` is the window rate, so each model sees the
+//!   full rate.
+//!
+//! Each sensor thread owns a deterministic [`Rng`] seeded from
+//! `seed ^ sensor`, so a serve run is reproducible modulo OS scheduling.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::bail;
+
+use crate::server::batcher::{BatchQueue, Frame};
+use crate::server::registry::ModelEntry;
+use crate::server::ServeConfig;
+use crate::util::prng::Rng;
+
+/// Traffic shape for a serve run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    Steady,
+    Bursty,
+    Ramp,
+    FanIn,
+}
+
+impl Scenario {
+    pub fn label(self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::Ramp => "ramp",
+            Scenario::FanIn => "fanin",
+        }
+    }
+}
+
+impl FromStr for Scenario {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Scenario> {
+        Ok(match s {
+            "steady" => Scenario::Steady,
+            "bursty" | "poisson" => Scenario::Bursty,
+            "ramp" => Scenario::Ramp,
+            "fanin" | "fan-in" => Scenario::FanIn,
+            other => bail!("unknown scenario `{other}` (want steady|bursty|ramp|fanin)"),
+        })
+    }
+}
+
+/// Burst phase length for the `bursty` scenario.
+const BURST_PHASE_S: f64 = 0.25;
+/// Longest single sleep *chunk*; keeps sensors responsive to the
+/// deadline without flooring long inter-arrival gaps (the full gap is
+/// always slept, in chunks of at most this).
+const MAX_SLEEP_CHUNK: Duration = Duration::from_millis(50);
+
+/// One sensor thread's generation loop: compute the scenario's current
+/// inter-arrival gap, sleep it, and push the next frame(s).  All
+/// offered/accepted/shed accounting lives in each queue's
+/// [`crate::server::ModelStats`].
+pub fn run_sensor(
+    sensor: usize,
+    entries: &[Arc<ModelEntry>],
+    queues: &[BatchQueue],
+    cfg: &ServeConfig,
+    start: Instant,
+    deadline: Instant,
+    next_id: &AtomicU64,
+) {
+    let n_models = entries.len();
+    let sensors = cfg.sensors.max(1) as f64;
+    let per_sensor = (cfg.rate_hz / sensors).max(1e-6);
+    let total_s = cfg.duration.as_secs_f64().max(1e-9);
+    let mut rng = Rng::new(cfg.seed ^ (0xC0FFEE + sensor as u64));
+    let mut target = sensor % n_models;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let t = (now - start).as_secs_f64();
+        let gap = match cfg.scenario {
+            Scenario::Steady | Scenario::FanIn => 1.0 / per_sensor,
+            Scenario::Bursty => {
+                // 1.8x / 0.2x phases average to 1.0: the mean offered
+                // rate stays rate_hz, comparable to steady at the same
+                // --rate.
+                let hot = ((t / BURST_PHASE_S) as u64) % 2 == 0;
+                let rate = per_sensor * if hot { 1.8 } else { 0.2 };
+                -rng.f64().max(1e-12).ln() / rate
+            }
+            Scenario::Ramp => {
+                let rate = per_sensor * (0.1 + 1.9 * (t / total_s).min(1.0));
+                1.0 / rate
+            }
+        };
+        // Sleep the whole gap in deadline-responsive chunks: a single
+        // capped sleep would silently inflate low offered rates (every
+        // iteration would push after at most one chunk).
+        let wake = now + Duration::from_secs_f64(gap);
+        loop {
+            let cur = Instant::now();
+            if cur >= wake || cur >= deadline {
+                break;
+            }
+            std::thread::sleep((wake - cur).min(MAX_SLEEP_CHUNK));
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        match cfg.scenario {
+            Scenario::FanIn => {
+                // One sensor window feeds every model: same random draw,
+                // folded into each model's own sample space.
+                let window = rng.next_u64();
+                let enqueued = Instant::now();
+                for (entry, queue) in entries.iter().zip(queues) {
+                    let frame = Frame {
+                        id: next_id.fetch_add(1, Ordering::Relaxed),
+                        sample: (window % entry.test.len() as u64) as usize,
+                        enqueued,
+                    };
+                    queue.push(frame);
+                }
+            }
+            _ => {
+                let entry = &entries[target];
+                let frame = Frame {
+                    id: next_id.fetch_add(1, Ordering::Relaxed),
+                    sample: rng.usize_below(entry.test.len()),
+                    enqueued: Instant::now(),
+                };
+                queues[target].push(frame);
+                target = (target + 1) % n_models;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_labels_roundtrip() {
+        for s in [Scenario::Steady, Scenario::Bursty, Scenario::Ramp, Scenario::FanIn] {
+            assert_eq!(s.label().parse::<Scenario>().unwrap(), s);
+        }
+        assert_eq!("poisson".parse::<Scenario>().unwrap(), Scenario::Bursty);
+        assert_eq!("fan-in".parse::<Scenario>().unwrap(), Scenario::FanIn);
+        assert!("nosuch".parse::<Scenario>().is_err());
+    }
+}

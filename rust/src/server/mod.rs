@@ -1,0 +1,258 @@
+//! Multi-tenant model server: the deployment story of the paper's intro
+//! (wearables streaming multi-sensory frames into several bespoke
+//! sequential MLPs) as a first-class subsystem.
+//!
+//! Three pieces (DESIGN.md §Server):
+//!
+//! - [`registry`] — [`registry::ModelRegistry`]: every hosted dataset's
+//!   artifacts (model, masks, [`crate::model::ApproxTables`], and — via
+//!   warmup — the gatesim circuit and its compiled
+//!   [`crate::sim::SimPlan`]) loaded once and shared read-only.
+//! - [`batcher`] — per-model bounded [`batcher::BatchQueue`]s with shed
+//!   counters, drained by a [`crate::util::pool::scope_map_with`] worker
+//!   pool running dynamic batching with a `max_wait` linger.
+//! - [`loadgen`] — scenario-driven sensors ([`loadgen::Scenario`]:
+//!   steady / bursty / ramp / fanin) pushing frames at the queues.
+//!
+//! [`run`] wires them together and returns a [`ServerReport`] with
+//! per-model requests, p50/p99 latency, shed count, SLO violations, and
+//! accuracy.  Under `steady` at the default rate nothing sheds and every
+//! prediction is bit-identical to a direct [`Evaluator::predict`] call
+//! (`tests/server_batching.rs`).
+
+pub mod batcher;
+pub mod loadgen;
+pub mod registry;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::data::ArtifactStore;
+use crate::runtime::{Backend, Evaluator};
+use crate::util::pool::default_threads;
+use crate::util::stats;
+
+pub use batcher::{BatchQueue, DrainConfig, Frame, ModelStats};
+pub use loadgen::Scenario;
+pub use registry::{ModelEntry, ModelRegistry};
+
+/// Server configuration (see `config` for the `[serve]` file section;
+/// every key has a CLI override).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Datasets to host concurrently (one model + queue each).
+    pub datasets: Vec<String>,
+    pub scenario: Scenario,
+    /// Offered load, frames per second across all sensors and models
+    /// (for `fanin`: window rate — each window feeds every model).
+    pub rate_hz: f64,
+    pub duration: Duration,
+    /// Max time the batcher lets a sub-full batch linger.
+    pub max_wait: Duration,
+    pub sensors: usize,
+    /// Drain workers (0 = one per core).
+    pub workers: usize,
+    /// Max frames per executed batch.
+    pub batch: usize,
+    /// Bounded queue capacity per model; overflow is shed.
+    pub queue_cap: usize,
+    /// Per-frame latency SLO in milliseconds.
+    pub slo_ms: f64,
+    pub seed: u64,
+    /// Evaluator backend on the request path (`Auto` → native; PJRT is
+    /// rejected — its handles cannot cross the worker pool).
+    pub backend: Backend,
+    /// Host deterministic synthetic models instead of store artifacts
+    /// (artifact-free smoke/bench mode; accuracy 1.0 expected).
+    pub synthetic: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            datasets: vec!["spectf".into(), "arrhythmia".into(), "gas".into()],
+            scenario: Scenario::Steady,
+            rate_hz: 2000.0,
+            duration: Duration::from_secs(3),
+            max_wait: Duration::from_millis(2),
+            sensors: 4,
+            workers: 0,
+            batch: 64,
+            queue_cap: 1024,
+            slo_ms: 50.0,
+            seed: 7,
+            backend: Backend::Auto,
+            synthetic: false,
+        }
+    }
+}
+
+/// Request-path summary for one hosted model.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub name: String,
+    /// Frames offered (answered + shed).
+    pub requests: usize,
+    pub answered: usize,
+    pub shed: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub slo_ms: f64,
+    pub slo_violations: usize,
+    pub accuracy: f64,
+}
+
+/// Whole-run summary across every hosted model.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    /// Resolved backend that actually served the run.
+    pub backend: &'static str,
+    pub scenario: Scenario,
+    pub workers: usize,
+    pub elapsed_s: f64,
+    pub models: Vec<ModelReport>,
+}
+
+impl ServerReport {
+    pub fn total_requests(&self) -> usize {
+        self.models.iter().map(|m| m.requests).sum()
+    }
+
+    pub fn total_answered(&self) -> usize {
+        self.models.iter().map(|m| m.answered).sum()
+    }
+
+    pub fn total_shed(&self) -> usize {
+        self.models.iter().map(|m| m.shed).sum()
+    }
+
+    pub fn total_rps(&self) -> f64 {
+        self.total_answered() as f64 / self.elapsed_s.max(1e-9)
+    }
+}
+
+/// Resolve the serve-path backend: `Auto` prefers native (the worker
+/// pool needs `Send + Sync` evaluators, which rules out PJRT).
+fn resolve_serve_backend(b: Backend) -> Backend {
+    match b {
+        Backend::Auto => Backend::Native,
+        other => other,
+    }
+}
+
+/// Run the multi-model streaming workload and report per-model stats.
+pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
+    ensure!(!cfg.datasets.is_empty(), "serve: no datasets requested");
+    let registry = if cfg.synthetic {
+        ModelRegistry::synthetic(&cfg.datasets, cfg.seed)
+    } else {
+        ModelRegistry::from_store(store, &cfg.datasets)?
+    };
+    let backend = resolve_serve_backend(cfg.backend);
+    // Sim shards stay at 1: the drain workers are already the
+    // parallelism, and nesting pools would oversubscribe to threads².
+    let evals = registry.evaluators(backend, 1)?;
+    registry.warmup(&evals)?;
+
+    let workers = if cfg.workers == 0 { default_threads() } else { cfg.workers.max(1) };
+    let queues: Vec<BatchQueue> =
+        registry.entries().iter().map(|_| BatchQueue::new(cfg.queue_cap)).collect();
+    let drain_cfg = DrainConfig {
+        workers,
+        batch: cfg.batch.max(1),
+        max_wait: cfg.max_wait,
+        slo_ms: cfg.slo_ms,
+        collect_responses: false,
+    };
+    let stop = AtomicBool::new(false);
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+
+    let entries = registry.entries();
+    let queues_ref = &queues;
+    let stop_ref = &stop;
+    std::thread::scope(|scope| -> Result<()> {
+        // Producer side: sensors run in a nested scope so `stop` flips
+        // only after every producer has exited — workers then drain the
+        // remainder and the exactly-once guarantee holds through exit.
+        scope.spawn(move || {
+            let next_id = AtomicU64::new(0);
+            let next_id = &next_id;
+            std::thread::scope(|sensors| {
+                for s in 0..cfg.sensors.max(1) {
+                    sensors.spawn(move || {
+                        loadgen::run_sensor(s, entries, queues_ref, cfg, start, deadline, next_id)
+                    });
+                }
+            });
+            stop_ref.store(true, Ordering::Release);
+        });
+        batcher::drain(queues_ref, entries, &evals, &drain_cfg, stop_ref)
+    })?;
+
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let eval_name = evals.first().map(|e| e.name()).unwrap_or(backend.label());
+    let mut models = Vec::with_capacity(registry.len());
+    for (entry, queue) in registry.entries().iter().zip(&queues) {
+        let st = &queue.stats;
+        let answered = st.answered.load(Ordering::Relaxed);
+        let batches = st.batches.load(Ordering::Relaxed);
+        let lat = st.latencies_ms.lock().unwrap();
+        models.push(ModelReport {
+            name: entry.name.clone(),
+            requests: st.submitted.load(Ordering::Relaxed),
+            answered,
+            shed: st.shed.load(Ordering::Relaxed),
+            batches,
+            mean_batch: answered as f64 / batches.max(1) as f64,
+            throughput_rps: answered as f64 / elapsed_s.max(1e-9),
+            p50_ms: stats::percentile(&lat, 50.0),
+            p99_ms: stats::percentile(&lat, 99.0),
+            slo_ms: cfg.slo_ms,
+            slo_violations: st.slo_violations.load(Ordering::Relaxed),
+            accuracy: st.correct.load(Ordering::Relaxed) as f64 / answered.max(1) as f64,
+        });
+    }
+    Ok(ServerReport {
+        backend: eval_name,
+        scenario: cfg.scenario,
+        workers,
+        elapsed_s,
+        models,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_hosts_three_datasets() {
+        let c = ServeConfig::default();
+        assert_eq!(c.datasets.len(), 3);
+        assert_eq!(c.scenario, Scenario::Steady);
+        assert!(c.queue_cap >= 1);
+        assert!(!c.synthetic);
+    }
+
+    #[test]
+    fn auto_backend_resolves_to_native_for_serving() {
+        assert_eq!(resolve_serve_backend(Backend::Auto), Backend::Native);
+        assert_eq!(resolve_serve_backend(Backend::GateSim), Backend::GateSim);
+    }
+
+    #[test]
+    fn empty_dataset_list_rejected() {
+        let store = ArtifactStore::new("/nonexistent");
+        let cfg = ServeConfig {
+            datasets: Vec::new(),
+            ..ServeConfig::default()
+        };
+        assert!(run(&store, &cfg).is_err());
+    }
+}

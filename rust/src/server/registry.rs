@@ -1,0 +1,193 @@
+//! Model registry: every hosted model's artifacts, loaded once and shared
+//! read-only across the whole server.
+//!
+//! A [`ModelEntry`] bundles everything the request path needs for one
+//! dataset — the quantized model, the test split frames are drawn from,
+//! the feature/approximation masks, and the [`ApproxTables`] — so the
+//! batcher workers never touch the [`ArtifactStore`] (or any other
+//! mutable state) while traffic is flowing.  Evaluators are built through
+//! [`crate::runtime::build_evaluator`] and warmed before the load
+//! generator starts, which forces lazy state (the gatesim circuit and its
+//! compiled [`crate::sim::SimPlan`]) off the request path.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::{ArtifactStore, Split};
+use crate::model::{synth, ApproxTables, QuantModel};
+use crate::runtime::{build_evaluator, Backend, EvalOpts, Evaluator};
+
+/// One hosted model and the read-only state its traffic needs.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub model: QuantModel,
+    /// Frames are sampled from this split; `ys` scores accuracy.
+    pub test: Split,
+    pub feat_mask: Vec<u8>,
+    pub approx_mask: Vec<u8>,
+    pub tables: ApproxTables,
+}
+
+impl ModelEntry {
+    /// Entry serving the full-precision model (all features, no neuron
+    /// approximation) — the serve-mode default.
+    pub fn full_precision(name: &str, model: QuantModel, test: Split) -> ModelEntry {
+        let feat_mask = vec![1u8; model.features];
+        let approx_mask = vec![0u8; model.hidden];
+        let tables = ApproxTables::disabled(model.hidden);
+        ModelEntry {
+            name: name.to_string(),
+            model,
+            test,
+            feat_mask,
+            approx_mask,
+            tables,
+        }
+    }
+}
+
+/// The set of models one server instance hosts, in request-routing order.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<Arc<ModelEntry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Load every requested dataset's artifacts exactly once (duplicate
+    /// names collapse to one entry).
+    pub fn from_store(store: &ArtifactStore, names: &[String]) -> Result<ModelRegistry> {
+        let mut reg = ModelRegistry::new();
+        for name in names {
+            if reg.get(name).is_some() {
+                continue;
+            }
+            let model = store
+                .model(name)
+                .with_context(|| format!("loading model artifacts for `{name}`"))?;
+            let ds = store
+                .dataset(name)
+                .with_context(|| format!("loading dataset artifacts for `{name}`"))?;
+            ensure!(!ds.test.is_empty(), "dataset `{name}` has an empty test split");
+            reg.insert(ModelEntry::full_precision(name, model, ds.test));
+        }
+        Ok(reg)
+    }
+
+    /// Artifact-free registry of deterministic synthetic models (one per
+    /// requested name, sizes varied per slot) with self-labeled splits —
+    /// accuracy 1.0 on an exact backend, making serve accuracy a
+    /// correctness signal.  Used by `--synthetic`, the batching tests,
+    /// and the `serve_scaling` bench.
+    pub fn synthetic(names: &[String], seed: u64) -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        for (i, name) in names.iter().enumerate() {
+            if reg.get(name).is_some() {
+                continue;
+            }
+            let k = i as u64;
+            let (f, h, c) = (8 + 2 * (i % 3), 5 + i % 3, 2 + i % 3);
+            let model = synth::rand_model(seed.wrapping_add(k), f, h, c);
+            let test = synth::rand_split(&model, seed.wrapping_add(0x5EED + k), 48);
+            reg.insert(ModelEntry::full_precision(name, model, test));
+        }
+        reg
+    }
+
+    pub fn insert(&mut self, entry: ModelEntry) {
+        self.entries.push(Arc::new(entry));
+    }
+
+    pub fn entries(&self) -> &[Arc<ModelEntry>] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<ModelEntry>> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Build one thread-shareable evaluator per entry via the unified
+    /// [`build_evaluator`] factory.  `sim_threads` is forced low (the
+    /// batcher workers are already the parallelism); PJRT is rejected
+    /// because its handles cannot cross the worker pool.
+    pub fn evaluators(
+        &self,
+        backend: Backend,
+        sim_threads: usize,
+    ) -> Result<Vec<Box<dyn Evaluator + Send + Sync + '_>>> {
+        if backend == Backend::Pjrt {
+            bail!(
+                "serve: PJRT handles are thread-bound (!Send) and cannot back the \
+                 multi-model worker pool; use --backend native|gatesim"
+            );
+        }
+        let opts = EvalOpts {
+            sim_threads: sim_threads.max(1),
+            ..EvalOpts::default()
+        };
+        self.entries
+            .iter()
+            .map(|e| build_evaluator(backend, None, &e.model, &opts)?.into_shared())
+            .collect()
+    }
+
+    /// Run one frame through every evaluator, forcing lazily-built state
+    /// (gatesim circuit generation + plan compilation) before traffic.
+    pub fn warmup(&self, evals: &[Box<dyn Evaluator + Send + Sync + '_>]) -> Result<()> {
+        let mut out = Vec::with_capacity(1);
+        for (entry, eval) in self.entries.iter().zip(evals) {
+            eval.predict_into(
+                entry.test.row(0),
+                1,
+                &entry.feat_mask,
+                &entry.approx_mask,
+                &entry.tables,
+                &mut out,
+            )
+            .with_context(|| format!("warming up `{}`", entry.name))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_registry_dedupes_and_self_labels() {
+        let names: Vec<String> = ["a", "b", "a", "c"].iter().map(|s| s.to_string()).collect();
+        let reg = ModelRegistry::synthetic(&names, 42);
+        assert_eq!(reg.len(), 3);
+        assert!(reg.get("b").is_some());
+        assert!(reg.get("nosuch").is_none());
+        let evals = reg.evaluators(Backend::Native, 1).unwrap();
+        reg.warmup(&evals).unwrap();
+        for (entry, eval) in reg.entries().iter().zip(&evals) {
+            let acc = eval
+                .accuracy(&entry.test, &entry.feat_mask, &entry.approx_mask, &entry.tables)
+                .unwrap();
+            assert_eq!(acc, 1.0, "synthetic split must be self-labeled");
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_rejected_for_worker_pool() {
+        let names = vec!["x".to_string()];
+        let reg = ModelRegistry::synthetic(&names, 1);
+        assert!(reg.evaluators(Backend::Pjrt, 1).is_err());
+    }
+}

@@ -1,50 +1,12 @@
-//! Shared support for integration tests and benches: a deterministic
-//! random [`QuantModel`] builder.  The crate-internal
-//! `circuits::testutil::rand_model` is `#[cfg(test)]`-gated and therefore
-//! invisible to integration tests and benches, so the external harnesses
-//! share this one instead of each carrying a copy.
+//! Shared support for integration tests and benches.
+//!
+//! The deterministic random-model builder now lives in the library
+//! (`printed_mlp::model::synth`, which also feeds `serve --synthetic` and
+//! the `serve_scaling` bench); this shim keeps the historical
+//! `common::rand_model` import path for the external harnesses.  Values
+//! are bit-identical to the pre-move generator at equal seeds.
 
 #![allow(dead_code)]
+#![allow(unused_imports)]
 
-use printed_mlp::model::QuantModel;
-use printed_mlp::util::prng::Rng;
-
-/// Random valid pow2-quantized model (signs in {-1,0,1}, powers in
-/// [0, pmax]); fully determined by `seed`.
-pub fn rand_model(seed: u64, features: usize, hidden: usize, classes: usize) -> QuantModel {
-    let mut r = Rng::new(seed);
-    let pmax = 6u32;
-    let mut w1p = vec![0i32; hidden * features];
-    let mut w1s = vec![0i32; hidden * features];
-    for i in 0..hidden * features {
-        w1p[i] = r.below(pmax as u64 + 1) as i32;
-        w1s[i] = [-1, 0, 1][r.usize_below(3)];
-    }
-    let mut w2p = vec![0i32; classes * hidden];
-    let mut w2s = vec![0i32; classes * hidden];
-    for i in 0..classes * hidden {
-        w2p[i] = r.below(pmax as u64 + 1) as i32;
-        w2s[i] = [-1, 0, 1][r.usize_below(3)];
-    }
-    QuantModel {
-        name: format!("rand{seed}"),
-        features,
-        classes,
-        hidden,
-        in_bits: 4,
-        w_bits: 8,
-        pmax,
-        trunc: (r.below(6) + 1) as u32,
-        seq_clock_ms: 100.0,
-        comb_clock_ms: 320.0,
-        float_acc: 0.0,
-        train_acc: 0.0,
-        test_acc: 0.0,
-        w1p,
-        w1s,
-        b1: (0..hidden).map(|_| r.i32_range(-300, 300)).collect(),
-        w2p,
-        w2s,
-        b2: (0..classes).map(|_| r.i32_range(-300, 300)).collect(),
-    }
-}
+pub use printed_mlp::model::synth::rand_model;

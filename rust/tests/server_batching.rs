@@ -1,0 +1,213 @@
+//! Batcher correctness for the multi-tenant model server
+//! (`printed_mlp::server`), artifact-free via synthetic registries:
+//!
+//! - every submitted (non-shed) frame is answered exactly once, through
+//!   drain-to-exit;
+//! - batched predictions are bit-identical to a direct
+//!   [`Evaluator::predict`] call on the same rows;
+//! - shedding triggers exactly at queue capacity and nowhere else;
+//! - the steady scenario at a modest rate serves ≥ 3 models end-to-end
+//!   with zero shed and accuracy 1.0 (self-labeled splits + exact
+//!   backend ⇒ accuracy is a bit-exactness check);
+//! - fan-in feeds every hosted model the same window count.
+
+use std::sync::atomic::AtomicBool;
+use std::time::{Duration, Instant};
+
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::runtime::{Backend, Evaluator};
+use printed_mlp::server::{self, batcher, BatchQueue, DrainConfig, Frame, ModelRegistry, Scenario};
+use printed_mlp::util::prng::Rng;
+
+fn synthetic_registry(n: usize, seed: u64) -> ModelRegistry {
+    let names: Vec<String> = (0..n).map(|i| format!("syn{i}")).collect();
+    ModelRegistry::synthetic(&names, seed)
+}
+
+#[test]
+fn every_frame_answered_exactly_once_and_bit_identical() {
+    let reg = synthetic_registry(3, 21);
+    let evals = reg.evaluators(Backend::Native, 1).unwrap();
+    let entries = reg.entries();
+    let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
+
+    // Push a known frame stream: ids are globally unique, samples random.
+    let mut rng = Rng::new(5);
+    let mut pushed: Vec<Vec<(u64, usize)>> = vec![Vec::new(); entries.len()];
+    let mut next_id = 0u64;
+    for _ in 0..400 {
+        let m = rng.usize_below(entries.len());
+        let sample = rng.usize_below(entries[m].test.len());
+        let ok = queues[m].push(Frame {
+            id: next_id,
+            sample,
+            enqueued: Instant::now(),
+        });
+        assert!(ok, "queue far below capacity must accept");
+        pushed[m].push((next_id, sample));
+        next_id += 1;
+    }
+
+    // Drain to exit: stop is already set, so workers force-pop and quit
+    // once the queues are empty.
+    let stop = AtomicBool::new(true);
+    let cfg = DrainConfig {
+        workers: 4,
+        batch: 16,
+        max_wait: Duration::from_millis(1),
+        slo_ms: 1e9,
+        collect_responses: true,
+    };
+    batcher::drain(&queues, entries, &evals, &cfg, &stop).unwrap();
+
+    for (m, queue) in queues.iter().enumerate() {
+        let mut responses = queue.stats.responses.lock().unwrap().clone();
+        assert_eq!(
+            responses.len(),
+            pushed[m].len(),
+            "model {m}: every frame answered exactly once"
+        );
+        responses.sort_by_key(|&(id, _)| id);
+        let mut ids: Vec<u64> = responses.iter().map(|&(id, _)| id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), responses.len(), "model {m}: duplicate answers");
+
+        // Bit-identical to a direct predict on the same rows.
+        let entry = &entries[m];
+        let f = entry.model.features;
+        let mut xs = Vec::with_capacity(pushed[m].len() * f);
+        for &(_, sample) in &pushed[m] {
+            xs.extend_from_slice(entry.test.row(sample));
+        }
+        let want = evals[m]
+            .predict(&xs, pushed[m].len(), &entry.feat_mask, &entry.approx_mask, &entry.tables)
+            .unwrap();
+        // `pushed` is in id order per model, `responses` sorted by id.
+        for (i, (&(id, _), &(rid, pred))) in
+            pushed[m].iter().zip(responses.iter()).enumerate()
+        {
+            assert_eq!(id, rid, "model {m}: response ids track pushed ids");
+            assert_eq!(pred, want[i], "model {m} frame {id}: prediction diverges");
+        }
+    }
+}
+
+#[test]
+fn shedding_triggers_exactly_at_capacity() {
+    let cap = 4;
+    let q = BatchQueue::new(cap);
+    let frame = |id: u64| Frame {
+        id,
+        sample: 0,
+        enqueued: Instant::now(),
+    };
+    for id in 0..cap as u64 {
+        assert!(q.push(frame(id)), "below capacity must accept");
+    }
+    assert_eq!(q.stats.shed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // One over: shed, and only that one.
+    assert!(!q.push(frame(99)));
+    assert_eq!(q.stats.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(q.len(), cap);
+    // Draining frees capacity again.
+    let mut out = Vec::new();
+    assert_eq!(q.pop_batch(cap, Duration::ZERO, true, &mut out), cap);
+    assert!(q.push(frame(100)), "post-drain push must succeed");
+    assert_eq!(q.stats.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(
+        q.stats.submitted.load(std::sync::atomic::Ordering::Relaxed),
+        cap + 2
+    );
+}
+
+#[test]
+fn subfull_batches_linger_until_max_wait_or_force() {
+    let q = BatchQueue::new(64);
+    for id in 0..3 {
+        q.push(Frame {
+            id,
+            sample: 0,
+            enqueued: Instant::now(),
+        });
+    }
+    let mut out = Vec::new();
+    // Fresh + sub-full + long linger: held back.
+    assert_eq!(q.pop_batch(8, Duration::from_secs(600), false, &mut out), 0);
+    // Force (server draining): released.
+    assert_eq!(q.pop_batch(8, Duration::from_secs(600), true, &mut out), 3);
+    // A full batch never lingers.
+    for id in 0..8 {
+        q.push(Frame {
+            id,
+            sample: 0,
+            enqueued: Instant::now(),
+        });
+    }
+    out.clear();
+    assert_eq!(q.pop_batch(8, Duration::from_secs(600), false, &mut out), 8);
+}
+
+#[test]
+fn steady_three_models_zero_shed_exact_accuracy() {
+    let store = ArtifactStore::new("/nonexistent-artifacts-root");
+    let cfg = server::ServeConfig {
+        datasets: vec!["s0".into(), "s1".into(), "s2".into()],
+        scenario: Scenario::Steady,
+        rate_hz: 400.0,
+        duration: Duration::from_millis(300),
+        workers: 2,
+        queue_cap: 4096,
+        backend: Backend::Native,
+        synthetic: true,
+        seed: 11,
+        ..server::ServeConfig::default()
+    };
+    let rep = server::run(&store, &cfg).unwrap();
+    assert_eq!(rep.backend, "native");
+    assert_eq!(rep.models.len(), 3, "hosts three models concurrently");
+    assert!(rep.total_answered() > 0, "steady load must serve traffic");
+    for m in &rep.models {
+        assert_eq!(m.shed, 0, "{}: steady default rate must not shed", m.name);
+        assert_eq!(
+            m.requests, m.answered,
+            "{}: every submitted frame answered",
+            m.name
+        );
+        assert!(m.answered > 0, "{}: round-robin reaches every model", m.name);
+        assert_eq!(
+            m.accuracy, 1.0,
+            "{}: self-labeled split + exact backend ⇒ bit-exact serving",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn fanin_feeds_every_model_equally() {
+    let store = ArtifactStore::new("/nonexistent-artifacts-root");
+    let cfg = server::ServeConfig {
+        datasets: vec!["a".into(), "b".into(), "c".into()],
+        scenario: Scenario::FanIn,
+        rate_hz: 300.0,
+        duration: Duration::from_millis(250),
+        sensors: 2,
+        workers: 2,
+        queue_cap: 4096,
+        backend: Backend::Native,
+        synthetic: true,
+        ..server::ServeConfig::default()
+    };
+    let rep = server::run(&store, &cfg).unwrap();
+    assert_eq!(rep.models.len(), 3);
+    let first = rep.models[0].requests;
+    assert!(first > 0, "fan-in generates traffic");
+    for m in &rep.models {
+        assert_eq!(
+            m.requests, first,
+            "fan-in submits one frame per model per window"
+        );
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.requests, m.answered);
+        assert_eq!(m.accuracy, 1.0);
+    }
+}
