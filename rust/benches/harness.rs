@@ -44,6 +44,23 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Write a machine-readable bench trajectory (e.g. `BENCH_sim.json`)
+/// next to the markdown/CSV results under `artifacts/results/`, so perf
+/// regressions are diffable across PRs.  Failures are notes, not panics
+/// — a read-only checkout must not kill the bench.
+pub fn write_results_json(file: &str, json: &printed_mlp::util::json::Json) {
+    let dir = printed_mlp::data::ArtifactStore::discover().results_dir();
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        println!("note: cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join(file);
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("bench trajectory written to {}", path.display()),
+        Err(e) => println!("note: cannot write {}: {e}", path.display()),
+    }
+}
+
 /// PJRT-gated entry: an engine when a client comes up, else a printed
 /// skip note (the vendored `xla` stub always fails — see rust/README.md).
 /// Lets the non-PJRT sections of a bench still run and report.

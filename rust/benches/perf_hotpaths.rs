@@ -63,6 +63,7 @@ fn main() {
                     split.len(),
                     m.features,
                     1,
+                    1, // W=1: keep the per-thread metric comparable with §Perf records
                 );
                 std::hint::black_box(preds.len());
             },
@@ -76,6 +77,31 @@ fn main() {
     println!(
         "         == compiled is {:.2}x interpreted (single thread)",
         pair_ms[0] / pair_ms[1]
+    );
+
+    // L3a2: the same path at the auto-picked super-lane width (the
+    // production default; the W sweep lives in `sim_throughput`).
+    let lw = printed_mlp::sim::lane_words_default();
+    let r = harness::bench(
+        &format!("L3a2 sim multicycle har, 128smp, 1thr, compiled W={lw}"),
+        5,
+        || {
+            let preds = testbench::run_sequential_plan(
+                &circ,
+                &compiled,
+                &split.xs,
+                split.len(),
+                m.features,
+                1,
+                lw,
+            );
+            std::hint::black_box(preds.len());
+        },
+    );
+    println!(
+        "         -> {:.1} M lane-gate-evals/s | {:.2}x vs compiled W=1",
+        gate_evals * (128.0 / 64.0) / r.mean_ms * 1e-3,
+        pair_ms[1] / r.mean_ms
     );
 
     let fm = vec![1u8; m.features];

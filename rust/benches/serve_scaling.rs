@@ -19,10 +19,13 @@ use std::time::Duration;
 use printed_mlp::data::ArtifactStore;
 use printed_mlp::runtime::Backend;
 use printed_mlp::server::{self, Scenario, ServeConfig};
+use printed_mlp::util::json::{num, obj, s, Json};
 use printed_mlp::util::pool;
 
 fn main() {
-    harness::section("serve_scaling — req/s and p99 vs workers (3 synthetic models, gatesim, steady)");
+    harness::section(
+        "serve_scaling — req/s and p99 vs workers (3 synthetic models, gatesim, steady)",
+    );
     let store = ArtifactStore::discover(); // unused in synthetic mode
     let max_workers = pool::default_threads();
     let mut workers = 1usize;
@@ -35,9 +38,10 @@ fn main() {
         counts.push(max_workers);
     }
     println!(
-        "{:>8} {:>10} {:>10} {:>10} {:>8} {:>8}",
-        "workers", "req/s", "p50 ms", "p99 ms", "shed", "acc"
+        "{:>8} {:>10} {:>10} {:>10} {:>8} {:>6} {:>8}",
+        "workers", "req/s", "p50 ms", "p99 ms", "shed", "fill", "acc"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for &w in &counts {
         let cfg = ServeConfig {
             datasets: vec!["syn0".into(), "syn1".into(), "syn2".into()],
@@ -55,16 +59,39 @@ fn main() {
         let p50 = rep.models.iter().map(|m| m.p50_ms).fold(0.0f64, f64::max);
         let p99 = rep.models.iter().map(|m| m.p99_ms).fold(0.0f64, f64::max);
         let acc = rep.models.iter().map(|m| m.accuracy).fold(1.0f64, f64::min);
+        let fill = rep.models.iter().map(|m| m.fill).fold(1.0f64, f64::min);
         println!(
-            "{:>8} {:>10.0} {:>10.2} {:>10.2} {:>8} {:>8.3}",
+            "{:>8} {:>10.0} {:>10.2} {:>10.2} {:>8} {:>6.2} {:>8.3}",
             w,
             rep.total_rps(),
             p50,
             p99,
             rep.total_shed(),
+            fill,
             acc
         );
         assert_eq!(acc, 1.0, "synthetic serving must stay bit-exact");
+        rows.push(obj(vec![
+            ("workers", num(w as f64)),
+            ("rps", num(rep.total_rps())),
+            ("p50_ms", num(p50)),
+            ("p99_ms", num(p99)),
+            ("shed", num(rep.total_shed() as f64)),
+            ("fill", num(fill)),
+            ("accuracy", num(acc)),
+        ]));
     }
-    println!("\n(worst per-model p50/p99 shown; shed >0 means the offered rate beat the pool)");
+    println!(
+        "\n(worst per-model p50/p99 and fill shown; shed >0 means the offered rate \
+         beat the pool; fill <1 means partial super-lane blocks at the linger tail)"
+    );
+    harness::write_results_json(
+        "BENCH_serve.json",
+        &obj(vec![
+            ("bench", s("serve_scaling")),
+            ("backend", s("gatesim")),
+            ("scenario", s("steady")),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
 }

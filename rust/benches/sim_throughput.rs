@@ -1,15 +1,21 @@
-//! Sharded gate-level simulation throughput: compiled (micro-op stream)
-//! vs interpreted (levelized `Vec<Cell>` walk) plans at 1..N threads on a
-//! seq_multicycle circuit — gate-evals/sec, thread-scaling speedup, the
-//! compiled-vs-interpreted speedup at every thread count, and the one-off
-//! plan-compile cost.
+//! Sharded gate-level simulation throughput: super-lane width (W×u64
+//! lane blocks + opcode-run kernels) and thread scaling, compiled
+//! (micro-op stream) vs interpreted (levelized `Vec<Cell>` walk) plans
+//! on seq_multicycle circuits — samples/sec, speedup vs the W=1 compiled
+//! path, thread-scaling speedup, and the one-off plan-compile cost.
 //!
-//! Artifact-free — the circuit comes from a random `QuantModel` — so this
+//! Artifact-free — the circuits come from random `QuantModel`s — so this
 //! bench always runs, unlike the `make artifacts`-gated harnesses.  The
-//! acceptance bars: >= 2x throughput at 4+ threads vs 1 thread on
-//! multi-core hosts (sharding), and > 1.0x single-thread compiled vs
-//! interpreted (plan compilation); both paths are bit-identical
-//! (tests/sim_compiled.rs, tests/sim_sharding.rs).
+//! acceptance bars: >= 2x single-thread samples/s at the best W vs W=1
+//! compiled on at least one circuit (super-lanes), >= 2x throughput at
+//! 4+ threads vs 1 thread on multi-core hosts (sharding), and > 1.0x
+//! single-thread compiled vs interpreted at W=1 (plan compilation); all
+//! paths and widths are bit-identical (tests/sim_compiled.rs W-sweep,
+//! tests/sim_sharding.rs).
+//!
+//! Machine-readable trajectory: every row also lands in
+//! `artifacts/results/BENCH_sim.json` so perf regressions are diffable
+//! across PRs.
 
 mod harness;
 #[path = "../tests/common/mod.rs"]
@@ -20,95 +26,160 @@ use std::time::Instant;
 
 use common::rand_model;
 use printed_mlp::circuits::seq_multicycle;
-use printed_mlp::sim::{batch, testbench, SimPlan};
+use printed_mlp::sim::{testbench, SimPlan, LANE_WORD_CHOICES};
+use printed_mlp::util::json::{num, obj, s, Json};
 use printed_mlp::util::pool;
 use printed_mlp::util::prng::Rng;
 
 fn main() {
-    harness::section("Sim sharding — seq_multicycle gate-evals/sec vs threads");
+    harness::section("Sim throughput — super-lane W sweep + thread scaling (seq_multicycle)");
 
-    // HAR-class circuit: 48 active features, 16 hidden, 5 classes.
-    let m = rand_model(11, 48, 16, 5);
-    let active: Vec<usize> = (0..m.features).collect();
-    let circ = seq_multicycle::generate(&m, &active);
+    // Two circuit scales: a small sensor-class model (hot in L1/L2 even
+    // at W=8) and a HAR-class model (48 active features, 16 hidden, 5
+    // classes) whose wide value vector stresses cache footprint.
+    let shapes: [(&str, u64, usize, usize, usize); 2] =
+        [("sensor12x5x3", 7, 12, 5, 3), ("har48x16x5", 11, 48, 16, 5)];
     let n = 4096usize;
-    let mut rng = Rng::new(3);
-    let xs: Vec<u8> = (0..n * m.features).map(|_| rng.below(16) as u8).collect();
-
-    // Plans: the interpreted oracle and the compiled micro-op stream,
-    // with the one-off compile cost measured.
-    let t0 = Instant::now();
-    let interp = Arc::new(SimPlan::new(&circ.netlist));
-    let levelize_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let t0 = Instant::now();
-    let compiled = Arc::new(SimPlan::compiled(&circ.netlist));
-    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let cp = compiled.compiled_plan().expect("compiled plan");
-
-    let cycles = (circ.cycles + 1) as f64; // + reset cycle
-    let blocks = batch::n_blocks(n) as f64;
-    // Every block evaluates every cell once per cycle across 64 lanes
-    // (interpreted-path normalization, so both paths stay comparable with
-    // the pre-compilation records).
-    let lane_gate_evals = circ.netlist.cells.len() as f64 * cycles * blocks * 64.0;
-    println!(
-        "circuit: {} cells, {} cycles/inference, {n} samples ({} blocks)",
-        circ.netlist.cells.len(),
-        circ.cycles + 1,
-        batch::n_blocks(n)
-    );
-    println!(
-        "plan: levelize {levelize_ms:.2} ms | compile {compile_ms:.2} ms -> \
-         {} micro-ops (of {} comb cells), {} regs, {} dense nets (of {})",
-        cp.n_ops(),
-        circ.netlist.cells.len() - interp.n_dffs(),
-        cp.n_state(),
-        cp.n_dense_nets(),
-        circ.netlist.n_nets()
-    );
-
     let avail = pool::default_threads();
-    let mut thread_counts = vec![1usize, 2, 4];
-    if !thread_counts.contains(&avail) {
-        thread_counts.push(avail);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best_speedup = 0.0f64;
+
+    for (cname, seed, f, h, c) in shapes {
+        let m = rand_model(seed, f, h, c);
+        let active: Vec<usize> = (0..m.features).collect();
+        let circ = seq_multicycle::generate(&m, &active);
+        let mut rng = Rng::new(3);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| rng.below(16) as u8).collect();
+
+        // Plans: the interpreted oracle and the compiled micro-op stream,
+        // with the one-off compile cost measured.
+        let t0 = Instant::now();
+        let interp = Arc::new(SimPlan::new(&circ.netlist));
+        let levelize_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let compiled = Arc::new(SimPlan::compiled(&circ.netlist));
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let cp = compiled.compiled_plan().expect("compiled plan");
+
+        println!(
+            "\n-- {cname}: {} cells, {} cycles/inference, {n} samples",
+            circ.netlist.cells.len(),
+            circ.cycles + 1
+        );
+        println!(
+            "   plan: levelize {levelize_ms:.2} ms | compile {compile_ms:.2} ms -> \
+             {} micro-ops in {} opcode runs ({:.1} ops/run), {} regs, {} dense nets (of {})",
+            cp.n_ops(),
+            cp.n_runs(),
+            cp.n_ops() as f64 / cp.n_runs().max(1) as f64,
+            cp.n_state(),
+            cp.n_dense_nets(),
+            circ.netlist.n_nets()
+        );
+
+        // §Super-lane sweep: single thread, compiled at every W (plus the
+        // interpreted W=1 oracle for reference).  samples/s is the
+        // end-to-end metric the accuracy loops and serve path feel.
+        let bench_one =
+            |label: &str, path: &str, plan: &Arc<SimPlan>, w: usize, thr: usize| -> (f64, Json) {
+                let r = harness::bench(&format!("{cname} {label}"), 3, || {
+                    let preds =
+                        testbench::run_sequential_plan(&circ, plan, &xs, n, m.features, thr, w);
+                    std::hint::black_box(preds.len());
+                });
+                let sps = n as f64 / r.mean_ms * 1e3;
+                println!("         -> {sps:9.0} samples/s");
+                let row = obj(vec![
+                    ("circuit", s(cname)),
+                    ("path", s(path)),
+                    ("lane_words", num(w as f64)),
+                    ("threads", num(thr as f64)),
+                    ("mean_ms", num(r.mean_ms)),
+                    ("p50_ms", num(r.p50_ms)),
+                    ("p99_ms", num(r.p99_ms)),
+                    ("samples_per_s", num(sps)),
+                ]);
+                (r.mean_ms, row)
+            };
+
+        let (interp_ms, row) = bench_one("1thr interp   W=1", "interp", &interp, 1, 1);
+        rows.push(row);
+        let (base_ms, row) = bench_one("1thr compiled W=1", "compiled", &compiled, 1, 1);
+        rows.push(row);
+        println!(
+            "         == compiled W=1 is {:.2}x interpreted (single thread)",
+            interp_ms / base_ms
+        );
+        for w in LANE_WORD_CHOICES {
+            if w == 1 {
+                continue;
+            }
+            let (ms, mut row) =
+                bench_one(&format!("1thr compiled W={w}"), "compiled", &compiled, w, 1);
+            let speedup = base_ms / ms;
+            println!("         == W={w} is {speedup:.2}x the W=1 compiled path");
+            if let Json::Obj(map) = &mut row {
+                map.insert("speedup_vs_w1".to_string(), num(speedup));
+            }
+            rows.push(row);
+            best_speedup = best_speedup.max(speedup);
+        }
+
+        // Thread scaling on the HAR-class circuit at the auto-picked
+        // width (reusing this iteration's plan and stimulus) — shows
+        // super-lanes and sharding stack.
+        if cname != "har48x16x5" {
+            continue;
+        }
+        let w = printed_mlp::sim::lane_words_default();
+        let mut thread_counts = vec![1usize, 2, 4];
+        if !thread_counts.contains(&avail) {
+            thread_counts.push(avail);
+        }
+        println!("   thread scaling at auto W={w}:");
+        let mut base_ms = 0.0f64;
+        for &threads in &thread_counts {
+            let r = harness::bench(&format!("{cname} {threads:>2} thr compiled W={w}"), 3, || {
+                let preds =
+                    testbench::run_sequential_plan(&circ, &compiled, &xs, n, m.features, threads, w);
+                std::hint::black_box(preds.len());
+            });
+            if threads == 1 {
+                base_ms = r.mean_ms;
+            }
+            let sps = n as f64 / r.mean_ms * 1e3;
+            let speedup = if r.mean_ms > 0.0 { base_ms / r.mean_ms } else { 0.0 };
+            println!("         -> {sps:9.0} samples/s | speedup {speedup:4.2}x vs 1 thread");
+            rows.push(obj(vec![
+                ("circuit", s(cname)),
+                ("path", s("compiled")),
+                ("lane_words", num(w as f64)),
+                ("threads", num(threads as f64)),
+                ("mean_ms", num(r.mean_ms)),
+                ("p50_ms", num(r.p50_ms)),
+                ("p99_ms", num(r.p99_ms)),
+                ("samples_per_s", num(sps)),
+            ]));
+        }
     }
 
-    let mut base_ms = [0.0f64; 2]; // [interpreted, compiled] 1-thread means
-    for &threads in &thread_counts {
-        let mut pair_ms = [0.0f64; 2];
-        for (pi, &(label, plan)) in [("interp", &interp), ("compiled", &compiled)]
-            .iter()
-            .enumerate()
-        {
-            let r = harness::bench(
-                &format!("seq sim {n} samples, {threads:>2} thr, {label}"),
-                3,
-                || {
-                    let preds =
-                        testbench::run_sequential_plan(&circ, plan, &xs, n, m.features, threads);
-                    std::hint::black_box(preds.len());
-                },
-            );
-            if threads == 1 {
-                base_ms[pi] = r.mean_ms;
-            }
-            pair_ms[pi] = r.mean_ms;
-            let speedup = if r.mean_ms > 0.0 { base_ms[pi] / r.mean_ms } else { 0.0 };
-            println!(
-                "         -> {:8.1} M lane-gate-evals/s | speedup {speedup:4.2}x vs 1 thread",
-                lane_gate_evals / r.mean_ms * 1e-3,
-            );
-        }
-        if pair_ms[1] > 0.0 {
-            println!(
-                "         == compiled is {:4.2}x interpreted at {threads} thread(s)",
-                pair_ms[0] / pair_ms[1]
-            );
-        }
-    }
     println!(
-        "note: PRINTED_MLP_THREADS caps the default worker count ({avail} here); \
-         sharded, serial, compiled and interpreted runs are all bit-identical \
+        "\nbest super-lane speedup vs W=1 compiled (single thread): {best_speedup:.2}x \
+         (acceptance bar: >= 2x on at least one circuit)"
+    );
+    println!(
+        "note: PRINTED_MLP_THREADS caps the default worker count ({avail} here) and \
+         PRINTED_MLP_SIM_LANES / --sim-lanes pins the width; sharded, serial, wide, \
+         compiled and interpreted runs are all bit-identical \
          (tests/sim_sharding.rs, tests/sim_compiled.rs)."
+    );
+    harness::write_results_json(
+        "BENCH_sim.json",
+        &obj(vec![
+            ("bench", s("sim_throughput")),
+            ("samples", num(n as f64)),
+            ("best_w_speedup_vs_w1", num(best_speedup)),
+            ("rows", Json::Arr(rows)),
+        ]),
     );
 }

@@ -5,14 +5,14 @@
 //! printed-mlp pipeline  [--datasets a,b] [--threads N] [--backend B]
 //!                       [--search-threads N] [--no-nsga-cache]
 //!                       [--native] [--no-cache] [--fit-subset N]
-//!                       [--no-compile-sim] [--config FILE]
+//!                       [--no-compile-sim] [--sim-lanes W] [--config FILE]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
 //! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
-//!                       [--no-compile-sim]
+//!                       [--no-compile-sim] [--sim-lanes W]
 //! printed-mlp serve     [--datasets a,b,..] [--scenario S] [--rate HZ] [--secs S]
 //!                       [--workers N] [--queue-cap N] [--batch N] [--backend B]
-//!                       [--synthetic] [--config FILE]
+//!                       [--sim-lanes W] [--synthetic] [--config FILE]
 //! printed-mlp info
 //! ```
 //!
@@ -78,16 +78,17 @@ USAGE:
                         [--backend auto|native|pjrt|gatesim]
                         [--search-threads N] [--no-nsga-cache]
                         [--no-cache] [--fit-subset N] [--pop N] [--gens N]
-                        [--no-compile-sim] [--config FILE] [--fast]
+                        [--no-compile-sim] [--sim-lanes 0|1|2|4|8]
+                        [--config FILE] [--fast]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
-                        [--threads N] [--no-compile-sim]
+                        [--threads N] [--no-compile-sim] [--sim-lanes W]
   printed-mlp serve     [--datasets a,b,..] [--scenario steady|bursty|ramp|fanin]
                         [--rate HZ] [--secs S] [--sensors N] [--workers N]
                         [--batch N] [--queue-cap N] [--max-wait-ms MS]
                         [--slo-ms MS] [--seed N] [--backend native|gatesim]
-                        [--synthetic] [--config FILE]
+                        [--sim-lanes W] [--synthetic] [--config FILE]
   printed-mlp info
 
 Backends: auto prefers PJRT and falls back to the native functional model;
@@ -105,7 +106,10 @@ bit-identical to the serial search at the same seed.
 Gate-level simulation compiles each netlist into a strength-reduced
 micro-op stream (sim.compile config key); --no-compile-sim (or
 PRINTED_MLP_NO_COMPILE_SIM=1) falls back to the interpreted reference
-simulator, which is bit-identical but slower.
+simulator, which is bit-identical but slower.  --sim-lanes W (sim.lanes
+config key, PRINTED_MLP_SIM_LANES env) sets the super-lane width: each
+simulator pass packs W x 64 samples (W in {1,2,4,8}; 0 = auto-pick from
+the detected SIMD width) — every width is bit-identical per lane.
 Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
 
 /// CLI entrypoint.
@@ -160,6 +164,9 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
     }
     if flags.has("no-compile-sim") {
         conf.set("sim.compile", "false");
+    }
+    if let Some(v) = flags.get("sim-lanes") {
+        conf.set("sim.lanes", v);
     }
     if let Some(v) = flags.get("fit-subset") {
         conf.set("pipeline.fit_subset", v);
@@ -292,6 +299,16 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     if flags.has("no-compile-sim") {
         crate::sim::set_compile_default(false);
     }
+    if let Some(v) = flags.get("sim-lanes") {
+        let w: usize = v.parse().with_context(|| format!("--sim-lanes {v}"))?;
+        if !crate::sim::valid_lane_words(w) {
+            bail!(
+                "--sim-lanes: expected 0 (auto) or one of {:?}, got {w}",
+                crate::sim::LANE_WORD_CHOICES
+            );
+        }
+        crate::sim::set_lane_words_default(w);
+    }
     let samples: usize = flags.get("samples").unwrap_or("256").parse()?;
     let threads: usize = match flags.get("threads") {
         Some(v) => v.parse::<usize>()?.max(1),
@@ -389,6 +406,9 @@ pub fn serve_config(flags: &Flags) -> Result<server::ServeConfig> {
     if let Some(v) = flags.get("backend") {
         conf.set("serve.backend", v);
     }
+    if let Some(v) = flags.get("sim-lanes") {
+        conf.set("sim.lanes", v);
+    }
     if flags.has("synthetic") {
         conf.set("serve.synthetic", "true");
     }
@@ -474,6 +494,20 @@ mod tests {
         let cfg = pipeline_config(&Flags::parse(&[]).unwrap()).unwrap();
         assert_eq!(cfg.search_threads, 0);
         assert!(cfg.nsga.memoize);
+    }
+
+    #[test]
+    fn sim_lanes_flag_reaches_both_configs_and_validates() {
+        let args: Vec<String> = ["--sim-lanes", "8"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert_eq!(pipeline_config(&f).unwrap().sim_lanes, 8);
+        assert_eq!(serve_config(&f).unwrap().sim_lanes, 8);
+        let args: Vec<String> = ["--sim-lanes", "5"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert!(pipeline_config(&f).is_err());
+        assert!(serve_config(&f).is_err());
+        // Default: auto (0).
+        assert_eq!(pipeline_config(&Flags::parse(&[]).unwrap()).unwrap().sim_lanes, 0);
     }
 
     #[test]

@@ -21,6 +21,8 @@
 //!
 //! [sim]
 //! compile = true          # micro-op-compiled gate-level sim (perf only)
+//! lanes = 0               # super-lane width in u64 words: 0 = auto
+//!                         # (detected SIMD width), else 1|2|4|8
 //!
 //! [serve]
 //! datasets = spectf, arrhythmia, gas
@@ -200,7 +202,26 @@ impl Config {
         if let Some(b) = self.get_bool("sim.compile")? {
             cfg.sim_compile = b;
         }
+        if let Some(w) = self.sim_lanes()? {
+            cfg.sim_lanes = w;
+        }
         Ok(cfg)
+    }
+
+    /// The `sim.lanes` key (shared by the pipeline and serve paths):
+    /// gate-level super-lane width in `u64` words, `0` = auto-pick from
+    /// the detected SIMD width.
+    fn sim_lanes(&self) -> Result<Option<usize>> {
+        let Some(w) = self.get_usize("sim.lanes")? else {
+            return Ok(None);
+        };
+        if !crate::sim::valid_lane_words(w) {
+            bail!(
+                "sim.lanes: expected 0 (auto) or one of {:?}, got {w}",
+                crate::sim::LANE_WORD_CHOICES
+            );
+        }
+        Ok(Some(w))
     }
 
     /// Materialize the serve configuration with defaults filled in.
@@ -257,6 +278,9 @@ impl Config {
         if let Some(b) = self.get_bool("serve.synthetic")? {
             cfg.synthetic = b;
         }
+        if let Some(w) = self.sim_lanes()? {
+            cfg.sim_lanes = w;
+        }
         Ok(cfg)
     }
 }
@@ -309,6 +333,22 @@ mod tests {
         assert!(!c.pipeline().unwrap().sim_compile);
         // Default: compiled plans on.
         assert!(Config::default().pipeline().unwrap().sim_compile);
+    }
+
+    #[test]
+    fn sim_lanes_key_feeds_pipeline_and_serve() {
+        let c = Config::parse("[sim]\nlanes = 4\n").unwrap();
+        assert_eq!(c.pipeline().unwrap().sim_lanes, 4);
+        assert_eq!(c.serve().unwrap().sim_lanes, 4);
+        // 0 = auto; anything outside {0,1,2,4,8} is rejected.
+        let c = Config::parse("[sim]\nlanes = 0\n").unwrap();
+        assert_eq!(c.pipeline().unwrap().sim_lanes, 0);
+        let c = Config::parse("[sim]\nlanes = 3\n").unwrap();
+        assert!(c.pipeline().is_err());
+        assert!(c.serve().is_err());
+        // Default: auto.
+        assert_eq!(Config::default().pipeline().unwrap().sim_lanes, 0);
+        assert_eq!(Config::default().serve().unwrap().sim_lanes, 0);
     }
 
     #[test]

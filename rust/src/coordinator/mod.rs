@@ -52,6 +52,10 @@ pub struct PipelineConfig {
     /// (`--no-compile-sim` / `sim.compile = false`) forces the
     /// interpreted reference path everywhere the pipeline simulates.
     pub sim_compile: bool,
+    /// Gate-level super-lane width in `u64` words (`sim.lanes` /
+    /// `--sim-lanes`; 0 = auto-pick from the detected SIMD width) —
+    /// every simulation the pipeline runs packs `W·64` samples per pass.
+    pub sim_lanes: usize,
     /// Reuse cached per-dataset outcomes from disk when present.
     pub cache: bool,
 }
@@ -69,6 +73,7 @@ impl Default for PipelineConfig {
             fit_subset: 512,
             gate_level_accuracy: true,
             sim_compile: true,
+            sim_lanes: 0,
             cache: true,
         }
     }
@@ -132,6 +137,7 @@ pub fn run_dataset(
             hlo_path: Some(store.hlo_path(name, BATCH_THROUGHPUT)),
             batch: BATCH_THROUGHPUT,
             sim_threads,
+            sim_lanes: cfg.sim_lanes,
         },
     )?;
 
@@ -297,8 +303,11 @@ pub fn run_dataset(
 /// its own PJRT engine), honoring the JSON stage cache.
 pub fn run_pipeline(store: &ArtifactStore, cfg: &PipelineConfig) -> Result<Vec<DatasetOutcome>> {
     // Plans the circuit wrappers build lazily inside the workers follow
-    // the process-wide compile default; apply the config before fan-out.
+    // the process-wide compile default, and simulators the testbenches
+    // build follow the super-lane width default; apply both before
+    // fan-out.
     crate::sim::set_compile_default(cfg.sim_compile);
+    crate::sim::set_lane_words_default(cfg.sim_lanes);
     let results = scope_map(cfg.datasets.len(), cfg.threads, |i| {
         let name = &cfg.datasets[i];
         if cfg.cache {

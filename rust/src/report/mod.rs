@@ -286,21 +286,22 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
     );
     let _ = writeln!(
         md,
-        "| Model | requests | answered | shed | batches | mean batch | req/s | p50 ms | p99 ms | SLO>{:.0}ms | accuracy |",
+        "| Model | requests | answered | shed | batches | mean batch | fill | req/s | p50 ms | p99 ms | SLO>{:.0}ms | accuracy |",
         rep.models.first().map(|m| m.slo_ms).unwrap_or(0.0)
     );
-    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|---|");
     let mut rows = Vec::new();
     for m in &rep.models {
         let _ = writeln!(
             md,
-            "| {} | {} | {} | {} | {} | {:.1} | {:.0} | {:.2} | {:.2} | {} | {:.3} |",
+            "| {} | {} | {} | {} | {} | {:.1} | {:.2} | {:.0} | {:.2} | {:.2} | {} | {:.3} |",
             m.name,
             m.requests,
             m.answered,
             m.shed,
             m.batches,
             m.mean_batch,
+            m.fill,
             m.throughput_rps,
             m.p50_ms,
             m.p99_ms,
@@ -308,13 +309,14 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
             m.accuracy
         );
         rows.push(format!(
-            "{},{},{},{},{},{:.2},{:.1},{:.3},{:.3},{},{:.4}",
+            "{},{},{},{},{},{:.2},{:.4},{:.1},{:.3},{:.3},{},{:.4}",
             m.name,
             m.requests,
             m.answered,
             m.shed,
             m.batches,
             m.mean_batch,
+            m.fill,
             m.throughput_rps,
             m.p50_ms,
             m.p99_ms,
@@ -334,7 +336,7 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
     write_csv(
         results_dir,
         "serve.csv",
-        "model,requests,answered,shed,batches,mean_batch,rps,p50_ms,p99_ms,slo_violations,accuracy",
+        "model,requests,answered,shed,batches,mean_batch,fill,rps,p50_ms,p99_ms,slo_violations,accuracy",
         &rows,
     )?;
     Ok(md)
@@ -388,6 +390,7 @@ mod tests {
                 shed: 1,
                 batches: 3,
                 mean_batch: 3.0,
+                fill: 0.75,
                 throughput_rps: 9.0,
                 p50_ms: 1.5,
                 p99_ms: 4.0,

@@ -97,6 +97,10 @@ pub struct EvalOpts {
     pub batch: usize,
     /// Simulator shard threads (gatesim only; 0 = [`pool::default_threads`]).
     pub sim_threads: usize,
+    /// Simulator super-lane width in `u64` words (gatesim only; 0 =
+    /// [`crate::sim::lane_words_default`] — the `sim.lanes` /
+    /// `--sim-lanes` knob).
+    pub sim_lanes: usize,
 }
 
 impl Default for EvalOpts {
@@ -105,6 +109,7 @@ impl Default for EvalOpts {
             hlo_path: None,
             batch: BATCH_THROUGHPUT,
             sim_threads: 0,
+            sim_lanes: 0,
         }
     }
 }
@@ -170,7 +175,11 @@ pub fn build_evaluator<'m>(
             } else {
                 opts.sim_threads
             };
-            BuiltEvaluator::Shared(Box::new(GateSimEvaluator::with_threads(model, threads)))
+            BuiltEvaluator::Shared(Box::new(GateSimEvaluator::with_opts(
+                model,
+                threads,
+                opts.sim_lanes,
+            )))
         }
         Backend::Auto => bail!("resolve Backend::Auto to a concrete backend before building"),
     })
@@ -210,6 +219,15 @@ pub trait Evaluator {
         out.clear();
         out.extend_from_slice(&preds);
         Ok(())
+    }
+
+    /// Natural batch granularity of this backend: batches sized in
+    /// multiples of this fill the backend's parallel width exactly.  The
+    /// serve batcher aligns its drains to it so gatesim batches fill
+    /// whole `W·64`-sample super-lane blocks instead of wasting
+    /// partial-block lanes; scalar backends report 1 (no alignment).
+    fn batch_quantum(&self) -> usize {
+        1
     }
 
     /// Accuracy over a split (default: predict + compare labels).
@@ -327,6 +345,8 @@ struct GateSimKey {
 pub struct GateSimEvaluator {
     model: QuantModel,
     threads: usize,
+    /// Super-lane width in `u64` words (0 = process default).
+    lane_words: usize,
     cached: Mutex<Option<(GateSimKey, Arc<SeqCircuit>)>>,
 }
 
@@ -336,10 +356,33 @@ impl GateSimEvaluator {
     }
 
     pub fn with_threads(model: &QuantModel, threads: usize) -> GateSimEvaluator {
+        Self::with_opts(model, threads, 0)
+    }
+
+    /// Full control: shard threads plus the super-lane width in `u64`
+    /// words (one of [`crate::sim::LANE_WORD_CHOICES`]; 0 =
+    /// [`crate::sim::lane_words_default`]).
+    pub fn with_opts(model: &QuantModel, threads: usize, lane_words: usize) -> GateSimEvaluator {
         GateSimEvaluator {
             model: model.clone(),
             threads: threads.max(1),
+            lane_words,
             cached: Mutex::new(None),
+        }
+    }
+
+    /// Resolved super-lane width (words per net) this evaluator runs at.
+    /// `PRINTED_MLP_SIM_LANES` beats the configured width, exactly as it
+    /// beats `--sim-lanes` on the pipeline path — one exported variable
+    /// pins the width across every subcommand.
+    pub fn lane_words(&self) -> usize {
+        if let Some(n) = crate::sim::lane_words_env() {
+            return n;
+        }
+        if self.lane_words == 0 {
+            crate::sim::lane_words_default()
+        } else {
+            self.lane_words
         }
     }
 
@@ -403,9 +446,22 @@ impl Evaluator for GateSimEvaluator {
             "gatesim: mask shapes do not match the model"
         );
         let circ = self.circuit(feat_mask, approx_mask, tables)?;
-        let preds =
-            testbench::run_sequential_threads(&circ, xs, n, self.model.features, self.threads);
+        let preds = testbench::run_sequential_plan(
+            &circ,
+            &circ.sim_plan(),
+            xs,
+            n,
+            self.model.features,
+            self.threads,
+            self.lane_words(),
+        );
         Ok(preds.into_iter().map(|p| p as i32).collect())
+    }
+
+    /// Whole super-lane blocks: batches in multiples of `W·64` samples
+    /// leave no simulator lane idle.
+    fn batch_quantum(&self) -> usize {
+        crate::sim::batch::block_lanes(self.lane_words())
     }
 }
 
@@ -443,6 +499,31 @@ mod tests {
         let got = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
         let want = NativeEvaluator::predict(&native, &xs, n, &fm, &am, &t);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gatesim_wide_lanes_match_native_and_report_quantum() {
+        let m = rand_model(55, 5, 3, 3);
+        let native = NativeEvaluator { model: &m };
+        let n = 70;
+        let mut r = Rng::new(13);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let want = NativeEvaluator::predict(&native, &xs, n, &fm, &am, &t);
+        for w in [1usize, 2, 4, 8] {
+            let gate = GateSimEvaluator::with_opts(&m, 2, w);
+            assert_eq!(gate.lane_words(), w);
+            assert_eq!(Evaluator::batch_quantum(&gate), w * 64);
+            let got = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
+            assert_eq!(got, want, "lane words {w}");
+        }
+        // Scalar backends have no alignment quantum.
+        assert_eq!(Evaluator::batch_quantum(&native), 1);
+        // Width 0 resolves to the process default.
+        let auto = GateSimEvaluator::new(&m);
+        assert!(crate::sim::LANE_WORD_CHOICES.contains(&auto.lane_words()));
     }
 
     #[test]

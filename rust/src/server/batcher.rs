@@ -13,6 +13,15 @@
 //! `if`: a worker takes a sub-full batch only once the oldest waiting
 //! frame has aged past `max_wait` (or the server is draining to exit),
 //! otherwise it leaves the frames to accumulate into a fuller batch.
+//!
+//! §Block alignment: each model's effective batch ceiling is
+//! [`DrainConfig::batch`] rounded **up** to the backend's
+//! [`Evaluator::batch_quantum`] (the gatesim backend reports its `W·64`
+//! super-lane block, scalar backends report 1), so a deep queue drains in
+//! whole simulator blocks with no idle lanes; only the lingered tail of a
+//! burst pays for a partial block.  Per-batch lane-slot consumption is
+//! counted in [`ModelStats::lane_slots`], and `fill = answered /
+//! lane_slots` lands in the serve report.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -43,6 +52,10 @@ pub struct ModelStats {
     pub answered: AtomicUsize,
     pub correct: AtomicUsize,
     pub batches: AtomicUsize,
+    /// Simulator lane slots consumed (batch sizes rounded up to the
+    /// backend's block quantum) — `answered / lane_slots` is the
+    /// super-lane fill ratio, 1.0 on scalar backends.
+    pub lane_slots: AtomicUsize,
     pub slo_violations: AtomicUsize,
     pub latencies_ms: Mutex<Vec<f64>>,
     /// `(frame id, prediction)` pairs; filled only when
@@ -144,11 +157,14 @@ impl Default for DrainConfig {
 }
 
 /// Execute one popped batch on the model's evaluator and record stats.
+/// `quantum` is the backend's block granularity for lane-fill accounting.
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     queue: &BatchQueue,
     entry: &ModelEntry,
     eval: &dyn Evaluator,
     cfg: &DrainConfig,
+    quantum: usize,
     frames: &[Frame],
     xbuf: &mut Vec<u8>,
     preds: &mut Vec<i32>,
@@ -169,6 +185,8 @@ fn process_batch(
     let st = &queue.stats;
     st.batches.fetch_add(1, Ordering::Relaxed);
     st.answered.fetch_add(frames.len(), Ordering::Relaxed);
+    st.lane_slots
+        .fetch_add(frames.len().div_ceil(quantum) * quantum, Ordering::Relaxed);
     {
         let mut lat = st.latencies_ms.lock().unwrap();
         for (fr, &p) in frames.iter().zip(preds.iter()) {
@@ -212,6 +230,11 @@ pub fn drain(
     // (stop + empty queues) unreachable; clamp here so every caller of
     // the public DrainConfig is safe, not just server::run.
     let batch = cfg.batch.max(1);
+    // §Block alignment: round each model's batch ceiling up to its
+    // backend's block quantum, so a deep queue drains in whole simulator
+    // super-lane blocks (gatesim: W·64 samples) with no idle lanes.
+    let quanta: Vec<usize> = evals.iter().map(|e| e.batch_quantum().max(1)).collect();
+    let maxes: Vec<usize> = quanta.iter().map(|&q| batch.div_ceil(q) * q).collect();
     let results: Vec<Result<()>> = pool::scope_map_with(
         workers,
         workers,
@@ -227,12 +250,14 @@ pub fn drain(
                 for k in 0..n {
                     let m = (w + k) % n;
                     frames.clear();
-                    if queues[m].pop_batch(batch, cfg.max_wait, stopping, frames) == 0 {
+                    if queues[m].pop_batch(maxes[m], cfg.max_wait, stopping, frames) == 0 {
                         continue;
                     }
                     did_work = true;
                     let eval = evals[m].as_ref();
-                    process_batch(&queues[m], &entries[m], eval, cfg, frames, xbuf, preds)?;
+                    process_batch(
+                        &queues[m], &entries[m], eval, cfg, quanta[m], frames, xbuf, preds,
+                    )?;
                 }
                 if !did_work {
                     if stopping && queues.iter().all(|q| q.is_empty()) {

@@ -64,6 +64,10 @@ pub struct ServeConfig {
     /// Evaluator backend on the request path (`Auto` → native; PJRT is
     /// rejected — its handles cannot cross the worker pool).
     pub backend: Backend,
+    /// Gatesim super-lane width in `u64` words (0 =
+    /// [`crate::sim::lane_words_default`]); the batcher aligns drains to
+    /// the resulting `W·64`-sample block.
+    pub sim_lanes: usize,
     /// Host deterministic synthetic models instead of store artifacts
     /// (artifact-free smoke/bench mode; accuracy 1.0 expected).
     pub synthetic: bool,
@@ -84,6 +88,7 @@ impl Default for ServeConfig {
             slo_ms: 50.0,
             seed: 7,
             backend: Backend::Auto,
+            sim_lanes: 0,
             synthetic: false,
         }
     }
@@ -99,6 +104,10 @@ pub struct ModelReport {
     pub shed: usize,
     pub batches: usize,
     pub mean_batch: f64,
+    /// Super-lane fill ratio: answered frames / simulator lane slots
+    /// consumed (1.0 on scalar backends and for perfectly aligned
+    /// gatesim batches).
+    pub fill: f64,
     pub throughput_rps: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
@@ -156,7 +165,9 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
     let backend = resolve_serve_backend(cfg.backend);
     // Sim shards stay at 1: the drain workers are already the
     // parallelism, and nesting pools would oversubscribe to threads².
-    let evals = registry.evaluators(backend, 1)?;
+    // The super-lane width rides through so warmup compiles the plan a
+    // wide simulator will execute and the batcher can align to it.
+    let evals = registry.evaluators(backend, 1, cfg.sim_lanes)?;
     registry.warmup(&evals)?;
 
     let workers = if cfg.workers == 0 { default_threads() } else { cfg.workers.max(1) };
@@ -202,6 +213,7 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
         let st = &queue.stats;
         let answered = st.answered.load(Ordering::Relaxed);
         let batches = st.batches.load(Ordering::Relaxed);
+        let lane_slots = st.lane_slots.load(Ordering::Relaxed);
         let lat = st.latencies_ms.lock().unwrap();
         models.push(ModelReport {
             name: entry.name.clone(),
@@ -210,6 +222,11 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
             shed: st.shed.load(Ordering::Relaxed),
             batches,
             mean_batch: answered as f64 / batches.max(1) as f64,
+            fill: if lane_slots == 0 {
+                1.0
+            } else {
+                answered as f64 / lane_slots as f64
+            },
             throughput_rps: answered as f64 / elapsed_s.max(1e-9),
             p50_ms: stats::percentile(&lat, 50.0),
             p99_ms: stats::percentile(&lat, 99.0),

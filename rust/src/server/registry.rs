@@ -121,12 +121,16 @@ impl ModelRegistry {
 
     /// Build one thread-shareable evaluator per entry via the unified
     /// [`build_evaluator`] factory.  `sim_threads` is forced low (the
-    /// batcher workers are already the parallelism); PJRT is rejected
-    /// because its handles cannot cross the worker pool.
+    /// batcher workers are already the parallelism); `sim_lanes` is the
+    /// gatesim super-lane width in `u64` words (0 =
+    /// [`crate::sim::lane_words_default`]) — the batcher aligns its
+    /// drains to the resulting `W·64` block.  PJRT is rejected because
+    /// its handles cannot cross the worker pool.
     pub fn evaluators(
         &self,
         backend: Backend,
         sim_threads: usize,
+        sim_lanes: usize,
     ) -> Result<Vec<Box<dyn Evaluator + Send + Sync + '_>>> {
         if backend == Backend::Pjrt {
             bail!(
@@ -136,6 +140,7 @@ impl ModelRegistry {
         }
         let opts = EvalOpts {
             sim_threads: sim_threads.max(1),
+            sim_lanes,
             ..EvalOpts::default()
         };
         self.entries
@@ -174,7 +179,7 @@ mod tests {
         assert_eq!(reg.len(), 3);
         assert!(reg.get("b").is_some());
         assert!(reg.get("nosuch").is_none());
-        let evals = reg.evaluators(Backend::Native, 1).unwrap();
+        let evals = reg.evaluators(Backend::Native, 1, 0).unwrap();
         reg.warmup(&evals).unwrap();
         for (entry, eval) in reg.entries().iter().zip(&evals) {
             let acc = eval
@@ -188,6 +193,6 @@ mod tests {
     fn pjrt_backend_rejected_for_worker_pool() {
         let names = vec!["x".to_string()];
         let reg = ModelRegistry::synthetic(&names, 1);
-        assert!(reg.evaluators(Backend::Pjrt, 1).is_err());
+        assert!(reg.evaluators(Backend::Pjrt, 1, 0).is_err());
     }
 }

@@ -1,43 +1,72 @@
-//! Sharded batch simulation: split an `n`-sample workload into 64-lane
-//! blocks and dispatch them across worker threads, each worker owning its
-//! own [`Sim`] built from a shared levelized [`SimPlan`].
+//! Sharded batch simulation: split an `n`-sample workload into
+//! super-lane blocks of `W·64` samples and dispatch them across worker
+//! threads, each worker owning its own [`Sim`] built from a shared
+//! levelized [`SimPlan`].
 //!
 //! Correctness: every primitive-cell update in [`Sim`] is a bitwise
 //! (per-lane) operation, so a sample's outputs depend only on its own
-//! lane regardless of which block or worker simulated it.  Sharded runs
-//! are therefore bit-identical to the serial path — enforced by the
-//! differential suite in `tests/sim_sharding.rs`.
+//! lane regardless of which block, lane word, or worker simulated it.
+//! Sharded and wide runs are therefore bit-identical to the serial
+//! 64-lane path — enforced by the differential suites in
+//! `tests/sim_sharding.rs` and `tests/sim_compiled.rs` (W-sweep).
 //!
 //! Scheduling: blocks are claimed from an atomic cursor
 //! ([`scope_map_with`]), so uneven per-block cost balances automatically;
 //! the plan — including a compiled plan's micro-op stream and port map
 //! ([`crate::sim::SimPlan::compiled`]), which is built once per netlist,
 //! never per worker — is shared read-only, and each worker allocates its
-//! two `u64` state vectors once, not once per block.
+//! two state vectors once, not once per block.  The super-lane width
+//! (`u64` words per net) defaults to [`crate::sim::lane_words_default`];
+//! a partial final block is masked by the drive helpers
+//! ([`Sim::set_word_lanes`] zeroes lanes beyond the block's count) and
+//! lanes beyond the count are never read.
 
 use std::sync::Arc;
 
 use crate::sim::{Sim, SimPlan};
 use crate::util::pool::scope_map_with;
 
-/// Number of 64-lane blocks needed for `n` samples.
-pub fn n_blocks(n: usize) -> usize {
-    n.div_ceil(Sim::LANES)
+/// Samples per block at a given super-lane width (`W·64`).
+pub fn block_lanes(lane_words: usize) -> usize {
+    lane_words * Sim::LANES
+}
+
+/// Number of `W·64`-sample blocks needed for `n` samples.
+pub fn n_blocks(n: usize, lane_words: usize) -> usize {
+    n.div_ceil(block_lanes(lane_words))
+}
+
+/// [`run_sharded_wide`] at the process-wide default super-lane width.
+pub fn run_sharded<T, F>(plan: &Arc<SimPlan>, n: usize, threads: usize, drive: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&mut Sim, usize, usize) -> Vec<T> + Sync,
+{
+    run_sharded_wide(plan, n, threads, 0, drive)
 }
 
 /// Run `n` samples through `drive`, sharded across up to `threads`
-/// workers, and concatenate the per-block results in sample order.
+/// workers in super-lane blocks of `lane_words * 64` samples (0 =
+/// [`crate::sim::lane_words_default`]), and concatenate the per-block
+/// results in sample order.
 ///
 /// `drive` is called once per block with a simulator over `plan`, the
-/// block's base sample index, and its lane count (`Sim::LANES` except for
-/// a smaller final partial block).  It must return one result per lane.
+/// block's base sample index, and its lane count ([`Sim::lanes`] except
+/// for a smaller final partial block).  It must return one result per
+/// lane.
 ///
 /// With `threads <= 1` (or a single block) no threads are spawned: the
 /// calling thread reuses one simulator across blocks, matching the
 /// pre-sharding behaviour exactly.  Lane isolation makes reuse safe: a
 /// sequential driver re-pulses reset per block, and lanes beyond a
 /// block's count are never read.
-pub fn run_sharded<T, F>(plan: &Arc<SimPlan>, n: usize, threads: usize, drive: F) -> Vec<T>
+pub fn run_sharded_wide<T, F>(
+    plan: &Arc<SimPlan>,
+    n: usize,
+    threads: usize,
+    lane_words: usize,
+    drive: F,
+) -> Vec<T>
 where
     T: Send,
     F: Fn(&mut Sim, usize, usize) -> Vec<T> + Sync,
@@ -45,14 +74,20 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let blocks = n_blocks(n);
+    let w = if lane_words == 0 {
+        crate::sim::lane_words_default()
+    } else {
+        lane_words
+    };
+    let bl = block_lanes(w);
+    let blocks = n.div_ceil(bl);
     let shards = scope_map_with(
         blocks,
         threads.clamp(1, blocks),
-        || Sim::from_plan(plan.clone()),
+        || Sim::from_plan_wide(plan.clone(), w),
         |sim, b| {
-            let base = b * Sim::LANES;
-            let lanes = (n - base).min(Sim::LANES);
+            let base = b * bl;
+            let lanes = (n - base).min(bl);
             drive(sim, base, lanes)
         },
     );
@@ -66,17 +101,23 @@ mod tests {
 
     #[test]
     fn block_math() {
-        assert_eq!(n_blocks(1), 1);
-        assert_eq!(n_blocks(64), 1);
-        assert_eq!(n_blocks(65), 2);
-        assert_eq!(n_blocks(130), 3);
+        assert_eq!(n_blocks(1, 1), 1);
+        assert_eq!(n_blocks(64, 1), 1);
+        assert_eq!(n_blocks(65, 1), 2);
+        assert_eq!(n_blocks(130, 1), 3);
+        // Wider blocks absorb more samples per pass.
+        assert_eq!(block_lanes(4), 256);
+        assert_eq!(n_blocks(130, 4), 1);
+        assert_eq!(n_blocks(256, 4), 1);
+        assert_eq!(n_blocks(257, 4), 2);
+        assert_eq!(n_blocks(1, 8), 1);
     }
 
     #[test]
     fn sharded_equals_serial_on_partial_blocks() {
         // y = a XOR b, driven per-lane with sample data; results must be
-        // identical for 1 thread, many threads, and any n (incl. n < 64
-        // and a partial final block).
+        // identical for 1 thread, many threads, every width, and any n
+        // (incl. n < one block and a partial final block).
         let mut net = Netlist::new("t");
         let a = net.add_input("a", 1)[0];
         let b = net.add_input("b", 1)[0];
@@ -84,28 +125,43 @@ mod tests {
         net.add_output("y", vec![y]);
         let plan = Arc::new(SimPlan::new(&net));
 
-        let data: Vec<(u8, u8)> = (0..130u32).map(|i| ((i % 2) as u8, ((i / 2) % 2) as u8)).collect();
+        let data: Vec<(u8, u8)> =
+            (0..300u32).map(|i| ((i % 2) as u8, ((i / 2) % 2) as u8)).collect();
         let drive = |sim: &mut Sim, base: usize, lanes: usize| -> Vec<u8> {
-            let mut pa = 0u64;
-            let mut pb = 0u64;
-            for lane in 0..lanes {
-                pa |= (data[base + lane].0 as u64) << lane;
-                pb |= (data[base + lane].1 as u64) << lane;
-            }
-            sim.set(a, pa);
-            sim.set(b, pb);
+            let va: Vec<i64> = (0..lanes).map(|l| data[base + l].0 as i64).collect();
+            let vb: Vec<i64> = (0..lanes).map(|l| data[base + l].1 as i64).collect();
+            sim.set_word_lanes(&[a], &va);
+            sim.set_word_lanes(&[b], &vb);
             sim.eval();
-            let py = sim.get(y);
-            (0..lanes).map(|lane| ((py >> lane) & 1) as u8).collect()
+            (0..lanes).map(|lane| sim.get_word_lane(&[y], lane) as u8).collect()
         };
 
-        for n in [1usize, 63, 64, 65, 130] {
-            let serial = run_sharded(&plan, n, 1, drive);
-            let sharded = run_sharded(&plan, n, 4, drive);
+        for n in [1usize, 63, 64, 65, 130, 300] {
             let want: Vec<u8> = data[..n].iter().map(|&(x, z)| x ^ z).collect();
-            assert_eq!(serial, want, "serial n={n}");
-            assert_eq!(sharded, want, "sharded n={n}");
+            for w in crate::sim::LANE_WORD_CHOICES {
+                let serial = run_sharded_wide(&plan, n, 1, w, drive);
+                let sharded = run_sharded_wide(&plan, n, 4, w, drive);
+                assert_eq!(serial, want, "serial n={n} w={w}");
+                assert_eq!(sharded, want, "sharded n={n} w={w}");
+            }
         }
+    }
+
+    #[test]
+    fn default_width_entry_point_matches_explicit() {
+        let mut net = Netlist::new("t");
+        let a = net.add_input("a", 1)[0];
+        net.add_output("y", vec![a]);
+        let plan = Arc::new(SimPlan::new(&net));
+        let vals: Vec<i64> = (0..100).map(|i| (i % 2) as i64).collect();
+        let drive = |sim: &mut Sim, base: usize, lanes: usize| -> Vec<u8> {
+            sim.set_word_lanes(&[a], &vals[base..base + lanes]);
+            sim.eval();
+            (0..lanes).map(|lane| sim.get_word_lane(&[a], lane) as u8).collect()
+        };
+        let auto = run_sharded(&plan, 100, 2, drive);
+        let w1 = run_sharded_wide(&plan, 100, 2, 1, drive);
+        assert_eq!(auto, w1);
     }
 
     #[test]

@@ -35,11 +35,31 @@
 //! default — `--no-compile-sim`, `sim.compile = false`, or
 //! `PRINTED_MLP_NO_COMPILE_SIM=1` select the interpreted oracle instead
 //! (see [`compile_default`]).
+//!
+//! §Super-lanes: a [`Sim`] holds `W` consecutive `u64` words per net
+//! (`W ∈ {1, 2, 4, 8}`, runtime-selected — [`Sim::from_plan_wide`]), so
+//! one pass simulates up to `W·64 = 512` samples and every micro-op
+//! dispatch amortizes over the whole block; the per-word kernels are
+//! monomorphized over `W` ([`u64; W]` loads/stores on contiguous memory),
+//! which LLVM autovectorizes into SSE/AVX2/AVX-512 bitwise ops.  On top
+//! of that, [`SimPlan::compiled`] sorts each topological level of the
+//! micro-op stream into maximal same-opcode runs and `eval` executes each
+//! run as one homogeneous tight loop (`run_binary(!(a & b))`, …) instead
+//! of a per-op `match` — no opcode branch inside a run.  Reordering
+//! within a level is sound because same-level ops never read each other's
+//! outputs (a reader's level is strictly greater than its producer's),
+//! and runs merging across adjacent levels stay sound because the array
+//! order still respects dependencies.  `W = 1` keeps the exact oracle
+//! geometry; every width is bit-identical per lane (`tests/sim_compiled.rs`
+//! W-sweep + lane-isolation properties).  The process-wide default width
+//! comes from [`lane_words_default`] — `sim.lanes`, `--sim-lanes`, or
+//! `PRINTED_MLP_SIM_LANES`, auto-picked from the detected SIMD width when
+//! unset.
 
 pub mod batch;
 pub mod testbench;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::netlist::{opt, Cell, NetId, Netlist, Port, CONST0, CONST1};
@@ -66,6 +86,82 @@ pub fn compile_default() -> bool {
 /// plan on first use.
 pub fn set_compile_default(on: bool) {
     COMPILE_DEFAULT.store(on, Ordering::Relaxed);
+}
+
+/// Valid super-lane widths: `u64` words per net (`W`), i.e. `W·64`
+/// samples per simulator pass.
+pub const LANE_WORD_CHOICES: [usize; 4] = [1, 2, 4, 8];
+
+/// Process-wide default super-lane width (0 = auto-pick from the
+/// detected SIMD width).  Set by `sim.lanes` / `--sim-lanes`; read by
+/// every consumer that does not pass an explicit width.
+static LANE_WORDS_DEFAULT: AtomicUsize = AtomicUsize::new(0);
+
+/// Super-lane width matched to the host's widest SIMD unit: 8 words
+/// (512 bits) with AVX-512, 4 with AVX2, else 2 — two words still
+/// amortize the per-op dispatch over 128 samples on any 128-bit unit.
+pub fn auto_lane_words() -> usize {
+    detected_simd_words()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detected_simd_words() -> usize {
+    if is_x86_feature_detected!("avx512f") {
+        8
+    } else if is_x86_feature_detected!("avx2") {
+        4
+    } else {
+        2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detected_simd_words() -> usize {
+    2
+}
+
+/// Is `w` a valid `sim.lanes`-style knob value?  `0` means auto; the
+/// config parser, the CLI, and [`set_lane_words_default`] all share this
+/// membership check so the valid set can never drift between them.
+pub fn valid_lane_words(w: usize) -> bool {
+    w == 0 || LANE_WORD_CHOICES.contains(&w)
+}
+
+/// The `PRINTED_MLP_SIM_LANES` environment override, when set to a valid
+/// width.  It beats every other knob — the process-wide default here and
+/// the explicit `serve`/evaluator configuration alike — so one exported
+/// variable pins the width across subcommands.
+pub fn lane_words_env() -> Option<usize> {
+    let v = std::env::var_os("PRINTED_MLP_SIM_LANES")?;
+    match v.to_string_lossy().parse::<usize>() {
+        Ok(n) if n != 0 && LANE_WORD_CHOICES.contains(&n) => Some(n),
+        _ => None,
+    }
+}
+
+/// The resolved process-wide super-lane width (`sim.lanes` config key /
+/// `--sim-lanes`; [`lane_words_env`] overrides the flag, and `0`/unset
+/// auto-picks via [`auto_lane_words`]).  Always one of
+/// [`LANE_WORD_CHOICES`].
+pub fn lane_words_default() -> usize {
+    if let Some(n) = lane_words_env() {
+        return n;
+    }
+    match LANE_WORDS_DEFAULT.load(Ordering::Relaxed) {
+        0 => auto_lane_words(),
+        n => n,
+    }
+}
+
+/// Set the process-wide super-lane width (`0` = auto).  Panics on a
+/// width outside [`LANE_WORD_CHOICES`] — config/CLI validate first via
+/// [`valid_lane_words`].
+pub fn set_lane_words_default(w: usize) {
+    assert!(
+        valid_lane_words(w),
+        "sim lanes must be 0 (auto) or one of {LANE_WORD_CHOICES:?}, got {w}"
+    );
+    LANE_WORDS_DEFAULT.store(w, Ordering::Relaxed);
 }
 
 // Micro-op opcodes: one byte per surviving gate, dispatched over
@@ -100,6 +196,13 @@ pub struct CompiledPlan {
     src_c: Vec<u32>,
     /// Destination slot per micro-op.
     dst: Vec<u32>,
+    /// Maximal same-opcode spans of the (level-sorted) stream:
+    /// `(opcode, start, len)` — `eval` runs each span as one homogeneous
+    /// tight loop with no per-op opcode branch.  Sorting ops by
+    /// `(level, opcode)` is sound because same-level ops are independent,
+    /// and a span merging across adjacent levels stays sound because the
+    /// array order still respects every producer→reader dependency.
+    runs: Vec<(u8, u32, u32)>,
     // DFF state, struct-of-arrays (dense slots).
     dff_d: Vec<u32>,
     dff_q: Vec<u32>,
@@ -279,12 +382,49 @@ impl CompiledPlan {
             }
         }
 
+        // Opcode-run scheduling: compute each op's level (longest path
+        // from an externally-written slot — inputs, registers, constants
+        // and undriven nets sit at level 0), stable-sort the stream by
+        // (level, opcode), and record maximal same-opcode spans.  The
+        // stream is in dependency order before the sort (topo order plus
+        // trailing port BUFs that read only already-assigned slots), so
+        // levels are well-defined in one forward pass; the sort keeps
+        // every producer before its readers (reader level > producer
+        // level), which is all `eval`'s sequential span walk needs.
+        let n_stream = ops.len();
+        let mut slot_level = vec![0u32; next as usize];
+        let mut op_level = vec![0u32; n_stream];
+        for i in 0..n_stream {
+            let lvl = 1 + slot_level[src_a[i] as usize]
+                .max(slot_level[src_b[i] as usize])
+                .max(slot_level[src_c[i] as usize]);
+            op_level[i] = lvl;
+            slot_level[dst[i] as usize] = lvl;
+        }
+        let mut idx: Vec<u32> = (0..n_stream as u32).collect();
+        idx.sort_by_key(|&i| (op_level[i as usize], ops[i as usize]));
+        let permute_u8 = |src: &[u8]| -> Vec<u8> { idx.iter().map(|&i| src[i as usize]).collect() };
+        let permute = |src: &[u32]| -> Vec<u32> { idx.iter().map(|&i| src[i as usize]).collect() };
+        let ops = permute_u8(&ops);
+        let src_a = permute(&src_a);
+        let src_b = permute(&src_b);
+        let src_c = permute(&src_c);
+        let dst = permute(&dst);
+        let mut runs: Vec<(u8, u32, u32)> = Vec::new();
+        for (i, &op) in ops.iter().enumerate() {
+            match runs.last_mut() {
+                Some((last, _, len)) if *last == op => *len += 1,
+                _ => runs.push((op, i as u32, 1)),
+            }
+        }
+
         CompiledPlan {
             ops,
             src_a,
             src_b,
             src_c,
             dst,
+            runs,
             dff_d,
             dff_q,
             dff_en,
@@ -310,6 +450,13 @@ impl CompiledPlan {
     /// Dense value-vector length (live nets incl. the two constants).
     pub fn n_dense_nets(&self) -> usize {
         self.n_dense
+    }
+
+    /// Number of homogeneous opcode runs the stream executes as — at
+    /// most [`CompiledPlan::n_ops`]; the gap between the two is how much
+    /// per-op dispatch the run scheduler eliminated.
+    pub fn n_runs(&self) -> usize {
+        self.runs.len()
     }
 }
 
@@ -420,12 +567,85 @@ impl SimPlan {
     }
 }
 
-/// Packed 64-lane two-valued simulator state over a shared [`SimPlan`].
+/// Load one net's `[u64; W]` super-lane block from the slot-major value
+/// vector (slot `s` owns words `s*W .. s*W+W`).
+#[inline(always)]
+fn load<const W: usize>(v: &[u64], slot: u32) -> [u64; W] {
+    let base = slot as usize * W;
+    let mut out = [0u64; W];
+    out.copy_from_slice(&v[base..base + W]);
+    out
+}
+
+/// Store one net's `[u64; W]` super-lane block.
+#[inline(always)]
+fn store<const W: usize>(v: &mut [u64], slot: u32, val: [u64; W]) {
+    let base = slot as usize * W;
+    v[base..base + W].copy_from_slice(&val);
+}
+
+/// Homogeneous unary-op run: `dst[i] = f(a[i])` over whole lane blocks.
+/// `W` is a compile-time constant, so the per-word loop unrolls and
+/// autovectorizes; there is no opcode branch anywhere in the loop.
+#[inline(always)]
+fn run_unary<const W: usize>(v: &mut [u64], a: &[u32], d: &[u32], f: impl Fn(u64) -> u64) {
+    for (&ai, &di) in a.iter().zip(d) {
+        let va = load::<W>(v, ai);
+        let mut out = [0u64; W];
+        for (o, x) in out.iter_mut().zip(va.iter()) {
+            *o = f(*x);
+        }
+        store::<W>(v, di, out);
+    }
+}
+
+/// Homogeneous binary-op run: `dst[i] = f(a[i], b[i])`.
+#[inline(always)]
+fn run_binary<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    b: &[u32],
+    d: &[u32],
+    f: impl Fn(u64, u64) -> u64,
+) {
+    for ((&ai, &bi), &di) in a.iter().zip(b).zip(d) {
+        let va = load::<W>(v, ai);
+        let vb = load::<W>(v, bi);
+        let mut out = [0u64; W];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = f(va[j], vb[j]);
+        }
+        store::<W>(v, di, out);
+    }
+}
+
+/// Homogeneous mux run: `dst[i] = (a[i] & !sel[i]) | (b[i] & sel[i])`.
+#[inline(always)]
+fn run_mux<const W: usize>(v: &mut [u64], a: &[u32], b: &[u32], c: &[u32], d: &[u32]) {
+    for (((&ai, &bi), &si), &di) in a.iter().zip(b).zip(c).zip(d) {
+        let va = load::<W>(v, ai);
+        let vb = load::<W>(v, bi);
+        let vs = load::<W>(v, si);
+        let mut out = [0u64; W];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (va[j] & !vs[j]) | (vb[j] & vs[j]);
+        }
+        store::<W>(v, di, out);
+    }
+}
+
+/// Packed super-lane two-valued simulator state over a shared
+/// [`SimPlan`]: `W` consecutive `u64` words per net, one sample per bit
+/// (`W·64` samples per pass; `W = 1` is the original 64-lane geometry).
 pub struct Sim {
     plan: Arc<SimPlan>,
-    /// Current value of every net, one bit per lane.
+    /// Super-lane width: `u64` words per net (one of
+    /// [`LANE_WORD_CHOICES`]).
+    w: usize,
+    /// Current value of every net, slot-major: slot `s`, word `j` lives
+    /// at `vals[s * w + j]`; bit `l` of word `j` is sample `j*64 + l`.
     vals: Vec<u64>,
-    /// Scratch for the two-phase register update.
+    /// Scratch for the two-phase register update (`n_state * w` words).
     next_q: Vec<u64>,
 }
 
@@ -434,23 +654,39 @@ impl Sim {
         Sim::from_plan(Arc::new(SimPlan::new(n)))
     }
 
-    /// Fresh simulator state over a shared plan — the sharded entry point:
-    /// workers each call this with a clone of one `Arc<SimPlan>`.
+    /// Fresh 64-lane (`W = 1`) simulator state over a shared plan — the
+    /// width every pre-super-lane caller gets, with `set`/`get` exactly
+    /// as before.  See [`Sim::from_plan_wide`] for wider blocks.
+    pub fn from_plan(plan: Arc<SimPlan>) -> Sim {
+        Sim::from_plan_wide(plan, 1)
+    }
+
+    /// Fresh simulator state with `lane_words` `u64` words per net —
+    /// the sharded entry point: workers each call this with a clone of
+    /// one `Arc<SimPlan>` and the run's super-lane width.
     ///
     /// Over a compiled plan the value vector is sized to the dense live
     /// nets only (cache-local levels); over an interpreted plan it spans
-    /// every source net, exactly as before compilation existed.
-    pub fn from_plan(plan: Arc<SimPlan>) -> Sim {
+    /// every source net.  Both paths and every width are bit-identical
+    /// per lane — `W` only changes how many samples ride one pass.
+    pub fn from_plan_wide(plan: Arc<SimPlan>, lane_words: usize) -> Sim {
+        assert!(
+            LANE_WORD_CHOICES.contains(&lane_words),
+            "lane words must be one of {LANE_WORD_CHOICES:?}, got {lane_words}"
+        );
         let n_vals = plan.compiled.as_ref().map_or(plan.n_nets, |c| c.n_dense);
         let n_state = plan
             .compiled
             .as_ref()
             .map_or(plan.dffs.len(), |c| c.dff_q.len());
-        let mut vals = vec![0u64; n_vals];
-        vals[1] = !0u64; // CONST1
+        let mut vals = vec![0u64; n_vals * lane_words];
+        for j in 0..lane_words {
+            vals[lane_words + j] = !0u64; // CONST1 (slot 1), every word
+        }
         Sim {
-            next_q: vec![0; n_state],
+            next_q: vec![0; n_state * lane_words],
             plan,
+            w: lane_words,
             vals,
         }
     }
@@ -460,65 +696,112 @@ impl Sim {
         &self.plan
     }
 
-    /// Number of parallel lanes.
+    /// Number of parallel lanes per `u64` word.
     pub const LANES: usize = 64;
 
-    /// Drive a net with one packed 64-lane word.  `net` is always a
-    /// *source-netlist* id; on a compiled plan it is translated through
-    /// the write map, and driving a net compilation eliminated or folded
-    /// away (e.g. a pruned input that feeds only dead logic) is a silent
-    /// no-op — never a write to the folded net's survivor.
+    /// Super-lane width: `u64` words per net.
+    #[inline]
+    pub fn lane_words(&self) -> usize {
+        self.w
+    }
+
+    /// Total parallel samples per pass (`lane_words * 64`).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.w * Self::LANES
+    }
+
+    /// Drive lane word 0 of a net with one packed 64-lane word — the
+    /// `W = 1` contract, unchanged; words 1.. are untouched (use
+    /// [`Sim::set_lane_word`] / [`Sim::fill`] for wide blocks).  `net` is
+    /// always a *source-netlist* id; on a compiled plan it is translated
+    /// through the write map, and driving a net compilation eliminated or
+    /// folded away (e.g. a pruned input that feeds only dead logic) is a
+    /// silent no-op — never a write to the folded net's survivor.
     #[inline]
     pub fn set(&mut self, net: NetId, packed: u64) {
+        self.set_lane_word(net, 0, packed);
+    }
+
+    /// Drive one lane word (`word < lane_words`, bit `l` = sample
+    /// `word*64 + l`) of a net; same translation rules as [`Sim::set`].
+    #[inline]
+    pub fn set_lane_word(&mut self, net: NetId, word: usize, packed: u64) {
         debug_assert!(net >= 2, "cannot drive constant nets");
+        debug_assert!(word < self.w, "lane word out of range");
         let slot = self.plan.write_slot(net);
         if slot != u32::MAX {
             debug_assert!(slot >= 2, "cannot drive a constant slot");
-            self.vals[slot as usize] = packed;
+            self.vals[slot as usize * self.w + word] = packed;
         }
     }
 
-    /// Read a net's packed 64-lane word (source-netlist id; compiled
-    /// plans translate through the port map — a net folded onto an alias
-    /// or constant reads that survivor's value, an eliminated net reads
-    /// 0).  The external contract covers port bits and register outputs;
-    /// arbitrary internal nets are only observable on interpreted plans.
+    /// Broadcast one packed word to every lane word of a net (e.g. a
+    /// reset or enable that must assert across all `W·64` samples).
+    #[inline]
+    pub fn fill(&mut self, net: NetId, packed: u64) {
+        for word in 0..self.w {
+            self.set_lane_word(net, word, packed);
+        }
+    }
+
+    /// Read lane word 0 of a net — the `W = 1` contract, unchanged
+    /// (source-netlist id; compiled plans translate through the port map —
+    /// a net folded onto an alias or constant reads that survivor's
+    /// value, an eliminated net reads 0).  The external contract covers
+    /// port bits and register outputs; arbitrary internal nets are only
+    /// observable on interpreted plans.
     #[inline]
     pub fn get(&self, net: NetId) -> u64 {
+        self.get_lane_word(net, 0)
+    }
+
+    /// Read one lane word of a net; same translation rules as
+    /// [`Sim::get`].
+    #[inline]
+    pub fn get_lane_word(&self, net: NetId, word: usize) -> u64 {
+        debug_assert!(word < self.w, "lane word out of range");
         let slot = self.plan.read_slot(net);
         if slot == u32::MAX {
             0
         } else {
-            self.vals[slot as usize]
+            self.vals[slot as usize * self.w + word]
         }
     }
 
-    /// Drive a word with per-lane integer values (bit i of value v goes to
-    /// lane `lane` of net `word[i]`).
+    /// Drive a word with per-lane integer values (bit i of value v goes
+    /// to lane `lane` of net `word[i]`).  Accepts up to [`Sim::lanes`]
+    /// values and zeroes every lane beyond `values.len()` — the partial
+    /// final block of a sharded run never sees a stale lane.
     pub fn set_word_lanes(&mut self, word: &[NetId], values: &[i64]) {
-        assert!(values.len() <= Self::LANES);
+        assert!(values.len() <= self.lanes());
         for (bit, &net) in word.iter().enumerate() {
-            let mut packed = 0u64;
-            for (lane, &v) in values.iter().enumerate() {
-                packed |= (((v >> bit) & 1) as u64) << lane;
+            for j in 0..self.w {
+                let chunk = values.iter().skip(j * Self::LANES).take(Self::LANES);
+                let mut packed = 0u64;
+                for (lane, &v) in chunk.enumerate() {
+                    packed |= (((v >> bit) & 1) as u64) << lane;
+                }
+                self.set_lane_word(net, j, packed);
             }
-            self.set(net, packed);
         }
     }
 
-    /// Broadcast one value to all lanes of a word.
+    /// Broadcast one value to all lanes (every lane word) of a word.
     pub fn set_word_all(&mut self, word: &[NetId], value: i64) {
         for (bit, &net) in word.iter().enumerate() {
             let v = if (value >> bit) & 1 == 1 { !0u64 } else { 0u64 };
-            self.set(net, v);
+            self.fill(net, v);
         }
     }
 
-    /// Read a word back for one lane, two's-complement sign-extended.
+    /// Read a word back for one lane (`lane < lanes()`), two's-complement
+    /// sign-extended.
     pub fn get_word_lane_signed(&self, word: &[NetId], lane: usize) -> i64 {
         let mut v: i64 = 0;
+        let (wd, bit_in) = (lane / Self::LANES, lane % Self::LANES);
         for (bit, &net) in word.iter().enumerate() {
-            if (self.get(net) >> lane) & 1 == 1 {
+            if (self.get_lane_word(net, wd) >> bit_in) & 1 == 1 {
                 v |= 1 << bit;
             }
         }
@@ -532,8 +815,9 @@ impl Sim {
     /// Read a word back for one lane, unsigned.
     pub fn get_word_lane(&self, word: &[NetId], lane: usize) -> u64 {
         let mut v: u64 = 0;
+        let (wd, bit_in) = (lane / Self::LANES, lane % Self::LANES);
         for (bit, &net) in word.iter().enumerate() {
-            if (self.get(net) >> lane) & 1 == 1 {
+            if (self.get_lane_word(net, wd) >> bit_in) & 1 == 1 {
                 v |= 1 << bit;
             }
         }
@@ -542,59 +826,61 @@ impl Sim {
 
     /// Propagate combinational logic.
     ///
-    /// Compiled plans run the flat micro-op stream: a byte-dispatch over
-    /// four contiguous operand arrays with densely renumbered slots —
-    /// no enum payload decode, no scattered `vals` indexing.  Interpreted
-    /// plans walk the levelized `Vec<Cell>` exactly as before (the
-    /// oracle the differential suite compares against).
+    /// Compiled plans execute the opcode-run schedule: one homogeneous
+    /// tight loop per run over four contiguous operand arrays with
+    /// densely renumbered slots — no enum payload decode, no per-op
+    /// opcode branch, and whole `[u64; W]` lane blocks per micro-op.
+    /// Interpreted plans walk the levelized `Vec<Cell>` (the oracle the
+    /// differential suite compares against), widened to the same `W`.
     pub fn eval(&mut self) {
+        match self.w {
+            1 => self.eval_w::<1>(),
+            2 => self.eval_w::<2>(),
+            4 => self.eval_w::<4>(),
+            _ => self.eval_w::<8>(),
+        }
+    }
+
+    fn eval_w<const W: usize>(&mut self) {
+        debug_assert_eq!(self.w, W);
         let plan = &*self.plan;
+        let v = &mut self.vals;
         if let Some(cp) = &plan.compiled {
-            // Local equal-length slices let the compiler hoist the
-            // operand-array bounds checks out of the micro-op loop.
-            let n_ops = cp.ops.len();
-            let (ops, src_a, src_b) = (&cp.ops[..n_ops], &cp.src_a[..n_ops], &cp.src_b[..n_ops]);
-            let (src_c, dst) = (&cp.src_c[..n_ops], &cp.dst[..n_ops]);
-            let v = &mut self.vals;
-            for i in 0..n_ops {
-                let op = ops[i];
-                let a = v[src_a[i] as usize];
-                let b = v[src_b[i] as usize];
-                let r = match op {
-                    OP_INV => !a,
-                    OP_BUF => a,
-                    OP_NAND => !(a & b),
-                    OP_NOR => !(a | b),
-                    OP_AND => a & b,
-                    OP_OR => a | b,
-                    OP_XOR => a ^ b,
-                    OP_XNOR => !(a ^ b),
+            for &(op, start, len) in &cp.runs {
+                let r = start as usize..start as usize + len as usize;
+                let a = &cp.src_a[r.clone()];
+                let b = &cp.src_b[r.clone()];
+                let c = &cp.src_c[r.clone()];
+                let d = &cp.dst[r];
+                match op {
+                    OP_INV => run_unary::<W>(v, a, d, |x| !x),
+                    OP_BUF => run_unary::<W>(v, a, d, |x| x),
+                    OP_NAND => run_binary::<W>(v, a, b, d, |x, y| !(x & y)),
+                    OP_NOR => run_binary::<W>(v, a, b, d, |x, y| !(x | y)),
+                    OP_AND => run_binary::<W>(v, a, b, d, |x, y| x & y),
+                    OP_OR => run_binary::<W>(v, a, b, d, |x, y| x | y),
+                    OP_XOR => run_binary::<W>(v, a, b, d, |x, y| x ^ y),
+                    OP_XNOR => run_binary::<W>(v, a, b, d, |x, y| !(x ^ y)),
                     _ => {
                         debug_assert_eq!(op, OP_MUX);
-                        let s = v[src_c[i] as usize];
-                        (a & !s) | (b & s)
+                        run_mux::<W>(v, a, b, c, d);
                     }
-                };
-                v[dst[i] as usize] = r;
+                }
             }
             return;
         }
         for &ci in &plan.order {
             let c = plan.cells[ci as usize];
-            let v = &mut self.vals;
             match c {
-                Cell::Inv { a, y } => v[y as usize] = !v[a as usize],
-                Cell::Buf { a, y } => v[y as usize] = v[a as usize],
-                Cell::Nand2 { a, b, y } => v[y as usize] = !(v[a as usize] & v[b as usize]),
-                Cell::Nor2 { a, b, y } => v[y as usize] = !(v[a as usize] | v[b as usize]),
-                Cell::And2 { a, b, y } => v[y as usize] = v[a as usize] & v[b as usize],
-                Cell::Or2 { a, b, y } => v[y as usize] = v[a as usize] | v[b as usize],
-                Cell::Xor2 { a, b, y } => v[y as usize] = v[a as usize] ^ v[b as usize],
-                Cell::Xnor2 { a, b, y } => v[y as usize] = !(v[a as usize] ^ v[b as usize]),
-                Cell::Mux2 { a, b, sel, y } => {
-                    let s = v[sel as usize];
-                    v[y as usize] = (v[a as usize] & !s) | (v[b as usize] & s);
-                }
+                Cell::Inv { a, y } => run_unary::<W>(v, &[a], &[y], |x| !x),
+                Cell::Buf { a, y } => run_unary::<W>(v, &[a], &[y], |x| x),
+                Cell::Nand2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x & z)),
+                Cell::Nor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x | z)),
+                Cell::And2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x & z),
+                Cell::Or2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x | z),
+                Cell::Xor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x ^ z),
+                Cell::Xnor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x ^ z)),
+                Cell::Mux2 { a, b, sel, y } => run_mux::<W>(v, &[a], &[b], &[sel], &[y]),
                 Cell::Dff { .. } => unreachable!("DFF in comb order"),
             }
         }
@@ -610,19 +896,33 @@ impl Sim {
     /// reading outputs after the last step.
     pub fn step(&mut self) {
         self.eval();
+        match self.w {
+            1 => self.commit_state::<1>(),
+            2 => self.commit_state::<2>(),
+            4 => self.commit_state::<4>(),
+            _ => self.commit_state::<8>(),
+        }
+    }
+
+    fn commit_state<const W: usize>(&mut self) {
+        debug_assert_eq!(self.w, W);
         let plan = &*self.plan;
         if let Some(cp) = &plan.compiled {
             for i in 0..cp.dff_q.len() {
                 let v = &self.vals;
-                let d = v[cp.dff_d[i] as usize];
-                let en = v[cp.dff_en[i] as usize];
-                let rst = v[cp.dff_rst[i] as usize];
-                let q = v[cp.dff_q[i] as usize];
-                let held = (en & d) | (!en & q);
-                self.next_q[i] = (rst & cp.dff_rstval[i]) | (!rst & held);
+                let d = load::<W>(v, cp.dff_d[i]);
+                let en = load::<W>(v, cp.dff_en[i]);
+                let rst = load::<W>(v, cp.dff_rst[i]);
+                let q = load::<W>(v, cp.dff_q[i]);
+                let rv = cp.dff_rstval[i];
+                for j in 0..W {
+                    let held = (en[j] & d[j]) | (!en[j] & q[j]);
+                    self.next_q[i * W + j] = (rst[j] & rv) | (!rst[j] & held);
+                }
             }
-            for (&qslot, &nq) in cp.dff_q.iter().zip(self.next_q.iter()) {
-                self.vals[qslot as usize] = nq;
+            for (i, &qslot) in cp.dff_q.iter().enumerate() {
+                let base = qslot as usize * W;
+                self.vals[base..base + W].copy_from_slice(&self.next_q[i * W..i * W + W]);
             }
             return;
         }
@@ -637,13 +937,20 @@ impl Sim {
             {
                 let v = &self.vals;
                 let rv = if rstval { !0u64 } else { 0u64 };
-                let held = (v[en as usize] & v[d as usize]) | (!v[en as usize] & v[q as usize]);
-                self.next_q[slot] = (v[rst as usize] & rv) | (!v[rst as usize] & held);
+                let vd = load::<W>(v, d);
+                let ven = load::<W>(v, en);
+                let vrst = load::<W>(v, rst);
+                let vq = load::<W>(v, q);
+                for j in 0..W {
+                    let held = (ven[j] & vd[j]) | (!ven[j] & vq[j]);
+                    self.next_q[slot * W + j] = (vrst[j] & rv) | (!vrst[j] & held);
+                }
             }
         }
         for (slot, &ci) in plan.dffs.iter().enumerate() {
             let q = plan.cells[ci as usize].output();
-            self.vals[q as usize] = self.next_q[slot];
+            let base = q as usize * W;
+            self.vals[base..base + W].copy_from_slice(&self.next_q[slot * W..slot * W + W]);
         }
     }
 
@@ -653,17 +960,21 @@ impl Sim {
     }
 
     /// Reset all registers to their reset values (as if rst had been held
-    /// high for one cycle), then propagate.
+    /// high for one cycle) across every lane word, then propagate.
     pub fn reset(&mut self) {
+        let w = self.w;
         if let Some(cp) = &self.plan.compiled {
             for (&qslot, &rv) in cp.dff_q.iter().zip(cp.dff_rstval.iter()) {
-                self.vals[qslot as usize] = rv;
+                let base = qslot as usize * w;
+                self.vals[base..base + w].fill(rv);
             }
         } else {
             let plan = &*self.plan;
             for &ci in plan.dffs.iter() {
                 if let Cell::Dff { q, rstval, .. } = plan.cells[ci as usize] {
-                    self.vals[q as usize] = if rstval { !0u64 } else { 0u64 };
+                    let rv = if rstval { !0u64 } else { 0u64 };
+                    let base = q as usize * w;
+                    self.vals[base..base + w].fill(rv);
                 }
             }
         }
@@ -892,5 +1203,134 @@ mod tests {
         assert_eq!(s2.get(y) & 0b11, 0b10);
         assert_eq!(plan.n_cells(), 1);
         assert_eq!(plan.n_dffs(), 0);
+    }
+
+    #[test]
+    fn wide_lane_words_isolate_and_match_w1() {
+        // Same xor circuit at W ∈ {2,4,8}: each lane word must compute
+        // independently and agree with a W=1 sim fed that word alone —
+        // on both the interpreted and compiled paths.
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let y = n.xor2(a, b);
+        n.add_output("y", vec![y]);
+        for plan in [Arc::new(SimPlan::new(&n)), Arc::new(SimPlan::compiled(&n))] {
+            for w in [2usize, 4, 8] {
+                let mut wide = Sim::from_plan_wide(plan.clone(), w);
+                assert_eq!(wide.lane_words(), w);
+                assert_eq!(wide.lanes(), w * 64);
+                for j in 0..w {
+                    let pa = 0x1111_2222_3333_4444u64.wrapping_mul(j as u64 + 1);
+                    let pb = 0xAAAA_5555_F0F0_0F0Fu64.rotate_left(j as u32);
+                    wide.set_lane_word(a, j, pa);
+                    wide.set_lane_word(b, j, pb);
+                }
+                wide.eval();
+                for j in 0..w {
+                    let pa = 0x1111_2222_3333_4444u64.wrapping_mul(j as u64 + 1);
+                    let pb = 0xAAAA_5555_F0F0_0F0Fu64.rotate_left(j as u32);
+                    let mut narrow = Sim::from_plan(plan.clone());
+                    narrow.set(a, pa);
+                    narrow.set(b, pb);
+                    narrow.eval();
+                    assert_eq!(wide.get_lane_word(y, j), narrow.get(y), "word {j} w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_word_helpers_roundtrip_across_words() {
+        let mut n = Netlist::new("t");
+        let w6 = n.add_input("w", 6);
+        let mut s = Sim::from_plan_wide(Arc::new(SimPlan::new(&n)), 4);
+        // 200 values spans three lane words plus a partial fourth.
+        let vals: Vec<i64> = (0..200).map(|i| ((i * 7) % 64) - 32).collect();
+        s.set_word_lanes(&w6, &vals);
+        for (lane, &v) in vals.iter().enumerate() {
+            assert_eq!(s.get_word_lane_signed(&w6, lane), v, "lane {lane}");
+        }
+        // Lanes beyond the provided values read as zero (masked).
+        for lane in 200..256 {
+            assert_eq!(s.get_word_lane(&w6, lane), 0, "stale lane {lane}");
+        }
+        // Broadcast fills every word.
+        s.set_word_all(&w6, 0b101101);
+        for lane in [0usize, 63, 64, 130, 255] {
+            assert_eq!(s.get_word_lane(&w6, lane), 0b101101, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn wide_counter_steps_and_resets_every_word() {
+        let mut n = Netlist::new("t");
+        let (q0, c0) = n.dff_deferred(CONST1, CONST0, false);
+        let (q1, c1) = n.dff_deferred(CONST1, CONST0, true);
+        let d0 = n.inv(q0);
+        let d1 = n.xor2(q1, q0);
+        n.set_dff_d(c0, d0);
+        n.set_dff_d(c1, d1);
+        let word = vec![q0, q1];
+        n.add_output("q", word.clone());
+        for plan in [Arc::new(SimPlan::new(&n)), Arc::new(SimPlan::compiled(&n))] {
+            let mut s = Sim::from_plan_wide(plan.clone(), 4);
+            s.reset();
+            let start = s.get_word_lane(&word, 0);
+            for lane in [1usize, 65, 200] {
+                assert_eq!(s.get_word_lane(&word, lane), start, "reset lane {lane}");
+            }
+            for _ in 0..5 {
+                s.step();
+            }
+            let after = s.get_word_lane(&word, 0);
+            for lane in [63usize, 64, 255] {
+                assert_eq!(s.get_word_lane(&word, lane), after, "step lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn opcode_runs_cover_the_stream_and_shrink_dispatch() {
+        // A layer of parallel same-kind gates must collapse into a few
+        // homogeneous runs, and the run spans must partition the stream.
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 8);
+        let b = n.add_input("b", 8);
+        let mut outs = Vec::new();
+        for i in 0..8 {
+            outs.push(n.nand2(a[i], b[i]));
+        }
+        for i in 0..8 {
+            outs.push(n.xor2(a[i], b[i]));
+        }
+        n.add_output("y", outs);
+        let plan = SimPlan::compiled(&n);
+        let cp = plan.compiled_plan().unwrap();
+        let covered: usize = cp.runs.iter().map(|&(_, _, len)| len as usize).sum();
+        assert_eq!(covered, cp.n_ops(), "runs must partition the op stream");
+        for pair in cp.runs.windows(2) {
+            assert_eq!(
+                pair[0].1 + pair[0].2,
+                pair[1].1,
+                "runs must be contiguous and ordered"
+            );
+        }
+        assert!(
+            cp.n_runs() <= 2,
+            "16 one-level gates of two kinds must form at most 2 runs, got {}",
+            cp.n_runs()
+        );
+    }
+
+    #[test]
+    fn lane_words_default_resolves_to_a_valid_choice() {
+        assert!(LANE_WORD_CHOICES.contains(&auto_lane_words()));
+        assert!(LANE_WORD_CHOICES.contains(&lane_words_default()));
+        // An explicit width wins until reset to auto.
+        set_lane_words_default(2);
+        assert_eq!(lane_words_default(), 2);
+        set_lane_words_default(0);
+        assert!(LANE_WORD_CHOICES.contains(&lane_words_default()));
     }
 }

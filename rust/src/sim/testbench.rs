@@ -5,21 +5,29 @@
 //! feature per cycle in the RFP schedule order, then `hidden + classes`
 //! drain cycles; `class_out` is valid after the final argmax cycle.
 //!
-//! 64 samples are simulated per pass (one per lane), and passes are
-//! sharded across worker threads via [`batch::run_sharded`]: the circuit's
-//! levelized [`crate::sim::SimPlan`] is built once (cached on the circuit,
-//! compiled to the micro-op stream unless
-//! [`crate::sim::compile_default`] is off) and shared read-only by every
-//! worker.  `run_sequential` / `run_combinational` use
-//! [`pool::default_threads`] (`PRINTED_MLP_THREADS` overrides); the
-//! `*_threads` variants take an explicit count — `1` is the exact serial
-//! path the differential tests compare against — and the `*_plan`
-//! variants take an explicit plan, which is how the benches drive the
-//! compiled and interpreted paths over the same netlist.
+//! Up to `W·64` samples are simulated per pass (one per lane — see
+//! `sim` §Super-lanes), and passes are sharded across worker threads via
+//! [`batch::run_sharded_wide`]: the circuit's levelized
+//! [`crate::sim::SimPlan`] is built once (cached on the circuit, compiled
+//! to the micro-op stream unless [`crate::sim::compile_default`] is off)
+//! and shared read-only by every worker.  Both protocols run through one
+//! generic block driver (`run_blocks`) that owns the per-lane feature
+//! gather and the class-word readback; the protocols differ only in the
+//! closure that clocks the simulator.  `run_sequential` /
+//! `run_combinational` use [`pool::default_threads`]
+//! (`PRINTED_MLP_THREADS` overrides) and the process-wide super-lane
+//! width ([`crate::sim::lane_words_default`] — `--sim-lanes`); the
+//! `*_threads` variants take an explicit thread count — `1` is the exact
+//! serial path the differential tests compare against — and the `*_plan`
+//! variants take an explicit plan *and* width, which is how the benches
+//! drive the compiled and interpreted paths over the same netlist at
+//! every width.
+
+use std::sync::Arc;
 
 use crate::circuits::{CombCircuit, SeqCircuit};
-use crate::netlist::{Netlist, Word};
-use crate::sim::{batch, Sim};
+use crate::netlist::{NetId, Netlist, Word};
+use crate::sim::{batch, Sim, SimPlan};
 use crate::util::pool;
 
 fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
@@ -38,9 +46,65 @@ fn output_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
         .bits
 }
 
+/// One block's sample window plus a reusable per-lane gather buffer —
+/// what a protocol closure needs to feed features to the simulator.
+pub struct BlockIo<'a> {
+    xs: &'a [u8],
+    features: usize,
+    base: usize,
+    lanes: usize,
+    scratch: Vec<i64>,
+}
+
+impl<'a> BlockIo<'a> {
+    /// Gather feature `f` of every sample in the block into the lane
+    /// buffer and drive it onto `word` (lanes beyond the block's count
+    /// are zeroed by [`Sim::set_word_lanes`]).
+    pub fn drive_feature(&mut self, sim: &mut Sim, word: &[NetId], f: usize) {
+        self.scratch.clear();
+        for lane in 0..self.lanes {
+            self.scratch.push(self.xs[(self.base + lane) * self.features + f] as i64);
+        }
+        sim.set_word_lanes(word, &self.scratch);
+    }
+}
+
+/// The shared block driver both protocols run on: shard `n` samples into
+/// super-lane blocks, hand each block's [`BlockIo`] to the protocol
+/// closure, then read `class_out` back per lane.
+#[allow(clippy::too_many_arguments)]
+fn run_blocks<D>(
+    plan: &Arc<SimPlan>,
+    class_out: &[NetId],
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    drive: D,
+) -> Vec<u16>
+where
+    D: Fn(&mut Sim, &mut BlockIo) + Sync,
+{
+    batch::run_sharded_wide(plan, n, threads, lane_words, |sim, base, lanes| {
+        let mut io = BlockIo {
+            xs,
+            features,
+            base,
+            lanes,
+            scratch: Vec::with_capacity(lanes),
+        };
+        drive(sim, &mut io);
+        (0..lanes)
+            .map(|lane| sim.get_word_lane(class_out, lane) as u16)
+            .collect()
+    })
+}
+
 /// Run `n` samples (row-major `features`-wide 4-bit values) through a
 /// sequential circuit; returns predicted class per sample.  Sharded
-/// across [`pool::default_threads`] workers.
+/// across [`pool::default_threads`] workers at the default super-lane
+/// width.
 pub fn run_sequential(circ: &SeqCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
     run_sequential_threads(circ, xs, n, features, pool::default_threads())
 }
@@ -53,54 +117,49 @@ pub fn run_sequential_threads(
     features: usize,
     threads: usize,
 ) -> Vec<u16> {
-    run_sequential_plan(circ, &circ.sim_plan(), xs, n, features, threads)
+    run_sequential_plan(circ, &circ.sim_plan(), xs, n, features, threads, 0)
 }
 
-/// [`run_sequential_threads`] over an explicit plan instead of the
-/// circuit's cached one — how the benches drive the compiled and
-/// interpreted paths side by side over the same netlist.
+/// [`run_sequential_threads`] over an explicit plan and super-lane width
+/// (`0` = process default) instead of the circuit's cached plan — how
+/// the benches drive the compiled and interpreted paths side by side
+/// over the same netlist at every width.
 pub fn run_sequential_plan(
     circ: &SeqCircuit,
-    plan: &std::sync::Arc<crate::sim::SimPlan>,
+    plan: &Arc<SimPlan>,
     xs: &[u8],
     n: usize,
     features: usize,
     threads: usize,
+    lane_words: usize,
 ) -> Vec<u16> {
     let net = &circ.netlist;
     let x = input_port(net, "x").clone();
     let rst = input_port(net, "rst")[0];
     let class_out = output_port(net, "class_out").clone();
 
-    batch::run_sharded(plan, n, threads, |sim, base, lanes| {
-        let mut lane_vals = [0i64; Sim::LANES];
-        // Reset pulse.
-        sim.set(rst, !0u64);
+    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, |sim, io| {
+        // Reset pulse across every lane word.
+        sim.fill(rst, !0u64);
         sim.set_word_all(&x, 0);
         sim.step();
-        sim.set(rst, 0);
+        sim.fill(rst, 0);
         // Hidden phase: feature active[t] on the bus at cycle t.
         for t in 0..circ.cycles {
             if t < circ.active.len() {
-                let f = circ.active[t];
-                for lane in 0..lanes {
-                    lane_vals[lane] = xs[(base + lane) * features + f] as i64;
-                }
-                sim.set_word_lanes(&x, &lane_vals[..lanes]);
+                io.drive_feature(sim, &x, circ.active[t]);
             } else {
                 sim.set_word_all(&x, 0);
             }
             sim.step();
         }
         sim.settle();
-        (0..lanes)
-            .map(|lane| sim.get_word_lane(&class_out, lane) as u16)
-            .collect()
     })
 }
 
-/// Run `n` samples through a combinational circuit (single evaluation per
-/// 64-lane block).  Sharded across [`pool::default_threads`] workers.
+/// Run `n` samples through a combinational circuit (single evaluation
+/// per super-lane block).  Sharded across [`pool::default_threads`]
+/// workers at the default super-lane width.
 pub fn run_combinational(circ: &CombCircuit, xs: &[u8], n: usize, features: usize) -> Vec<u16> {
     run_combinational_threads(circ, xs, n, features, pool::default_threads())
 }
@@ -113,36 +172,30 @@ pub fn run_combinational_threads(
     features: usize,
     threads: usize,
 ) -> Vec<u16> {
-    run_combinational_plan(circ, &circ.sim_plan(), xs, n, features, threads)
+    run_combinational_plan(circ, &circ.sim_plan(), xs, n, features, threads, 0)
 }
 
-/// [`run_combinational_threads`] over an explicit plan (see
-/// [`run_sequential_plan`]).
+/// [`run_combinational_threads`] over an explicit plan and super-lane
+/// width (see [`run_sequential_plan`]).
 pub fn run_combinational_plan(
     circ: &CombCircuit,
-    plan: &std::sync::Arc<crate::sim::SimPlan>,
+    plan: &Arc<SimPlan>,
     xs: &[u8],
     n: usize,
     features: usize,
     threads: usize,
+    lane_words: usize,
 ) -> Vec<u16> {
     let net = &circ.netlist;
     let x_all = input_port(net, "x_all").clone();
     let class_out = output_port(net, "class_out").clone();
     assert_eq!(x_all.len(), 4 * circ.active.len());
 
-    batch::run_sharded(plan, n, threads, |sim, base, lanes| {
-        let mut lane_vals = [0i64; Sim::LANES];
+    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, |sim, io| {
         for (slot, &f) in circ.active.iter().enumerate() {
-            for lane in 0..lanes {
-                lane_vals[lane] = xs[(base + lane) * features + f] as i64;
-            }
-            sim.set_word_lanes(&x_all[slot * 4..(slot + 1) * 4], &lane_vals[..lanes]);
+            io.drive_feature(sim, &x_all[slot * 4..(slot + 1) * 4], f);
         }
         sim.eval();
-        (0..lanes)
-            .map(|lane| sim.get_word_lane(&class_out, lane) as u16)
-            .collect()
     })
 }
 

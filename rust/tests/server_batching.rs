@@ -27,7 +27,7 @@ fn synthetic_registry(n: usize, seed: u64) -> ModelRegistry {
 #[test]
 fn every_frame_answered_exactly_once_and_bit_identical() {
     let reg = synthetic_registry(3, 21);
-    let evals = reg.evaluators(Backend::Native, 1).unwrap();
+    let evals = reg.evaluators(Backend::Native, 1, 0).unwrap();
     let entries = reg.entries();
     let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
 
@@ -148,6 +148,50 @@ fn subfull_batches_linger_until_max_wait_or_force() {
 }
 
 #[test]
+fn gatesim_drain_aligns_batches_to_super_lane_blocks() {
+    use std::sync::atomic::Ordering;
+    // W=1 gatesim reports a 64-sample block quantum; a deep queue with a
+    // small configured batch must drain in whole blocks (batch ceiling
+    // rounded up), leaving only the forced tail partial.
+    let reg = synthetic_registry(1, 31);
+    let evals = reg.evaluators(Backend::GateSim, 1, 1).unwrap();
+    reg.warmup(&evals).unwrap();
+    assert_eq!(evals[0].batch_quantum(), 64);
+    let entries = reg.entries();
+    let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
+    let mut rng = Rng::new(7);
+    for id in 0..200u64 {
+        let sample = rng.usize_below(entries[0].test.len());
+        assert!(queues[0].push(Frame {
+            id,
+            sample,
+            enqueued: Instant::now(),
+        }));
+    }
+    let stop = AtomicBool::new(true);
+    let cfg = DrainConfig {
+        workers: 1,
+        batch: 16,
+        max_wait: Duration::from_millis(1),
+        slo_ms: 1e9,
+        collect_responses: false,
+    };
+    batcher::drain(&queues, entries, &evals, &cfg, &stop).unwrap();
+    let st = &queues[0].stats;
+    assert_eq!(st.answered.load(Ordering::Relaxed), 200);
+    assert_eq!(
+        st.batches.load(Ordering::Relaxed),
+        4,
+        "200 frames at a 64-aligned ceiling drain as 64+64+64+8"
+    );
+    assert_eq!(
+        st.lane_slots.load(Ordering::Relaxed),
+        256,
+        "three full blocks plus one partial block of lane slots"
+    );
+}
+
+#[test]
 fn steady_three_models_zero_shed_exact_accuracy() {
     let store = ArtifactStore::new("/nonexistent-artifacts-root");
     let cfg = server::ServeConfig {
@@ -177,6 +221,11 @@ fn steady_three_models_zero_shed_exact_accuracy() {
         assert_eq!(
             m.accuracy, 1.0,
             "{}: self-labeled split + exact backend ⇒ bit-exact serving",
+            m.name
+        );
+        assert_eq!(
+            m.fill, 1.0,
+            "{}: scalar backend has quantum 1, so every lane slot is used",
             m.name
         );
     }

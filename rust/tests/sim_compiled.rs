@@ -1,12 +1,15 @@
 //! Differential tests for the compiled gate-level simulator: the
 //! micro-op-compiled path (`SimPlan::compiled` — plan-time strength
-//! reduction + dense net renumbering) must be bit-identical on every lane
-//! to the interpreted reference oracle (`SimPlan::new`) — over random
-//! netlists with DFFs, muxes, constants and buffer chains; over generated
-//! multi-cycle circuits sharded across threads with partial final blocks;
-//! and through the external port-map translation of `set`/`get`/word
-//! helpers.  Also property-checks that compilation never increases the
-//! gate count.
+//! reduction + dense net renumbering + opcode-run scheduling) must be
+//! bit-identical on every lane to the interpreted reference oracle
+//! (`SimPlan::new`) — over random netlists with DFFs, muxes, constants
+//! and buffer chains; over generated multi-cycle circuits sharded across
+//! threads with partial final blocks; through the external port-map
+//! translation of `set`/`get`/word helpers; and at every super-lane
+//! width `W ∈ {1,2,4,8}` (the W-sweep compares each lane word against
+//! its own W=1 oracle, which doubles as the lane-isolation property, and
+//! a garbage-injection test proves other lanes can never leak in).  Also
+//! property-checks that compilation never increases the gate count.
 //!
 //! Artifact-free, so this suite runs in tier-1.
 
@@ -82,8 +85,8 @@ fn compilation_never_increases_gate_count() {
 
 #[test]
 fn compiled_sharded_partial_blocks_match_interpreted_serial() {
-    // 130 samples = two full 64-lane blocks + a 2-lane partial tail; the
-    // compiled plan is shared read-only by every worker.
+    // 130 samples = two full 64-lane blocks + a 2-lane partial tail at
+    // W=1; the compiled plan is shared read-only by every worker.
     let m = rand_model(31, 9, 4, 3);
     let active: Vec<usize> = (0..m.features).collect();
     let circ = seq_multicycle::generate(&m, &active);
@@ -92,17 +95,162 @@ fn compiled_sharded_partial_blocks_match_interpreted_serial() {
     let n = 130;
     let mut r = Rng::new(5);
     let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
-    let want = testbench::run_sequential_plan(&circ, &interp, &xs, n, m.features, 1);
+    let want = testbench::run_sequential_plan(&circ, &interp, &xs, n, m.features, 1, 1);
     for threads in [1usize, 3, 8] {
-        let got = testbench::run_sequential_plan(&circ, &comp, &xs, n, m.features, threads);
+        let got = testbench::run_sequential_plan(&circ, &comp, &xs, n, m.features, threads, 1);
         assert_eq!(want, got, "threads={threads}");
     }
     // Tiny and exact-block sizes through the same pair of plans.
     for n in [1usize, 63, 64] {
         let head = &xs[..n * m.features];
-        let want = testbench::run_sequential_plan(&circ, &interp, head, n, m.features, 1);
-        let got = testbench::run_sequential_plan(&circ, &comp, head, n, m.features, 4);
+        let want = testbench::run_sequential_plan(&circ, &interp, head, n, m.features, 1, 1);
+        let got = testbench::run_sequential_plan(&circ, &comp, head, n, m.features, 4, 1);
         assert_eq!(want, got, "n={n}");
+    }
+}
+
+#[test]
+fn super_lane_w_sweep_matches_w1_oracle() {
+    // The tentpole differential: every width W ∈ {1,2,4,8}, on both the
+    // compiled and the interpreted path, serial and sharded, must be
+    // bit-identical to the W=1 interpreted oracle — including partial
+    // final blocks at every width (n = 130 is partial for every W, and
+    // n = 257 adds a 1-lane tail beyond a full W=4 block).
+    let m = rand_model(41, 8, 4, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let interp = Arc::new(SimPlan::new(&circ.netlist));
+    let comp = Arc::new(SimPlan::compiled(&circ.netlist));
+    let n_max = 257;
+    let mut r = Rng::new(6);
+    let xs: Vec<u8> = (0..n_max * m.features).map(|_| r.below(16) as u8).collect();
+    for n in [3usize, 64, 130, 257] {
+        let head = &xs[..n * m.features];
+        let want = testbench::run_sequential_plan(&circ, &interp, head, n, m.features, 1, 1);
+        for w in [1usize, 2, 4, 8] {
+            for plan in [&interp, &comp] {
+                for threads in [1usize, 3] {
+                    let got = testbench::run_sequential_plan(
+                        &circ, plan, head, n, m.features, threads, w,
+                    );
+                    assert_eq!(
+                        want,
+                        got,
+                        "n={n} w={w} threads={threads} compiled={}",
+                        plan.is_compiled()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn super_lane_widths_match_oracle_on_random_netlists() {
+    // Propcheck differential at every width: drive W independent 64-lane
+    // stimulus words through one wide sim and through W separate W=1
+    // interpreted-oracle sims; every output word must match its oracle
+    // after the same mixed eval/step/reset schedule.  This is both the
+    // W-sweep correctness proof and the lane-word isolation property (a
+    // word's outputs depend only on its own stimulus).
+    check("wide sim == per-word W=1 oracle", 25, |g| {
+        let n = rand_netlist(g);
+        let w = [2usize, 4, 8][g.rng().usize_below(3)];
+        let compiled = g.bool();
+        let plan = if compiled {
+            Arc::new(SimPlan::compiled(&n))
+        } else {
+            Arc::new(SimPlan::new(&n))
+        };
+        let mut wide = Sim::from_plan_wide(plan, w);
+        let mut oracles: Vec<Sim> =
+            (0..w).map(|_| Sim::from_plan(Arc::new(SimPlan::new(&n)))).collect();
+        let mut r = Rng::new(g.rng().next_u64());
+        wide.reset();
+        for o in oracles.iter_mut() {
+            o.reset();
+        }
+        let mut ok = true;
+        for _cycle in 0..10 {
+            for port in &n.inputs {
+                for &bit in &port.bits {
+                    for (j, o) in oracles.iter_mut().enumerate() {
+                        let v = r.next_u64();
+                        wide.set_lane_word(bit, j, v);
+                        o.set(bit, v);
+                    }
+                }
+            }
+            match r.below(8) {
+                0 => {
+                    wide.reset();
+                    for o in oracles.iter_mut() {
+                        o.reset();
+                    }
+                }
+                1 => {
+                    wide.eval();
+                    for o in oracles.iter_mut() {
+                        o.eval();
+                    }
+                }
+                _ => {
+                    wide.step();
+                    for o in oracles.iter_mut() {
+                        o.step();
+                    }
+                }
+            }
+            for port in &n.outputs {
+                for &bit in &port.bits {
+                    for (j, o) in oracles.iter().enumerate() {
+                        ok = ok && wide.get_lane_word(bit, j) == o.get(bit);
+                    }
+                }
+            }
+        }
+        ok
+    });
+}
+
+#[test]
+fn lane_isolation_garbage_in_other_lanes_never_leaks() {
+    // Lane 0 gets a fixed stimulus; every other lane word gets fresh
+    // garbage each cycle.  Lane word 0's outputs must be identical to a
+    // W=1 run of the same stimulus — garbage cannot leak across lanes.
+    let m = rand_model(47, 7, 3, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let net = &circ.netlist;
+    let plan = Arc::new(SimPlan::compiled(net));
+    let mut wide = Sim::from_plan_wide(plan.clone(), 8);
+    let mut narrow = Sim::from_plan(plan);
+    let mut stim = Rng::new(33);
+    let mut garbage = Rng::new(99);
+    wide.reset();
+    narrow.reset();
+    for cycle in 0..20 {
+        for port in &net.inputs {
+            for &bit in &port.bits {
+                let v = stim.next_u64();
+                wide.set_lane_word(bit, 0, v);
+                narrow.set(bit, v);
+                for j in 1..wide.lane_words() {
+                    wide.set_lane_word(bit, j, garbage.next_u64());
+                }
+            }
+        }
+        wide.step();
+        narrow.step();
+        for port in &net.outputs {
+            for &bit in &port.bits {
+                assert_eq!(
+                    wide.get_lane_word(bit, 0),
+                    narrow.get(bit),
+                    "cycle {cycle}: garbage leaked into lane word 0"
+                );
+            }
+        }
     }
 }
 

@@ -176,6 +176,46 @@ fn partial_final_block_at_scale() {
 }
 
 #[test]
+fn width_sweep_matches_reference_at_scale() {
+    // The naive per-sample reference vs every super-lane width × thread
+    // count, sequential and combinational, with n chosen so every width
+    // ends on a partial block.
+    let m = fixed_model(29, 8, 3, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let seq = seq_multicycle::generate(&m, &active);
+    let comb = combinational::generate(&m, &active);
+    let n = 150;
+    let mut r = Rng::new(41);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let want_seq = ref_sequential(&seq, &xs, n, m.features);
+    let want_comb = ref_combinational(&comb, &xs, n, m.features);
+    for w in [1usize, 2, 4, 8] {
+        for threads in [1usize, 4] {
+            let got = testbench::run_sequential_plan(
+                &seq,
+                &seq.sim_plan(),
+                &xs,
+                n,
+                m.features,
+                threads,
+                w,
+            );
+            assert_eq!(want_seq, got, "seq w={w} threads={threads}");
+            let got = testbench::run_combinational_plan(
+                &comb,
+                &comb.sim_plan(),
+                &xs,
+                n,
+                m.features,
+                threads,
+                w,
+            );
+            assert_eq!(want_comb, got, "comb w={w} threads={threads}");
+        }
+    }
+}
+
+#[test]
 fn tiny_n_below_one_block() {
     let m = fixed_model(22, 6, 2, 3);
     let active: Vec<usize> = (0..m.features).collect();
