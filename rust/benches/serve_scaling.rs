@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use printed_mlp::data::ArtifactStore;
 use printed_mlp::runtime::Backend;
-use printed_mlp::server::{self, Scenario, ServeConfig};
+use printed_mlp::server::{self, ArchKind, CampaignConfig, Scenario, ServeConfig};
 use printed_mlp::util::json::{num, obj, s, Json};
 use printed_mlp::util::pool;
 
@@ -85,6 +85,68 @@ fn main() {
         "\n(worst per-model p50/p99 and fill shown; shed >0 means the offered rate \
          beat the pool; fill <1 means partial super-lane blocks at the linger tail)"
     );
+
+    // Fault-campaign rows: the same synthetic registry under the stuck-at /
+    // transient sweep, per architecture.  Degradation comes from the full
+    // deterministic split pass; p99/SLO from the served traffic.
+    harness::section("serve_scaling — fault campaign (ours/hybrid/comb, 0:0 and 8:2)");
+    let campaign = CampaignConfig {
+        serve: ServeConfig {
+            datasets: vec!["syn0".into(), "syn1".into(), "syn2".into()],
+            scenario: Scenario::Steady,
+            rate_hz: 4_000.0,
+            duration: Duration::from_millis(150),
+            sensors: 4,
+            workers: max_workers,
+            queue_cap: 8192,
+            backend: Backend::GateSim,
+            synthetic: true,
+            ..ServeConfig::default()
+        },
+        archs: vec![ArchKind::Ours, ArchKind::Hybrid, ArchKind::Comb],
+        levels: vec![(0, 0), (8, 2)],
+        ..CampaignConfig::default()
+    };
+    let rep = server::campaign::run_campaign(&store, &campaign).expect("fault campaign");
+    println!(
+        "{:>7} {:>6} {:>6} {:>6} {:>10} {:>10} {:>8} {:>9}",
+        "arch", "model", "stuck", "flips", "clean acc", "fault acc", "p99 ms", "slo viol"
+    );
+    let mut fault_rows: Vec<Json> = Vec::new();
+    for row in &rep.rows {
+        println!(
+            "{:>7} {:>6} {:>6} {:>6} {:>10.3} {:>10.3} {:>8.2} {:>9}",
+            row.arch.label(),
+            row.model,
+            row.stuck,
+            row.transient,
+            row.baseline_accuracy,
+            row.fault_accuracy,
+            row.serve.p99_ms,
+            row.serve.slo_violations
+        );
+        if row.stuck == 0 && row.transient == 0 {
+            assert_eq!(
+                row.degradation, 0.0,
+                "zero-fault campaign cell must match the clean pass bit-for-bit"
+            );
+        }
+        fault_rows.push(obj(vec![
+            ("arch", s(row.arch.label())),
+            ("model", s(&row.model)),
+            ("stuck", num(row.stuck as f64)),
+            ("transient", num(row.transient as f64)),
+            ("flip_rate", num(row.flip_rate)),
+            ("baseline_accuracy", num(row.baseline_accuracy)),
+            ("fault_accuracy", num(row.fault_accuracy)),
+            ("degradation", num(row.degradation)),
+            ("p99_ms", num(row.serve.p99_ms)),
+            ("slo_violations", num(row.serve.slo_violations as f64)),
+            ("errors", num(row.serve.errors as f64)),
+            ("shed", num(row.serve.shed as f64)),
+        ]));
+    }
+
     harness::write_results_json(
         "BENCH_serve.json",
         &obj(vec![
@@ -92,6 +154,7 @@ fn main() {
             ("backend", s("gatesim")),
             ("scenario", s("steady")),
             ("rows", Json::Arr(rows)),
+            ("fault_rows", Json::Arr(fault_rows)),
         ]),
     );
 }

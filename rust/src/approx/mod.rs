@@ -31,6 +31,15 @@ pub fn build_tables(
     importance::approx_tables(model, train_xs, n_train, feat_mask)
 }
 
+/// The fixed "approximate every other hidden neuron" demo mask shared by
+/// the CLI's `--arch hybrid` inspection path and the fault campaign's
+/// hybrid architecture.  The NSGA-II search ([`explore`]) is the real
+/// selector; this is the deterministic stand-in for contexts with no
+/// search artifacts (synthetic serve, quick inspection).
+pub fn demo_hybrid_mask(hidden: usize) -> Vec<u8> {
+    (0..hidden).map(|h| (h % 2 == 0) as u8).collect()
+}
+
 /// Run the genetic exploration.  `eval(approx_mask) -> accuracy` evaluates
 /// the hybrid model on the training set (PJRT-backed on the hot path).
 pub fn explore<F>(hidden: usize, cfg: &NsgaConfig, mut eval: F) -> Vec<Individual>

@@ -12,7 +12,10 @@
 //!                       [--no-compile-sim] [--sim-lanes W]
 //! printed-mlp serve     [--datasets a,b,..] [--scenario S] [--rate HZ] [--secs S]
 //!                       [--workers N] [--queue-cap N] [--batch N] [--backend B]
-//!                       [--sim-lanes W] [--synthetic] [--config FILE]
+//!                       [--sim-lanes W] [--synthetic] [--trace FILE]
+//!                       [--trace-out FILE] [--config FILE]
+//! printed-mlp campaign  [serve flags] [--archs ours,hybrid,comb]
+//!                       [--fault-levels S:T,..] [--flip-rate P] [--fault-seed N]
 //! printed-mlp info
 //! ```
 //!
@@ -84,11 +87,16 @@ USAGE:
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
                         [--threads N] [--no-compile-sim] [--sim-lanes W]
-  printed-mlp serve     [--datasets a,b,..] [--scenario steady|bursty|ramp|fanin]
+  printed-mlp serve     [--datasets a,b,..]
+                        [--scenario steady|bursty|ramp|fanin|trace]
                         [--rate HZ] [--secs S] [--sensors N] [--workers N]
                         [--batch N] [--queue-cap N] [--max-wait-ms MS]
                         [--slo-ms MS] [--seed N] [--backend native|gatesim]
-                        [--sim-lanes W] [--synthetic] [--config FILE]
+                        [--sim-lanes W] [--synthetic] [--trace FILE]
+                        [--trace-out FILE] [--config FILE]
+  printed-mlp campaign  [serve flags] [--archs ours,hybrid,comb]
+                        [--fault-levels 0:0,4:0,16:0,4:4] [--flip-rate P]
+                        [--fault-seed N]
   printed-mlp info
 
 Backends: auto prefers PJRT and falls back to the native functional model;
@@ -97,8 +105,15 @@ Serve hosts every --datasets model concurrently behind per-model bounded
 batching queues drained by a --workers pool; overflow is shed and counted.
 Scenarios: steady (fixed rate, round-robin), bursty (Poisson on/off),
 ramp (0.1x -> 2x rate over the run), fanin (each sensor window feeds every
-model).  --synthetic serves deterministic self-labeled models with no
-artifacts (accuracy 1.000 expected on an exact backend).
+model), trace (replay a recorded arrival trace — --trace FILE, or a
+seed-deterministic synthesized diurnal curve; --trace-out saves the
+replayed trace).  --synthetic serves deterministic self-labeled models
+with no artifacts (accuracy 1.000 expected on an exact backend).
+Campaign sweeps printed-hardware faults (stuck-at + seed-deterministic
+transient bit-flips) over gate-level evaluators per architecture:
+--fault-levels takes stuck:transient count pairs, --flip-rate the per-bit
+transient flip probability.  Rows report deterministic clean/faulted
+accuracy plus serve-path SLO impact (campaign.csv).
 On the native backend the NSGA-II approximation search fans each
 generation's fitness batch across --search-threads workers (0 = auto)
 with a genome memo cache (--no-nsga-cache disables it); results are
@@ -126,6 +141,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "verilog" => cmd_verilog(&store, &flags),
         "simulate" => cmd_simulate(&store, &flags),
         "serve" => cmd_serve(&store, &flags),
+        "campaign" => cmd_campaign(&store, &flags),
         "info" => cmd_info(&store),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -265,8 +281,10 @@ fn build_arch(
                 ds.train.len(),
                 &vec![1u8; model.features],
             );
-            // Demo hybrid: approximate every other hidden neuron.
-            let approx: Vec<bool> = (0..model.hidden).map(|h| h % 2 == 0).collect();
+            let approx: Vec<bool> = crate::approx::demo_hybrid_mask(model.hidden)
+                .iter()
+                .map(|&b| b == 1)
+                .collect();
             let c = crate::circuits::hybrid::generate(&model, &active, &approx, &tables);
             (c.netlist, c.cycles)
         }
@@ -362,13 +380,9 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Build a ServeConfig from config file + CLI overrides (mirrors
-/// [`pipeline_config`]).
-pub fn serve_config(flags: &Flags) -> Result<server::ServeConfig> {
-    let mut conf = match flags.get("config") {
-        Some(path) => Config::load(std::path::Path::new(path))?,
-        None => Config::default(),
-    };
+/// Map the serve-family CLI flags onto config keys (shared by the serve
+/// and campaign subcommands).
+fn apply_serve_flags(flags: &Flags, conf: &mut Config) {
     // `--dataset` stays as a single-model alias of `--datasets`.
     if let Some(v) = flags.get("datasets").or_else(|| flags.get("dataset")) {
         conf.set("serve.datasets", v);
@@ -412,7 +426,47 @@ pub fn serve_config(flags: &Flags) -> Result<server::ServeConfig> {
     if flags.has("synthetic") {
         conf.set("serve.synthetic", "true");
     }
+    if let Some(v) = flags.get("trace") {
+        conf.set("serve.trace", v);
+    }
+    if let Some(v) = flags.get("trace-out") {
+        conf.set("serve.trace_out", v);
+    }
+}
+
+fn load_config(flags: &Flags) -> Result<Config> {
+    match flags.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path)),
+        None => Ok(Config::default()),
+    }
+}
+
+/// Build a ServeConfig from config file + CLI overrides (mirrors
+/// [`pipeline_config`]).
+pub fn serve_config(flags: &Flags) -> Result<server::ServeConfig> {
+    let mut conf = load_config(flags)?;
+    apply_serve_flags(flags, &mut conf);
     conf.serve()
+}
+
+/// Build a CampaignConfig: the serve flags shape the load, the campaign
+/// flags shape the fault sweep.
+pub fn campaign_config(flags: &Flags) -> Result<server::CampaignConfig> {
+    let mut conf = load_config(flags)?;
+    apply_serve_flags(flags, &mut conf);
+    if let Some(v) = flags.get("archs") {
+        conf.set("campaign.archs", v);
+    }
+    if let Some(v) = flags.get("fault-levels") {
+        conf.set("campaign.levels", v);
+    }
+    if let Some(v) = flags.get("flip-rate") {
+        conf.set("campaign.flip_rate", v);
+    }
+    if let Some(v) = flags.get("fault-seed") {
+        conf.set("campaign.fault_seed", v);
+    }
+    conf.campaign()
 }
 
 fn cmd_serve(store: &ArtifactStore, flags: &Flags) -> Result<()> {
@@ -422,6 +476,17 @@ fn cmd_serve(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     }
     let rep = server::run(store, &cfg)?;
     let md = report::serve_report(&rep, &store.results_dir())?;
+    println!("{md}");
+    Ok(())
+}
+
+fn cmd_campaign(store: &ArtifactStore, flags: &Flags) -> Result<()> {
+    let cfg = campaign_config(flags)?;
+    if !cfg.serve.synthetic {
+        require_artifacts(store, &cfg.serve.datasets)?;
+    }
+    let rep = server::campaign::run_campaign(store, &cfg)?;
+    let md = report::campaign_report(&rep, &store.results_dir())?;
     println!("{md}");
     Ok(())
 }
@@ -552,6 +617,46 @@ mod tests {
         assert_eq!(cfg.batch, 8);
         assert!(cfg.synthetic);
         assert_eq!(cfg.backend, crate::runtime::Backend::GateSim);
+    }
+
+    #[test]
+    fn serve_trace_flags_reach_config() {
+        let args: Vec<String> = ["--scenario", "trace", "--trace", "in.trace", "--trace-out", "o.trace"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = serve_config(&f).unwrap();
+        assert_eq!(cfg.scenario, crate::server::Scenario::Trace);
+        assert_eq!(cfg.trace, Some(std::path::PathBuf::from("in.trace")));
+        assert_eq!(cfg.trace_out, Some(std::path::PathBuf::from("o.trace")));
+    }
+
+    #[test]
+    fn campaign_config_overrides() {
+        use crate::server::ArchKind;
+        let args: Vec<String> = [
+            "--synthetic", "--archs", "ours,comb", "--fault-levels", "0:0,8:2", "--flip-rate",
+            "0.01", "--fault-seed", "77", "--rate", "200", "--secs", "0.1",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = campaign_config(&f).unwrap();
+        assert!(cfg.serve.synthetic);
+        assert_eq!(cfg.serve.rate_hz, 200.0);
+        assert_eq!(cfg.archs, vec![ArchKind::Ours, ArchKind::Comb]);
+        assert_eq!(cfg.levels, vec![(0, 0), (8, 2)]);
+        assert_eq!(cfg.flip_rate, 0.01);
+        assert_eq!(cfg.fault_seed, 77);
+        // Defaults: the standard sweep.
+        let d = campaign_config(&Flags::parse(&[]).unwrap()).unwrap();
+        assert_eq!(d.archs.len(), 3);
+        assert_eq!(d.levels.len(), 4);
+        // Bad levels rejected.
+        let args: Vec<String> = ["--fault-levels", "bogus"].iter().map(|s| s.to_string()).collect();
+        assert!(campaign_config(&Flags::parse(&args).unwrap()).is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //!
 //! [serve]
 //! datasets = spectf, arrhythmia, gas
-//! scenario = steady       # steady | bursty | ramp | fanin
+//! scenario = steady       # steady | bursty | ramp | fanin | trace
 //! rate_hz = 2000
 //! secs = 3
 //! sensors = 4
@@ -37,18 +37,26 @@
 //! slo_ms = 50
 //! backend = native        # native | gatesim (pjrt is thread-bound)
 //! synthetic = false       # artifact-free deterministic models
+//! trace = day.trace       # trace scenario: replay this file
+//! trace_out = out.trace   # write the replayed/synthesized trace
+//!
+//! [campaign]
+//! archs = ours, hybrid, comb
+//! levels = 0:0, 4:0, 16:0, 4:4   # stuck:transient fault counts
+//! flip_rate = 0.001       # per-bit transient flip probability
+//! fault_seed = 1024369    # fault sampling / flip-mask base seed
 //! ```
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::PipelineConfig;
 use crate::nsga::NsgaConfig;
 use crate::rfp::Strategy;
 use crate::runtime::Backend;
-use crate::server::ServeConfig;
+use crate::server::{CampaignConfig, ServeConfig};
 
 /// Parsed configuration: `section.key -> raw value string`.
 #[derive(Clone, Debug, Default)]
@@ -281,6 +289,42 @@ impl Config {
         if let Some(w) = self.sim_lanes()? {
             cfg.sim_lanes = w;
         }
+        if let Some(p) = self.get("serve.trace") {
+            cfg.trace = Some(std::path::PathBuf::from(p));
+        }
+        if let Some(p) = self.get("serve.trace_out") {
+            cfg.trace_out = Some(std::path::PathBuf::from(p));
+        }
+        Ok(cfg)
+    }
+
+    /// Materialize the fault-campaign configuration: the `[serve]`
+    /// section supplies the load shape, `[campaign]` the fault sweep.
+    pub fn campaign(&self) -> Result<CampaignConfig> {
+        let mut cfg = CampaignConfig {
+            serve: self.serve()?,
+            ..CampaignConfig::default()
+        };
+        if let Some(archs) = self.get_list("campaign.archs") {
+            cfg.archs = archs
+                .iter()
+                .map(|a| a.parse().with_context(|| format!("campaign.archs: {a}")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(s) = self.get("campaign.levels") {
+            cfg.levels =
+                crate::server::campaign::parse_levels(s).with_context(|| "campaign.levels")?;
+        }
+        if let Some(r) = self.get_f64("campaign.flip_rate")? {
+            ensure!(
+                (0.0..=1.0).contains(&r),
+                "campaign.flip_rate: {r} outside [0, 1]"
+            );
+            cfg.flip_rate = r;
+        }
+        if let Some(s) = self.get_usize("campaign.fault_seed")? {
+            cfg.fault_seed = s as u64;
+        }
         Ok(cfg)
     }
 }
@@ -392,6 +436,43 @@ mod tests {
         assert_eq!(d.datasets.len(), 3);
         assert_eq!(d.backend, Backend::Auto);
         assert!(!d.synthetic);
+    }
+
+    #[test]
+    fn serve_trace_keys_parse() {
+        let c = Config::parse("[serve]\nscenario = trace\ntrace = day.trace\ntrace_out = o.trace\n")
+            .unwrap();
+        let s = c.serve().unwrap();
+        assert_eq!(s.scenario, crate::server::Scenario::Trace);
+        assert_eq!(s.trace, Some(std::path::PathBuf::from("day.trace")));
+        assert_eq!(s.trace_out, Some(std::path::PathBuf::from("o.trace")));
+        // Defaults: no trace files.
+        let d = Config::default().serve().unwrap();
+        assert!(d.trace.is_none() && d.trace_out.is_none());
+    }
+
+    #[test]
+    fn campaign_section_parses_and_validates() {
+        use crate::server::ArchKind;
+        let c = Config::parse(
+            "[serve]\nsynthetic = true\n[campaign]\narchs = ours, comb\nlevels = 0:0, 2:1\n\
+             flip_rate = 0.01\nfault_seed = 99\n",
+        )
+        .unwrap();
+        let k = c.campaign().unwrap();
+        assert!(k.serve.synthetic);
+        assert_eq!(k.archs, vec![ArchKind::Ours, ArchKind::Comb]);
+        assert_eq!(k.levels, vec![(0, 0), (2, 1)]);
+        assert_eq!(k.flip_rate, 0.01);
+        assert_eq!(k.fault_seed, 99);
+        // Defaults: full arch cast, the standard sweep.
+        let d = Config::default().campaign().unwrap();
+        assert_eq!(d.archs.len(), 3);
+        assert_eq!(d.levels, vec![(0, 0), (4, 0), (16, 0), (4, 4)]);
+        // Garbage rejected.
+        assert!(Config::parse("[campaign]\narchs = warp\n").unwrap().campaign().is_err());
+        assert!(Config::parse("[campaign]\nlevels = 4\n").unwrap().campaign().is_err());
+        assert!(Config::parse("[campaign]\nflip_rate = 2\n").unwrap().campaign().is_err());
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! threads; each worker owns its own PJRT engine (the `xla` handles are
 //! `!Send`).  Stage outputs are cached to `artifacts/results/` as JSON so
 //! expensive stages (NSGA) are re-used across harness runs.
+//!
+//! The gate-level validation stage here simulates the *clean* circuits;
+//! the fault campaign (`server::campaign`, DESIGN.md §Faults) reuses the
+//! same simulator path with injected stuck-at / transient faults to score
+//! degradation under printed-hardware defect models.
 
 use std::path::PathBuf;
 

@@ -31,13 +31,17 @@
 //!   compile by default into a strength-reduced, densely renumbered
 //!   micro-op stream ([`sim::SimPlan::compiled`]; `--no-compile-sim`
 //!   falls back to the interpreted oracle).  `PRINTED_MLP_THREADS` caps
-//!   the worker count.
+//!   the worker count.  [`sim::fault`] injects stuck-at and seeded
+//!   transient faults into compiled-plan execution, bit-identically
+//!   across lane widths and thread counts.
 //! - [`coordinator`] — pipeline orchestration across datasets.
 //! - [`server`] — the multi-tenant model server: [`server::ModelRegistry`]
 //!   (per-dataset artifacts loaded once, shared read-only), per-model
 //!   dynamic-batching queues with bounded capacity and shed counters
-//!   drained by a worker pool, and scenario-driven load generation
-//!   (steady / bursty / ramp / multi-sensory fanin).
+//!   drained by a worker pool, scenario-driven load generation
+//!   (steady / bursty / ramp / multi-sensory fanin / recorded trace),
+//!   and the [`server::campaign`] fault-injection sweep reporting
+//!   accuracy degradation and SLO impact per architecture.
 //! - [`report`] — table/figure emitters for the paper's evaluation.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and

@@ -107,6 +107,34 @@ impl Cell {
     }
 }
 
+/// Coarse classification of a net by what drives it — the fault
+/// campaign's site-selection key ([`Netlist::net_roles`], `sim::fault`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetRole {
+    /// One of the constant rails ([`CONST0`] / [`CONST1`]).
+    Const,
+    /// Primary-input port bit.
+    Input,
+    /// Register (DFF) output.
+    State,
+    /// Combinational cell output.
+    Comb,
+    /// Allocated but driven by nothing (reads 0 in simulation).
+    Floating,
+}
+
+impl NetRole {
+    pub fn label(self) -> &'static str {
+        match self {
+            NetRole::Const => "const",
+            NetRole::Input => "input",
+            NetRole::State => "state",
+            NetRole::Comb => "comb",
+            NetRole::Floating => "floating",
+        }
+    }
+}
+
 /// A multi-bit signal, LSB first.
 pub type Word = Vec<NetId>;
 
@@ -321,6 +349,28 @@ impl Netlist {
 
     // -- stats ---------------------------------------------------------------
 
+    /// Classify every net by its driver (indexed by [`NetId`]).  Cell
+    /// outputs win over port membership, so a net that is both (never
+    /// produced by the generators) reports how it is *driven*.
+    pub fn net_roles(&self) -> Vec<NetRole> {
+        let mut roles = vec![NetRole::Floating; self.n_nets()];
+        roles[CONST0 as usize] = NetRole::Const;
+        roles[CONST1 as usize] = NetRole::Const;
+        for p in &self.inputs {
+            for &b in &p.bits {
+                roles[b as usize] = NetRole::Input;
+            }
+        }
+        for c in &self.cells {
+            roles[c.output() as usize] = if c.is_seq() {
+                NetRole::State
+            } else {
+                NetRole::Comb
+            };
+        }
+        roles
+    }
+
     pub fn count_by_type(&self) -> std::collections::BTreeMap<&'static str, usize> {
         let mut m = std::collections::BTreeMap::new();
         for c in &self.cells {
@@ -500,6 +550,27 @@ mod tests {
         let n = Netlist::new("t");
         assert_eq!(n.const_word(5, 4), vec![CONST1, CONST0, CONST1, CONST0]);
         assert_eq!(n.const_word(-1, 3), vec![CONST1, CONST1, CONST1]);
+    }
+
+    #[test]
+    fn net_roles_classify_every_driver_kind() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 2);
+        let x = n.and2(a[0], a[1]);
+        let q = n.dff(x, CONST1, CONST0, false);
+        let floating = n.fresh();
+        let y = n.or2(q, floating);
+        n.add_output("y", vec![y]);
+        let roles = n.net_roles();
+        assert_eq!(roles[CONST0 as usize], NetRole::Const);
+        assert_eq!(roles[CONST1 as usize], NetRole::Const);
+        assert_eq!(roles[a[0] as usize], NetRole::Input);
+        assert_eq!(roles[a[1] as usize], NetRole::Input);
+        assert_eq!(roles[x as usize], NetRole::Comb);
+        assert_eq!(roles[q as usize], NetRole::State);
+        assert_eq!(roles[floating as usize], NetRole::Floating);
+        assert_eq!(roles[y as usize], NetRole::Comb);
+        assert_eq!(roles.len(), n.n_nets());
     }
 
     #[test]

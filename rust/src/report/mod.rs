@@ -286,18 +286,19 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
     );
     let _ = writeln!(
         md,
-        "| Model | requests | answered | shed | batches | mean batch | fill | req/s | p50 ms | p99 ms | SLO>{:.0}ms | accuracy |",
+        "| Model | requests | answered | errors | shed | batches | mean batch | fill | req/s | p50 ms | p99 ms | SLO>{:.0}ms | accuracy |",
         rep.models.first().map(|m| m.slo_ms).unwrap_or(0.0)
     );
-    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     let mut rows = Vec::new();
     for m in &rep.models {
         let _ = writeln!(
             md,
-            "| {} | {} | {} | {} | {} | {:.1} | {:.2} | {:.0} | {:.2} | {:.2} | {} | {:.3} |",
+            "| {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {:.0} | {:.2} | {:.2} | {} | {:.3} |",
             m.name,
             m.requests,
             m.answered,
+            m.errors,
             m.shed,
             m.batches,
             m.mean_batch,
@@ -309,10 +310,11 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
             m.accuracy
         );
         rows.push(format!(
-            "{},{},{},{},{},{:.2},{:.4},{:.1},{:.3},{:.3},{},{:.4}",
+            "{},{},{},{},{},{},{:.2},{:.4},{:.1},{:.3},{:.3},{},{:.4}",
             m.name,
             m.requests,
             m.answered,
+            m.errors,
             m.shed,
             m.batches,
             m.mean_batch,
@@ -326,9 +328,10 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
     }
     let _ = writeln!(
         md,
-        "\nTotals: **{}** requests, **{}** answered, **{}** shed, **{:.0}** req/s across {} models.",
+        "\nTotals: **{}** requests, **{}** answered, **{}** errored, **{}** shed, **{:.0}** req/s across {} models.",
         rep.total_requests(),
         rep.total_answered(),
+        rep.total_errors(),
         rep.total_shed(),
         rep.total_rps(),
         rep.models.len()
@@ -336,7 +339,77 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
     write_csv(
         results_dir,
         "serve.csv",
-        "model,requests,answered,shed,batches,mean_batch,fill,rps,p50_ms,p99_ms,slo_violations,accuracy",
+        "model,requests,answered,errors,shed,batches,mean_batch,fill,rps,p50_ms,p99_ms,slo_violations,accuracy",
+        &rows,
+    )?;
+    Ok(md)
+}
+
+/// Fault-campaign summary: one row per `(architecture, fault level,
+/// model)` cell with the deterministic accuracy-degradation columns and
+/// the serve-path SLO columns (markdown + `campaign.csv`).
+pub fn campaign_report(
+    rep: &crate::server::CampaignReport,
+    results_dir: &Path,
+) -> Result<String> {
+    let mut md = String::new();
+    let _ = writeln!(
+        md,
+        "\n## Fault campaign — {} scenario, {} rows\n",
+        rep.scenario.label(),
+        rep.rows.len()
+    );
+    let _ = writeln!(
+        md,
+        "| Arch | Model | stuck | flips | flip rate | clean acc | fault acc | degradation | requests | errors | shed | p99 ms | SLO viol | serve acc |"
+    );
+    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let mut rows = Vec::new();
+    for r in &rep.rows {
+        let _ = writeln!(
+            md,
+            "| {} | {} | {} | {} | {:.4} | {:.3} | {:.3} | {:+.3} | {} | {} | {} | {:.2} | {} | {:.3} |",
+            r.arch.label(),
+            r.model,
+            r.stuck,
+            r.transient,
+            r.flip_rate,
+            r.baseline_accuracy,
+            r.fault_accuracy,
+            r.degradation,
+            r.serve.requests,
+            r.serve.errors,
+            r.serve.shed,
+            r.serve.p99_ms,
+            r.serve.slo_violations,
+            r.serve.accuracy
+        );
+        rows.push(format!(
+            "{},{},{},{},{:.6},{:.4},{:.4},{:.4},{},{},{},{},{:.1},{:.3},{:.3},{},{:.4}",
+            r.arch.label(),
+            r.model,
+            r.stuck,
+            r.transient,
+            r.flip_rate,
+            r.baseline_accuracy,
+            r.fault_accuracy,
+            r.degradation,
+            r.serve.requests,
+            r.serve.answered,
+            r.serve.errors,
+            r.serve.shed,
+            r.serve.throughput_rps,
+            r.serve.p50_ms,
+            r.serve.p99_ms,
+            r.serve.slo_violations,
+            r.serve.accuracy
+        ));
+    }
+    write_csv(
+        results_dir,
+        "campaign.csv",
+        "arch,model,stuck,transient,flip_rate,baseline_acc,fault_acc,degradation,\
+         requests,answered,errors,shed,rps,p50_ms,p99_ms,slo_violations,serve_acc",
         &rows,
     )?;
     Ok(md)
@@ -387,6 +460,7 @@ mod tests {
                 name: "toy".into(),
                 requests: 10,
                 answered: 9,
+                errors: 0,
                 shed: 1,
                 batches: 3,
                 mean_batch: 3.0,
@@ -402,11 +476,56 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("pmlp_serve_rep_{}", std::process::id()));
         let md = serve_report(&rep, &dir).unwrap();
         assert!(md.contains("steady"));
-        assert!(md.contains("| toy | 10 | 9 | 1 |"));
+        assert!(md.contains("| toy | 10 | 9 | 0 | 1 |"));
         assert!(md.contains("**1** shed"));
+        assert!(md.contains("**0** errored"));
         let csv = std::fs::read_to_string(dir.join("serve.csv")).unwrap();
-        assert!(csv.starts_with("model,requests"));
-        assert!(csv.contains("toy,10,9,1,3"));
+        assert!(csv.starts_with("model,requests,answered,errors,shed"));
+        assert!(csv.contains("toy,10,9,0,1,3"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn campaign_report_renders_and_writes_csv() {
+        use crate::server::{ArchKind, CampaignReport, CampaignRow, ModelReport, Scenario};
+        let serve = ModelReport {
+            name: "toy".into(),
+            requests: 20,
+            answered: 20,
+            errors: 0,
+            shed: 0,
+            batches: 4,
+            mean_batch: 5.0,
+            fill: 1.0,
+            throughput_rps: 40.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            slo_ms: 50.0,
+            slo_violations: 0,
+            accuracy: 0.9,
+        };
+        let rep = CampaignReport {
+            scenario: Scenario::Trace,
+            rows: vec![CampaignRow {
+                arch: ArchKind::Ours,
+                model: "toy".into(),
+                stuck: 4,
+                transient: 2,
+                flip_rate: 0.001,
+                baseline_accuracy: 0.95,
+                fault_accuracy: 0.9,
+                degradation: 0.05,
+                serve,
+            }],
+        };
+        let dir = std::env::temp_dir().join(format!("pmlp_campaign_rep_{}", std::process::id()));
+        let md = campaign_report(&rep, &dir).unwrap();
+        assert!(md.contains("Fault campaign"));
+        assert!(md.contains("| ours | toy | 4 | 2 |"));
+        assert!(md.contains("+0.050"));
+        let csv = std::fs::read_to_string(dir.join("campaign.csv")).unwrap();
+        assert!(csv.starts_with("arch,model,stuck,transient,flip_rate"));
+        assert!(csv.contains("ours,toy,4,2,0.001000,0.9500,0.9000,0.0500,20,20,0,0"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

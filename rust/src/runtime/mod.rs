@@ -25,9 +25,11 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::circuits::{seq_multicycle, SeqCircuit};
+use crate::circuits::{combinational, seq_multicycle, CombCircuit, SeqCircuit};
 use crate::data::Split;
 use crate::model::{ApproxTables, QuantModel};
+use crate::netlist::NetRole;
+use crate::sim::fault::{FaultList, SharedFaultList};
 use crate::sim::testbench;
 use crate::util::pool;
 
@@ -320,6 +322,38 @@ impl<'m> Evaluator for NativeEvaluator<'m> {
     }
 }
 
+/// Which circuit family [`GateSimEvaluator`] generates — the fault
+/// campaign sweeps all of them over the same model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateArch {
+    /// The paper's multi-cycle sequential circuit (lowered as a hybrid
+    /// whenever the approximation mask is nonzero).
+    Sequential,
+    /// The fully-parallel single-cycle combinational baseline.
+    Combinational,
+}
+
+impl GateArch {
+    pub fn label(self) -> &'static str {
+        match self {
+            GateArch::Sequential => "seq",
+            GateArch::Combinational => "comb",
+        }
+    }
+}
+
+impl FromStr for GateArch {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<GateArch> {
+        Ok(match s {
+            "seq" | "sequential" => GateArch::Sequential,
+            "comb" | "combinational" => GateArch::Combinational,
+            other => bail!("unknown gate architecture `{other}` (want seq|comb)"),
+        })
+    }
+}
+
 /// Cache key for the generated circuit: a circuit is only valid for the
 /// exact masks/tables it was generated with.
 #[derive(PartialEq)]
@@ -327,6 +361,13 @@ struct GateSimKey {
     feat_mask: Vec<u8>,
     approx_mask: Vec<u8>,
     tables: ApproxTables,
+}
+
+/// The cached circuit, one variant per [`GateArch`].
+#[derive(Clone)]
+enum GateCircuit {
+    Seq(Arc<SeqCircuit>),
+    Comb(Arc<CombCircuit>),
 }
 
 /// Gate-level evaluator: generates the paper's multi-cycle sequential
@@ -347,7 +388,12 @@ pub struct GateSimEvaluator {
     threads: usize,
     /// Super-lane width in `u64` words (0 = process default).
     lane_words: usize,
-    cached: Mutex<Option<(GateSimKey, Arc<SeqCircuit>)>>,
+    /// Circuit family generated for each mask set.
+    arch: GateArch,
+    /// Printed-hardware faults injected into every simulation this
+    /// evaluator runs (`None` = clean silicon^W electrolyte).
+    faults: Option<SharedFaultList>,
+    cached: Mutex<Option<(GateSimKey, GateCircuit)>>,
 }
 
 impl GateSimEvaluator {
@@ -367,8 +413,78 @@ impl GateSimEvaluator {
             model: model.clone(),
             threads: threads.max(1),
             lane_words,
+            arch: GateArch::Sequential,
+            faults: None,
             cached: Mutex::new(None),
         }
+    }
+
+    /// Builder: generate `arch` instead of the default sequential
+    /// circuit.  The combinational baseline has no neuron-approximation
+    /// lowering, so a nonzero approximation mask is rejected at predict
+    /// time under [`GateArch::Combinational`].
+    pub fn with_arch(mut self, arch: GateArch) -> GateSimEvaluator {
+        if arch != self.arch {
+            self.arch = arch;
+            *self.cached.lock().unwrap() = None;
+        }
+        self
+    }
+
+    pub fn arch(&self) -> GateArch {
+        self.arch
+    }
+
+    /// Inject (or clear) a fault list; every subsequent simulation runs
+    /// under it.  The list rides to each simulator shard, which lowers it
+    /// against the plan once per worker (see [`crate::sim::fault`]) — an
+    /// empty list is exactly the clean path.
+    pub fn set_fault_list(&mut self, faults: Option<SharedFaultList>) {
+        self.faults = faults;
+    }
+
+    pub fn fault_list(&self) -> Option<&FaultList> {
+        self.faults.as_deref()
+    }
+
+    /// Sample a reproducible fault list over the circuit this evaluator
+    /// would simulate for the given masks: candidates are plan-
+    /// materialized nets whose [`NetRole`] is in `roles` (see
+    /// [`FaultList::sample`]).  Does not install the list — callers
+    /// decide via [`GateSimEvaluator::set_fault_list`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_faults(
+        &self,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+        roles: &[NetRole],
+        n_stuck: usize,
+        n_transient: usize,
+        flip_rate: f64,
+        seed: u64,
+    ) -> Result<FaultList> {
+        let circ = self.circuit(feat_mask, approx_mask, tables)?;
+        Ok(match &circ {
+            GateCircuit::Seq(c) => FaultList::sample(
+                &c.sim_plan(),
+                &c.netlist,
+                roles,
+                n_stuck,
+                n_transient,
+                flip_rate,
+                seed,
+            ),
+            GateCircuit::Comb(c) => FaultList::sample(
+                &c.sim_plan(),
+                &c.netlist,
+                roles,
+                n_stuck,
+                n_transient,
+                flip_rate,
+                seed,
+            ),
+        })
     }
 
     /// Resolved super-lane width (words per net) this evaluator runs at.
@@ -391,7 +507,7 @@ impl GateSimEvaluator {
         feat_mask: &[u8],
         approx_mask: &[u8],
         tables: &ApproxTables,
-    ) -> Result<Arc<SeqCircuit>> {
+    ) -> Result<GateCircuit> {
         let key = GateSimKey {
             feat_mask: feat_mask.to_vec(),
             approx_mask: approx_mask.to_vec(),
@@ -411,12 +527,21 @@ impl GateSimEvaluator {
             .collect();
         ensure!(!active.is_empty(), "gatesim: feature mask prunes every input");
         let approx: Vec<bool> = approx_mask.iter().map(|&a| a == 1).collect();
-        let circ = Arc::new(seq_multicycle::generate_hybrid(
-            &self.model,
-            &active,
-            &approx,
-            tables,
-        ));
+        let circ = match self.arch {
+            GateArch::Sequential => GateCircuit::Seq(Arc::new(seq_multicycle::generate_hybrid(
+                &self.model,
+                &active,
+                &approx,
+                tables,
+            ))),
+            GateArch::Combinational => {
+                ensure!(
+                    approx.iter().all(|&a| !a),
+                    "gatesim: the combinational baseline has no neuron-approximation lowering"
+                );
+                GateCircuit::Comb(Arc::new(combinational::generate(&self.model, &active)))
+            }
+        };
         *slot = Some((key, circ.clone()));
         Ok(circ)
     }
@@ -446,15 +571,29 @@ impl Evaluator for GateSimEvaluator {
             "gatesim: mask shapes do not match the model"
         );
         let circ = self.circuit(feat_mask, approx_mask, tables)?;
-        let preds = testbench::run_sequential_plan(
-            &circ,
-            &circ.sim_plan(),
-            xs,
-            n,
-            self.model.features,
-            self.threads,
-            self.lane_words(),
-        );
+        let faults = self.faults.as_deref().filter(|fl| !fl.is_empty());
+        let preds = match &circ {
+            GateCircuit::Seq(c) => testbench::run_sequential_plan_faulted(
+                c,
+                &c.sim_plan(),
+                xs,
+                n,
+                self.model.features,
+                self.threads,
+                self.lane_words(),
+                faults,
+            ),
+            GateCircuit::Comb(c) => testbench::run_combinational_plan_faulted(
+                c,
+                &c.sim_plan(),
+                xs,
+                n,
+                self.model.features,
+                self.threads,
+                self.lane_words(),
+                faults,
+            ),
+        };
         Ok(preds.into_iter().map(|p| p as i32).collect())
     }
 
@@ -560,6 +699,58 @@ mod tests {
         // Auto must be resolved first; PJRT needs an engine.
         assert!(build_evaluator(Backend::Auto, None, &m, &EvalOpts::default()).is_err());
         assert!(build_evaluator(Backend::Pjrt, None, &m, &EvalOpts::default()).is_err());
+    }
+
+    #[test]
+    fn gatesim_comb_arch_matches_native_and_rejects_approx() {
+        let m = rand_model(57, 5, 3, 3);
+        let native = NativeEvaluator { model: &m };
+        let gate = GateSimEvaluator::with_threads(&m, 2).with_arch(GateArch::Combinational);
+        assert_eq!(gate.arch(), GateArch::Combinational);
+        let n = 40;
+        let mut r = Rng::new(21);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let got = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
+        let want = NativeEvaluator::predict(&native, &xs, n, &fm, &am, &t);
+        assert_eq!(got, want);
+        // No approximation lowering exists for the combinational baseline.
+        let mut am_on = vec![0u8; m.hidden];
+        am_on[0] = 1;
+        assert!(Evaluator::predict(&gate, &xs, n, &fm, &am_on, &t).is_err());
+        // Arch labels parse back.
+        for a in [GateArch::Sequential, GateArch::Combinational] {
+            assert_eq!(a.label().parse::<GateArch>().unwrap(), a);
+        }
+        assert!("nosuch".parse::<GateArch>().is_err());
+    }
+
+    #[test]
+    fn gatesim_fault_list_changes_and_restores_predictions() {
+        let m = rand_model(58, 6, 3, 3);
+        let mut gate = GateSimEvaluator::with_threads(&m, 1);
+        let n = 64;
+        let mut r = Rng::new(23);
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let fm = vec![1u8; m.features];
+        let am = vec![0u8; m.hidden];
+        let t = ApproxTables::disabled(m.hidden);
+        let clean = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
+        // A heavy transient barrage must perturb at least one prediction…
+        let fl = gate
+            .sample_faults(&fm, &am, &t, &crate::sim::fault::default_roles(), 0, 24, 0.5, 99)
+            .unwrap();
+        assert!(fl.transient_count() > 0);
+        gate.set_fault_list(Some(std::sync::Arc::new(fl)));
+        let faulted = Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap();
+        assert_ne!(clean, faulted, "24 transient sites at rate 0.5 must bite");
+        // …and be reproducible under the same list.
+        assert_eq!(faulted, Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap());
+        // Clearing the list restores the clean path bit-exactly.
+        gate.set_fault_list(None);
+        assert_eq!(clean, Evaluator::predict(&gate, &xs, n, &fm, &am, &t).unwrap());
     }
 
     #[test]

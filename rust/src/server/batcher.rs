@@ -33,6 +33,7 @@ use anyhow::Result;
 use crate::runtime::Evaluator;
 use crate::server::registry::ModelEntry;
 use crate::util::pool;
+use crate::util::stats::Reservoir;
 
 /// One in-flight inference request.
 #[derive(Clone, Debug)]
@@ -50,6 +51,10 @@ pub struct ModelStats {
     pub submitted: AtomicUsize,
     pub shed: AtomicUsize,
     pub answered: AtomicUsize,
+    /// Frames popped whose batch then failed in the evaluator — they can
+    /// never be answered, so exactly-once accounting is
+    /// `submitted = answered + shed + errors + still-queued`.
+    pub errors: AtomicUsize,
     pub correct: AtomicUsize,
     pub batches: AtomicUsize,
     /// Simulator lane slots consumed (batch sizes rounded up to the
@@ -57,7 +62,10 @@ pub struct ModelStats {
     /// super-lane fill ratio, 1.0 on scalar backends.
     pub lane_slots: AtomicUsize,
     pub slo_violations: AtomicUsize,
-    pub latencies_ms: Mutex<Vec<f64>>,
+    /// Bounded by deterministic reservoir sampling ([`Reservoir`]):
+    /// exact percentiles below the cap, an unbiased estimate above it —
+    /// a long campaign no longer grows per-frame memory without limit.
+    pub latencies_ms: Mutex<Reservoir>,
     /// `(frame id, prediction)` pairs; filled only when
     /// [`DrainConfig::collect_responses`] is set (tests).
     pub responses: Mutex<Vec<(u64, i32)>>,
@@ -214,6 +222,13 @@ fn process_batch(
 /// exactly once.  Workers sweep the models round-robin from a per-worker
 /// offset so all models make progress even with one worker, and park
 /// briefly when a full sweep finds nothing.
+///
+/// A failing batch does NOT kill its worker: the popped frames are
+/// recorded in [`ModelStats::errors`] (they can never be answered — an
+/// exiting worker would otherwise leave them silently unaccounted) and
+/// the worker keeps draining, so sibling models and later frames still
+/// complete.  The first error per worker is surfaced after the pool
+/// joins.
 pub fn drain(
     queues: &[BatchQueue],
     entries: &[Arc<ModelEntry>],
@@ -241,6 +256,7 @@ pub fn drain(
         || (Vec::<Frame>::new(), Vec::<u8>::new(), Vec::<i32>::new()),
         |scratch, w| {
             let (frames, xbuf, preds) = scratch;
+            let mut first_err: Option<anyhow::Error> = None;
             loop {
                 // Read before the sweep: frames seen after `stop` was set
                 // still drain (producers are done once it is set), and the
@@ -255,13 +271,29 @@ pub fn drain(
                     }
                     did_work = true;
                     let eval = evals[m].as_ref();
-                    process_batch(
+                    if let Err(e) = process_batch(
                         &queues[m], &entries[m], eval, cfg, quanta[m], frames, xbuf, preds,
-                    )?;
+                    ) {
+                        // The popped frames can never be answered now;
+                        // account them so exactly-once bookkeeping still
+                        // balances, and keep draining instead of exiting
+                        // with sibling queues stranded.
+                        queues[m]
+                            .stats
+                            .errors
+                            .fetch_add(frames.len(), Ordering::Relaxed);
+                        if first_err.is_none() {
+                            first_err =
+                                Some(e.context(format!("model `{}` batch failed", entries[m].name)));
+                        }
+                    }
                 }
                 if !did_work {
                     if stopping && queues.iter().all(|q| q.is_empty()) {
-                        return Ok(());
+                        return match first_err.take() {
+                            Some(e) => Err(e),
+                            None => Ok(()),
+                        };
                     }
                     std::thread::sleep(Duration::from_micros(200));
                 }

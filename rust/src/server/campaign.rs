@@ -1,0 +1,339 @@
+//! Printed-hardware fault campaign: sweep stuck-at / transient fault
+//! levels across circuit architectures and measure what breaks.
+//!
+//! Printed (electrolyte-gated) circuits fail very differently from
+//! silicon — shorted crossbars weld nets to a rail (stuck-at) and the
+//! low-temperature substrate makes transient upsets routine — so the
+//! paper's area/accuracy trade-off is only half the deployment story.
+//! The campaign answers the other half: *how much accuracy and SLO
+//! headroom does each architecture give up per injected fault?*
+//!
+//! For every `(architecture, fault level)` cell the driver:
+//!
+//! 1. builds one fault-capable [`GateSimEvaluator`] per hosted model
+//!    ([`ArchKind::Ours`] → multi-cycle sequential, [`ArchKind::Hybrid`]
+//!    → sequential with the demo approximation mask,
+//!    [`ArchKind::Comb`] → the combinational baseline);
+//! 2. samples a reproducible [`FaultList`] over the model's own circuit
+//!    (stuck + transient counts from the level, nets drawn from
+//!    [`fault::default_roles`], seeded per cell so cells are
+//!    independent but re-runs identical);
+//! 3. scores **accuracy degradation** with two deterministic full-split
+//!    passes (clean vs faulted — no serving noise in the accuracy
+//!    column);
+//! 4. replays the serve path ([`serve_with`]) under the faulted
+//!    evaluators for the **SLO impact** columns.
+//!
+//! The zero-fault level `(0, 0)` is the campaign's self-check: its
+//! evaluators carry no faults, so its accuracy and predictions must be
+//! bit-identical to a plain serve run (`tests/fault_injection.rs`).
+
+use std::str::FromStr;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::approx;
+use crate::data::ArtifactStore;
+use crate::runtime::{Evaluator, GateArch, GateSimEvaluator};
+use crate::server::registry::{ModelEntry, ModelRegistry};
+use crate::server::{serve_with, ModelReport, Scenario, ServeConfig, ServerReport};
+use crate::sim::fault::{self, FaultList};
+
+/// Architecture variants the campaign sweeps (the paper's Fig. 6 cast,
+/// minus SOTA which shares the sequential fault surface with `ours`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArchKind {
+    /// The paper's multi-cycle sequential circuit.
+    Ours,
+    /// Sequential with the alternate-neuron demo approximation
+    /// ([`approx::demo_hybrid_mask`]).
+    Hybrid,
+    /// Fully-parallel combinational baseline.
+    Comb,
+}
+
+impl ArchKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            ArchKind::Ours => "ours",
+            ArchKind::Hybrid => "hybrid",
+            ArchKind::Comb => "comb",
+        }
+    }
+
+    /// The gate architecture the evaluator generates for this variant.
+    pub fn gate_arch(self) -> GateArch {
+        match self {
+            ArchKind::Ours | ArchKind::Hybrid => GateArch::Sequential,
+            ArchKind::Comb => GateArch::Combinational,
+        }
+    }
+}
+
+impl FromStr for ArchKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ArchKind> {
+        Ok(match s {
+            "ours" | "seq" | "multicycle" => ArchKind::Ours,
+            "hybrid" => ArchKind::Hybrid,
+            "comb" | "combinational" => ArchKind::Comb,
+            other => bail!("unknown campaign arch `{other}` (want ours|hybrid|comb)"),
+        })
+    }
+}
+
+/// Parse a `stuck:transient[,stuck:transient...]` fault-level list
+/// (the `--fault-levels` flag / `campaign.levels` config key).
+pub fn parse_levels(s: &str) -> Result<Vec<(usize, usize)>> {
+    let mut levels = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let Some((a, b)) = part.split_once(':') else {
+            bail!("fault level `{part}`: want `<stuck>:<transient>`");
+        };
+        let stuck = a.trim().parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("fault level `{part}`: bad stuck count `{a}`")
+        })?;
+        let transient = b.trim().parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("fault level `{part}`: bad transient count `{b}`")
+        })?;
+        levels.push((stuck, transient));
+    }
+    ensure!(!levels.is_empty(), "fault levels: empty list");
+    Ok(levels)
+}
+
+/// Campaign configuration: a base serve shape plus the fault sweep.
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// Load shape, hosted models, and serve knobs for the SLO columns.
+    /// The backend field is ignored — the campaign always builds gatesim
+    /// evaluators (faults only exist at gate level).
+    pub serve: ServeConfig,
+    pub archs: Vec<ArchKind>,
+    /// `(stuck, transient)` fault counts per sweep level.
+    pub levels: Vec<(usize, usize)>,
+    /// Per-bit flip probability for transient faults.
+    pub flip_rate: f64,
+    /// Base seed for fault sampling and transient masks; each
+    /// `(arch, level, model)` cell derives its own seed from it.
+    pub fault_seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            serve: ServeConfig::default(),
+            archs: vec![ArchKind::Ours, ArchKind::Hybrid, ArchKind::Comb],
+            levels: vec![(0, 0), (4, 0), (16, 0), (4, 4)],
+            flip_rate: 1e-3,
+            fault_seed: 0xFA171,
+        }
+    }
+}
+
+/// One `(architecture, fault level, model)` cell of the sweep.
+#[derive(Clone, Debug)]
+pub struct CampaignRow {
+    pub arch: ArchKind,
+    pub model: String,
+    /// Stuck-at / transient faults actually injected (sampling clips to
+    /// the circuit's candidate pool).
+    pub stuck: usize,
+    pub transient: usize,
+    pub flip_rate: f64,
+    /// Deterministic full-test-split accuracy, clean circuit.
+    pub baseline_accuracy: f64,
+    /// Deterministic full-test-split accuracy under the fault list.
+    pub fault_accuracy: f64,
+    /// `baseline_accuracy - fault_accuracy` (positive = faults hurt).
+    pub degradation: f64,
+    /// Serve-path report under the same faulted evaluators (SLO impact).
+    pub serve: ModelReport,
+}
+
+/// Full sweep result, rows in `archs × levels × models` order.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    pub scenario: Scenario,
+    pub rows: Vec<CampaignRow>,
+}
+
+/// Seed for one sweep cell: independent across cells, stable across
+/// runs, and keyed on the level *contents* so reordering the level list
+/// does not reshuffle every cell's faults.
+fn cell_seed(base: u64, arch: ArchKind, stuck: usize, transient: usize, model_idx: usize) -> u64 {
+    base ^ ((arch as u64 + 1) << 56)
+        ^ ((stuck as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        ^ ((transient as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+        ^ ((model_idx as u64) << 40)
+}
+
+/// Re-host a registry under the campaign architecture: `hybrid` swaps
+/// every entry's approximation mask/tables for the demo hybrid lowering
+/// (tables built from the entry's own test frames — the campaign must
+/// stay artifact-free under `--synthetic`); the others serve the entries
+/// unchanged.
+fn arch_registry(base: &ModelRegistry, arch: ArchKind) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    for entry in base.entries() {
+        let e = match arch {
+            ArchKind::Hybrid => {
+                let tables = approx::build_tables(
+                    &entry.model,
+                    &entry.test.xs,
+                    entry.test.len(),
+                    &entry.feat_mask,
+                );
+                ModelEntry {
+                    name: entry.name.clone(),
+                    model: entry.model.clone(),
+                    test: entry.test.clone(),
+                    feat_mask: entry.feat_mask.clone(),
+                    approx_mask: approx::demo_hybrid_mask(entry.model.hidden),
+                    tables,
+                }
+            }
+            ArchKind::Ours | ArchKind::Comb => (**entry).clone(),
+        };
+        reg.insert(e);
+    }
+    reg
+}
+
+/// Run the sweep.  `store` is only touched when the serve config is not
+/// `--synthetic`.
+pub fn run_campaign(store: &ArtifactStore, cfg: &CampaignConfig) -> Result<CampaignReport> {
+    ensure!(!cfg.serve.datasets.is_empty(), "campaign: no datasets requested");
+    ensure!(!cfg.archs.is_empty(), "campaign: no architectures requested");
+    ensure!(!cfg.levels.is_empty(), "campaign: no fault levels requested");
+    ensure!(
+        (0.0..=1.0).contains(&cfg.flip_rate),
+        "campaign: flip rate {} outside [0, 1]",
+        cfg.flip_rate
+    );
+    let base = if cfg.serve.synthetic {
+        ModelRegistry::synthetic(&cfg.serve.datasets, cfg.serve.seed)
+    } else {
+        ModelRegistry::from_store(store, &cfg.serve.datasets)?
+    };
+    let roles = fault::default_roles();
+    let mut rows = Vec::new();
+    for &arch in &cfg.archs {
+        let registry = arch_registry(&base, arch);
+        for &(n_stuck, n_transient) in &cfg.levels {
+            // Per-model fault-capable evaluators plus the two
+            // deterministic accuracy passes (clean, faulted).
+            let mut evals: Vec<Box<dyn Evaluator + Send + Sync>> = Vec::new();
+            let mut meta = Vec::new();
+            for (mi, entry) in registry.entries().iter().enumerate() {
+                let mut ev = GateSimEvaluator::with_opts(&entry.model, 1, cfg.serve.sim_lanes)
+                    .with_arch(arch.gate_arch());
+                let baseline = ev.accuracy(
+                    &entry.test,
+                    &entry.feat_mask,
+                    &entry.approx_mask,
+                    &entry.tables,
+                )?;
+                let fl = ev.sample_faults(
+                    &entry.feat_mask,
+                    &entry.approx_mask,
+                    &entry.tables,
+                    &roles,
+                    n_stuck,
+                    n_transient,
+                    cfg.flip_rate,
+                    cell_seed(cfg.fault_seed, arch, n_stuck, n_transient, mi),
+                )?;
+                let (stuck, transient) = (fl.stuck_count(), fl.transient_count());
+                if !fl.is_empty() {
+                    ev.set_fault_list(Some(Arc::new(fl)));
+                }
+                let fault_acc = ev.accuracy(
+                    &entry.test,
+                    &entry.feat_mask,
+                    &entry.approx_mask,
+                    &entry.tables,
+                )?;
+                meta.push((baseline, fault_acc, stuck, transient));
+                evals.push(Box::new(ev));
+            }
+            let report: ServerReport = serve_with(&registry, &evals, &cfg.serve)?;
+            for (mr, &(baseline, fault_acc, stuck, transient)) in
+                report.models.iter().zip(&meta)
+            {
+                rows.push(CampaignRow {
+                    arch,
+                    model: mr.name.clone(),
+                    stuck,
+                    transient,
+                    flip_rate: cfg.flip_rate,
+                    baseline_accuracy: baseline,
+                    fault_accuracy: fault_acc,
+                    degradation: baseline - fault_acc,
+                    serve: mr.clone(),
+                });
+            }
+        }
+    }
+    Ok(CampaignReport {
+        scenario: cfg.serve.scenario,
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_labels_roundtrip_and_map_to_gate_archs() {
+        for a in [ArchKind::Ours, ArchKind::Hybrid, ArchKind::Comb] {
+            assert_eq!(a.label().parse::<ArchKind>().unwrap(), a);
+        }
+        assert!("nosuch".parse::<ArchKind>().is_err());
+        assert_eq!(ArchKind::Ours.gate_arch(), GateArch::Sequential);
+        assert_eq!(ArchKind::Hybrid.gate_arch(), GateArch::Sequential);
+        assert_eq!(ArchKind::Comb.gate_arch(), GateArch::Combinational);
+    }
+
+    #[test]
+    fn parse_levels_accepts_sweeps_and_rejects_garbage() {
+        assert_eq!(
+            parse_levels("0:0, 4:0,16:0 ,4:4").unwrap(),
+            vec![(0, 0), (4, 0), (16, 0), (4, 4)]
+        );
+        assert!(parse_levels("").is_err());
+        assert!(parse_levels("4").is_err());
+        assert!(parse_levels("a:2").is_err());
+        assert!(parse_levels("2:b").is_err());
+    }
+
+    #[test]
+    fn cell_seeds_are_distinct_across_the_sweep() {
+        let mut seen = std::collections::BTreeSet::new();
+        for arch in [ArchKind::Ours, ArchKind::Hybrid, ArchKind::Comb] {
+            for &(s, t) in &[(0usize, 0usize), (4, 0), (16, 0), (4, 4)] {
+                for mi in 0..3 {
+                    assert!(seen.insert(cell_seed(0xFA171, arch, s, t, mi)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_registry_flips_the_demo_mask() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let base = ModelRegistry::synthetic(&names, 5);
+        let hy = arch_registry(&base, ArchKind::Hybrid);
+        assert_eq!(hy.len(), base.len());
+        for (h, b) in hy.entries().iter().zip(base.entries()) {
+            assert_eq!(h.name, b.name);
+            assert!(h.approx_mask.iter().any(|&m| m == 1), "demo mask applied");
+            assert!(b.approx_mask.iter().all(|&m| m == 0), "base untouched");
+        }
+        let same = arch_registry(&base, ArchKind::Comb);
+        assert!(same.entries().iter().all(|e| e.approx_mask.iter().all(|&m| m == 0)));
+    }
+}

@@ -1,7 +1,7 @@
 //! Scenario-driven load generation: sensor threads that turn a traffic
 //! shape into [`Frame`]s pushed at the per-model [`BatchQueue`]s.
 //!
-//! Four shapes (`--scenario`):
+//! Five shapes (`--scenario`):
 //!
 //! - `steady` — fixed inter-arrival at the offered rate, frames routed
 //!   round-robin across models.  The zero-drama baseline: at the default
@@ -17,21 +17,32 @@
 //!   wearable's shared sensor window feeding several bespoke
 //!   classifiers).  `rate_hz` is the window rate, so each model sees the
 //!   full rate.
+//! - `trace` — replay a recorded arrival sequence ([`Trace`]): every
+//!   request's arrival offset, target model, and sample draw come from
+//!   the trace, so two runs over the same trace offer a bit-identical
+//!   request stream (the fault campaign's load shape).  Without a trace
+//!   file, [`Trace::synth_diurnal`] synthesizes a seed-deterministic
+//!   diurnal day-curve — Poisson arrivals whose rate swings 0.2×–1.8×
+//!   around the offered mean over the run.
 //!
 //! Each sensor thread owns a deterministic [`Rng`] seeded from
-//! `seed ^ sensor`, so a serve run is reproducible modulo OS scheduling.
+//! `seed ^ (0xC0FFEE + sensor)` (the offset keeps sensor 0 from sharing
+//! the serve seed verbatim with other subsystems), so a serve run is
+//! reproducible modulo OS scheduling; a trace replay additionally pins
+//! the request *content* exactly.
 
+use std::path::Path;
 use std::str::FromStr;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::bail;
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::server::batcher::{BatchQueue, Frame};
 use crate::server::registry::ModelEntry;
 use crate::server::ServeConfig;
-use crate::util::prng::Rng;
+use crate::util::prng::{fold_u64, Rng};
 
 /// Traffic shape for a serve run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,6 +51,8 @@ pub enum Scenario {
     Bursty,
     Ramp,
     FanIn,
+    /// Replay a recorded/synthesized [`Trace`].
+    Trace,
 }
 
 impl Scenario {
@@ -49,6 +62,7 @@ impl Scenario {
             Scenario::Bursty => "bursty",
             Scenario::Ramp => "ramp",
             Scenario::FanIn => "fanin",
+            Scenario::Trace => "trace",
         }
     }
 }
@@ -62,8 +76,159 @@ impl FromStr for Scenario {
             "bursty" | "poisson" => Scenario::Bursty,
             "ramp" => Scenario::Ramp,
             "fanin" | "fan-in" => Scenario::FanIn,
-            other => bail!("unknown scenario `{other}` (want steady|bursty|ramp|fanin)"),
+            "trace" => Scenario::Trace,
+            other => bail!("unknown scenario `{other}` (want steady|bursty|ramp|fanin|trace)"),
         })
+    }
+}
+
+/// Version line every trace artifact starts with.
+const TRACE_HEADER: &str = "# printed-mlp trace v1";
+
+/// A recorded arrival sequence: one entry per request, sorted by arrival
+/// time.  Column-major so a multi-hour trace stays three flat vectors.
+///
+/// The sample index is stored as a raw `u64` *draw*, not a resolved row:
+/// replaying the same trace against registries whose test splits differ
+/// in length stays well-defined (the sensor folds the draw onto the
+/// model's own sample space with the unbiased [`fold_u64`]).
+///
+/// The text artifact is deliberately trivial — a `#`-comment header then
+/// `<arrival_us> <model> <draw>` per line — so traces can be produced by
+/// anything that can print three integers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// Arrival offset of each request in microseconds from run start
+    /// (non-decreasing).
+    pub arrivals_us: Vec<u64>,
+    /// Target model index per request (folded onto the hosted model
+    /// count at replay time, so a trace outlives registry changes).
+    pub model: Vec<u32>,
+    /// Raw 64-bit sample draw per request.
+    pub draw: Vec<u64>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.arrivals_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_us.is_empty()
+    }
+
+    /// Duration covered by the trace (arrival of the last request).
+    pub fn span(&self) -> Duration {
+        Duration::from_micros(self.arrivals_us.last().copied().unwrap_or(0))
+    }
+
+    /// Synthesize a seed-deterministic diurnal trace: an inhomogeneous
+    /// Poisson process (by thinning) whose rate follows one cosine
+    /// day-curve over the run — `λ(u) = rate·(0.2 + 0.8·(1 − cos 2πu))`
+    /// for run fraction `u`, i.e. a 0.2× trough at the ends, a 1.8× peak
+    /// mid-run, and a mean of exactly `rate_hz`.  Model targets and
+    /// sample draws are drawn from the same seeded stream, so the whole
+    /// request sequence is a pure function of the arguments.
+    pub fn synth_diurnal(seed: u64, rate_hz: f64, duration: Duration, n_models: usize) -> Trace {
+        let total_s = duration.as_secs_f64().max(1e-9);
+        let rate = rate_hz.max(1e-6);
+        let lam_max = rate * 1.8;
+        let nm = n_models.max(1) as u64;
+        let mut rng = Rng::new(seed ^ 0x7_2ACE);
+        let mut tr = Trace::default();
+        let mut t = 0.0f64;
+        loop {
+            // Thinning: candidate arrivals at the envelope rate, kept
+            // with probability λ(t)/λ_max.
+            t += -rng.f64().max(1e-12).ln() / lam_max;
+            if t >= total_s {
+                break;
+            }
+            let u = t / total_s;
+            let lam = rate * (0.2 + 0.8 * (1.0 - (2.0 * std::f64::consts::PI * u).cos()));
+            if rng.f64() * lam_max <= lam {
+                tr.arrivals_us.push((t * 1e6) as u64);
+                tr.model.push(rng.below(nm) as u32);
+                tr.draw.push(rng.next_u64());
+            }
+        }
+        tr
+    }
+
+    /// Render the text artifact (see [`Trace`] for the format).
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(32 + self.len() * 32);
+        s.push_str(TRACE_HEADER);
+        s.push_str("\n# arrival_us model draw\n");
+        for i in 0..self.len() {
+            s.push_str(&format!(
+                "{} {} {}\n",
+                self.arrivals_us[i], self.model[i], self.draw[i]
+            ));
+        }
+        s
+    }
+
+    /// Parse the text artifact; rejects a missing/foreign header,
+    /// malformed lines, and out-of-order arrivals.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut tr = Trace::default();
+        let mut seen_header = false;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if !seen_header {
+                ensure!(
+                    line == TRACE_HEADER,
+                    "trace line {}: expected `{TRACE_HEADER}`, got `{line}`",
+                    ln + 1
+                );
+                seen_header = true;
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (a, m, d) = match (it.next(), it.next(), it.next(), it.next()) {
+                (Some(a), Some(m), Some(d), None) => (a, m, d),
+                _ => bail!("trace line {}: want `<arrival_us> <model> <draw>`", ln + 1),
+            };
+            let a: u64 = a
+                .parse()
+                .with_context(|| format!("trace line {}: bad arrival `{a}`", ln + 1))?;
+            let m: u32 = m
+                .parse()
+                .with_context(|| format!("trace line {}: bad model `{m}`", ln + 1))?;
+            let d: u64 = d
+                .parse()
+                .with_context(|| format!("trace line {}: bad draw `{d}`", ln + 1))?;
+            if let Some(&prev) = tr.arrivals_us.last() {
+                ensure!(
+                    a >= prev,
+                    "trace line {}: arrivals must be non-decreasing ({a} after {prev})",
+                    ln + 1
+                );
+            }
+            tr.arrivals_us.push(a);
+            tr.model.push(m);
+            tr.draw.push(d);
+        }
+        ensure!(seen_header, "trace: empty input (missing `{TRACE_HEADER}`)");
+        Ok(tr)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Trace::parse(&text).with_context(|| format!("parsing trace {}", path.display()))
     }
 }
 
@@ -78,6 +243,12 @@ const MAX_SLEEP_CHUNK: Duration = Duration::from_millis(50);
 /// inter-arrival gap, sleep it, and push the next frame(s).  All
 /// offered/accepted/shed accounting lives in each queue's
 /// [`crate::server::ModelStats`].
+///
+/// With a [`Trace`] the sensors stride-partition its entries (sensor `s`
+/// replays entries `s, s+sensors, …`) and replay **every** entry — the
+/// wall deadline does not cut a replay short, so the offered request
+/// stream is a pure function of the trace.
+#[allow(clippy::too_many_arguments)]
 pub fn run_sensor(
     sensor: usize,
     entries: &[Arc<ModelEntry>],
@@ -86,7 +257,11 @@ pub fn run_sensor(
     start: Instant,
     deadline: Instant,
     next_id: &AtomicU64,
+    trace: Option<&Trace>,
 ) {
+    if let Some(tr) = trace {
+        return run_trace_sensor(sensor, entries, queues, cfg, start, next_id, tr);
+    }
     let n_models = entries.len();
     let sensors = cfg.sensors.max(1) as f64;
     let per_sensor = (cfg.rate_hz / sensors).max(1e-6);
@@ -100,7 +275,7 @@ pub fn run_sensor(
         }
         let t = (now - start).as_secs_f64();
         let gap = match cfg.scenario {
-            Scenario::Steady | Scenario::FanIn => 1.0 / per_sensor,
+            Scenario::Steady | Scenario::FanIn | Scenario::Trace => 1.0 / per_sensor,
             Scenario::Bursty => {
                 // 1.8x / 0.2x phases average to 1.0: the mean offered
                 // rate stays rate_hz, comparable to steady at the same
@@ -131,13 +306,16 @@ pub fn run_sensor(
         match cfg.scenario {
             Scenario::FanIn => {
                 // One sensor window feeds every model: same random draw,
-                // folded into each model's own sample space.
+                // folded into each model's own sample space with the
+                // unbiased multiply-high fold (a plain `window % len`
+                // over-weights low sample indices whenever the split
+                // length does not divide 2^64).
                 let window = rng.next_u64();
                 let enqueued = Instant::now();
                 for (entry, queue) in entries.iter().zip(queues) {
                     let frame = Frame {
                         id: next_id.fetch_add(1, Ordering::Relaxed),
-                        sample: (window % entry.test.len() as u64) as usize,
+                        sample: fold_u64(window, entry.test.len() as u64) as usize,
                         enqueued,
                     };
                     queue.push(frame);
@@ -157,17 +335,98 @@ pub fn run_sensor(
     }
 }
 
+/// Trace replay: sensor `s` replays entries `s, s+sensors, …` at their
+/// recorded arrival offsets, every entry exactly once.
+fn run_trace_sensor(
+    sensor: usize,
+    entries: &[Arc<ModelEntry>],
+    queues: &[BatchQueue],
+    cfg: &ServeConfig,
+    start: Instant,
+    next_id: &AtomicU64,
+    tr: &Trace,
+) {
+    let n_models = entries.len();
+    let sensors = cfg.sensors.max(1);
+    let mut i = sensor;
+    while i < tr.len() {
+        let wake = start + Duration::from_micros(tr.arrivals_us[i]);
+        loop {
+            let cur = Instant::now();
+            if cur >= wake {
+                break;
+            }
+            std::thread::sleep((wake - cur).min(MAX_SLEEP_CHUNK));
+        }
+        let m = tr.model[i] as usize % n_models;
+        let entry = &entries[m];
+        queues[m].push(Frame {
+            id: next_id.fetch_add(1, Ordering::Relaxed),
+            sample: fold_u64(tr.draw[i], entry.test.len() as u64) as usize,
+            enqueued: Instant::now(),
+        });
+        i += sensors;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn scenario_labels_roundtrip() {
-        for s in [Scenario::Steady, Scenario::Bursty, Scenario::Ramp, Scenario::FanIn] {
+        for s in [
+            Scenario::Steady,
+            Scenario::Bursty,
+            Scenario::Ramp,
+            Scenario::FanIn,
+            Scenario::Trace,
+        ] {
             assert_eq!(s.label().parse::<Scenario>().unwrap(), s);
         }
         assert_eq!("poisson".parse::<Scenario>().unwrap(), Scenario::Bursty);
         assert_eq!("fan-in".parse::<Scenario>().unwrap(), Scenario::FanIn);
         assert!("nosuch".parse::<Scenario>().is_err());
+    }
+
+    #[test]
+    fn synth_diurnal_is_deterministic_sorted_and_rate_shaped() {
+        let tr = Trace::synth_diurnal(9, 2000.0, Duration::from_secs(2), 3);
+        assert_eq!(tr, Trace::synth_diurnal(9, 2000.0, Duration::from_secs(2), 3));
+        assert_ne!(tr, Trace::synth_diurnal(10, 2000.0, Duration::from_secs(2), 3));
+        assert!(!tr.is_empty());
+        assert!(tr.arrivals_us.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        assert!(tr.span() <= Duration::from_secs(2));
+        assert!(tr.model.iter().all(|&m| m < 3));
+        // Mean rate ≈ rate_hz: 2 s at 2000 Hz ⇒ ~4000 requests.
+        let n = tr.len() as f64;
+        assert!((2800.0..5200.0).contains(&n), "count {n}");
+        // Diurnal shape: the mid-run half must carry well more traffic
+        // than the trough halves combined would at a flat rate.
+        let mid = tr
+            .arrivals_us
+            .iter()
+            .filter(|&&a| (500_000..1_500_000).contains(&a))
+            .count() as f64;
+        assert!(mid / n > 0.6, "mid-run fraction {}", mid / n);
+    }
+
+    #[test]
+    fn trace_text_roundtrip_and_rejects_garbage() {
+        let tr = Trace::synth_diurnal(4, 300.0, Duration::from_millis(500), 2);
+        let text = tr.to_text();
+        assert!(text.starts_with(TRACE_HEADER));
+        assert_eq!(Trace::parse(&text).unwrap(), tr);
+        // Missing header / malformed lines / unsorted arrivals all fail.
+        assert!(Trace::parse("1 0 2\n").is_err());
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse(&format!("{TRACE_HEADER}\n1 2\n")).is_err());
+        assert!(Trace::parse(&format!("{TRACE_HEADER}\n1 0 2 9\n")).is_err());
+        assert!(Trace::parse(&format!("{TRACE_HEADER}\nx 0 2\n")).is_err());
+        assert!(Trace::parse(&format!("{TRACE_HEADER}\n5 0 2\n3 0 2\n")).is_err());
+        // Comments and blank lines after the header are fine.
+        let ok = Trace::parse(&format!("{TRACE_HEADER}\n# c\n\n3 1 7\n3 0 9\n")).unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok.model, vec![1, 0]);
     }
 }

@@ -2,7 +2,7 @@
 //! (wearables streaming multi-sensory frames into several bespoke
 //! sequential MLPs) as a first-class subsystem.
 //!
-//! Three pieces (DESIGN.md §Server):
+//! Four pieces (DESIGN.md §Server, §Faults):
 //!
 //! - [`registry`] — [`registry::ModelRegistry`]: every hosted dataset's
 //!   artifacts (model, masks, [`crate::model::ApproxTables`], and — via
@@ -12,18 +12,27 @@
 //!   counters, drained by a [`crate::util::pool::scope_map_with`] worker
 //!   pool running dynamic batching with a `max_wait` linger.
 //! - [`loadgen`] — scenario-driven sensors ([`loadgen::Scenario`]:
-//!   steady / bursty / ramp / fanin) pushing frames at the queues.
+//!   steady / bursty / ramp / fanin / trace) pushing frames at the
+//!   queues; `trace` replays a recorded [`loadgen::Trace`] so the
+//!   offered stream is bit-reproducible.
+//! - [`campaign`] — the printed-hardware fault campaign: sweeps
+//!   stuck-at / transient fault levels per circuit architecture and
+//!   reports accuracy degradation and SLO impact through the same serve
+//!   path.
 //!
-//! [`run`] wires them together and returns a [`ServerReport`] with
-//! per-model requests, p50/p99 latency, shed count, SLO violations, and
+//! [`run`] wires registry + evaluators together and hands off to
+//! [`serve_with`], which returns a [`ServerReport`] with per-model
+//! requests, p50/p99 latency, shed/error counts, SLO violations, and
 //! accuracy.  Under `steady` at the default rate nothing sheds and every
 //! prediction is bit-identical to a direct [`Evaluator::predict`] call
 //! (`tests/server_batching.rs`).
 
 pub mod batcher;
+pub mod campaign;
 pub mod loadgen;
 pub mod registry;
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
@@ -35,7 +44,8 @@ use crate::util::pool::default_threads;
 use crate::util::stats;
 
 pub use batcher::{BatchQueue, DrainConfig, Frame, ModelStats};
-pub use loadgen::Scenario;
+pub use campaign::{ArchKind, CampaignConfig, CampaignReport, CampaignRow};
+pub use loadgen::{Scenario, Trace};
 pub use registry::{ModelEntry, ModelRegistry};
 
 /// Server configuration (see `config` for the `[serve]` file section;
@@ -71,6 +81,12 @@ pub struct ServeConfig {
     /// Host deterministic synthetic models instead of store artifacts
     /// (artifact-free smoke/bench mode; accuracy 1.0 expected).
     pub synthetic: bool,
+    /// `trace` scenario: replay this recorded trace file; when unset a
+    /// diurnal trace is synthesized from `seed`/`rate_hz`/`duration`.
+    pub trace: Option<PathBuf>,
+    /// Write the trace actually replayed (loaded or synthesized) to this
+    /// path — how a synthesized day-curve becomes a reusable artifact.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -90,6 +106,8 @@ impl Default for ServeConfig {
             backend: Backend::Auto,
             sim_lanes: 0,
             synthetic: false,
+            trace: None,
+            trace_out: None,
         }
     }
 }
@@ -98,9 +116,12 @@ impl Default for ServeConfig {
 #[derive(Clone, Debug)]
 pub struct ModelReport {
     pub name: String,
-    /// Frames offered (answered + shed).
+    /// Frames offered (answered + shed + errors).
     pub requests: usize,
     pub answered: usize,
+    /// Frames whose batch failed in the evaluator (see
+    /// [`ModelStats::errors`]); 0 on a healthy run.
+    pub errors: usize,
     pub shed: usize,
     pub batches: usize,
     pub mean_batch: f64,
@@ -140,6 +161,10 @@ impl ServerReport {
         self.models.iter().map(|m| m.shed).sum()
     }
 
+    pub fn total_errors(&self) -> usize {
+        self.models.iter().map(|m| m.errors).sum()
+    }
+
     pub fn total_rps(&self) -> f64 {
         self.total_answered() as f64 / self.elapsed_s.max(1e-9)
     }
@@ -169,6 +194,39 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
     // wide simulator will execute and the batcher can align to it.
     let evals = registry.evaluators(backend, 1, cfg.sim_lanes)?;
     registry.warmup(&evals)?;
+    serve_with(&registry, &evals, cfg)
+}
+
+/// Serve an already-built registry through already-built evaluators —
+/// the shared lower half of [`run`] and of the fault campaign (which
+/// injects fault-carrying gatesim evaluators the plain entry point
+/// would never construct).
+pub fn serve_with(
+    registry: &ModelRegistry,
+    evals: &[Box<dyn Evaluator + Send + Sync + '_>],
+    cfg: &ServeConfig,
+) -> Result<ServerReport> {
+    ensure!(!registry.is_empty(), "serve: empty model registry");
+    ensure!(
+        evals.len() == registry.len(),
+        "serve: {} evaluators for {} models",
+        evals.len(),
+        registry.len()
+    );
+    let trace = if cfg.scenario == Scenario::Trace {
+        let tr = match &cfg.trace {
+            Some(path) => Trace::load(path)?,
+            None => Trace::synth_diurnal(cfg.seed, cfg.rate_hz, cfg.duration, registry.len()),
+        };
+        ensure!(!tr.is_empty(), "trace scenario: trace has no requests");
+        if let Some(out) = &cfg.trace_out {
+            tr.save(out)?;
+        }
+        Some(tr)
+    } else {
+        None
+    };
+    let trace_ref = trace.as_ref();
 
     let workers = if cfg.workers == 0 { default_threads() } else { cfg.workers.max(1) };
     let queues: Vec<BatchQueue> =
@@ -197,17 +255,22 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
             std::thread::scope(|sensors| {
                 for s in 0..cfg.sensors.max(1) {
                     sensors.spawn(move || {
-                        loadgen::run_sensor(s, entries, queues_ref, cfg, start, deadline, next_id)
+                        loadgen::run_sensor(
+                            s, entries, queues_ref, cfg, start, deadline, next_id, trace_ref,
+                        )
                     });
                 }
             });
             stop_ref.store(true, Ordering::Release);
         });
-        batcher::drain(queues_ref, entries, &evals, &drain_cfg, stop_ref)
+        batcher::drain(queues_ref, entries, evals, &drain_cfg, stop_ref)
     })?;
 
     let elapsed_s = start.elapsed().as_secs_f64();
-    let eval_name = evals.first().map(|e| e.name()).unwrap_or(backend.label());
+    let eval_name = evals
+        .first()
+        .map(|e| e.name())
+        .unwrap_or(resolve_serve_backend(cfg.backend).label());
     let mut models = Vec::with_capacity(registry.len());
     for (entry, queue) in registry.entries().iter().zip(&queues) {
         let st = &queue.stats;
@@ -219,6 +282,7 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
             name: entry.name.clone(),
             requests: st.submitted.load(Ordering::Relaxed),
             answered,
+            errors: st.errors.load(Ordering::Relaxed),
             shed: st.shed.load(Ordering::Relaxed),
             batches,
             mean_batch: answered as f64 / batches.max(1) as f64,
@@ -228,8 +292,8 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
                 answered as f64 / lane_slots as f64
             },
             throughput_rps: answered as f64 / elapsed_s.max(1e-9),
-            p50_ms: stats::percentile(&lat, 50.0),
-            p99_ms: stats::percentile(&lat, 99.0),
+            p50_ms: stats::percentile(lat.samples(), 50.0),
+            p99_ms: stats::percentile(lat.samples(), 99.0),
             slo_ms: cfg.slo_ms,
             slo_violations: st.slo_violations.load(Ordering::Relaxed),
             accuracy: st.correct.load(Ordering::Relaxed) as f64 / answered.max(1) as f64,
@@ -255,6 +319,7 @@ mod tests {
         assert_eq!(c.scenario, Scenario::Steady);
         assert!(c.queue_cap >= 1);
         assert!(!c.synthetic);
+        assert!(c.trace.is_none() && c.trace_out.is_none());
     }
 
     #[test]
@@ -271,5 +336,15 @@ mod tests {
             ..ServeConfig::default()
         };
         assert!(run(&store, &cfg).is_err());
+    }
+
+    #[test]
+    fn serve_with_rejects_mismatched_evaluators() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let reg = ModelRegistry::synthetic(&names, 3);
+        let evals = reg.evaluators(Backend::Native, 1, 0).unwrap();
+        let one = ModelRegistry::synthetic(&names[..1], 3);
+        assert!(serve_with(&one, &evals, &ServeConfig::default()).is_err());
+        assert!(serve_with(&ModelRegistry::new(), &[], &ServeConfig::default()).is_err());
     }
 }

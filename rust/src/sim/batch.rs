@@ -23,6 +23,7 @@
 
 use std::sync::Arc;
 
+use crate::sim::fault::FaultList;
 use crate::sim::{Sim, SimPlan};
 use crate::util::pool::scope_map_with;
 
@@ -71,6 +72,28 @@ where
     T: Send,
     F: Fn(&mut Sim, usize, usize) -> Vec<T> + Sync,
 {
+    run_sharded_wide_faulted(plan, n, threads, lane_words, None, drive)
+}
+
+/// [`run_sharded_wide`] with an optional injected fault list: every
+/// worker simulator carries the same lowered faults, and each block is
+/// announced via [`Sim::fault_begin_block`] before `drive` runs, so
+/// transient flips key on the block's absolute sample base — sharded,
+/// wide, and serial fault runs stay bit-identical (block bases are
+/// multiples of `W·64` for every valid width, and every block executes
+/// the same eval sequence).
+pub fn run_sharded_wide_faulted<T, F>(
+    plan: &Arc<SimPlan>,
+    n: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+    drive: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&mut Sim, usize, usize) -> Vec<T> + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
@@ -84,10 +107,17 @@ where
     let shards = scope_map_with(
         blocks,
         threads.clamp(1, blocks),
-        || Sim::from_plan_wide(plan.clone(), w),
+        || {
+            let mut sim = Sim::from_plan_wide(plan.clone(), w);
+            if let Some(fl) = faults {
+                sim.set_faults(fl);
+            }
+            sim
+        },
         |sim, b| {
             let base = b * bl;
             let lanes = (n - base).min(bl);
+            sim.fault_begin_block(base);
             drive(sim, base, lanes)
         },
     );

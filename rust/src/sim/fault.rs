@@ -1,0 +1,523 @@
+//! Fault injection for the gate-level simulator (DESIGN.md §Faults).
+//!
+//! Printed electronics' low yield and device variability mean a deployed
+//! sequential PMLP sees **stuck-at** faults (a net welded to 0 or 1 by a
+//! printing defect) and **transient** bit-flips (supply droop, coupling)
+//! that the clean simulator never measures.  This module injects both at
+//! simulation time, on top of an unmodified [`SimPlan`]:
+//!
+//! - A [`Fault`] names a *source-netlist* net and a [`FaultKind`].  At
+//!   [`crate::sim::Sim::set_faults`] time the list is lowered against the
+//!   simulator's plan into a [`FaultState`]: each fault becomes a per-net
+//!   `(and_mask, or_mask)` pair applied to the net's lane words
+//!   (`v = (v & and) | or`) — stuck-at-0 is `(0, 0)`, stuck-at-1 is
+//!   `(!0, !0)`, and a transient fault additionally XORs in a
+//!   seed-deterministic flip mask.
+//! - Masks are applied **after the micro-op run (or interpreted cell)
+//!   that produces the net**, so every downstream reader observes the
+//!   corrupted value; nets written externally (primary inputs, register
+//!   state, undriven nets) are forced *before* combinational propagation
+//!   instead.  On compiled plans a run that merged across levels could
+//!   let a same-run reader see the clean value, so the opcode-run
+//!   schedule is re-split at each faulted producer (the split schedule
+//!   lives here; the fault-free path executes the original runs
+//!   untouched).
+//! - Determinism: stuck masks are lane-uniform, so they cannot depend on
+//!   batching.  Transient flip masks are keyed on
+//!   `(seed, net, cycle-in-block, global word index)` where the global
+//!   word index is `base_sample/64 + word` — block bases are multiples
+//!   of `W·64`, so the mask a sample sees is identical for every
+//!   super-lane width `W ∈ {1,2,4,8}`, any thread count, and the
+//!   interpreted oracle (`tests/fault_injection.rs` differentials).
+//!   [`crate::sim::Sim::fault_begin_block`] pins the block base and
+//!   resets the cycle counter; the sharded driver calls it per block.
+//!
+//! Fault sites are restricted to nets the plan actually materializes
+//! ([`SimPlan::faultable`]): a net strength reduction folded away has no
+//! slot of its own, and forcing its survivor would corrupt a *different*
+//! net than the one named.  [`FaultList::sample`] draws sites from the
+//! netlist's [`NetRole`] classification, so campaigns can target inputs,
+//! register state, or the combinational cloud separately.
+
+use std::sync::Arc;
+
+use crate::netlist::{NetId, Netlist, NetRole};
+use crate::sim::SimPlan;
+use crate::util::prng::Rng;
+
+/// What a fault does to its net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Net welded low: every lane reads 0.
+    StuckAt0,
+    /// Net welded high: every lane reads 1.
+    StuckAt1,
+    /// Seed-deterministic per-cycle bit-flips at the list's `flip_rate`.
+    Transient,
+}
+
+impl FaultKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::StuckAt0 => "sa0",
+            FaultKind::StuckAt1 => "sa1",
+            FaultKind::Transient => "flip",
+        }
+    }
+}
+
+/// One injected fault on a source-netlist net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub net: NetId,
+    pub kind: FaultKind,
+}
+
+/// A reproducible set of faults plus the transient-flip parameters —
+/// what campaigns sweep and evaluators carry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultList {
+    pub faults: Vec<Fault>,
+    /// Seed for the transient flip masks (also records the sampling
+    /// seed when the list came from [`FaultList::sample`]).
+    pub seed: u64,
+    /// Per-bit flip probability for [`FaultKind::Transient`] faults.
+    pub flip_rate: f64,
+}
+
+impl FaultList {
+    /// Draw `n_stuck` stuck-at faults (polarity coin-flipped per site)
+    /// and `n_transient` transient faults on distinct nets whose role is
+    /// in `roles` and which the plan materializes ([`SimPlan::faultable`]).
+    /// Deterministic in `seed`; counts clip to the candidate pool.
+    pub fn sample(
+        plan: &SimPlan,
+        netlist: &Netlist,
+        roles: &[NetRole],
+        n_stuck: usize,
+        n_transient: usize,
+        flip_rate: f64,
+        seed: u64,
+    ) -> FaultList {
+        let all_roles = netlist.net_roles();
+        let candidates: Vec<NetId> = (0..netlist.n_nets() as NetId)
+            .filter(|&id| roles.contains(&all_roles[id as usize]) && plan.faultable(id))
+            .collect();
+        let mut rng = Rng::new(seed);
+        let want = (n_stuck + n_transient).min(candidates.len());
+        let stuck = n_stuck.min(want);
+        let picked = rng.sample_indices(candidates.len(), want);
+        let faults = picked
+            .iter()
+            .enumerate()
+            .map(|(k, &ci)| Fault {
+                net: candidates[ci],
+                kind: if k < stuck {
+                    if rng.chance(0.5) {
+                        FaultKind::StuckAt1
+                    } else {
+                        FaultKind::StuckAt0
+                    }
+                } else {
+                    FaultKind::Transient
+                },
+            })
+            .collect();
+        FaultList {
+            faults,
+            seed,
+            flip_rate,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn stuck_count(&self) -> usize {
+        self.faults.iter().filter(|f| f.kind != FaultKind::Transient).count()
+    }
+
+    pub fn transient_count(&self) -> usize {
+        self.faults.len() - self.stuck_count()
+    }
+}
+
+/// A fault lowered against one plan: the value slot it forces plus the
+/// precomputed lane masks.
+#[derive(Clone, Debug)]
+pub(crate) struct ActiveFault {
+    pub(crate) slot: u32,
+    pub(crate) and_mask: u64,
+    pub(crate) or_mask: u64,
+    pub(crate) transient: bool,
+    /// Source-netlist id — the transient flip-mask key, so every plan
+    /// form and width draws identical masks for the same fault.
+    pub(crate) net: NetId,
+}
+
+impl ActiveFault {
+    fn new(slot: u32, net: NetId, kind: FaultKind) -> ActiveFault {
+        let (and_mask, or_mask, transient) = match kind {
+            FaultKind::StuckAt0 => (0, 0, false),
+            FaultKind::StuckAt1 => (!0, !0, false),
+            FaultKind::Transient => (!0, 0, true),
+        };
+        ActiveFault {
+            slot,
+            and_mask,
+            or_mask,
+            transient,
+            net,
+        }
+    }
+}
+
+/// A [`FaultList`] lowered against one [`SimPlan`], ready for the eval
+/// loop: source-net faults, a producer-indexed schedule, and (for
+/// compiled plans with scheduled faults) the opcode-run schedule
+/// re-split at each faulted producer.
+#[derive(Clone, Debug)]
+pub(crate) struct FaultState {
+    /// Faults on externally-written slots (inputs, register state,
+    /// undriven nets): forced before combinational propagation and
+    /// stuck-re-forced after the register commit.
+    pub(crate) sources: Vec<ActiveFault>,
+    /// Faults on combinationally produced slots, keyed by producer:
+    /// the index into [`FaultState::runs`] on compiled plans (the run
+    /// ending at the producing op), or the producing cell's position in
+    /// the interpreted topological order.  Sorted ascending; applied by
+    /// a cursor walk as eval advances.
+    pub(crate) scheduled: Vec<(u32, ActiveFault)>,
+    /// Compiled plans only: the plan's opcode runs split so every
+    /// faulted producer ends a run — a run merged across levels may
+    /// otherwise contain a reader of the faulted net.  `None` when no
+    /// fault needs mid-stream application (the plan's own runs execute).
+    pub(crate) runs: Option<Vec<(u8, u32, u32)>>,
+    seed: u64,
+    /// Flip probability in 24-bit fixed point (`P = rate_q24 / 2^24`).
+    rate_q24: u64,
+    /// Evals since [`FaultState::begin_block`] — transient masks are
+    /// keyed on it, and every protocol drives the same eval sequence
+    /// per block, so the key is batching-independent.
+    cycle: u64,
+    /// `base_sample / 64` for the current block; word `j` of a slot is
+    /// global word `base_word + j` regardless of `W`.
+    base_word: u64,
+}
+
+impl FaultState {
+    /// Lower `list` against `plan`.  Faults on nets the plan does not
+    /// materialize are dropped (see [`SimPlan::faultable`]); returns
+    /// `None` when nothing survives, so an empty list costs nothing.
+    pub(crate) fn build(plan: &SimPlan, list: &FaultList) -> Option<FaultState> {
+        let mut sources = Vec::new();
+        // (producing op index or interpreted order position, fault).
+        let mut by_producer: Vec<(u32, ActiveFault)> = Vec::new();
+        if let Some(cp) = plan.compiled_plan() {
+            let mut slot_writer = vec![u32::MAX; cp.n_dense_nets()];
+            for (i, &d) in cp.dst.iter().enumerate() {
+                slot_writer[d as usize] = i as u32;
+            }
+            for f in &list.faults {
+                if f.net as usize >= plan.n_nets() {
+                    continue;
+                }
+                let slot = cp.write_map[f.net as usize];
+                if slot == u32::MAX || slot < 2 {
+                    continue;
+                }
+                let af = ActiveFault::new(slot, f.net, f.kind);
+                match slot_writer[slot as usize] {
+                    u32::MAX => sources.push(af),
+                    op => by_producer.push((op, af)),
+                }
+            }
+        } else {
+            let mut net_writer = vec![u32::MAX; plan.n_nets()];
+            for (pos, &ci) in plan.order.iter().enumerate() {
+                net_writer[plan.cells[ci as usize].output() as usize] = pos as u32;
+            }
+            for f in &list.faults {
+                if (f.net as usize) < 2 || f.net as usize >= plan.n_nets() {
+                    continue;
+                }
+                let af = ActiveFault::new(f.net, f.net, f.kind);
+                match net_writer[f.net as usize] {
+                    u32::MAX => sources.push(af),
+                    pos => by_producer.push((pos, af)),
+                }
+            }
+        }
+        if sources.is_empty() && by_producer.is_empty() {
+            return None;
+        }
+        by_producer.sort_by_key(|&(pos, ref af)| (pos, af.slot));
+
+        // Compiled plans execute homogeneous opcode runs; split each run
+        // at faulted producers so the mask lands before any later op in
+        // the (possibly level-merged) run can read the clean value, and
+        // re-key the schedule by the run that now ends at the producer.
+        let (runs, scheduled) = match plan.compiled_plan() {
+            Some(cp) if !by_producer.is_empty() => {
+                let mut cuts: Vec<u32> = by_producer.iter().map(|&(op, _)| op).collect();
+                cuts.dedup();
+                let mut runs = Vec::with_capacity(cp.runs.len() + cuts.len());
+                let mut scheduled = Vec::with_capacity(by_producer.len());
+                let mut fi = 0usize; // cursor over by_producer (op-sorted)
+                for &(op, start, len) in &cp.runs {
+                    let end = start + len;
+                    let mut s = start;
+                    for &c in cuts.iter().filter(|&&c| c >= start && c < end) {
+                        runs.push((op, s, c + 1 - s));
+                        let run_idx = (runs.len() - 1) as u32;
+                        while fi < by_producer.len() && by_producer[fi].0 == c {
+                            scheduled.push((run_idx, by_producer[fi].1.clone()));
+                            fi += 1;
+                        }
+                        s = c + 1;
+                    }
+                    if end > s {
+                        runs.push((op, s, end - s));
+                    }
+                }
+                (Some(runs), scheduled)
+            }
+            _ => (None, by_producer),
+        };
+
+        let rate_q24 = (list.flip_rate.clamp(0.0, 1.0) * (1u64 << 24) as f64).round() as u64;
+        Some(FaultState {
+            sources,
+            scheduled,
+            runs,
+            seed: list.seed,
+            rate_q24,
+            cycle: 0,
+            base_word: 0,
+        })
+    }
+
+    /// Start a super-lane block whose first sample is `base_sample`
+    /// (always a multiple of `W·64` in the sharded driver): reset the
+    /// per-block eval counter and pin the global word base.
+    pub(crate) fn begin_block(&mut self, base_sample: usize) {
+        self.cycle = 0;
+        self.base_word = (base_sample / 64) as u64;
+    }
+
+    /// Called once at the end of every combinational propagation.
+    pub(crate) fn end_eval(&mut self) {
+        self.cycle += 1;
+    }
+
+    /// The transient flip mask for one lane word: seed-deterministic in
+    /// `(seed, net, cycle, global word)`, with each bit set independently
+    /// at probability `rate_q24 / 2^24`.
+    fn flip_word(&self, net: NetId, word: u64) -> u64 {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (net as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+                ^ self.cycle.wrapping_mul(0x94D0_49BB_1331_11EB)
+                ^ word.wrapping_mul(0xD6E8_FEB8_6659_FD93),
+        );
+        bernoulli_mask(&mut rng, self.rate_q24)
+    }
+
+    /// Force one fault into its slot's lane words.
+    #[inline]
+    pub(crate) fn apply<const W: usize>(&self, v: &mut [u64], af: &ActiveFault) {
+        let base = af.slot as usize * W;
+        for j in 0..W {
+            let mut x = (v[base + j] & af.and_mask) | af.or_mask;
+            if af.transient && self.rate_q24 > 0 {
+                x ^= self.flip_word(af.net, self.base_word + j as u64);
+            }
+            v[base + j] = x;
+        }
+    }
+
+    /// Re-force the stuck component of every source fault (after the
+    /// register commit overwrites state slots) — transient flips are
+    /// NOT re-drawn, so observation stays a pure function of the eval
+    /// count.
+    pub(crate) fn reforce_stuck<const W: usize>(&self, v: &mut [u64]) {
+        for af in &self.sources {
+            if af.transient {
+                continue;
+            }
+            let base = af.slot as usize * W;
+            for x in &mut v[base..base + W] {
+                *x = (*x & af.and_mask) | af.or_mask;
+            }
+        }
+    }
+}
+
+/// A 64-lane word whose bits are independently 1 with probability
+/// `q24 / 2^24` (24-bit fixed point), built from 24 uniform draws by the
+/// bitwise Bernoulli construction: walking the probability's bits LSB →
+/// MSB, `m = bit ? (m | r) : (m & r)` halves-and-offsets the density so
+/// the final per-bit probability is exactly the fixed-point value.
+pub fn bernoulli_mask(rng: &mut Rng, q24: u64) -> u64 {
+    if q24 == 0 {
+        return 0;
+    }
+    if q24 >= 1 << 24 {
+        return !0;
+    }
+    let mut m = 0u64;
+    for i in 0..24 {
+        let r = rng.next_u64();
+        m = if (q24 >> i) & 1 == 1 { m | r } else { m & r };
+    }
+    m
+}
+
+/// Convenience: the roles campaigns fault by default — everything that
+/// physically exists as a wire (inputs, register state, combinational
+/// outputs); constants and floating nets are excluded.
+pub fn default_roles() -> Vec<NetRole> {
+    vec![NetRole::Input, NetRole::State, NetRole::Comb]
+}
+
+/// Shared handle form used by evaluators and campaign configs.
+pub type SharedFaultList = Arc<FaultList>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{Netlist, CONST0, CONST1};
+    use crate::sim::Sim;
+
+    fn toy() -> (Netlist, NetId, NetId, NetId, NetId) {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let x = n.xor2(a, b);
+        let y = n.and2(x, a);
+        n.add_output("y", vec![y]);
+        (n, a, b, x, y)
+    }
+
+    #[test]
+    fn stuck_at_forces_value_on_both_plan_forms() {
+        let (n, a, b, x, y) = toy();
+        for plan in [
+            Arc::new(SimPlan::new(&n)),
+            Arc::new(SimPlan::compiled(&n)),
+        ] {
+            let list = FaultList {
+                faults: vec![Fault {
+                    net: x,
+                    kind: FaultKind::StuckAt1,
+                }],
+                seed: 1,
+                flip_rate: 0.0,
+            };
+            let mut s = Sim::from_plan(plan);
+            s.set_faults(&list);
+            s.set(a, 0b0011);
+            s.set(b, 0b0101);
+            s.eval();
+            assert_eq!(s.get(x), !0, "stuck-at-1 forces every lane");
+            // Downstream sees the forced value: y = x & a = a.
+            assert_eq!(s.get(y), s.get(a), "reader observes the fault");
+        }
+    }
+
+    #[test]
+    fn empty_and_unmaterialized_lists_are_free() {
+        let (n, _, _, _, _) = toy();
+        let plan = Arc::new(SimPlan::compiled(&n));
+        assert!(FaultState::build(&plan, &FaultList::default()).is_none());
+        // A fault on a constant net never lowers.
+        let consts = FaultList {
+            faults: vec![
+                Fault {
+                    net: CONST0,
+                    kind: FaultKind::StuckAt1,
+                },
+                Fault {
+                    net: CONST1,
+                    kind: FaultKind::StuckAt0,
+                },
+            ],
+            seed: 0,
+            flip_rate: 0.0,
+        };
+        assert!(FaultState::build(&plan, &consts).is_none());
+    }
+
+    #[test]
+    fn sample_respects_roles_counts_and_determinism() {
+        let (n, _, _, _, _) = toy();
+        let plan = SimPlan::compiled(&n);
+        let roles = vec![NetRole::Input];
+        let l1 = FaultList::sample(&plan, &n, &roles, 1, 1, 0.01, 42);
+        let l2 = FaultList::sample(&plan, &n, &roles, 1, 1, 0.01, 42);
+        assert_eq!(l1, l2, "sampling is seed-deterministic");
+        assert_eq!(l1.faults.len(), 2);
+        assert_eq!(l1.stuck_count(), 1);
+        assert_eq!(l1.transient_count(), 1);
+        let all = n.net_roles();
+        for f in &l1.faults {
+            assert_eq!(all[f.net as usize], NetRole::Input);
+        }
+        // Counts clip to the candidate pool (2 inputs here).
+        let clipped = FaultList::sample(&plan, &n, &roles, 10, 10, 0.0, 7);
+        assert_eq!(clipped.faults.len(), 2);
+    }
+
+    #[test]
+    fn bernoulli_mask_endpoints_and_density() {
+        let mut r = Rng::new(3);
+        assert_eq!(bernoulli_mask(&mut r, 0), 0);
+        assert_eq!(bernoulli_mask(&mut r, 1 << 24), !0);
+        // Density ≈ 1/4 over many words.
+        let q = 1u64 << 22; // p = 0.25
+        let mut ones = 0u32;
+        for _ in 0..512 {
+            ones += bernoulli_mask(&mut r, q).count_ones();
+        }
+        let p = ones as f64 / (512.0 * 64.0);
+        assert!((p - 0.25).abs() < 0.02, "density {p}");
+    }
+
+    #[test]
+    fn transient_flips_are_deterministic_and_rate_scaled() {
+        let (n, a, b, x, _) = toy();
+        let plan = Arc::new(SimPlan::compiled(&n));
+        let list = FaultList {
+            faults: vec![Fault {
+                net: x,
+                kind: FaultKind::Transient,
+            }],
+            seed: 9,
+            flip_rate: 0.5,
+        };
+        let run = || {
+            let mut s = Sim::from_plan(plan.clone());
+            s.set_faults(&list);
+            s.fault_begin_block(0);
+            s.set(a, 0);
+            s.set(b, 0);
+            s.eval();
+            s.get(x)
+        };
+        let v1 = run();
+        assert_eq!(v1, run(), "same seed + block + cycle → same flips");
+        assert_ne!(v1, 0, "rate 0.5 flips something in 64 lanes");
+        // Zero rate leaves the clean value.
+        let clean = FaultList {
+            flip_rate: 0.0,
+            ..list.clone()
+        };
+        let mut s = Sim::from_plan(plan.clone());
+        s.set_faults(&clean);
+        s.set(a, 0);
+        s.set(b, 0);
+        s.eval();
+        assert_eq!(s.get(x), 0);
+    }
+}

@@ -55,8 +55,15 @@
 //! comes from [`lane_words_default`] — `sim.lanes`, `--sim-lanes`, or
 //! `PRINTED_MLP_SIM_LANES`, auto-picked from the detected SIMD width when
 //! unset.
+//!
+//! §Faults: [`Sim::set_faults`] lowers a [`fault::FaultList`] against the
+//! plan and `eval`/`step` force the resulting per-net masks at the points
+//! the [`fault`] module documents — stuck-at and seed-deterministic
+//! transient corruption that stays bit-identical across widths, thread
+//! counts, and the interpreted/compiled split.
 
 pub mod batch;
+pub mod fault;
 pub mod testbench;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -565,6 +572,19 @@ impl SimPlan {
             None => net,
         }
     }
+
+    /// Can a fault on `net` be expressed against this plan?  True when
+    /// the net owns a writable value slot of its own — constants, nets
+    /// plan compilation eliminated, and nets folded onto an alias are
+    /// not faultable (forcing an alias's survivor would corrupt a
+    /// *different* source net than the one named).
+    pub fn faultable(&self, net: NetId) -> bool {
+        if net as usize >= self.n_nets {
+            return false;
+        }
+        let slot = self.write_slot(net);
+        slot != u32::MAX && slot >= 2
+    }
 }
 
 /// Load one net's `[u64; W]` super-lane block from the slot-major value
@@ -647,6 +667,9 @@ pub struct Sim {
     vals: Vec<u64>,
     /// Scratch for the two-phase register update (`n_state * w` words).
     next_q: Vec<u64>,
+    /// Injected faults, lowered against the plan (`None` = clean run —
+    /// the common case pays one branch per eval).
+    faults: Option<Box<fault::FaultState>>,
 }
 
 impl Sim {
@@ -688,6 +711,38 @@ impl Sim {
             plan,
             w: lane_words,
             vals,
+            faults: None,
+        }
+    }
+
+    /// Inject a fault list: lower it against this simulator's plan so
+    /// every subsequent `eval`/`step` forces the masks.  Faults on nets
+    /// the plan does not materialize are dropped (see
+    /// [`SimPlan::faultable`]); an empty surviving set costs nothing.
+    /// Call [`Sim::fault_begin_block`] when this simulator's lanes start
+    /// at a nonzero sample offset (sharded runs).
+    pub fn set_faults(&mut self, list: &fault::FaultList) {
+        self.faults = fault::FaultState::build(&self.plan, list).map(Box::new);
+    }
+
+    /// Remove every injected fault.
+    pub fn clear_faults(&mut self) {
+        self.faults = None;
+    }
+
+    /// Whether any fault survived lowering.
+    pub fn has_faults(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// Pin the transient-flip key space to a lane block whose first
+    /// sample is `base_sample` (a multiple of 64) and restart the
+    /// per-block eval counter — what makes sharded fault runs
+    /// bit-identical to a serial one.  No-op on a clean simulator.
+    pub fn fault_begin_block(&mut self, base_sample: usize) {
+        debug_assert_eq!(base_sample % Self::LANES, 0);
+        if let Some(fs) = &mut self.faults {
+            fs.begin_block(base_sample);
         }
     }
 
@@ -845,8 +900,25 @@ impl Sim {
         debug_assert_eq!(self.w, W);
         let plan = &*self.plan;
         let v = &mut self.vals;
+        let fs = self.faults.as_deref();
+        if let Some(fs) = fs {
+            // Externally-written slots (inputs, register state, undriven
+            // nets) are forced before propagation so every reader sees
+            // the corrupted value.
+            for af in &fs.sources {
+                fs.apply::<W>(v, af);
+            }
+        }
         if let Some(cp) = &plan.compiled {
-            for &(op, start, len) in &cp.runs {
+            // With scheduled faults the fault-split run table executes
+            // (every faulted producer ends a run, so a same-run reader
+            // can never observe the clean value); clean runs pay nothing.
+            let runs: &[(u8, u32, u32)] = match fs.and_then(|f| f.runs.as_deref()) {
+                Some(split) => split,
+                None => &cp.runs,
+            };
+            let mut cursor = 0usize;
+            for (ri, &(op, start, len)) in runs.iter().enumerate() {
                 let r = start as usize..start as usize + len as usize;
                 let a = &cp.src_a[r.clone()];
                 let b = &cp.src_b[r.clone()];
@@ -866,23 +938,45 @@ impl Sim {
                         run_mux::<W>(v, a, b, c, d);
                     }
                 }
+                if let Some(fs) = fs {
+                    while cursor < fs.scheduled.len() && fs.scheduled[cursor].0 == ri as u32 {
+                        fs.apply::<W>(v, &fs.scheduled[cursor].1);
+                        cursor += 1;
+                    }
+                }
             }
-            return;
+        } else {
+            let mut cursor = 0usize;
+            for (pos, &ci) in plan.order.iter().enumerate() {
+                let c = plan.cells[ci as usize];
+                match c {
+                    Cell::Inv { a, y } => run_unary::<W>(v, &[a], &[y], |x| !x),
+                    Cell::Buf { a, y } => run_unary::<W>(v, &[a], &[y], |x| x),
+                    Cell::Nand2 { a, b, y } => {
+                        run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x & z))
+                    }
+                    Cell::Nor2 { a, b, y } => {
+                        run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x | z))
+                    }
+                    Cell::And2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x & z),
+                    Cell::Or2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x | z),
+                    Cell::Xor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x ^ z),
+                    Cell::Xnor2 { a, b, y } => {
+                        run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x ^ z))
+                    }
+                    Cell::Mux2 { a, b, sel, y } => run_mux::<W>(v, &[a], &[b], &[sel], &[y]),
+                    Cell::Dff { .. } => unreachable!("DFF in comb order"),
+                }
+                if let Some(fs) = fs {
+                    while cursor < fs.scheduled.len() && fs.scheduled[cursor].0 == pos as u32 {
+                        fs.apply::<W>(v, &fs.scheduled[cursor].1);
+                        cursor += 1;
+                    }
+                }
+            }
         }
-        for &ci in &plan.order {
-            let c = plan.cells[ci as usize];
-            match c {
-                Cell::Inv { a, y } => run_unary::<W>(v, &[a], &[y], |x| !x),
-                Cell::Buf { a, y } => run_unary::<W>(v, &[a], &[y], |x| x),
-                Cell::Nand2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x & z)),
-                Cell::Nor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x | z)),
-                Cell::And2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x & z),
-                Cell::Or2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x | z),
-                Cell::Xor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x ^ z),
-                Cell::Xnor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x ^ z)),
-                Cell::Mux2 { a, b, sel, y } => run_mux::<W>(v, &[a], &[b], &[sel], &[y]),
-                Cell::Dff { .. } => unreachable!("DFF in comb order"),
-            }
+        if let Some(fs) = self.faults.as_deref_mut() {
+            fs.end_eval();
         }
     }
 
@@ -901,6 +995,24 @@ impl Sim {
             2 => self.commit_state::<2>(),
             4 => self.commit_state::<4>(),
             _ => self.commit_state::<8>(),
+        }
+        // The register commit just overwrote state slots; re-force the
+        // stuck component of every source fault so post-step observation
+        // stays coherent (transient flips are NOT re-drawn — they are a
+        // pure function of the eval count).
+        if self.faults.is_some() {
+            match self.w {
+                1 => self.reforce_stuck::<1>(),
+                2 => self.reforce_stuck::<2>(),
+                4 => self.reforce_stuck::<4>(),
+                _ => self.reforce_stuck::<8>(),
+            }
+        }
+    }
+
+    fn reforce_stuck<const W: usize>(&mut self) {
+        if let Some(fs) = self.faults.as_deref() {
+            fs.reforce_stuck::<W>(&mut self.vals);
         }
     }
 

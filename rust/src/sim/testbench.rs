@@ -27,6 +27,7 @@ use std::sync::Arc;
 
 use crate::circuits::{CombCircuit, SeqCircuit};
 use crate::netlist::{NetId, Netlist, Word};
+use crate::sim::fault::FaultList;
 use crate::sim::{batch, Sim, SimPlan};
 use crate::util::pool;
 
@@ -81,12 +82,13 @@ fn run_blocks<D>(
     features: usize,
     threads: usize,
     lane_words: usize,
+    faults: Option<&FaultList>,
     drive: D,
 ) -> Vec<u16>
 where
     D: Fn(&mut Sim, &mut BlockIo) + Sync,
 {
-    batch::run_sharded_wide(plan, n, threads, lane_words, |sim, base, lanes| {
+    batch::run_sharded_wide_faulted(plan, n, threads, lane_words, faults, |sim, base, lanes| {
         let mut io = BlockIo {
             xs,
             features,
@@ -133,12 +135,30 @@ pub fn run_sequential_plan(
     threads: usize,
     lane_words: usize,
 ) -> Vec<u16> {
+    run_sequential_plan_faulted(circ, plan, xs, n, features, threads, lane_words, None)
+}
+
+/// [`run_sequential_plan`] with an optional injected [`FaultList`] — the
+/// fault campaign's sequential entry point.  `None` is exactly the clean
+/// path; a fault list is lowered once per worker and applied
+/// deterministically per block (see [`crate::sim::fault`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sequential_plan_faulted(
+    circ: &SeqCircuit,
+    plan: &Arc<SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+) -> Vec<u16> {
     let net = &circ.netlist;
     let x = input_port(net, "x").clone();
     let rst = input_port(net, "rst")[0];
     let class_out = output_port(net, "class_out").clone();
 
-    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, |sim, io| {
+    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, faults, |sim, io| {
         // Reset pulse across every lane word.
         sim.fill(rst, !0u64);
         sim.set_word_all(&x, 0);
@@ -186,12 +206,28 @@ pub fn run_combinational_plan(
     threads: usize,
     lane_words: usize,
 ) -> Vec<u16> {
+    run_combinational_plan_faulted(circ, plan, xs, n, features, threads, lane_words, None)
+}
+
+/// [`run_combinational_plan`] with an optional injected [`FaultList`]
+/// (see [`run_sequential_plan_faulted`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_combinational_plan_faulted(
+    circ: &CombCircuit,
+    plan: &Arc<SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+) -> Vec<u16> {
     let net = &circ.netlist;
     let x_all = input_port(net, "x_all").clone();
     let class_out = output_port(net, "class_out").clone();
     assert_eq!(x_all.len(), 4 * circ.active.len());
 
-    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, |sim, io| {
+    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, faults, |sim, io| {
         for (slot, &f) in circ.active.iter().enumerate() {
             io.drive_feature(sim, &x_all[slot * 4..(slot + 1) * 4], f);
         }

@@ -2,6 +2,20 @@
 //! good enough for NSGA-II, dataset shuffling and property tests.
 //! (The `rand` crate is unavailable offline; see DESIGN.md §Substitutions.)
 
+/// Fold a uniform `u64` onto `[0, n)` without modulo bias: the
+/// multiply-high map `⌊x·n / 2^64⌋` distributes the 2^64 inputs across
+/// the `n` buckets as evenly as possible (bucket sizes differ by at most
+/// one), unlike `x % n`, which over-weights low residues whenever `n`
+/// does not divide 2^64.  This is the *fixed-draw* counterpart of
+/// [`Rng::below`]: given one recorded random word (a trace entry, a
+/// fan-in window) it picks the bucket deterministically with no
+/// rejection loop.
+#[inline]
+pub fn fold_u64(x: u64, n: u64) -> u64 {
+    debug_assert!(n > 0, "fold_u64 onto an empty range");
+    ((x as u128 * n as u128) >> 64) as u64
+}
+
 /// xoshiro256** by Blackman & Vigna (public domain reference algorithm).
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -174,6 +188,32 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fold_u64_unbiased_and_in_range() {
+        // Every bucket hit, and counts near-uniform for a non-power-of-two
+        // n where `x % n` would visibly over-weight low indices.
+        let n = 48u64; // spectf-sized test split
+        let mut counts = vec![0u32; n as usize];
+        let mut r = Rng::new(17);
+        let draws = 48_000;
+        for _ in 0..draws {
+            let b = fold_u64(r.next_u64(), n);
+            assert!(b < n);
+            counts[b as usize] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < expect * 0.2,
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+        // Extremes map to the ends, never out of range.
+        assert_eq!(fold_u64(0, 7), 0);
+        assert_eq!(fold_u64(u64::MAX, 7), 6);
+        assert_eq!(fold_u64(u64::MAX, 1), 0);
     }
 
     #[test]

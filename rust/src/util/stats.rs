@@ -1,5 +1,80 @@
 //! Small summary statistics shared by benches and reports.
 
+use crate::util::prng::Rng;
+
+/// Bounded latency sample store: exact below the cap, deterministic
+/// reservoir sampling (Algorithm R, seeded) above it, so long serve
+/// campaigns keep O(cap) memory while percentiles stay an unbiased
+/// estimate of the full stream.  Replaces the previously unbounded
+/// latency `Vec` in the server's per-model stats.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    rng: Rng,
+    samples: Vec<f64>,
+}
+
+/// Default reservoir capacity: exact percentiles for any serve run under
+/// 65 536 answered frames per model, ~512 KiB worst-case per model above.
+pub const RESERVOIR_CAP: usize = 65_536;
+
+impl Reservoir {
+    /// Seeded reservoir — same stream + same seed ⇒ same samples.
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir needs a nonzero capacity");
+        Reservoir {
+            cap,
+            seen: 0,
+            rng: Rng::new(seed),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Offer one observation.  The first `cap` observations are kept
+    /// exactly; after that, observation `k` (1-based) replaces a random
+    /// held sample with probability `cap / k` — each stream element ends
+    /// up retained with equal probability (Algorithm R).
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// The held samples (unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Total observations offered (≥ `len`).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+impl Default for Reservoir {
+    /// [`RESERVOIR_CAP`] capacity with a fixed seed — what the server's
+    /// per-model stats construct, so runs stay reproducible without
+    /// threading a seed through stat construction.
+    fn default() -> Reservoir {
+        Reservoir::new(RESERVOIR_CAP, 0x5A17)
+    }
+}
+
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -101,6 +176,53 @@ mod tests {
         let xs = [1.0, neg_nan, 3.0];
         assert!(percentile(&xs, 0.0).is_nan());
         assert_eq!(percentile(&xs, 100.0), 3.0);
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap() {
+        let mut r = Reservoir::new(100, 1);
+        for i in 0..50 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 50);
+        assert_eq!(r.seen(), 50);
+        // Exact retention ⇒ percentiles agree with the full stream.
+        let full: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(r.samples(), p), percentile(&full, p));
+        }
+    }
+
+    #[test]
+    fn reservoir_bounded_unbiased_and_deterministic_above_cap() {
+        let cap = 256;
+        let n = 20_000;
+        let run = |seed| {
+            let mut r = Reservoir::new(cap, seed);
+            for i in 0..n {
+                r.push(i as f64);
+            }
+            r
+        };
+        let r = run(7);
+        assert_eq!(r.len(), cap, "memory stays bounded at the cap");
+        assert_eq!(r.seen(), n as u64);
+        assert_eq!(
+            r.samples(),
+            run(7).samples(),
+            "same stream + seed ⇒ same reservoir"
+        );
+        // Unbiased: the sample median of a uniform ramp tracks the true
+        // median within sampling error (3σ ≈ n/(2·√cap) · 3/√cap ⇒ use a
+        // generous 20% band).
+        let med = percentile(r.samples(), 50.0);
+        let true_med = n as f64 / 2.0;
+        assert!(
+            (med - true_med).abs() < true_med * 0.2,
+            "median {med} vs {true_med}"
+        );
+        // Every held sample came from the stream.
+        assert!(r.samples().iter().all(|&x| x >= 0.0 && x < n as f64));
     }
 
     #[test]

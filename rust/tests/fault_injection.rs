@@ -1,0 +1,252 @@
+//! Fault-injection differentials (DESIGN.md §Faults):
+//!
+//! - a zero-fault campaign cell is bit-identical to a plain serve run
+//!   over the same trace (same request counts, same accuracy — the
+//!   clean path is untouched by the fault machinery);
+//! - the trace scenario is replayable: two serve runs over the same
+//!   synthesized trace submit identical per-model request streams;
+//! - fault-injected predictions are bit-identical across super-lane
+//!   widths `W ∈ {1,2,4,8}` and thread counts for the same fault list,
+//!   on both the sequential and combinational circuits;
+//! - faults on externally-written nets (inputs, register state) agree
+//!   between the interpreted oracle and the compiled plan — `Comb`-net
+//!   faults are excluded because inversion fusing legitimately gives
+//!   the two plan forms different internal wire values;
+//! - a stuck-at fault forces the named net's value on random
+//!   (mini-propcheck) netlists, on both plan forms.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use printed_mlp::circuits::{combinational, rtl, seq_multicycle};
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::model::synth;
+use printed_mlp::netlist::{Netlist, NetRole};
+use printed_mlp::runtime::Backend;
+use printed_mlp::server::{self, ArchKind, CampaignConfig, Scenario, ServeConfig};
+use printed_mlp::sim::fault::{default_roles, Fault, FaultKind, FaultList};
+use printed_mlp::sim::{testbench, Sim, SimPlan};
+use printed_mlp::util::propcheck::check;
+use printed_mlp::util::prng::Rng;
+
+fn trace_cfg() -> ServeConfig {
+    ServeConfig {
+        datasets: vec!["f0".into(), "f1".into()],
+        scenario: Scenario::Trace,
+        rate_hz: 300.0,
+        duration: Duration::from_millis(150),
+        sensors: 2,
+        workers: 2,
+        batch: 32,
+        queue_cap: 8192,
+        slo_ms: 1e9,
+        seed: 13,
+        backend: Backend::GateSim,
+        sim_lanes: 2,
+        synthetic: true,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn zero_fault_campaign_is_bit_identical_to_plain_serve() {
+    let store = ArtifactStore::new("/nonexistent-artifacts-root");
+    let cfg = trace_cfg();
+    let plain = server::run(&store, &cfg).unwrap();
+    assert!(plain.total_requests() > 0, "trace generates traffic");
+
+    let camp = CampaignConfig {
+        serve: cfg,
+        archs: vec![ArchKind::Ours],
+        levels: vec![(0, 0)],
+        ..CampaignConfig::default()
+    };
+    let rep = server::campaign::run_campaign(&store, &camp).unwrap();
+    assert_eq!(rep.scenario, Scenario::Trace);
+    assert_eq!(rep.rows.len(), plain.models.len(), "one row per model");
+
+    for (row, m) in rep.rows.iter().zip(&plain.models) {
+        assert_eq!(row.model, m.name);
+        assert_eq!((row.stuck, row.transient), (0, 0));
+        assert_eq!(
+            row.degradation, 0.0,
+            "{}: zero faults must not move the deterministic accuracy",
+            row.model
+        );
+        assert_eq!(row.baseline_accuracy, row.fault_accuracy);
+        assert_eq!(row.baseline_accuracy, 1.0, "self-labeled synthetic split");
+        // Same trace, same evaluators ⇒ same request stream, bit-exact
+        // predictions, nothing shed or errored on either path.
+        assert_eq!(
+            row.serve.requests, m.requests,
+            "{}: replayed trace submits the same frames",
+            row.model
+        );
+        assert_eq!(row.serve.answered, m.answered);
+        assert_eq!(row.serve.requests, row.serve.answered);
+        assert_eq!(row.serve.shed, 0);
+        assert_eq!(row.serve.errors, 0);
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.errors, 0);
+        if row.serve.answered > 0 {
+            assert_eq!(row.serve.accuracy, 1.0);
+            assert_eq!(m.accuracy, 1.0);
+        }
+    }
+}
+
+#[test]
+fn trace_serve_requests_are_replayable() {
+    let store = ArtifactStore::new("/nonexistent-artifacts-root");
+    let cfg = trace_cfg();
+    let a = server::run(&store, &cfg).unwrap();
+    let b = server::run(&store, &cfg).unwrap();
+    assert!(a.total_requests() > 0);
+    for (ma, mb) in a.models.iter().zip(&b.models) {
+        assert_eq!(ma.name, mb.name);
+        assert_eq!(
+            ma.requests, mb.requests,
+            "{}: the replayed trace offers identical load",
+            ma.name
+        );
+        assert_eq!(ma.answered, mb.answered);
+        assert_eq!(ma.accuracy, mb.accuracy);
+    }
+}
+
+#[test]
+fn sequential_faults_bit_identical_across_widths_and_threads() {
+    let m = synth::rand_model(41, 9, 6, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let plan = circ.sim_plan();
+    let fl = FaultList::sample(&plan, &circ.netlist, &default_roles(), 8, 6, 0.2, 11);
+    assert!(fl.stuck_count() > 0 && fl.transient_count() > 0);
+
+    let n = 300; // not a block multiple: exercises the partial tail
+    let mut r = Rng::new(77);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let reference =
+        testbench::run_sequential_plan_faulted(&circ, &plan, &xs, n, m.features, 1, 1, Some(&fl));
+    for w in [1usize, 2, 4, 8] {
+        for threads in [1usize, 3] {
+            let got = testbench::run_sequential_plan_faulted(
+                &circ,
+                &plan,
+                &xs,
+                n,
+                m.features,
+                threads,
+                w,
+                Some(&fl),
+            );
+            assert_eq!(
+                reference, got,
+                "sequential faulted run diverged at W={w}, threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn combinational_faults_bit_identical_across_widths_and_threads() {
+    let m = synth::rand_model(43, 8, 4, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = combinational::generate(&m, &active);
+    let plan = circ.sim_plan();
+    let fl = FaultList::sample(&plan, &circ.netlist, &default_roles(), 6, 4, 0.1, 17);
+    assert!(!fl.is_empty());
+
+    let n = 200;
+    let mut r = Rng::new(78);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let reference =
+        testbench::run_combinational_plan_faulted(&circ, &plan, &xs, n, m.features, 1, 1, Some(&fl));
+    for w in [1usize, 2, 4, 8] {
+        for threads in [1usize, 3] {
+            let got = testbench::run_combinational_plan_faulted(
+                &circ,
+                &plan,
+                &xs,
+                n,
+                m.features,
+                threads,
+                w,
+                Some(&fl),
+            );
+            assert_eq!(
+                reference, got,
+                "combinational faulted run diverged at W={w}, threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn source_faults_agree_between_interpreted_and_compiled_plans() {
+    // Input/State nets exist verbatim in both plan forms; Comb nets are
+    // excluded — inversion fusing means the compiled plan's internal
+    // wires legitimately carry different (complemented) values.
+    let m = synth::rand_model(45, 8, 5, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let compiled = circ.sim_plan();
+    let interp = Arc::new(SimPlan::new(&circ.netlist));
+    let roles = [NetRole::Input, NetRole::State];
+    let fl = FaultList::sample(&compiled, &circ.netlist, &roles, 6, 2, 0.1, 21);
+    assert!(!fl.is_empty());
+
+    let n = 150;
+    let mut r = Rng::new(79);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let via_compiled =
+        testbench::run_sequential_plan_faulted(&circ, &compiled, &xs, n, m.features, 1, 2, Some(&fl));
+    let via_interp =
+        testbench::run_sequential_plan_faulted(&circ, &interp, &xs, n, m.features, 1, 2, Some(&fl));
+    assert_eq!(
+        via_compiled, via_interp,
+        "interpreted oracle and compiled plan disagree under source faults"
+    );
+}
+
+#[test]
+fn prop_stuck_at_forces_value_on_random_netlists() {
+    check("stuck-at forces the named net on both plan forms", 24, |g| {
+        let w = g.usize_in(2..=10).max(2);
+        let a = g.i32_in(-(1 << (w - 1))..=(1 << (w - 1)) - 1) as i64;
+        let b = g.i32_in(-(1 << (w - 1))..=(1 << (w - 1)) - 1) as i64;
+        let mut n = Netlist::new("t");
+        let aw = n.add_input("a", w);
+        let bw = n.add_input("b", w);
+        let y = rtl::add(&mut n, &aw, &bw);
+        n.add_output("y", y.clone());
+        let bit = g.usize_in(0..=w - 1);
+        let kind = if g.bool() {
+            FaultKind::StuckAt1
+        } else {
+            FaultKind::StuckAt0
+        };
+        let list = FaultList {
+            faults: vec![Fault { net: y[bit], kind }],
+            seed: 0,
+            flip_rate: 0.0,
+        };
+        let want = if kind == FaultKind::StuckAt1 { !0u64 } else { 0u64 };
+        [
+            Arc::new(SimPlan::new(&n)),
+            Arc::new(SimPlan::compiled(&n)),
+        ]
+        .into_iter()
+        .all(|plan| {
+            if !plan.faultable(y[bit]) {
+                return true; // folded away: no slot of its own to force
+            }
+            let mut s = Sim::from_plan(plan);
+            s.set_faults(&list);
+            s.set_word_all(&aw, a);
+            s.set_word_all(&bw, b);
+            s.eval();
+            s.get(y[bit]) == want
+        })
+    });
+}

@@ -9,7 +9,10 @@
 //! - the steady scenario at a modest rate serves ≥ 3 models end-to-end
 //!   with zero shed and accuracy 1.0 (self-labeled splits + exact
 //!   backend ⇒ accuracy is a bit-exactness check);
-//! - fan-in feeds every hosted model the same window count.
+//! - fan-in feeds every hosted model the same window count;
+//! - a failing batch is charged to `ModelStats::errors`, the pool keeps
+//!   draining sibling queues, and the first error surfaces after the
+//!   join (exactly-once: submitted = answered + shed + errors).
 
 use std::sync::atomic::AtomicBool;
 use std::time::{Duration, Instant};
@@ -229,6 +232,98 @@ fn steady_three_models_zero_shed_exact_accuracy() {
             m.name
         );
     }
+}
+
+#[test]
+fn failing_batches_are_accounted_and_drain_continues() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // Wraps a real evaluator and fails every other batch — the shape of
+    // a transient backend fault (OOM, poisoned lock, device error).
+    struct FlakyEval<'a> {
+        inner: Box<dyn Evaluator + Send + Sync + 'a>,
+        calls: AtomicUsize,
+    }
+    impl Evaluator for FlakyEval<'_> {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn predict(
+            &self,
+            xs: &[u8],
+            n: usize,
+            feat_mask: &[u8],
+            approx_mask: &[u8],
+            tables: &printed_mlp::model::ApproxTables,
+        ) -> anyhow::Result<Vec<i32>> {
+            if self.calls.fetch_add(1, Ordering::Relaxed) % 2 == 1 {
+                anyhow::bail!("injected batch failure");
+            }
+            self.inner.predict(xs, n, feat_mask, approx_mask, tables)
+        }
+    }
+
+    let reg = synthetic_registry(2, 17);
+    let mut inner = reg.evaluators(Backend::Native, 1, 0).unwrap();
+    // Model 0 fails every other batch; model 1 stays healthy.
+    let healthy = inner.pop().unwrap();
+    let flaky: Box<dyn Evaluator + Send + Sync + '_> = Box::new(FlakyEval {
+        inner: inner.pop().unwrap(),
+        calls: AtomicUsize::new(0),
+    });
+    let evals = vec![flaky, healthy];
+    let entries = reg.entries();
+    let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
+    let mut rng = Rng::new(3);
+    for id in 0..400u64 {
+        let m = (id % 2) as usize;
+        let sample = rng.usize_below(entries[m].test.len());
+        assert!(queues[m].push(Frame {
+            id,
+            sample,
+            enqueued: Instant::now(),
+        }));
+    }
+    let stop = AtomicBool::new(true);
+    let cfg = DrainConfig {
+        workers: 2,
+        batch: 16,
+        max_wait: Duration::from_millis(1),
+        slo_ms: 1e9,
+        collect_responses: true,
+    };
+    let err = batcher::drain(&queues, entries, &evals, &cfg, &stop)
+        .expect_err("the flaky model's first failure must surface after the join");
+    assert!(
+        format!("{err:#}").contains("injected batch failure"),
+        "surfaced error carries the evaluator's cause: {err:#}"
+    );
+
+    for q in &queues {
+        assert!(q.is_empty(), "drain keeps going past failed batches");
+    }
+    let flaky_st = &queues[0].stats;
+    let answered = flaky_st.answered.load(Ordering::Relaxed);
+    let errors = flaky_st.errors.load(Ordering::Relaxed);
+    assert!(errors > 0, "some batches failed");
+    assert!(answered > 0, "the worker kept draining after a failure");
+    assert_eq!(
+        answered + errors,
+        200,
+        "exactly-once: every submitted frame is answered or errored"
+    );
+    assert_eq!(
+        flaky_st.responses.lock().unwrap().len(),
+        answered,
+        "responses land only for answered frames"
+    );
+    let healthy_st = &queues[1].stats;
+    assert_eq!(healthy_st.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        healthy_st.answered.load(Ordering::Relaxed),
+        200,
+        "sibling model fully served despite the failures"
+    );
 }
 
 #[test]
