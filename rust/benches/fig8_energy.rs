@@ -1,15 +1,19 @@
 //! Figure 8 regeneration: per-inference energy of all four architectures
-//! (power × cycles × synthesis clock, §4.3), with the paper's headline
-//! ratios printed alongside.
+//! (§4.3).  Runs the pipeline with activity profiling on, so the energy
+//! column is measured — static (power × cycles × synthesis clock) plus
+//! dynamic switching energy priced from per-net toggle counts — with the
+//! paper's headline ratios printed alongside.
 
 mod harness;
 
+use printed_mlp::coordinator::{run_pipeline, PipelineConfig};
 use printed_mlp::report;
 
 fn main() {
     let Some(store) = harness::require_artifacts() else { return };
-    harness::section("Figure 8 — energy per inference");
-    let outs = harness::pipeline_outcomes(&store);
+    harness::section("Figure 8 — energy per inference (measured switching activity)");
+    let cfg = PipelineConfig { profile_activity: true, ..Default::default() };
+    let outs = run_pipeline(&store, &cfg).expect("pipeline");
     let md = report::fig8(&outs, &store.results_dir()).expect("fig8");
     println!("{md}");
 

@@ -2,16 +2,20 @@
 //! lane blocks + opcode-run kernels) and thread scaling, compiled
 //! (micro-op stream) vs interpreted (levelized `Vec<Cell>` walk) plans
 //! on seq_multicycle circuits — samples/sec, speedup vs the W=1 compiled
-//! path, thread-scaling speedup, and the one-off plan-compile cost.
+//! path, thread-scaling speedup, the one-off plan-compile cost, and the
+//! activity-profiling (per-net toggle counter) overhead.
 //!
 //! Artifact-free — the circuits come from random `QuantModel`s — so this
 //! bench always runs, unlike the `make artifacts`-gated harnesses.  The
 //! acceptance bars: >= 2x single-thread samples/s at the best W vs W=1
 //! compiled on at least one circuit (super-lanes), >= 2x throughput at
-//! 4+ threads vs 1 thread on multi-core hosts (sharding), and > 1.0x
-//! single-thread compiled vs interpreted at W=1 (plan compilation); all
-//! paths and widths are bit-identical (tests/sim_compiled.rs W-sweep,
-//! tests/sim_sharding.rs).
+//! 4+ threads vs 1 thread on multi-core hosts (sharding), > 1.0x
+//! single-thread compiled vs interpreted at W=1 (plan compilation), and
+//! <= 15% slowdown with toggle counters on (activity profiling — the
+//! counters-off path is byte-for-byte the PR 5 kernels, so off costs
+//! nothing); all paths and widths are bit-identical
+//! (tests/sim_compiled.rs W-sweep, tests/sim_sharding.rs,
+//! tests/activity_energy.rs).
 //!
 //! Machine-readable trajectory: every row also lands in
 //! `artifacts/results/BENCH_sim.json` so perf regressions are diffable
@@ -43,6 +47,7 @@ fn main() {
     let avail = pool::default_threads();
     let mut rows: Vec<Json> = Vec::new();
     let mut best_speedup = 0.0f64;
+    let mut worst_activity_overhead = f64::NEG_INFINITY;
 
     for (cname, seed, f, h, c) in shapes {
         let m = rand_model(seed, f, h, c);
@@ -125,13 +130,43 @@ fn main() {
             best_speedup = best_speedup.max(speedup);
         }
 
+        // §Activity profiling overhead: per-net toggle counters on vs
+        // off at the auto width, single thread.  Acceptance: <= 15%
+        // slowdown with counters on; off is the untouched hot path.
+        let w = printed_mlp::sim::lane_words_default();
+        let (off_ms, row) =
+            bench_one(&format!("1thr compiled W={w} act off"), "compiled", &compiled, w, 1);
+        rows.push(row);
+        let r = harness::bench(&format!("{cname} 1thr compiled W={w} act ON "), 3, || {
+            let (preds, act) = testbench::run_sequential_plan_activity(
+                &circ, &compiled, &xs, n, m.features, 1, w, None,
+            );
+            std::hint::black_box((preds.len(), act.total_toggles()));
+        });
+        let sps = n as f64 / r.mean_ms * 1e3;
+        let overhead = (r.mean_ms / off_ms - 1.0) * 100.0;
+        println!(
+            "         -> {sps:9.0} samples/s | activity overhead {overhead:+.1}% (bar: <= 15%)"
+        );
+        rows.push(obj(vec![
+            ("circuit", s(cname)),
+            ("path", s("compiled+activity")),
+            ("lane_words", num(w as f64)),
+            ("threads", num(1.0)),
+            ("mean_ms", num(r.mean_ms)),
+            ("p50_ms", num(r.p50_ms)),
+            ("p99_ms", num(r.p99_ms)),
+            ("samples_per_s", num(sps)),
+            ("activity_overhead_pct", num(overhead)),
+        ]));
+        worst_activity_overhead = worst_activity_overhead.max(overhead);
+
         // Thread scaling on the HAR-class circuit at the auto-picked
         // width (reusing this iteration's plan and stimulus) — shows
         // super-lanes and sharding stack.
         if cname != "har48x16x5" {
             continue;
         }
-        let w = printed_mlp::sim::lane_words_default();
         let mut thread_counts = vec![1usize, 2, 4];
         if !thread_counts.contains(&avail) {
             thread_counts.push(avail);
@@ -168,6 +203,10 @@ fn main() {
          (acceptance bar: >= 2x on at least one circuit)"
     );
     println!(
+        "worst activity-profiling overhead (counters on vs off, single thread): \
+         {worst_activity_overhead:+.1}% (acceptance bar: <= 15%; counters off = untouched path)"
+    );
+    println!(
         "note: PRINTED_MLP_THREADS caps the default worker count ({avail} here) and \
          PRINTED_MLP_SIM_LANES / --sim-lanes pins the width; sharded, serial, wide, \
          compiled and interpreted runs are all bit-identical \
@@ -179,6 +218,7 @@ fn main() {
             ("bench", s("sim_throughput")),
             ("samples", num(n as f64)),
             ("best_w_speedup_vs_w1", num(best_speedup)),
+            ("worst_activity_overhead_pct", num(worst_activity_overhead)),
             ("rows", Json::Arr(rows)),
         ]),
     );

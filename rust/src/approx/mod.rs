@@ -1,11 +1,21 @@
 //! Neuron-approximation framework (§3.2.3): decides which hidden neurons
 //! become single-cycle (Fig. 2c) using NSGA-II over boolean genomes.
 //!
-//! Objectives (both maximized): the number of approximated neurons — an
+//! Objectives (all maximized): the number of approximated neurons — an
 //! abstract stand-in for circuit area savings, per the paper — and the
 //! training accuracy.  The final design for an accuracy-drop budget
 //! (1%/2%/5% in Fig. 7) is the Pareto solution with the most approximated
 //! neurons whose accuracy stays within the budget.
+//!
+//! With the measured-energy objective on (`[nsga] energy_objective` /
+//! `--energy-objective`), a third objective — *negated* energy per
+//! inference from the activity-profiled simulator (`sim` §Activity +
+//! `tech::energy_report`) — rides along through the same machinery: the
+//! NSGA-II core, the genome→objectives memo, and the serial/batched
+//! bit-identical contract are all objective-count generic, so
+//! [`explore_energy`]/[`explore_parallel_energy`] differ from their
+//! 2-objective twins only in the appended objective
+//! (`tests/nsga_parallel.rs` locks the 3-tuple invariants down).
 
 use crate::data::Split;
 use crate::model::{importance, ApproxTables, QuantModel};
@@ -53,6 +63,34 @@ where
     })
 }
 
+/// Measured-energy fitness hook: maps an approximation mask to the
+/// hybrid design's energy per inference (mJ, lower is better).  The
+/// search negates it so all objectives maximize uniformly; `Sync`
+/// because [`ParallelFitness`] calls it from the worker pool.
+pub type EnergyEval<'a> = &'a (dyn Fn(&[u8]) -> f64 + Sync);
+
+/// [`explore`] with the measured-energy third objective: objective
+/// vectors become `(#approximated, accuracy, -energy_mj)` 3-tuples.
+pub fn explore_energy<F>(
+    hidden: usize,
+    cfg: &NsgaConfig,
+    mut eval: F,
+    energy: EnergyEval<'_>,
+) -> Vec<Individual>
+where
+    F: FnMut(&[u8]) -> f64,
+{
+    nsga::run(hidden, cfg, |genome| {
+        let mask: Vec<u8> = genome.iter().map(|&b| b as u8).collect();
+        let acc = eval(&mask);
+        vec![
+            genome.iter().filter(|&&b| b).count() as f64,
+            acc,
+            -energy(&mask),
+        ]
+    })
+}
+
 /// Parallel batch fitness for the approximation search (DESIGN.md §Perf):
 /// a generation's genomes fan out across worker threads via
 /// [`pool::scope_map_with`], each worker owning its own model +
@@ -71,6 +109,8 @@ pub struct ParallelFitness<'a> {
     feat_mask: &'a [u8],
     tables: &'a ApproxTables,
     threads: usize,
+    /// Optional measured-energy third objective (appended negated).
+    energy: Option<EnergyEval<'a>>,
 }
 
 impl<'a> ParallelFitness<'a> {
@@ -87,7 +127,17 @@ impl<'a> ParallelFitness<'a> {
             feat_mask,
             tables,
             threads: threads.max(1),
+            energy: None,
         }
+    }
+
+    /// Append the measured-energy objective: every objective vector this
+    /// evaluator produces becomes `(#approximated, accuracy,
+    /// -energy(mask))` — matching [`explore_energy`]'s serial tuples, so
+    /// the bit-identical serial/batched contract carries over unchanged.
+    pub fn with_energy(mut self, energy: EnergyEval<'a>) -> Self {
+        self.energy = Some(energy);
+        self
     }
 }
 
@@ -95,6 +145,7 @@ impl FitnessEval for ParallelFitness<'_> {
     fn eval_batch(&mut self, genomes: &[Vec<bool>]) -> Vec<Vec<f64>> {
         let (model, split) = (self.model, self.split);
         let (feat_mask, tables) = (self.feat_mask, self.tables);
+        let energy = self.energy;
         pool::scope_map_with(
             genomes.len(),
             self.threads,
@@ -103,7 +154,11 @@ impl FitnessEval for ParallelFitness<'_> {
                 let (m, t) = state;
                 let mask: Vec<u8> = genomes[i].iter().map(|&b| b as u8).collect();
                 let acc = m.accuracy(&split.xs, &split.ys, feat_mask, &mask, t);
-                vec![genomes[i].iter().filter(|&&b| b).count() as f64, acc]
+                let mut obj = vec![genomes[i].iter().filter(|&&b| b).count() as f64, acc];
+                if let Some(e) = energy {
+                    obj.push(-e(&mask));
+                }
+                obj
             },
         )
     }
@@ -122,6 +177,24 @@ pub fn explore_parallel(
     threads: usize,
 ) -> (Vec<Individual>, SearchStats) {
     let mut fitness = ParallelFitness::new(model, split, feat_mask, tables, threads);
+    nsga::run_batched(model.hidden, cfg, &mut fitness)
+}
+
+/// [`explore_parallel`] with the measured-energy third objective (see
+/// [`explore_energy`]).  The genome→objectives memo stores whatever
+/// length the evaluator returns, so 3-tuples hit the cache exactly as
+/// 2-tuples do.
+pub fn explore_parallel_energy(
+    model: &QuantModel,
+    split: &Split,
+    feat_mask: &[u8],
+    tables: &ApproxTables,
+    cfg: &NsgaConfig,
+    threads: usize,
+    energy: EnergyEval<'_>,
+) -> (Vec<Individual>, SearchStats) {
+    let mut fitness =
+        ParallelFitness::new(model, split, feat_mask, tables, threads).with_energy(energy);
     nsga::run_batched(model.hidden, cfg, &mut fitness)
 }
 
@@ -243,6 +316,63 @@ mod tests {
         });
         for threads in [1usize, 3] {
             let (par, stats) = explore_parallel(&m, &split, &fm, &tables, &cfg, threads);
+            assert_eq!(serial.len(), par.len(), "front size ({threads} threads)");
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.genome, b.genome);
+                assert_eq!(a.objectives, b.objectives);
+            }
+            assert_eq!(stats.evals + stats.cache_hits, stats.requested);
+        }
+    }
+
+    #[test]
+    fn energy_objective_appends_negated_tuples() {
+        // Serial 3-objective exploration: every front member carries
+        // (count, accuracy, -energy) with the energy closure's value.
+        let cfg = NsgaConfig {
+            pop_size: 10,
+            generations: 4,
+            ..Default::default()
+        };
+        let energy = |mask: &[u8]| 5.0 - mask.iter().filter(|&&m| m == 1).count() as f64;
+        let front = explore_energy(4, &cfg, |_| 1.0, &energy);
+        assert!(!front.is_empty());
+        for ind in &front {
+            assert_eq!(ind.objectives.len(), 3);
+            let mask: Vec<u8> = ind.genome.iter().map(|&b| b as u8).collect();
+            assert_eq!(ind.objectives[2], -energy(&mask));
+        }
+    }
+
+    #[test]
+    fn parallel_energy_matches_serial_energy() {
+        let m = rand_model(17, 10, 5, 3);
+        let mut r = Rng::new(5);
+        let n = 48;
+        let xs: Vec<u8> = (0..n * 10).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(3) as u16).collect();
+        let split = Split {
+            xs,
+            ys,
+            features: 10,
+        };
+        let fm = vec![1u8; 10];
+        let tables = build_tables(&m, &split.xs, n, &fm);
+        let cfg = NsgaConfig {
+            pop_size: 10,
+            generations: 6,
+            ..Default::default()
+        };
+        let energy = |mask: &[u8]| 3.0 + mask.iter().map(|&m| (1 - m) as f64).sum::<f64>();
+        let serial = explore_energy(
+            m.hidden,
+            &cfg,
+            |mask| m.accuracy(&split.xs, &split.ys, &fm, mask, &tables),
+            &energy,
+        );
+        for threads in [1usize, 3] {
+            let (par, stats) =
+                explore_parallel_energy(&m, &split, &fm, &tables, &cfg, threads, &energy);
             assert_eq!(serial.len(), par.len(), "front size ({threads} threads)");
             for (a, b) in serial.iter().zip(&par) {
                 assert_eq!(a.genome, b.genome);

@@ -5,11 +5,14 @@
 //! printed-mlp pipeline  [--datasets a,b] [--threads N] [--backend B]
 //!                       [--search-threads N] [--no-nsga-cache]
 //!                       [--native] [--no-cache] [--fit-subset N]
-//!                       [--no-compile-sim] [--sim-lanes W] [--config FILE]
+//!                       [--no-compile-sim] [--sim-lanes W]
+//!                       [--profile-activity] [--energy-objective]
+//!                       [--config FILE]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
 //! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
 //!                       [--no-compile-sim] [--sim-lanes W]
+//!                       [--profile-activity] [--synthetic]
 //! printed-mlp serve     [--datasets a,b,..] [--scenario S] [--rate HZ] [--secs S]
 //!                       [--workers N] [--queue-cap N] [--batch N] [--backend B]
 //!                       [--sim-lanes W] [--synthetic] [--trace FILE]
@@ -82,11 +85,13 @@ USAGE:
                         [--search-threads N] [--no-nsga-cache]
                         [--no-cache] [--fit-subset N] [--pop N] [--gens N]
                         [--no-compile-sim] [--sim-lanes 0|1|2|4|8]
+                        [--profile-activity] [--energy-objective]
                         [--config FILE] [--fast]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
                         [--threads N] [--no-compile-sim] [--sim-lanes W]
+                        [--profile-activity] [--synthetic]
   printed-mlp serve     [--datasets a,b,..]
                         [--scenario steady|bursty|ramp|fanin|trace]
                         [--rate HZ] [--secs S] [--sensors N] [--workers N]
@@ -125,6 +130,15 @@ simulator, which is bit-identical but slower.  --sim-lanes W (sim.lanes
 config key, PRINTED_MLP_SIM_LANES env) sets the super-lane width: each
 simulator pass packs W x 64 samples (W in {1,2,4,8}; 0 = auto-pick from
 the detected SIMD width) — every width is bit-identical per lane.
+--profile-activity (sim.profile_activity config key,
+PRINTED_MLP_PROFILE_ACTIVITY env) turns on per-net toggle counters in the
+gate simulator: reports then price dynamic switching energy from measured
+activity instead of the static-only estimate.  Counts are bit-identical
+across every --sim-lanes width and thread count.  --energy-objective
+(nsga.energy_objective config key) feeds that measured energy-per-inference
+to the NSGA-II search as a third objective alongside feature count and
+accuracy.  simulate --synthetic runs a deterministic self-labeled model
+with no artifacts (the CI smoke path).
 Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
 
 /// CLI entrypoint.
@@ -183,6 +197,12 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
     }
     if let Some(v) = flags.get("sim-lanes") {
         conf.set("sim.lanes", v);
+    }
+    if flags.has("profile-activity") {
+        conf.set("sim.profile_activity", "true");
+    }
+    if flags.has("energy-objective") {
+        conf.set("nsga.energy_objective", "true");
     }
     if let Some(v) = flags.get("fit-subset") {
         conf.set("pipeline.fit_subset", v);
@@ -311,9 +331,96 @@ fn cmd_verilog(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Gate-simulate a sequential circuit, optionally with toggle counters
+/// feeding a measured [`crate::tech::EnergyReport`].
+fn simulate_seq(
+    circ: &crate::circuits::SeqCircuit,
+    split: &crate::data::Split,
+    features: usize,
+    threads: usize,
+    clock_ms: f64,
+    profile: bool,
+) -> (Vec<u16>, Option<crate::tech::EnergyReport>) {
+    if profile {
+        let plan = circ.sim_plan();
+        let (preds, act) = crate::sim::testbench::run_sequential_plan_activity(
+            circ,
+            &plan,
+            &split.xs,
+            split.len(),
+            features,
+            threads,
+            0,
+            None,
+        );
+        let rep = crate::tech::report(&circ.netlist);
+        let gates = plan.gate_activity(&act);
+        let er = crate::tech::energy_report(
+            &rep,
+            &gates,
+            circ.cycles + 1,
+            clock_ms,
+            split.len() as u64,
+        );
+        (preds, Some(er))
+    } else {
+        let preds = crate::sim::testbench::run_sequential_threads(
+            circ,
+            &split.xs,
+            split.len(),
+            features,
+            threads,
+        );
+        (preds, None)
+    }
+}
+
+/// Combinational twin of [`simulate_seq`].
+fn simulate_comb(
+    circ: &crate::circuits::CombCircuit,
+    split: &crate::data::Split,
+    features: usize,
+    threads: usize,
+    clock_ms: f64,
+    profile: bool,
+) -> (Vec<u16>, Option<crate::tech::EnergyReport>) {
+    if profile {
+        let plan = circ.sim_plan();
+        let (preds, act) = crate::sim::testbench::run_combinational_plan_activity(
+            circ,
+            &plan,
+            &split.xs,
+            split.len(),
+            features,
+            threads,
+            0,
+            None,
+        );
+        let rep = crate::tech::report(&circ.netlist);
+        let gates = plan.gate_activity(&act);
+        let er = crate::tech::energy_report(&rep, &gates, 1, clock_ms, split.len() as u64);
+        (preds, Some(er))
+    } else {
+        let preds = crate::sim::testbench::run_combinational_threads(
+            circ,
+            &split.xs,
+            split.len(),
+            features,
+            threads,
+        );
+        (preds, None)
+    }
+}
+
 fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
-    let name = flags.get("dataset").ok_or_else(|| anyhow!("--dataset required"))?;
+    let synthetic = flags.has("synthetic");
+    let name = match flags.get("dataset") {
+        Some(n) => n.to_string(),
+        None if synthetic => "synthetic".to_string(),
+        None => bail!("--dataset required (or --synthetic for an artifact-free smoke)"),
+    };
     let arch = flags.get("arch").unwrap_or("ours");
+    let profile = flags.has("profile-activity");
     if flags.has("no-compile-sim") {
         crate::sim::set_compile_default(false);
     }
@@ -332,41 +439,31 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
         Some(v) => v.parse::<usize>()?.max(1),
         None => crate::util::pool::default_threads(),
     };
-    let model = store.model(name)?;
-    let ds = store.dataset(name)?;
-    let split = ds.test.head(samples);
+    let (model, split) = if synthetic {
+        // Deterministic self-labeled model: an exact gate-level run scores
+        // accuracy 1.000, so the CI smoke doubles as a correctness check.
+        let model = crate::model::synth::rand_model(7, 8, 6, 3);
+        let split = crate::model::synth::rand_split(&model, 0x5EED, samples);
+        (model, split)
+    } else {
+        let model = store.model(&name)?;
+        let ds = store.dataset(&name)?;
+        (model, ds.test.head(samples))
+    };
     let active: Vec<usize> = (0..model.features).collect();
     let t0 = std::time::Instant::now();
-    let preds = match arch {
+    let (preds, measured) = match arch {
         "comb" | "combinational" => {
             let c = crate::circuits::combinational::generate(&model, &active);
-            crate::sim::testbench::run_combinational_threads(
-                &c,
-                &split.xs,
-                split.len(),
-                model.features,
-                threads,
-            )
+            simulate_comb(&c, &split, model.features, threads, model.comb_clock_ms, profile)
         }
         "sota" => {
             let c = crate::circuits::seq_sota::generate(&model, &active);
-            crate::sim::testbench::run_sequential_threads(
-                &c,
-                &split.xs,
-                split.len(),
-                model.features,
-                threads,
-            )
+            simulate_seq(&c, &split, model.features, threads, model.seq_clock_ms, profile)
         }
         _ => {
             let c = crate::circuits::seq_multicycle::generate(&model, &active);
-            crate::sim::testbench::run_sequential_threads(
-                &c,
-                &split.xs,
-                split.len(),
-                model.features,
-                threads,
-            )
+            simulate_seq(&c, &split, model.features, threads, model.seq_clock_ms, profile)
         }
     };
     let acc = crate::sim::testbench::accuracy(&preds, &split.ys);
@@ -377,6 +474,21 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
         model.test_acc,
         t0.elapsed().as_secs_f64()
     );
+    if let Some(er) = &measured {
+        println!(
+            "  energy/inference: {:.4} mJ static + {:.4} mJ dynamic = {:.4} mJ ({} toggles over {} samples)",
+            er.static_mj,
+            er.dynamic_mj,
+            er.total_mj(),
+            er.toggles,
+            er.samples
+        );
+        let mut kinds: Vec<_> = er.per_kind.iter().collect();
+        kinds.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+        for (kind, mj) in kinds.iter().take(4) {
+            println!("    {kind:<6} {mj:.4} mJ dynamic");
+        }
+    }
     Ok(())
 }
 
@@ -582,6 +694,48 @@ mod tests {
         assert!(!pipeline_config(&f).unwrap().sim_compile);
         // Default stays on.
         assert!(pipeline_config(&Flags::parse(&[]).unwrap()).unwrap().sim_compile);
+    }
+
+    #[test]
+    fn activity_and_energy_objective_flags() {
+        let args: Vec<String> = ["--profile-activity", "--energy-objective"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = pipeline_config(&f).unwrap();
+        assert!(cfg.profile_activity);
+        assert!(cfg.energy_objective);
+        // Both default off: zero overhead unless asked for.
+        let cfg = pipeline_config(&Flags::parse(&[]).unwrap()).unwrap();
+        assert!(!cfg.profile_activity);
+        assert!(!cfg.energy_objective);
+    }
+
+    #[test]
+    fn simulate_synthetic_smoke_is_artifact_free() {
+        // The CI smoke path: no artifacts, deterministic model, measured
+        // energy printed.  Must succeed without `make artifacts`.
+        let args: Vec<String> = [
+            "simulate",
+            "--synthetic",
+            "--arch",
+            "comb",
+            "--samples",
+            "16",
+            "--threads",
+            "1",
+            "--profile-activity",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(args).unwrap();
+    }
+
+    #[test]
+    fn simulate_requires_dataset_unless_synthetic() {
+        assert!(run(vec!["simulate".into()]).is_err());
     }
 
     #[test]

@@ -18,11 +18,13 @@
 //! pop_size = 40
 //! generations = 30
 //! memoize = true          # genome→objectives cache (perf only)
+//! energy_objective = false # 3rd objective: measured energy/inference
 //!
 //! [sim]
 //! compile = true          # micro-op-compiled gate-level sim (perf only)
 //! lanes = 0               # super-lane width in u64 words: 0 = auto
 //!                         # (detected SIMD width), else 1|2|4|8
+//! profile_activity = false # per-net toggle counters + measured energy
 //!
 //! [serve]
 //! datasets = spectf, arrhythmia, gas
@@ -207,11 +209,17 @@ impl Config {
             nsga.memoize = b;
         }
         cfg.nsga = nsga;
+        if let Some(b) = self.get_bool("nsga.energy_objective")? {
+            cfg.energy_objective = b;
+        }
         if let Some(b) = self.get_bool("sim.compile")? {
             cfg.sim_compile = b;
         }
         if let Some(w) = self.sim_lanes()? {
             cfg.sim_lanes = w;
+        }
+        if let Some(b) = self.get_bool("sim.profile_activity")? {
+            cfg.profile_activity = b;
         }
         Ok(cfg)
     }
@@ -377,6 +385,20 @@ mod tests {
         assert!(!c.pipeline().unwrap().sim_compile);
         // Default: compiled plans on.
         assert!(Config::default().pipeline().unwrap().sim_compile);
+    }
+
+    #[test]
+    fn activity_and_energy_objective_keys() {
+        let c = Config::parse("[sim]\nprofile_activity = true\n").unwrap();
+        assert!(c.pipeline().unwrap().profile_activity);
+        let c = Config::parse("[nsga]\nenergy_objective = yes\n").unwrap();
+        assert!(c.pipeline().unwrap().energy_objective);
+        // Defaults: both off — the clean path pays nothing.
+        let d = Config::default().pipeline().unwrap();
+        assert!(!d.profile_activity && !d.energy_objective);
+        // Garbage rejected.
+        let c = Config::parse("[sim]\nprofile_activity = maybe\n").unwrap();
+        assert!(c.pipeline().is_err());
     }
 
     #[test]

@@ -61,6 +61,17 @@ pub struct PipelineConfig {
     /// `--sim-lanes`; 0 = auto-pick from the detected SIMD width) —
     /// every simulation the pipeline runs packs `W·64` samples per pass.
     pub sim_lanes: usize,
+    /// Profile per-net switching activity during gate-level validation
+    /// (`sim.profile_activity` / `--profile-activity`): every
+    /// [`DesignReport`] gains a measured static+dynamic
+    /// [`tech::EnergyReport`] that `report`/`fig8_energy` use in place
+    /// of the static estimate.
+    pub profile_activity: bool,
+    /// Feed measured energy per inference in as a third NSGA objective
+    /// (`nsga.energy_objective` / `--energy-objective`): each candidate
+    /// mask's hybrid circuit is generated and activity-profiled on a
+    /// small deterministic slice of the fitness split (see `approx`).
+    pub energy_objective: bool,
     /// Reuse cached per-dataset outcomes from disk when present.
     pub cache: bool,
 }
@@ -79,6 +90,8 @@ impl Default for PipelineConfig {
             gate_level_accuracy: true,
             sim_compile: true,
             sim_lanes: 0,
+            profile_activity: false,
+            energy_objective: false,
             cache: true,
         }
     }
@@ -91,8 +104,22 @@ pub struct DesignReport {
     pub report: CircuitReport,
     pub cycles: usize,
     pub clock_ms: f64,
+    /// Static worst-case energy estimate per inference
+    /// ([`CircuitReport::energy_mj`]) — always present.
     pub energy_mj: f64,
+    /// Measured static+dynamic energy from activity profiling
+    /// (`PipelineConfig::profile_activity`); `None` with profiling off.
+    pub measured: Option<tech::EnergyReport>,
     pub test_acc: f64,
+}
+
+impl DesignReport {
+    /// The best energy number available: the measured total when
+    /// activity profiling ran, else the static estimate — what `report`
+    /// and `fig8_energy` print.
+    pub fn best_energy_mj(&self) -> f64 {
+        self.measured.as_ref().map_or(self.energy_mj, |m| m.total_mj())
+    }
 }
 
 /// Everything the harnesses need for one dataset.
@@ -194,16 +221,61 @@ pub fn run_dataset(
     } else {
         sim_threads
     };
-    let front = if backend == Backend::Native {
-        let (front, _stats) = approx::explore_parallel(
-            &model,
-            &fit_split,
-            &rfp.feat_mask,
-            &tables,
-            &cfg.nsga,
-            search_threads,
+    // Measured-energy objective: each candidate mask's hybrid circuit is
+    // generated and activity-profiled on a small deterministic slice of
+    // the fitness split (single sim thread — the closure already runs
+    // inside a search worker), priced by `tech::energy_report`.  The
+    // NSGA memo dedups repeat genomes, so each unique mask pays the
+    // circuit generation + profiled passes once.
+    let energy_n = fit_split.len().min(64);
+    let energy_eval = |mask: &[u8]| -> f64 {
+        let ab: Vec<bool> = mask.iter().map(|&m| m == 1).collect();
+        let circ = hybrid::generate(&model, &rfp.active, &ab, &tables);
+        let plan = circ.sim_plan();
+        let (_, act) = testbench::run_sequential_plan_activity(
+            &circ,
+            &plan,
+            &fit_split.xs,
+            energy_n,
+            model.features,
+            1,
+            cfg.sim_lanes,
+            None,
         );
+        let rep = tech::report(&circ.netlist);
+        let gates = plan.gate_activity(&act);
+        tech::energy_report(&rep, &gates, circ.cycles + 1, model.seq_clock_ms, energy_n as u64)
+            .total_mj()
+    };
+    let front = if backend == Backend::Native {
+        let (front, _stats) = if cfg.energy_objective {
+            approx::explore_parallel_energy(
+                &model,
+                &fit_split,
+                &rfp.feat_mask,
+                &tables,
+                &cfg.nsga,
+                search_threads,
+                &energy_eval,
+            )
+        } else {
+            approx::explore_parallel(
+                &model,
+                &fit_split,
+                &rfp.feat_mask,
+                &tables,
+                &cfg.nsga,
+                search_threads,
+            )
+        };
         front
+    } else if cfg.energy_objective {
+        approx::explore_energy(
+            h,
+            &cfg.nsga,
+            |mask| fit_acc(&rfp.feat_mask, mask, &tables),
+            &energy_eval,
+        )
     } else {
         approx::explore(h, &cfg.nsga, |mask| fit_acc(&rfp.feat_mask, mask, &tables))
     };
@@ -224,7 +296,39 @@ pub fn run_dataset(
                          tb: &ApproxTables|
      -> DesignReport {
         let rep = tech::report(&circ.netlist);
-        let acc = if cfg.gate_level_accuracy {
+        let mut measured = None;
+        let acc = if cfg.profile_activity {
+            // One activity-profiled pass over the test split yields both
+            // the predictions and the measured energy breakdown; with
+            // gate-level accuracy off the predictions are discarded and
+            // the evaluator scores accuracy as before.
+            let plan = circ.sim_plan();
+            let (preds, act) = testbench::run_sequential_plan_activity(
+                circ,
+                &plan,
+                &test.xs,
+                test.len(),
+                model.features,
+                sim_threads,
+                cfg.sim_lanes,
+                None,
+            );
+            let gates = plan.gate_activity(&act);
+            measured = Some(tech::energy_report(
+                &rep,
+                &gates,
+                circ.cycles + 1,
+                model.seq_clock_ms,
+                test.len() as u64,
+            ));
+            if cfg.gate_level_accuracy {
+                testbench::accuracy(&preds, &test.ys)
+            } else {
+                eval.as_dyn()
+                    .accuracy(test, &rfp.feat_mask, am, tb)
+                    .expect("evaluation failed mid-pipeline")
+            }
+        } else if cfg.gate_level_accuracy {
             let preds = testbench::run_sequential_threads(
                 circ,
                 &test.xs,
@@ -243,6 +347,7 @@ pub fn run_dataset(
             cycles: circ.cycles + 1, // + reset cycle
             clock_ms: model.seq_clock_ms,
             energy_mj: rep.energy_mj(circ.cycles + 1, model.seq_clock_ms),
+            measured,
             test_acc: acc,
             report: rep,
         }
@@ -257,7 +362,35 @@ pub fn run_dataset(
     let comb_c = combinational::generate(&model, active);
     let comb = {
         let rep = tech::report(&comb_c.netlist);
-        let acc = if cfg.gate_level_accuracy {
+        let mut measured = None;
+        let acc = if cfg.profile_activity {
+            let plan = comb_c.sim_plan();
+            let (preds, act) = testbench::run_combinational_plan_activity(
+                &comb_c,
+                &plan,
+                &test.xs,
+                test.len(),
+                model.features,
+                sim_threads,
+                cfg.sim_lanes,
+                None,
+            );
+            let gates = plan.gate_activity(&act);
+            measured = Some(tech::energy_report(
+                &rep,
+                &gates,
+                1,
+                model.comb_clock_ms,
+                test.len() as u64,
+            ));
+            if cfg.gate_level_accuracy {
+                testbench::accuracy(&preds, &test.ys)
+            } else {
+                eval.as_dyn()
+                    .accuracy(test, &rfp.feat_mask, &no_approx, &no_tables)
+                    .expect("evaluation failed mid-pipeline")
+            }
+        } else if cfg.gate_level_accuracy {
             let preds = testbench::run_combinational_threads(
                 &comb_c,
                 &test.xs,
@@ -276,6 +409,7 @@ pub fn run_dataset(
             cycles: 1,
             clock_ms: model.comb_clock_ms,
             energy_mj: rep.energy_mj(1, model.comb_clock_ms),
+            measured,
             test_acc: acc,
             report: rep,
         }
@@ -313,6 +447,7 @@ pub fn run_pipeline(store: &ArtifactStore, cfg: &PipelineConfig) -> Result<Vec<D
     // fan-out.
     crate::sim::set_compile_default(cfg.sim_compile);
     crate::sim::set_lane_words_default(cfg.sim_lanes);
+    crate::sim::set_profile_activity_default(cfg.profile_activity);
     let results = scope_map(cfg.datasets.len(), cfg.threads, |i| {
         let name = &cfg.datasets[i];
         if cfg.cache {
@@ -336,8 +471,13 @@ pub fn run_pipeline(store: &ArtifactStore, cfg: &PipelineConfig) -> Result<Vec<D
 
 fn cache_key(cfg: &PipelineConfig) -> String {
     format!(
-        "v3-fit{}-pop{}-gen{}-{:?}",
-        cfg.fit_subset, cfg.nsga.pop_size, cfg.nsga.generations, cfg.rfp_strategy
+        "v4-fit{}-pop{}-gen{}-{:?}-act{}-eobj{}",
+        cfg.fit_subset,
+        cfg.nsga.pop_size,
+        cfg.nsga.generations,
+        cfg.rfp_strategy,
+        cfg.profile_activity as u8,
+        cfg.energy_objective as u8
     )
 }
 
@@ -346,7 +486,7 @@ fn cache_path(store: &ArtifactStore, name: &str) -> PathBuf {
 }
 
 fn design_to_json(d: &DesignReport) -> Json {
-    json::obj(vec![
+    let mut fields = vec![
         ("arch", json::s(d.arch)),
         ("cells", json::num(d.report.n_cells as f64)),
         ("dffs", json::num(d.report.n_dffs as f64)),
@@ -358,10 +498,36 @@ fn design_to_json(d: &DesignReport) -> Json {
         ("clock_ms", json::num(d.clock_ms)),
         ("energy_mj", json::num(d.energy_mj)),
         ("test_acc", json::num(d.test_acc)),
-    ])
+    ];
+    if let Some(m) = &d.measured {
+        // Scalars only: attribution detail (per kind/level) is cheap to
+        // recompute and not worth a lossless schema in the stage cache.
+        fields.push((
+            "measured",
+            json::obj(vec![
+                ("samples", json::num(m.samples as f64)),
+                ("static_mj", json::num(m.static_mj)),
+                ("dynamic_mj", json::num(m.dynamic_mj)),
+                ("toggles", json::num(m.toggles as f64)),
+            ]),
+        ));
+    }
+    json::obj(fields)
 }
 
 fn design_from_json(j: &Json, arch: &'static str) -> Result<DesignReport> {
+    let measured = match j.get("measured") {
+        Ok(m) => Some(tech::EnergyReport {
+            name: arch.to_string(),
+            samples: m.get("samples")?.int()? as u64,
+            static_mj: m.get("static_mj")?.num()?,
+            dynamic_mj: m.get("dynamic_mj")?.num()?,
+            per_kind: Default::default(),
+            per_level: Vec::new(),
+            toggles: m.get("toggles")?.int()? as u64,
+        }),
+        Err(_) => None,
+    };
     Ok(DesignReport {
         arch,
         report: CircuitReport {
@@ -377,6 +543,7 @@ fn design_from_json(j: &Json, arch: &'static str) -> Result<DesignReport> {
         cycles: j.get("cycles")?.int()? as usize,
         clock_ms: j.get("clock_ms")?.num()?,
         energy_mj: j.get("energy_mj")?.num()?,
+        measured,
         test_acc: j.get("test_acc")?.num()?,
     })
 }
@@ -522,6 +689,10 @@ mod tests {
         assert_eq!(c.datasets.len(), 7);
         assert!(c.threads >= 1);
         assert_eq!(c.drops, vec![0.01, 0.02, 0.05]);
+        // Activity profiling and the energy objective are opt-in: the
+        // clean pipeline must not pay for counters it didn't ask for.
+        assert!(!c.profile_activity);
+        assert!(!c.energy_objective);
     }
 
     #[test]
@@ -546,6 +717,15 @@ mod tests {
             cycles: 50,
             clock_ms: 100.0,
             energy_mj: 3.5,
+            measured: Some(tech::EnergyReport {
+                name: "x".into(),
+                samples: 128,
+                static_mj: 3.5,
+                dynamic_mj: 0.25,
+                per_kind: Default::default(),
+                per_level: Vec::new(),
+                toggles: 4096,
+            }),
             test_acc: 0.9,
         };
         let out = DatasetOutcome {
@@ -580,6 +760,11 @@ mod tests {
         assert_eq!(back.rfp.active, vec![2, 0]);
         assert_eq!(back.selections[0].1.approx_mask, vec![1, 0]);
         assert_eq!(back.ours.cycles, 50);
+        let m = back.ours.measured.as_ref().expect("measured energy survives the cache");
+        assert_eq!(m.samples, 128);
+        assert_eq!(m.toggles, 4096);
+        assert!((m.dynamic_mj - 0.25).abs() < 1e-12);
+        assert!((back.ours.best_energy_mj() - 3.75).abs() < 1e-12);
         // Different key invalidates.
         let mut cfg2 = cfg.clone();
         cfg2.fit_subset = 99;

@@ -22,6 +22,15 @@
 //! fitness evaluation is pure per genome.  The two therefore consume
 //! identical RNG streams and return bit-identical final fronts at equal
 //! seeds — enforced differentially by `tests/nsga_parallel.rs`.
+//!
+//! Everything here is **objective-count generic**: domination, sorting,
+//! crowding, and the memo table all key on `objectives.len()`, so the
+//! 2-objective approximation search and the 3-objective
+//! (count, accuracy, −energy) search
+//! ([`crate::approx::explore_parallel_energy`]) run through identical
+//! code — the memo simply stores 3-tuples — and the bit-identical and
+//! rank/crowding invariants above hold for both
+//! (`tests/nsga_parallel.rs` exercises the 3-tuple case explicitly).
 
 use std::collections::HashMap;
 

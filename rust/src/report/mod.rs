@@ -190,10 +190,18 @@ pub fn fig7(outs: &[DatasetOutcome], results_dir: &Path) -> Result<String> {
     Ok(md)
 }
 
-/// Fig. 8: per-inference energy of all four architectures.
+/// Fig. 8: per-inference energy of all four architectures.  Uses
+/// [`crate::coordinator::DesignReport::best_energy_mj`]: the measured
+/// static+dynamic energy when the pipeline ran with activity profiling
+/// (`--profile-activity`), the static estimate otherwise.
 pub fn fig8(outs: &[DatasetOutcome], results_dir: &Path) -> Result<String> {
     let mut md = String::new();
-    let _ = writeln!(md, "\n## Figure 8 — Energy per inference (mJ)\n");
+    let measured = outs.iter().any(|o| o.ours.measured.is_some());
+    let _ = writeln!(
+        md,
+        "\n## Figure 8 — Energy per inference (mJ, {})\n",
+        if measured { "measured switching activity" } else { "static estimate" }
+    );
     let _ = writeln!(md, "| Dataset | comb [14] | seq [16] | multi-cycle | hybrid@5% |");
     let _ = writeln!(md, "|---|---|---|---|---|");
     let mut rows = Vec::new();
@@ -205,19 +213,18 @@ pub fn fig8(outs: &[DatasetOutcome], results_dir: &Path) -> Result<String> {
             .map(|(_, h)| h)
             .last()
             .unwrap_or(&o.ours);
-        let _ = writeln!(
-            md,
-            "| {} | {:.2} | {:.2} | {:.2} | {:.2} |",
-            o.name, o.comb.energy_mj, o.sota.energy_mj, o.ours.energy_mj, hybrid.energy_mj
+        let (ec, es, eo, eh) = (
+            o.comb.best_energy_mj(),
+            o.sota.best_energy_mj(),
+            o.ours.best_energy_mj(),
+            hybrid.best_energy_mj(),
         );
-        rows.push(format!(
-            "{},{:.4},{:.4},{:.4},{:.4}",
-            o.name, o.comb.energy_mj, o.sota.energy_mj, o.ours.energy_mj, hybrid.energy_mj
-        ));
-        e16_14.push(o.sota.energy_mj / o.comb.energy_mj);
-        eo_14.push(o.ours.energy_mj / o.comb.energy_mj);
-        eh_14.push(hybrid.energy_mj / o.comb.energy_mj);
-        e16_h.push(o.sota.energy_mj / hybrid.energy_mj);
+        let _ = writeln!(md, "| {} | {ec:.2} | {es:.2} | {eo:.2} | {eh:.2} |", o.name);
+        rows.push(format!("{},{ec:.4},{es:.4},{eo:.4},{eh:.4}", o.name));
+        e16_14.push(es / ec);
+        eo_14.push(eo / ec);
+        eh_14.push(eh / ec);
+        e16_h.push(es / eh);
     }
     let _ = writeln!(md, "\n| Energy ratio (geomean) | paper | measured |");
     let _ = writeln!(md, "|---|---|---|");
@@ -225,6 +232,20 @@ pub fn fig8(outs: &[DatasetOutcome], results_dir: &Path) -> Result<String> {
     let _ = writeln!(md, "| multi-cycle / comb [14] | 20× | {:.1}× |", geomean(&eo_14));
     let _ = writeln!(md, "| hybrid / comb [14] | 11.5× | {:.1}× |", geomean(&eh_14));
     let _ = writeln!(md, "| seq [16] / hybrid | 31.6× | {:.1}× |", geomean(&e16_h));
+    if measured {
+        let _ = writeln!(md, "\n| Dataset | multi-cycle static mJ | dynamic mJ | toggles/sample |");
+        let _ = writeln!(md, "|---|---|---|---|");
+        for o in outs {
+            if let Some(m) = &o.ours.measured {
+                let tps = m.toggles as f64 / m.samples.max(1) as f64;
+                let _ = writeln!(
+                    md,
+                    "| {} | {:.2} | {:.2} | {:.0} |",
+                    o.name, m.static_mj, m.dynamic_mj, tps
+                );
+            }
+        }
+    }
     write_csv(
         results_dir,
         "fig8.csv",

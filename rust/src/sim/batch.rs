@@ -24,7 +24,7 @@
 use std::sync::Arc;
 
 use crate::sim::fault::FaultList;
-use crate::sim::{Sim, SimPlan};
+use crate::sim::{Activity, Sim, SimPlan};
 use crate::util::pool::scope_map_with;
 
 /// Samples per block at a given super-lane width (`W·64`).
@@ -124,6 +124,64 @@ where
     shards.into_iter().flatten().collect()
 }
 
+/// [`run_sharded_wide_faulted`] with per-net toggle counting turned on:
+/// every worker simulator profiles activity, each block announces its
+/// lane count via [`Sim::activity_begin_block`] (masking zero-padded
+/// partial tail lanes and canonicalizing reused worker state), and the
+/// per-block [`Activity`] snapshots are summed after the join — so the
+/// total counts are bit-identical across super-lane widths, thread
+/// counts, and block→worker schedules (see `sim` §Activity).
+pub fn run_sharded_wide_activity<T, F>(
+    plan: &Arc<SimPlan>,
+    n: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+    drive: F,
+) -> (Vec<T>, Activity)
+where
+    T: Send,
+    F: Fn(&mut Sim, usize, usize) -> Vec<T> + Sync,
+{
+    if n == 0 {
+        return (Vec::new(), Activity::default());
+    }
+    let w = if lane_words == 0 {
+        crate::sim::lane_words_default()
+    } else {
+        lane_words
+    };
+    let bl = block_lanes(w);
+    let blocks = n.div_ceil(bl);
+    let shards = scope_map_with(
+        blocks,
+        threads.clamp(1, blocks),
+        || {
+            let mut sim = Sim::from_plan_wide(plan.clone(), w);
+            if let Some(fl) = faults {
+                sim.set_faults(fl);
+            }
+            sim.set_activity(true);
+            sim
+        },
+        |sim, b| {
+            let base = b * bl;
+            let lanes = (n - base).min(bl);
+            sim.fault_begin_block(base);
+            sim.activity_begin_block(lanes);
+            let out = drive(sim, base, lanes);
+            (out, sim.take_activity())
+        },
+    );
+    let mut activity = Activity::default();
+    let mut outs = Vec::with_capacity(n);
+    for (out, act) in shards {
+        outs.extend(out);
+        activity.merge(&act);
+    }
+    (outs, activity)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +250,53 @@ mod tests {
         let auto = run_sharded(&plan, 100, 2, drive);
         let w1 = run_sharded_wide(&plan, 100, 2, 1, drive);
         assert_eq!(auto, w1);
+    }
+
+    #[test]
+    fn activity_counts_invariant_across_widths_threads_and_blocks() {
+        // Toggle totals must not depend on how samples are split into
+        // blocks, which worker ran a block, or the super-lane width —
+        // including a partial final block.
+        let mut net = Netlist::new("t");
+        let a = net.add_input("a", 1)[0];
+        let b = net.add_input("b", 1)[0];
+        let y = net.xor2(a, b);
+        net.add_output("y", vec![y]);
+        let plan = Arc::new(SimPlan::new(&net));
+
+        let data: Vec<(u8, u8)> =
+            (0..300u32).map(|i| ((i % 3 % 2) as u8, ((i / 2) % 2) as u8)).collect();
+        let drive = |sim: &mut Sim, base: usize, lanes: usize| -> Vec<u8> {
+            let va: Vec<i64> = (0..lanes).map(|l| data[base + l].0 as i64).collect();
+            let vb: Vec<i64> = (0..lanes).map(|l| data[base + l].1 as i64).collect();
+            sim.set_word_lanes(&[a], &va);
+            sim.set_word_lanes(&[b], &vb);
+            sim.eval();
+            (0..lanes).map(|lane| sim.get_word_lane(&[y], lane) as u8).collect()
+        };
+
+        for n in [1usize, 65, 300] {
+            let mut reference: Option<u64> = None;
+            for w in crate::sim::LANE_WORD_CHOICES {
+                for threads in [1usize, 4] {
+                    let (out, act) =
+                        run_sharded_wide_activity(&plan, n, threads, w, None, drive);
+                    assert_eq!(out.len(), n);
+                    let total = act.total_toggles();
+                    match reference {
+                        None => reference = Some(total),
+                        Some(r) => {
+                            assert_eq!(total, r, "n={n} w={w} threads={threads}")
+                        }
+                    }
+                }
+            }
+            // Each fresh block starts from the canonical zero state, so
+            // the XOR output toggles exactly once per lane where a^b=1.
+            let want: u64 =
+                data[..n].iter().filter(|&&(x, z)| x ^ z == 1).count() as u64;
+            assert_eq!(reference.unwrap(), want, "n={n}");
+        }
     }
 
     #[test]

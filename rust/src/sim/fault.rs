@@ -21,7 +21,12 @@
 //!   let a same-run reader see the clean value, so the opcode-run
 //!   schedule is re-split at each faulted producer (the split schedule
 //!   lives here; the fault-free path executes the original runs
-//!   untouched).
+//!   untouched).  Activity profiling (`sim` §Activity) counts toggles at
+//!   the producing store, strictly *before* this mask application — a
+//!   forced transition is a defect, not switching activity, so fault
+//!   campaigns never double-count it (and source-net forces touch only
+//!   producer-less slots the counters never attribute; regression in
+//!   `tests/fault_injection.rs`).
 //! - Determinism: stuck masks are lane-uniform, so they cannot depend on
 //!   batching.  Transient flip masks are keyed on
 //!   `(seed, net, cycle-in-block, global word index)` where the global

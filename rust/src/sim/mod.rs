@@ -61,6 +61,23 @@
 //! the [`fault`] module documents — stuck-at and seed-deterministic
 //! transient corruption that stays bit-identical across widths, thread
 //! counts, and the interpreted/compiled split.
+//!
+//! §Activity: [`Sim::set_activity`] turns on per-net toggle counters —
+//! each micro-op (and each register commit) adds
+//! `popcount((new ^ old) & mask)` over all `W` lane words to its output
+//! net's counter, where `mask` zeroes the padded tail lanes of a partial
+//! block ([`Sim::activity_begin_block`]).  Per-lane bitwise semantics
+//! make the counts **bit-identical across `W ∈ {1,2,4,8}` and thread
+//! counts** (per-shard [`Activity`] snapshots sum after the pool join)
+//! and equal to a naive per-sample count — enforced by
+//! `tests/activity_energy.rs`.  Counting happens *before* any scheduled
+//! fault mask forces the net (see [`fault`]), so fault campaigns never
+//! double-count forced transitions.  Off (the default) the hot loops pay
+//! nothing; on, [`SimPlan::gate_activity`] resolves the counters into
+//! per-gate [`GateActivity`] rows that `tech::energy_report` prices.
+//! Process-wide default: [`profile_activity_default`]
+//! (`sim.profile_activity` / `--profile-activity` /
+//! `PRINTED_MLP_PROFILE_ACTIVITY`).
 
 pub mod batch;
 pub mod fault;
@@ -171,6 +188,29 @@ pub fn set_lane_words_default(w: usize) {
     LANE_WORDS_DEFAULT.store(w, Ordering::Relaxed);
 }
 
+/// Process-wide default for activity profiling (per-net toggle counters,
+/// §Activity).  Off by default — the clean hot path must pay nothing;
+/// `--profile-activity`, the `sim.profile_activity` config key, or the
+/// `PRINTED_MLP_PROFILE_ACTIVITY` environment variable (any value but
+/// `0`) turn it on.
+static PROFILE_ACTIVITY_DEFAULT: AtomicBool = AtomicBool::new(false);
+
+/// Whether activity profiling is on by default (see
+/// [`set_profile_activity_default`]; `PRINTED_MLP_PROFILE_ACTIVITY`
+/// overrides the process-wide flag, mirroring the other sim knobs).
+pub fn profile_activity_default() -> bool {
+    match std::env::var_os("PRINTED_MLP_PROFILE_ACTIVITY") {
+        Some(v) if !v.is_empty() && v != "0" => true,
+        _ => PROFILE_ACTIVITY_DEFAULT.load(Ordering::Relaxed),
+    }
+}
+
+/// Set the process-wide activity-profiling default (the
+/// `--profile-activity` knob).  Affects runs started *after* the call.
+pub fn set_profile_activity_default(on: bool) {
+    PROFILE_ACTIVITY_DEFAULT.store(on, Ordering::Relaxed);
+}
+
 // Micro-op opcodes: one byte per surviving gate, dispatched over
 // contiguous arrays (branch-predictable, cache-dense — no enum payload
 // loads from a scattered `Vec<Cell>`).
@@ -210,6 +250,9 @@ pub struct CompiledPlan {
     /// and a span merging across adjacent levels stays sound because the
     /// array order still respects every producer→reader dependency.
     runs: Vec<(u8, u32, u32)>,
+    /// Topological level per micro-op (same permutation as `ops`), kept
+    /// for per-level activity attribution ([`SimPlan::gate_activity`]).
+    op_level: Vec<u32>,
     // DFF state, struct-of-arrays (dense slots).
     dff_d: Vec<u32>,
     dff_q: Vec<u32>,
@@ -417,6 +460,7 @@ impl CompiledPlan {
         let src_b = permute(&src_b);
         let src_c = permute(&src_c);
         let dst = permute(&dst);
+        let op_level = permute(&op_level);
         let mut runs: Vec<(u8, u32, u32)> = Vec::new();
         for (i, &op) in ops.iter().enumerate() {
             match runs.last_mut() {
@@ -432,6 +476,7 @@ impl CompiledPlan {
             src_c,
             dst,
             runs,
+            op_level,
             dff_d,
             dff_q,
             dff_en,
@@ -465,6 +510,76 @@ impl CompiledPlan {
     pub fn n_runs(&self) -> usize {
         self.runs.len()
     }
+}
+
+/// Cell-library name for a micro-op opcode (matches
+/// [`crate::netlist::Cell::type_name`], which is what `tech::cell_spec`
+/// prices).
+fn opcode_name(op: u8) -> &'static str {
+    match op {
+        OP_INV => "INV",
+        OP_BUF => "BUF",
+        OP_NAND => "NAND2",
+        OP_NOR => "NOR2",
+        OP_AND => "AND2",
+        OP_OR => "OR2",
+        OP_XOR => "XOR2",
+        OP_XNOR => "XNOR2",
+        _ => "MUX2",
+    }
+}
+
+/// Per-net toggle counters harvested from one simulator (§Activity):
+/// `counts[slot]` is the number of masked lane bits whose value changed
+/// when the slot's producer stored it (or, for register state, when the
+/// commit overwrote it).  Snapshots from sharded workers [`Activity::
+/// merge`] into the run total — addition is exactly what per-lane
+/// independence guarantees is order-insensitive.
+#[derive(Clone, Debug, Default)]
+pub struct Activity {
+    counts: Vec<u64>,
+}
+
+impl Activity {
+    /// No counters collected (profiling off, or an empty workload).
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Sum of every net's toggle count.
+    pub fn total_toggles(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Accumulate another snapshot (per-slot sum).  Merging with an
+    /// empty snapshot — either side — is the identity.
+    pub fn merge(&mut self, other: &Activity) {
+        if other.counts.is_empty() {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = other.counts.clone();
+            return;
+        }
+        assert_eq!(
+            self.counts.len(),
+            other.counts.len(),
+            "activity snapshots from different plans cannot merge"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+}
+
+/// One gate's switching activity, resolved against the plan: the cell
+/// kind `tech` prices, its topological level (registers report level 0),
+/// and the accumulated toggle count of its output net.
+#[derive(Clone, Debug)]
+pub struct GateActivity {
+    pub kind: &'static str,
+    pub level: u32,
+    pub toggles: u64,
 }
 
 /// Immutable levelized evaluation plan for one netlist, shareable across
@@ -585,6 +700,67 @@ impl SimPlan {
         let slot = self.write_slot(net);
         slot != u32::MAX && slot >= 2
     }
+
+    /// Resolve harvested toggle counters into per-gate rows: one
+    /// [`GateActivity`] per micro-op (compiled) or combinational cell
+    /// (interpreted), plus one per register (kind `"DFF"`, level 0,
+    /// counting commit transitions of its q net).  Returns an empty list
+    /// for an empty snapshot.  Counts are only meaningful against the
+    /// plan that produced them — compiled and interpreted plans
+    /// legitimately disagree on *internal* nets (inversion fusing), so
+    /// keep a differential within one plan form.
+    pub fn gate_activity(&self, act: &Activity) -> Vec<GateActivity> {
+        if act.counts.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        match &self.compiled {
+            Some(cp) => {
+                debug_assert_eq!(act.counts.len(), cp.n_dense);
+                for i in 0..cp.ops.len() {
+                    out.push(GateActivity {
+                        kind: opcode_name(cp.ops[i]),
+                        level: cp.op_level[i],
+                        toggles: act.counts[cp.dst[i] as usize],
+                    });
+                }
+                for &q in &cp.dff_q {
+                    out.push(GateActivity {
+                        kind: "DFF",
+                        level: 0,
+                        toggles: act.counts[q as usize],
+                    });
+                }
+            }
+            None => {
+                debug_assert_eq!(act.counts.len(), self.n_nets);
+                let mut level = vec![0u32; self.n_nets];
+                for &ci in &self.order {
+                    let c = &self.cells[ci as usize];
+                    let mut lvl = 0u32;
+                    c.for_each_input(&mut |id: NetId| {
+                        lvl = lvl.max(level[id as usize]);
+                    });
+                    let lvl = lvl + 1;
+                    level[c.output() as usize] = lvl;
+                    out.push(GateActivity {
+                        kind: c.type_name(),
+                        level: lvl,
+                        toggles: act.counts[c.output() as usize],
+                    });
+                }
+                for &ci in &self.dffs {
+                    let q = self.cells[ci as usize].output();
+                    out.push(GateActivity {
+                        kind: "DFF",
+                        level: 0,
+                        toggles: act.counts[q as usize],
+                    });
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Load one net's `[u64; W]` super-lane block from the slot-major value
@@ -654,6 +830,175 @@ fn run_mux<const W: usize>(v: &mut [u64], a: &[u32], b: &[u32], c: &[u32], d: &[
     }
 }
 
+/// Masked toggle popcount between a net's old and new lane blocks:
+/// padding lanes of a partial tail block contribute nothing, so counts
+/// are identical at every super-lane width and block split (§Activity).
+#[inline(always)]
+fn count_toggles<const W: usize>(old: &[u64; W], new: &[u64; W], mask: &[u64]) -> u64 {
+    let mut t = 0u64;
+    for j in 0..W {
+        t += ((old[j] ^ new[j]) & mask[j]).count_ones() as u64;
+    }
+    t
+}
+
+/// [`run_unary`] plus store-time toggle accumulation into
+/// `counts[dst]`.  The old value is loaded *before* the store and any
+/// fault mask is applied strictly after the run — forced transitions are
+/// never counted.
+#[inline(always)]
+fn run_unary_counted<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    d: &[u32],
+    counts: &mut [u64],
+    mask: &[u64],
+    f: impl Fn(u64) -> u64,
+) {
+    for (&ai, &di) in a.iter().zip(d) {
+        let va = load::<W>(v, ai);
+        let old = load::<W>(v, di);
+        let mut out = [0u64; W];
+        for (o, x) in out.iter_mut().zip(va.iter()) {
+            *o = f(*x);
+        }
+        counts[di as usize] += count_toggles::<W>(&old, &out, mask);
+        store::<W>(v, di, out);
+    }
+}
+
+/// [`run_binary`] plus store-time toggle accumulation.
+#[inline(always)]
+fn run_binary_counted<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    b: &[u32],
+    d: &[u32],
+    counts: &mut [u64],
+    mask: &[u64],
+    f: impl Fn(u64, u64) -> u64,
+) {
+    for ((&ai, &bi), &di) in a.iter().zip(b).zip(d) {
+        let va = load::<W>(v, ai);
+        let vb = load::<W>(v, bi);
+        let old = load::<W>(v, di);
+        let mut out = [0u64; W];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = f(va[j], vb[j]);
+        }
+        counts[di as usize] += count_toggles::<W>(&old, &out, mask);
+        store::<W>(v, di, out);
+    }
+}
+
+/// [`run_mux`] plus store-time toggle accumulation.
+#[inline(always)]
+fn run_mux_counted<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    b: &[u32],
+    c: &[u32],
+    d: &[u32],
+    counts: &mut [u64],
+    mask: &[u64],
+) {
+    for (((&ai, &bi), &si), &di) in a.iter().zip(b).zip(c).zip(d) {
+        let va = load::<W>(v, ai);
+        let vb = load::<W>(v, bi);
+        let vs = load::<W>(v, si);
+        let old = load::<W>(v, di);
+        let mut out = [0u64; W];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (va[j] & !vs[j]) | (vb[j] & vs[j]);
+        }
+        counts[di as usize] += count_toggles::<W>(&old, &out, mask);
+        store::<W>(v, di, out);
+    }
+}
+
+/// Dispatch one homogeneous opcode span through the clean kernels —
+/// shared by the compiled run walk and (one op at a time) the
+/// interpreted cell walk.
+#[inline(always)]
+fn exec_run<const W: usize>(v: &mut [u64], op: u8, a: &[u32], b: &[u32], c: &[u32], d: &[u32]) {
+    match op {
+        OP_INV => run_unary::<W>(v, a, d, |x| !x),
+        OP_BUF => run_unary::<W>(v, a, d, |x| x),
+        OP_NAND => run_binary::<W>(v, a, b, d, |x, y| !(x & y)),
+        OP_NOR => run_binary::<W>(v, a, b, d, |x, y| !(x | y)),
+        OP_AND => run_binary::<W>(v, a, b, d, |x, y| x & y),
+        OP_OR => run_binary::<W>(v, a, b, d, |x, y| x | y),
+        OP_XOR => run_binary::<W>(v, a, b, d, |x, y| x ^ y),
+        OP_XNOR => run_binary::<W>(v, a, b, d, |x, y| !(x ^ y)),
+        _ => {
+            debug_assert_eq!(op, OP_MUX);
+            run_mux::<W>(v, a, b, c, d);
+        }
+    }
+}
+
+/// [`exec_run`] through the counting kernels — identical values, plus
+/// toggle accumulation (the branch between the two is taken once per
+/// run, so profiling off costs the hot loops nothing).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn exec_run_counted<const W: usize>(
+    v: &mut [u64],
+    op: u8,
+    a: &[u32],
+    b: &[u32],
+    c: &[u32],
+    d: &[u32],
+    counts: &mut [u64],
+    mask: &[u64],
+) {
+    match op {
+        OP_INV => run_unary_counted::<W>(v, a, d, counts, mask, |x| !x),
+        OP_BUF => run_unary_counted::<W>(v, a, d, counts, mask, |x| x),
+        OP_NAND => run_binary_counted::<W>(v, a, b, d, counts, mask, |x, y| !(x & y)),
+        OP_NOR => run_binary_counted::<W>(v, a, b, d, counts, mask, |x, y| !(x | y)),
+        OP_AND => run_binary_counted::<W>(v, a, b, d, counts, mask, |x, y| x & y),
+        OP_OR => run_binary_counted::<W>(v, a, b, d, counts, mask, |x, y| x | y),
+        OP_XOR => run_binary_counted::<W>(v, a, b, d, counts, mask, |x, y| x ^ y),
+        OP_XNOR => run_binary_counted::<W>(v, a, b, d, counts, mask, |x, y| !(x ^ y)),
+        _ => {
+            debug_assert_eq!(op, OP_MUX);
+            run_mux_counted::<W>(v, a, b, c, d, counts, mask);
+        }
+    }
+}
+
+/// Lower one interpreted cell to its micro-op view `(op, a, b, sel, y)`
+/// so both plan forms share the [`exec_run`]/[`exec_run_counted`]
+/// dispatch (interpreted slots are the source net ids themselves).
+#[inline(always)]
+fn cell_microop(c: &Cell) -> (u8, NetId, NetId, NetId, NetId) {
+    match *c {
+        Cell::Inv { a, y } => (OP_INV, a, CONST0, CONST0, y),
+        Cell::Buf { a, y } => (OP_BUF, a, CONST0, CONST0, y),
+        Cell::Nand2 { a, b, y } => (OP_NAND, a, b, CONST0, y),
+        Cell::Nor2 { a, b, y } => (OP_NOR, a, b, CONST0, y),
+        Cell::And2 { a, b, y } => (OP_AND, a, b, CONST0, y),
+        Cell::Or2 { a, b, y } => (OP_OR, a, b, CONST0, y),
+        Cell::Xor2 { a, b, y } => (OP_XOR, a, b, CONST0, y),
+        Cell::Xnor2 { a, b, y } => (OP_XNOR, a, b, CONST0, y),
+        Cell::Mux2 { a, b, sel, y } => (OP_MUX, a, b, sel, y),
+        Cell::Dff { .. } => unreachable!("DFF in comb order"),
+    }
+}
+
+/// Internal activity-profiling state (§Activity): one toggle counter per
+/// value slot plus the per-lane-word population mask of the current
+/// block.
+struct ActivityState {
+    /// Toggle count per value slot (dense slot on compiled plans, source
+    /// net id on interpreted ones).
+    counts: Vec<u64>,
+    /// Per-lane-word mask of real samples in the current block —
+    /// zero-padded tail lanes never count.
+    mask: Vec<u64>,
+}
+
 /// Packed super-lane two-valued simulator state over a shared
 /// [`SimPlan`]: `W` consecutive `u64` words per net, one sample per bit
 /// (`W·64` samples per pass; `W = 1` is the original 64-lane geometry).
@@ -670,6 +1015,9 @@ pub struct Sim {
     /// Injected faults, lowered against the plan (`None` = clean run —
     /// the common case pays one branch per eval).
     faults: Option<Box<fault::FaultState>>,
+    /// Activity profiling (`None` = off — the default; one branch per
+    /// opcode run when on).
+    activity: Option<Box<ActivityState>>,
 }
 
 impl Sim {
@@ -712,6 +1060,7 @@ impl Sim {
             w: lane_words,
             vals,
             faults: None,
+            activity: None,
         }
     }
 
@@ -743,6 +1092,76 @@ impl Sim {
         debug_assert_eq!(base_sample % Self::LANES, 0);
         if let Some(fs) = &mut self.faults {
             fs.begin_block(base_sample);
+        }
+    }
+
+    /// Turn per-net toggle counting on or off (§Activity).  Turning it
+    /// on allocates one counter per value slot (starting at zero);
+    /// turning it off drops the counters — either way predictions are
+    /// untouched.
+    pub fn set_activity(&mut self, on: bool) {
+        if on {
+            let n = self.vals.len() / self.w;
+            self.activity = Some(Box::new(ActivityState {
+                counts: vec![0; n],
+                mask: vec![!0u64; self.w],
+            }));
+        } else {
+            self.activity = None;
+        }
+    }
+
+    /// Whether toggle counting is on.
+    pub fn activity_enabled(&self) -> bool {
+        self.activity.is_some()
+    }
+
+    /// Begin a block of `lanes` real samples (`lanes ≤ lanes()`): set
+    /// the per-word population masks so padded tail lanes never count,
+    /// and restore the canonical fresh-simulator start state (all nets
+    /// zero, CONST1 all-ones, registers unset) — a worker reused across
+    /// blocks would otherwise count first-eval transitions *from the
+    /// previous block's values*, making counts depend on how blocks land
+    /// on workers.  Predictions never depend on the pre-drive state (the
+    /// testbench protocols fully re-drive every block — the sharding
+    /// differentials prove it), so the wipe is invisible outside the
+    /// counters.  No-op with profiling off.
+    pub fn activity_begin_block(&mut self, lanes: usize) {
+        if self.activity.is_none() {
+            return;
+        }
+        assert!(lanes <= self.lanes(), "block larger than the super-lane");
+        let w = self.w;
+        if let Some(st) = self.activity.as_deref_mut() {
+            for (j, m) in st.mask.iter_mut().enumerate() {
+                let lo = j * Self::LANES;
+                *m = if lanes >= lo + Self::LANES {
+                    !0u64
+                } else if lanes <= lo {
+                    0
+                } else {
+                    (1u64 << (lanes - lo)) - 1
+                };
+            }
+        }
+        self.vals.fill(0);
+        for j in 0..w {
+            self.vals[w + j] = !0u64; // CONST1 (slot 1), every word
+        }
+    }
+
+    /// Harvest the accumulated counters as an [`Activity`] snapshot and
+    /// reset them to zero (profiling stays on).  Returns an empty
+    /// snapshot when profiling is off.
+    pub fn take_activity(&mut self) -> Activity {
+        match self.activity.as_deref_mut() {
+            Some(st) => {
+                let n = st.counts.len();
+                Activity {
+                    counts: std::mem::replace(&mut st.counts, vec![0; n]),
+                }
+            }
+            None => Activity::default(),
         }
     }
 
@@ -901,10 +1320,12 @@ impl Sim {
         let plan = &*self.plan;
         let v = &mut self.vals;
         let fs = self.faults.as_deref();
+        let mut act = self.activity.as_deref_mut();
         if let Some(fs) = fs {
             // Externally-written slots (inputs, register state, undriven
             // nets) are forced before propagation so every reader sees
-            // the corrupted value.
+            // the corrupted value.  Source nets have no producing
+            // micro-op, so the counters never see these forces.
             for af in &fs.sources {
                 fs.apply::<W>(v, af);
             }
@@ -924,20 +1345,14 @@ impl Sim {
                 let b = &cp.src_b[r.clone()];
                 let c = &cp.src_c[r.clone()];
                 let d = &cp.dst[r];
-                match op {
-                    OP_INV => run_unary::<W>(v, a, d, |x| !x),
-                    OP_BUF => run_unary::<W>(v, a, d, |x| x),
-                    OP_NAND => run_binary::<W>(v, a, b, d, |x, y| !(x & y)),
-                    OP_NOR => run_binary::<W>(v, a, b, d, |x, y| !(x | y)),
-                    OP_AND => run_binary::<W>(v, a, b, d, |x, y| x & y),
-                    OP_OR => run_binary::<W>(v, a, b, d, |x, y| x | y),
-                    OP_XOR => run_binary::<W>(v, a, b, d, |x, y| x ^ y),
-                    OP_XNOR => run_binary::<W>(v, a, b, d, |x, y| !(x ^ y)),
-                    _ => {
-                        debug_assert_eq!(op, OP_MUX);
-                        run_mux::<W>(v, a, b, c, d);
+                match act.as_deref_mut() {
+                    Some(st) => {
+                        exec_run_counted::<W>(v, op, a, b, c, d, &mut st.counts, &st.mask)
                     }
+                    None => exec_run::<W>(v, op, a, b, c, d),
                 }
+                // Scheduled fault masks force nets strictly *after* the
+                // producing run (and its store-time toggle count).
                 if let Some(fs) = fs {
                     while cursor < fs.scheduled.len() && fs.scheduled[cursor].0 == ri as u32 {
                         fs.apply::<W>(v, &fs.scheduled[cursor].1);
@@ -948,24 +1363,19 @@ impl Sim {
         } else {
             let mut cursor = 0usize;
             for (pos, &ci) in plan.order.iter().enumerate() {
-                let c = plan.cells[ci as usize];
-                match c {
-                    Cell::Inv { a, y } => run_unary::<W>(v, &[a], &[y], |x| !x),
-                    Cell::Buf { a, y } => run_unary::<W>(v, &[a], &[y], |x| x),
-                    Cell::Nand2 { a, b, y } => {
-                        run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x & z))
-                    }
-                    Cell::Nor2 { a, b, y } => {
-                        run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x | z))
-                    }
-                    Cell::And2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x & z),
-                    Cell::Or2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x | z),
-                    Cell::Xor2 { a, b, y } => run_binary::<W>(v, &[a], &[b], &[y], |x, z| x ^ z),
-                    Cell::Xnor2 { a, b, y } => {
-                        run_binary::<W>(v, &[a], &[b], &[y], |x, z| !(x ^ z))
-                    }
-                    Cell::Mux2 { a, b, sel, y } => run_mux::<W>(v, &[a], &[b], &[sel], &[y]),
-                    Cell::Dff { .. } => unreachable!("DFF in comb order"),
+                let (op, a, b, sel, y) = cell_microop(&plan.cells[ci as usize]);
+                match act.as_deref_mut() {
+                    Some(st) => exec_run_counted::<W>(
+                        v,
+                        op,
+                        &[a],
+                        &[b],
+                        &[sel],
+                        &[y],
+                        &mut st.counts,
+                        &st.mask,
+                    ),
+                    None => exec_run::<W>(v, op, &[a], &[b], &[sel], &[y]),
                 }
                 if let Some(fs) = fs {
                     while cursor < fs.scheduled.len() && fs.scheduled[cursor].0 == pos as u32 {
@@ -1032,6 +1442,20 @@ impl Sim {
                     self.next_q[i * W + j] = (rst[j] & rv) | (!rst[j] & held);
                 }
             }
+            // Count commit transitions of each q slot before the copy —
+            // register state nets have no combinational producer, so the
+            // commit is the only place they toggle.
+            if let Some(st) = self.activity.as_deref_mut() {
+                for (i, &qslot) in cp.dff_q.iter().enumerate() {
+                    let base = qslot as usize * W;
+                    let mut t = 0u64;
+                    for j in 0..W {
+                        t += ((self.vals[base + j] ^ self.next_q[i * W + j]) & st.mask[j])
+                            .count_ones() as u64;
+                    }
+                    st.counts[qslot as usize] += t;
+                }
+            }
             for (i, &qslot) in cp.dff_q.iter().enumerate() {
                 let base = qslot as usize * W;
                 self.vals[base..base + W].copy_from_slice(&self.next_q[i * W..i * W + W]);
@@ -1057,6 +1481,18 @@ impl Sim {
                     let held = (ven[j] & vd[j]) | (!ven[j] & vq[j]);
                     self.next_q[slot * W + j] = (vrst[j] & rv) | (!vrst[j] & held);
                 }
+            }
+        }
+        if let Some(st) = self.activity.as_deref_mut() {
+            for (slot, &ci) in plan.dffs.iter().enumerate() {
+                let q = plan.cells[ci as usize].output();
+                let base = q as usize * W;
+                let mut t = 0u64;
+                for j in 0..W {
+                    t += ((self.vals[base + j] ^ self.next_q[slot * W + j]) & st.mask[j])
+                        .count_ones() as u64;
+                }
+                st.counts[q as usize] += t;
             }
         }
         for (slot, &ci) in plan.dffs.iter().enumerate() {
@@ -1444,5 +1880,157 @@ mod tests {
         assert_eq!(lane_words_default(), 2);
         set_lane_words_default(0);
         assert!(LANE_WORD_CHOICES.contains(&lane_words_default()));
+    }
+
+    #[test]
+    fn profile_activity_default_toggle() {
+        assert!(!profile_activity_default(), "profiling is off by default");
+        set_profile_activity_default(true);
+        assert!(profile_activity_default());
+        set_profile_activity_default(false);
+        assert!(!profile_activity_default());
+    }
+
+    #[test]
+    fn activity_counts_match_hand_computed_toggles() {
+        // y = a ^ b on both plan forms: drive known transitions and
+        // check the counter is exactly the popcount of each change.
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let y = n.xor2(a, b);
+        n.add_output("y", vec![y]);
+        for plan in [Arc::new(SimPlan::new(&n)), Arc::new(SimPlan::compiled(&n))] {
+            let mut s = Sim::from_plan(plan.clone());
+            s.set_activity(true);
+            assert!(s.activity_enabled());
+            s.activity_begin_block(64);
+            s.set(a, 0);
+            s.set(b, 0);
+            s.eval(); // y: 0 → 0, no toggles
+            s.set(a, !0u64);
+            s.eval(); // y: 0 → !0, 64 toggles
+            s.set(b, 0xFF);
+            s.eval(); // y: !0 → !0xFF, 8 toggles
+            let act = s.take_activity();
+            assert_eq!(act.total_toggles(), 72, "inputs are uncounted sources");
+            let gates = plan.gate_activity(&act);
+            let xor: Vec<_> = gates.iter().filter(|g| g.kind == "XOR2").collect();
+            assert_eq!(xor.len(), 1);
+            assert_eq!(xor[0].toggles, 72);
+            assert_eq!(xor[0].level, 1);
+            // Harvesting reset the counters; profiling stays on.
+            assert!(s.activity_enabled());
+            assert_eq!(s.take_activity().total_toggles(), 0);
+        }
+    }
+
+    #[test]
+    fn activity_mask_excludes_padding_lanes() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let y = n.inv(a);
+        n.add_output("y", vec![y]);
+        for w in [1usize, 2, 4] {
+            let mut s = Sim::from_plan_wide(Arc::new(SimPlan::compiled(&n)), w);
+            s.set_activity(true);
+            // 3 real samples: the INV's first eval flips every lane
+            // (0 → !a with a = 0), but only 3 may count.
+            s.activity_begin_block(3);
+            s.eval();
+            assert_eq!(s.take_activity().total_toggles(), 3, "w={w}");
+            // Crossing a word boundary: 64 + 2 real samples.
+            if w >= 2 {
+                s.activity_begin_block(66);
+                s.eval();
+                assert_eq!(s.take_activity().total_toggles(), 66, "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn activity_begin_block_restores_canonical_state() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let y = n.inv(a);
+        n.add_output("y", vec![y]);
+        let mut s = Sim::from_plan_wide(Arc::new(SimPlan::compiled(&n)), 2);
+        s.set_activity(true);
+        s.activity_begin_block(128);
+        s.fill(a, !0u64);
+        s.eval();
+        let dirty = s.take_activity();
+        assert_eq!(dirty.total_toggles(), 0, "y stays 0 when a is high");
+        // A new block must start from the fresh-sim state (a=0, y=0), so
+        // the first eval counts the full 0 → 1 flip of y again — not a
+        // diff against the previous block's values.
+        s.activity_begin_block(128);
+        assert_eq!(s.get(CONST1), !0u64, "constants survive the wipe");
+        assert_eq!(s.get(a), 0, "inputs wiped to the fresh-sim state");
+        s.eval();
+        assert_eq!(s.take_activity().total_toggles(), 128);
+    }
+
+    #[test]
+    fn activity_counts_register_commits() {
+        let mut n = Netlist::new("t");
+        let d = n.add_input("d", 1)[0];
+        let en = n.add_input("en", 1)[0];
+        let rst = n.add_input("rst", 1)[0];
+        let q = n.dff(d, en, rst, false);
+        n.add_output("q", vec![q]);
+        for plan in [Arc::new(SimPlan::new(&n)), Arc::new(SimPlan::compiled(&n))] {
+            let mut s = Sim::from_plan(plan.clone());
+            s.set_activity(true);
+            s.activity_begin_block(64);
+            s.set(en, !0u64);
+            s.set(rst, 0);
+            s.set(d, !0u64);
+            s.step(); // q: 0 → !0 at the commit, 64 toggles
+            s.set(d, 0xF);
+            s.step(); // q: !0 → 0xF, 60 toggles
+            let act = s.take_activity();
+            let gates = plan.gate_activity(&act);
+            let dff: Vec<_> = gates.iter().filter(|g| g.kind == "DFF").collect();
+            assert_eq!(dff.len(), 1);
+            assert_eq!(dff[0].toggles, 124);
+            assert_eq!(act.total_toggles(), 124, "this circuit has no comb gates");
+        }
+    }
+
+    #[test]
+    fn activity_merge_sums_per_slot_and_handles_empty() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let y = n.inv(a);
+        n.add_output("y", vec![y]);
+        let plan = Arc::new(SimPlan::compiled(&n));
+        let mut s = Sim::from_plan(plan.clone());
+        s.set_activity(true);
+        s.activity_begin_block(64);
+        s.eval(); // y flips all 64 lanes
+        let one = s.take_activity();
+        let mut total = Activity::default();
+        total.merge(&one);
+        total.merge(&Activity::default()); // identity
+        total.merge(&one);
+        assert_eq!(total.total_toggles(), 2 * one.total_toggles());
+        assert!(!total.is_empty() && Activity::default().is_empty());
+        assert!(plan.gate_activity(&Activity::default()).is_empty());
+    }
+
+    #[test]
+    fn activity_off_allocates_nothing_and_takes_empty() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        n.add_output("y", vec![a]);
+        let mut s = Sim::from_plan(Arc::new(SimPlan::compiled(&n)));
+        assert!(!s.activity_enabled());
+        s.activity_begin_block(10); // no-op off
+        s.eval();
+        assert!(s.take_activity().is_empty());
+        s.set_activity(true);
+        s.set_activity(false);
+        assert!(!s.activity_enabled());
     }
 }

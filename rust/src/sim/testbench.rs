@@ -28,7 +28,7 @@ use std::sync::Arc;
 use crate::circuits::{CombCircuit, SeqCircuit};
 use crate::netlist::{NetId, Netlist, Word};
 use crate::sim::fault::FaultList;
-use crate::sim::{batch, Sim, SimPlan};
+use crate::sim::{batch, Activity, Sim, SimPlan};
 use crate::util::pool;
 
 fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
@@ -103,6 +103,80 @@ where
     })
 }
 
+/// [`run_blocks`] with per-net toggle counting: same sharding, same
+/// protocol closure, but every worker profiles activity and the merged
+/// [`Activity`] snapshot rides back with the predictions.
+#[allow(clippy::too_many_arguments)]
+fn run_blocks_activity<D>(
+    plan: &Arc<SimPlan>,
+    class_out: &[NetId],
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+    drive: D,
+) -> (Vec<u16>, Activity)
+where
+    D: Fn(&mut Sim, &mut BlockIo) + Sync,
+{
+    batch::run_sharded_wide_activity(plan, n, threads, lane_words, faults, |sim, base, lanes| {
+        let mut io = BlockIo {
+            xs,
+            features,
+            base,
+            lanes,
+            scratch: Vec::with_capacity(lanes),
+        };
+        drive(sim, &mut io);
+        (0..lanes)
+            .map(|lane| sim.get_word_lane(class_out, lane) as u16)
+            .collect()
+    })
+}
+
+/// The sequential I/O protocol (reset pulse, one feature per cycle in
+/// RFP order, drain) as a reusable block closure — shared by the plain,
+/// faulted, and activity-profiling entry points.
+fn seq_drive<'a>(
+    circ: &'a SeqCircuit,
+    x: &'a [NetId],
+    rst: NetId,
+) -> impl Fn(&mut Sim, &mut BlockIo) + Sync + 'a {
+    move |sim, io| {
+        // Reset pulse across every lane word.
+        sim.fill(rst, !0u64);
+        sim.set_word_all(x, 0);
+        sim.step();
+        sim.fill(rst, 0);
+        // Hidden phase: feature active[t] on the bus at cycle t.
+        for t in 0..circ.cycles {
+            if t < circ.active.len() {
+                io.drive_feature(sim, x, circ.active[t]);
+            } else {
+                sim.set_word_all(x, 0);
+            }
+            sim.step();
+        }
+        sim.settle();
+    }
+}
+
+/// The combinational protocol (all scheduled features on the flat bus,
+/// one evaluation) as a reusable block closure.
+fn comb_drive<'a>(
+    circ: &'a CombCircuit,
+    x_all: &'a [NetId],
+) -> impl Fn(&mut Sim, &mut BlockIo) + Sync + 'a {
+    move |sim, io| {
+        for (slot, &f) in circ.active.iter().enumerate() {
+            io.drive_feature(sim, &x_all[slot * 4..(slot + 1) * 4], f);
+        }
+        sim.eval();
+    }
+}
+
 /// Run `n` samples (row-major `features`-wide 4-bit values) through a
 /// sequential circuit; returns predicted class per sample.  Sharded
 /// across [`pool::default_threads`] workers at the default super-lane
@@ -158,23 +232,51 @@ pub fn run_sequential_plan_faulted(
     let rst = input_port(net, "rst")[0];
     let class_out = output_port(net, "class_out").clone();
 
-    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, faults, |sim, io| {
-        // Reset pulse across every lane word.
-        sim.fill(rst, !0u64);
-        sim.set_word_all(&x, 0);
-        sim.step();
-        sim.fill(rst, 0);
-        // Hidden phase: feature active[t] on the bus at cycle t.
-        for t in 0..circ.cycles {
-            if t < circ.active.len() {
-                io.drive_feature(sim, &x, circ.active[t]);
-            } else {
-                sim.set_word_all(&x, 0);
-            }
-            sim.step();
-        }
-        sim.settle();
-    })
+    run_blocks(
+        plan,
+        &class_out,
+        xs,
+        n,
+        features,
+        threads,
+        lane_words,
+        faults,
+        seq_drive(circ, &x, rst),
+    )
+}
+
+/// [`run_sequential_plan_faulted`] with per-net toggle counting: returns
+/// the (identical) predictions plus the merged [`Activity`] snapshot —
+/// the measured-energy path's sequential entry point.  Counts are
+/// bit-identical across super-lane widths and thread counts (see `sim`
+/// §Activity; enforced by `tests/activity_energy.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sequential_plan_activity(
+    circ: &SeqCircuit,
+    plan: &Arc<SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+) -> (Vec<u16>, Activity) {
+    let net = &circ.netlist;
+    let x = input_port(net, "x").clone();
+    let rst = input_port(net, "rst")[0];
+    let class_out = output_port(net, "class_out").clone();
+
+    run_blocks_activity(
+        plan,
+        &class_out,
+        xs,
+        n,
+        features,
+        threads,
+        lane_words,
+        faults,
+        seq_drive(circ, &x, rst),
+    )
 }
 
 /// Run `n` samples through a combinational circuit (single evaluation
@@ -227,12 +329,48 @@ pub fn run_combinational_plan_faulted(
     let class_out = output_port(net, "class_out").clone();
     assert_eq!(x_all.len(), 4 * circ.active.len());
 
-    run_blocks(plan, &class_out, xs, n, features, threads, lane_words, faults, |sim, io| {
-        for (slot, &f) in circ.active.iter().enumerate() {
-            io.drive_feature(sim, &x_all[slot * 4..(slot + 1) * 4], f);
-        }
-        sim.eval();
-    })
+    run_blocks(
+        plan,
+        &class_out,
+        xs,
+        n,
+        features,
+        threads,
+        lane_words,
+        faults,
+        comb_drive(circ, &x_all),
+    )
+}
+
+/// [`run_combinational_plan_faulted`] with per-net toggle counting (see
+/// [`run_sequential_plan_activity`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_combinational_plan_activity(
+    circ: &CombCircuit,
+    plan: &Arc<SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+) -> (Vec<u16>, Activity) {
+    let net = &circ.netlist;
+    let x_all = input_port(net, "x_all").clone();
+    let class_out = output_port(net, "class_out").clone();
+    assert_eq!(x_all.len(), 4 * circ.active.len());
+
+    run_blocks_activity(
+        plan,
+        &class_out,
+        xs,
+        n,
+        features,
+        threads,
+        lane_words,
+        faults,
+        comb_drive(circ, &x_all),
+    )
 }
 
 /// Accuracy helper shared by the harnesses.

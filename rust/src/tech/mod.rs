@@ -20,6 +20,7 @@
 use std::collections::BTreeMap;
 
 use crate::netlist::Netlist;
+use crate::sim::GateActivity;
 
 /// Area of one EGFET transistor (cm²).
 pub const CM2_PER_TRANSISTOR: f64 = 0.0018;
@@ -27,6 +28,18 @@ pub const CM2_PER_TRANSISTOR: f64 = 0.0018;
 /// Power densities (mW per cm²).
 pub const COMB_MW_PER_CM2: f64 = 0.45;
 pub const DFF_MW_PER_CM2: f64 = 0.8;
+
+/// Switching energy per cm² of cell area per output toggle (mJ).
+///
+/// EGFET dynamic dissipation is dominated by charging the large printed
+/// gate capacitances, which scale with the cell's printed area, so one
+/// constant relates measured toggle counts to dynamic energy the same
+/// way `CM2_PER_TRANSISTOR` relates transistor counts to area.
+/// Calibrated so a typical generated classifier's dynamic energy lands
+/// at a few percent of its static (leakage + biasing) energy at the
+/// paper's 80–320 ms clocks — dynamic is the smaller component for
+/// always-on printed electrolyte-gated logic.
+pub const DYN_MJ_PER_CM2_TOGGLE: f64 = 0.02;
 
 /// Per-cell characterization.
 #[derive(Clone, Copy, Debug)]
@@ -137,6 +150,81 @@ pub fn report(n: &Netlist) -> CircuitReport {
     }
 }
 
+/// Measured per-inference energy breakdown: the static (worst-case
+/// power-density) component [`CircuitReport::energy_mj`] always
+/// reported, plus a dynamic component derived from per-gate switching
+/// activity harvested by the simulator (`sim` §Activity).
+///
+/// All energies are mJ *per inference* — toggle counts are averaged
+/// over the `samples` inferences that produced them, so profiling more
+/// samples refines the estimate without inflating it.
+#[derive(Clone, Debug)]
+pub struct EnergyReport {
+    pub name: String,
+    /// Inferences profiled (toggle counts are normalized by this).
+    pub samples: u64,
+    /// Static energy per inference (power × cycles × clock).
+    pub static_mj: f64,
+    /// Activity-derived dynamic energy per inference.
+    pub dynamic_mj: f64,
+    /// Dynamic energy attributed per cell kind (INV, NAND2, …, DFF).
+    pub per_kind: BTreeMap<&'static str, f64>,
+    /// Dynamic energy attributed per topological level (registers at 0).
+    pub per_level: Vec<f64>,
+    /// Total masked toggles over all profiled inferences.
+    pub toggles: u64,
+}
+
+impl EnergyReport {
+    /// Static + dynamic energy per inference (mJ).
+    pub fn total_mj(&self) -> f64 {
+        self.static_mj + self.dynamic_mj
+    }
+}
+
+/// Price per-gate switching activity into an [`EnergyReport`].
+///
+/// Each gate contributes `area × DYN_MJ_PER_CM2_TOGGLE × toggles /
+/// samples` mJ of dynamic energy; the static component is
+/// [`CircuitReport::energy_mj`] at the circuit's cycle count and clock.
+/// `samples = 0` (or an empty gate list) yields a zero-dynamic report —
+/// the static estimate this measurement replaces.
+pub fn energy_report(
+    report: &CircuitReport,
+    gates: &[GateActivity],
+    cycles: usize,
+    clock_ms: f64,
+    samples: u64,
+) -> EnergyReport {
+    let mut per_kind: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut per_level: Vec<f64> = Vec::new();
+    let mut dynamic = 0.0;
+    let mut toggles = 0u64;
+    if samples > 0 {
+        for g in gates {
+            let e = cell_spec(g.kind).area_cm2 * DYN_MJ_PER_CM2_TOGGLE * g.toggles as f64
+                / samples as f64;
+            dynamic += e;
+            toggles += g.toggles;
+            *per_kind.entry(g.kind).or_insert(0.0) += e;
+            let lvl = g.level as usize;
+            if per_level.len() <= lvl {
+                per_level.resize(lvl + 1, 0.0);
+            }
+            per_level[lvl] += e;
+        }
+    }
+    EnergyReport {
+        name: report.name.clone(),
+        samples,
+        static_mj: report.energy_mj(cycles, clock_ms),
+        dynamic_mj: dynamic,
+        per_kind,
+        per_level,
+        toggles,
+    }
+}
+
 /// Area of an n-input, `width`-bit shift-register chain vs the equivalent
 /// mux-based selector — the Fig. 4 comparison, exposed for the bench.
 pub fn shift_register_area(n_inputs: usize, width: usize) -> f64 {
@@ -204,6 +292,79 @@ mod tests {
         n.add_output("y", vec![x]);
         let r = report(&n);
         assert!((r.energy_mj(10, 100.0) - r.power_mw * 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_report_prices_activity_and_attributes_it() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let b = n.add_input("b", 1)[0];
+        let x = n.and2(a, b);
+        let q = n.dff(x, CONST1, CONST0, false);
+        n.add_output("q", vec![q]);
+        let r = report(&n);
+
+        let gates = vec![
+            GateActivity { kind: "AND2", level: 1, toggles: 100 },
+            GateActivity { kind: "DFF", level: 0, toggles: 40 },
+        ];
+        let er = energy_report(&r, &gates, 10, 100.0, 50);
+        assert_eq!(er.samples, 50);
+        assert_eq!(er.toggles, 140);
+        assert!((er.static_mj - r.energy_mj(10, 100.0)).abs() < 1e-12);
+        let want_and = cell_spec("AND2").area_cm2 * DYN_MJ_PER_CM2_TOGGLE * 100.0 / 50.0;
+        let want_dff = cell_spec("DFF").area_cm2 * DYN_MJ_PER_CM2_TOGGLE * 40.0 / 50.0;
+        assert!((er.dynamic_mj - (want_and + want_dff)).abs() < 1e-12);
+        assert!((er.per_kind["AND2"] - want_and).abs() < 1e-12);
+        assert!((er.per_kind["DFF"] - want_dff).abs() < 1e-12);
+        assert_eq!(er.per_level.len(), 2);
+        assert!((er.per_level[0] - want_dff).abs() < 1e-12);
+        assert!((er.per_level[1] - want_and).abs() < 1e-12);
+        assert!((er.total_mj() - (er.static_mj + er.dynamic_mj)).abs() < 1e-12);
+        // Attribution partitions the total exactly.
+        let kinds: f64 = er.per_kind.values().sum();
+        let levels: f64 = er.per_level.iter().sum();
+        assert!((kinds - er.dynamic_mj).abs() < 1e-12);
+        assert!((levels - er.dynamic_mj).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_report_without_activity_is_the_static_estimate() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let y = n.inv(a);
+        n.add_output("y", vec![y]);
+        let r = report(&n);
+        let er = energy_report(&r, &[], 5, 80.0, 0);
+        assert_eq!(er.dynamic_mj, 0.0);
+        assert_eq!(er.toggles, 0);
+        assert!(er.per_kind.is_empty() && er.per_level.is_empty());
+        assert!((er.total_mj() - r.energy_mj(5, 80.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_energy_monotone_in_toggles() {
+        let mut n = Netlist::new("t");
+        let a = n.add_input("a", 1)[0];
+        let y = n.inv(a);
+        n.add_output("y", vec![y]);
+        let r = report(&n);
+        let lo = energy_report(
+            &r,
+            &[GateActivity { kind: "INV", level: 1, toggles: 10 }],
+            5,
+            80.0,
+            4,
+        );
+        let hi = energy_report(
+            &r,
+            &[GateActivity { kind: "INV", level: 1, toggles: 200 }],
+            5,
+            80.0,
+            4,
+        );
+        assert!(hi.dynamic_mj > lo.dynamic_mj);
+        assert!((hi.static_mj - lo.static_mj).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Differential tests for activity profiling (per-net toggle counters)
+//! and the measured-energy layer on top of it:
+//!
+//! - toggle counts are bit-identical at every super-lane width
+//!   `W ∈ {1,2,4,8}` and thread count — including partial tail blocks —
+//!   within each plan form, and DFF commit activity agrees *across* plan
+//!   forms (q nets are part of the external contract; internal comb nets
+//!   legitimately differ under inversion fusing);
+//! - the interpreted plan's counts match a naive per-net test-side
+//!   oracle over `propcheck::rand_netlist` circuits (DFF state nets,
+//!   masked partial-population lanes, mixed eval/step/reset schedules);
+//! - counters never perturb simulation: activity runs predict
+//!   bit-identically to the plain counters-off entry points;
+//! - pricing measured activity through `tech::energy_report` is
+//!   monotone: approximating more neurons never adds dynamic energy.
+//!
+//! Artifact-free, so this suite runs in tier-1.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::rand_model;
+use printed_mlp::approx;
+use printed_mlp::circuits::{combinational, hybrid, seq_multicycle};
+use printed_mlp::netlist::{Cell, Netlist, CONST1};
+use printed_mlp::sim::{testbench, Sim, SimPlan};
+use printed_mlp::tech;
+use printed_mlp::util::propcheck::{check, rand_netlist};
+use printed_mlp::util::prng::Rng;
+
+#[test]
+fn counts_invariant_across_widths_threads_and_partial_tails() {
+    let m = rand_model(13, 9, 5, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let interp = Arc::new(SimPlan::new(&circ.netlist));
+    let comp = Arc::new(SimPlan::compiled(&circ.netlist));
+    let n_max = 300; // 4 full 64-lane words + a 44-lane partial tail
+    let mut r = Rng::new(4);
+    let xs: Vec<u8> = (0..n_max * m.features).map(|_| r.below(16) as u8).collect();
+
+    for n in [1usize, 65, 300] {
+        let head = &xs[..n * m.features];
+        let want = testbench::run_sequential_plan(&circ, &interp, head, n, m.features, 1, 1);
+        for plan in [&interp, &comp] {
+            let (_, base) = testbench::run_sequential_plan_activity(
+                &circ, plan, head, n, m.features, 1, 1, None,
+            );
+            assert!(base.total_toggles() > 0, "n={n}: a live run must toggle");
+            let base_rows: Vec<u64> = plan.gate_activity(&base).iter().map(|g| g.toggles).collect();
+            for w in [1usize, 2, 4, 8] {
+                for threads in [1usize, 3] {
+                    let (preds, act) = testbench::run_sequential_plan_activity(
+                        &circ, plan, head, n, m.features, threads, w, None,
+                    );
+                    assert_eq!(
+                        preds,
+                        want,
+                        "predictions drifted: n={n} w={w} threads={threads} compiled={}",
+                        plan.is_compiled()
+                    );
+                    let rows: Vec<u64> =
+                        plan.gate_activity(&act).iter().map(|g| g.toggles).collect();
+                    assert_eq!(
+                        rows,
+                        base_rows,
+                        "counts drifted: n={n} w={w} threads={threads} compiled={}",
+                        plan.is_compiled()
+                    );
+                }
+            }
+        }
+    }
+
+    // DFF commit activity agrees across plan forms: q trajectories are
+    // externally observable, so their masked transition counts must
+    // match gate for gate (sorted — row order is plan-internal).
+    let (_, ai) =
+        testbench::run_sequential_plan_activity(&circ, &interp, &xs, n_max, m.features, 1, 1, None);
+    let (_, ac) =
+        testbench::run_sequential_plan_activity(&circ, &comp, &xs, n_max, m.features, 1, 1, None);
+    let dffs = |plan: &Arc<SimPlan>, act: &printed_mlp::sim::Activity| {
+        let mut t: Vec<u64> = plan
+            .gate_activity(act)
+            .iter()
+            .filter(|g| g.kind == "DFF")
+            .map(|g| g.toggles)
+            .collect();
+        t.sort_unstable();
+        t
+    };
+    let (di, dc) = (dffs(&interp, &ai), dffs(&comp, &ac));
+    assert!(!di.is_empty(), "sequential circuit must report DFF activity");
+    assert_eq!(di, dc, "DFF commit counts must agree across plan forms");
+}
+
+/// Naive per-sample reference: one `u64` value and one toggle counter
+/// per source net, evaluated straight off the netlist in topo order.
+/// Mirrors the simulator's contract — count at every producing store
+/// (masked), count register commits two-phase, never count the direct
+/// register fill of a reset.
+struct Oracle {
+    vals: Vec<u64>,
+    counts: Vec<u64>,
+    mask: u64,
+}
+
+impl Oracle {
+    fn new(n: &Netlist, lanes: usize) -> Oracle {
+        let mut vals = vec![0u64; n.n_nets()];
+        vals[CONST1 as usize] = !0u64;
+        let mask = if lanes >= 64 { !0u64 } else { (1u64 << lanes) - 1 };
+        Oracle { vals, counts: vec![0; n.n_nets()], mask }
+    }
+
+    fn eval(&mut self, n: &Netlist, order: &[usize]) {
+        for &ci in order {
+            let v = &self.vals;
+            let (y, new) = match n.cells[ci] {
+                Cell::Inv { a, y } => (y, !v[a as usize]),
+                Cell::Buf { a, y } => (y, v[a as usize]),
+                Cell::Nand2 { a, b, y } => (y, !(v[a as usize] & v[b as usize])),
+                Cell::Nor2 { a, b, y } => (y, !(v[a as usize] | v[b as usize])),
+                Cell::And2 { a, b, y } => (y, v[a as usize] & v[b as usize]),
+                Cell::Or2 { a, b, y } => (y, v[a as usize] | v[b as usize]),
+                Cell::Xor2 { a, b, y } => (y, v[a as usize] ^ v[b as usize]),
+                Cell::Xnor2 { a, b, y } => (y, !(v[a as usize] ^ v[b as usize])),
+                Cell::Mux2 { a, b, sel, y } => {
+                    let s = v[sel as usize];
+                    (y, (v[a as usize] & !s) | (v[b as usize] & s))
+                }
+                Cell::Dff { .. } => unreachable!("comb order contains a DFF"),
+            };
+            self.counts[y as usize] +=
+                ((new ^ self.vals[y as usize]) & self.mask).count_ones() as u64;
+            self.vals[y as usize] = new;
+        }
+    }
+
+    fn step(&mut self, n: &Netlist, order: &[usize]) {
+        self.eval(n, order);
+        // Two-phase commit: capture every next-q from pre-commit values
+        // (a register may feed another register's data), then count the
+        // transition and overwrite.
+        let mut next = Vec::new();
+        for c in &n.cells {
+            if let Cell::Dff { d, q, en, rst, rstval } = *c {
+                let rv = if rstval { !0u64 } else { 0u64 };
+                let v = &self.vals;
+                let held = (v[en as usize] & v[d as usize]) | (!v[en as usize] & v[q as usize]);
+                next.push((q, (v[rst as usize] & rv) | (!v[rst as usize] & held)));
+            }
+        }
+        for (q, nq) in next {
+            self.counts[q as usize] +=
+                ((nq ^ self.vals[q as usize]) & self.mask).count_ones() as u64;
+            self.vals[q as usize] = nq;
+        }
+    }
+
+    fn reset(&mut self, n: &Netlist, order: &[usize]) {
+        // Registers jump straight to their reset value, uncounted (a
+        // forced reset is not switching activity); the propagation that
+        // follows is counted like any other eval.
+        for c in &n.cells {
+            if let Cell::Dff { q, rstval, .. } = *c {
+                self.vals[q as usize] = if rstval { !0u64 } else { 0u64 };
+            }
+        }
+        self.eval(n, order);
+    }
+}
+
+#[test]
+fn interpreted_counts_match_naive_oracle_on_random_netlists() {
+    check("interpreted toggle counts == naive per-net oracle", 30, |g| {
+        let n = rand_netlist(g);
+        let order = n.topo_order();
+        // Partial populations exercise the lane mask: garbage above
+        // `lanes` must propagate but never count.
+        let lanes = g.usize_in(1..=64);
+        let plan = Arc::new(SimPlan::new(&n));
+        let mut sim = Sim::from_plan(plan.clone());
+        let mut off = Sim::from_plan(plan.clone());
+        sim.set_activity(true);
+        sim.activity_begin_block(lanes);
+        let mut oracle = Oracle::new(&n, lanes);
+        let mut r = Rng::new(g.rng().next_u64());
+        let mut ok = true;
+        for _cycle in 0..10 {
+            for port in &n.inputs {
+                for &bit in &port.bits {
+                    let v = r.next_u64();
+                    sim.set(bit, v);
+                    off.set(bit, v);
+                    oracle.vals[bit as usize] = v;
+                }
+            }
+            match r.below(8) {
+                0 => {
+                    sim.reset();
+                    off.reset();
+                    oracle.reset(&n, &order);
+                }
+                1 => {
+                    sim.eval();
+                    off.eval();
+                    oracle.eval(&n, &order);
+                }
+                _ => {
+                    sim.step();
+                    off.step();
+                    oracle.step(&n, &order);
+                }
+            }
+            // Counting must never perturb the simulation itself.
+            for port in &n.outputs {
+                for &bit in &port.bits {
+                    ok = ok && sim.get(bit) == off.get(bit);
+                }
+            }
+        }
+        let act = sim.take_activity();
+        ok = ok && act.total_toggles() == oracle.counts.iter().sum::<u64>();
+        // Per-gate rows: comb cells in topo order, then DFFs in cell
+        // order — exactly how `gate_activity` resolves an interpreted
+        // plan's counters.
+        let mut want: Vec<u64> = order
+            .iter()
+            .map(|&ci| oracle.counts[n.cells[ci].output() as usize])
+            .collect();
+        for c in &n.cells {
+            if c.is_seq() {
+                want.push(oracle.counts[c.output() as usize]);
+            }
+        }
+        let got: Vec<u64> = plan.gate_activity(&act).iter().map(|g| g.toggles).collect();
+        ok && got == want
+    });
+}
+
+#[test]
+fn activity_runs_predict_identically_to_plain_runs() {
+    let m = rand_model(23, 8, 4, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let n = 130usize;
+    let mut r = Rng::new(6);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+
+    let seq = seq_multicycle::generate(&m, &active);
+    let plan = Arc::new(SimPlan::compiled(&seq.netlist));
+    let want = testbench::run_sequential_plan(&seq, &plan, &xs, n, m.features, 2, 2);
+    let (got, act) =
+        testbench::run_sequential_plan_activity(&seq, &plan, &xs, n, m.features, 2, 2, None);
+    assert_eq!(got, want, "sequential: counters changed predictions");
+    assert!(!act.is_empty() && act.total_toggles() > 0);
+
+    let comb = combinational::generate(&m, &active);
+    let plan = Arc::new(SimPlan::compiled(&comb.netlist));
+    let want = testbench::run_combinational_plan(&comb, &plan, &xs, n, m.features, 2, 2);
+    let (got, act) =
+        testbench::run_combinational_plan_activity(&comb, &plan, &xs, n, m.features, 2, 2, None);
+    assert_eq!(got, want, "combinational: counters changed predictions");
+    assert!(act.total_toggles() > 0);
+    // Combinational counts carry the same width/thread invariance.
+    let rows = |a: &printed_mlp::sim::Activity| -> Vec<u64> {
+        plan.gate_activity(a).iter().map(|g| g.toggles).collect()
+    };
+    let base = rows(&act);
+    let (_, wide) =
+        testbench::run_combinational_plan_activity(&comb, &plan, &xs, n, m.features, 3, 8, None);
+    assert_eq!(rows(&wide), base, "combinational counts drifted across W/threads");
+}
+
+#[test]
+fn dynamic_energy_never_grows_with_more_approximated_neurons() {
+    // Nested approximation masks over one model: every approximated
+    // neuron swaps its multi-cycle MAC hardware for a single-cycle
+    // table lookup, so measured switching energy must not increase.
+    let m = rand_model(19, 24, 6, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let n = 128usize;
+    let mut r = Rng::new(8);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &xs, n, &fm);
+
+    let masks: [Vec<bool>; 3] = [
+        vec![false; m.hidden],
+        (0..m.hidden).map(|i| i < m.hidden / 2).collect(),
+        vec![true; m.hidden],
+    ];
+    let mut last = f64::INFINITY;
+    for approx in masks {
+        let circ = hybrid::generate(&m, &active, &approx, &tables);
+        let plan = circ.sim_plan();
+        let (_, act) =
+            testbench::run_sequential_plan_activity(&circ, &plan, &xs, n, m.features, 1, 0, None);
+        let rep = tech::report(&circ.netlist);
+        let er = tech::energy_report(
+            &rep,
+            &plan.gate_activity(&act),
+            circ.cycles + 1,
+            m.seq_clock_ms,
+            n as u64,
+        );
+        assert!(er.dynamic_mj > 0.0, "a live run must price some switching");
+        assert!(
+            er.dynamic_mj <= last,
+            "approximating more neurons added dynamic energy: {} > {last}",
+            er.dynamic_mj
+        );
+        last = er.dynamic_mj;
+    }
+}

@@ -13,7 +13,12 @@
 //!   faults are excluded because inversion fusing legitimately gives
 //!   the two plan forms different internal wire values;
 //! - a stuck-at fault forces the named net's value on random
-//!   (mini-propcheck) netlists, on both plan forms.
+//!   (mini-propcheck) netlists, on both plan forms;
+//! - activity profiling (per-net toggle counters) composes with fault
+//!   injection: faulted predictions are bit-identical with counters on
+//!   or off, and the counts themselves are deterministic — counters
+//!   observe each producing store *before* the scheduled fault mask is
+//!   applied (see sim/fault.rs), so the ordering is pinned by test.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -249,4 +254,60 @@ fn prop_stuck_at_forces_value_on_random_netlists() {
             s.get(y[bit]) == want
         })
     });
+}
+
+#[test]
+fn activity_profiling_composes_with_fault_injection() {
+    // Toggle counters observe each producing store before the scheduled
+    // fault mask lands on it (sim/fault.rs), and the fault machinery
+    // never reads the counters — so turning profiling on under faults
+    // must not move a single prediction, at any width or thread count,
+    // and the counts themselves must be run-to-run deterministic.
+    let m = synth::rand_model(47, 9, 5, 3);
+    let active: Vec<usize> = (0..m.features).collect();
+    let circ = seq_multicycle::generate(&m, &active);
+    let plan = circ.sim_plan();
+    let fl = FaultList::sample(&plan, &circ.netlist, &default_roles(), 7, 5, 0.2, 23);
+    assert!(fl.stuck_count() > 0 && fl.transient_count() > 0);
+
+    let n = 300; // partial tail block under every width
+    let mut r = Rng::new(81);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let (ref_preds, ref_act) =
+        testbench::run_sequential_plan_activity(&circ, &plan, &xs, n, m.features, 1, 1, Some(&fl));
+    assert!(ref_act.total_toggles() > 0, "faulted run still toggles nets");
+    for w in [1usize, 2, 4, 8] {
+        for threads in [1usize, 3] {
+            let off = testbench::run_sequential_plan_faulted(
+                &circ,
+                &plan,
+                &xs,
+                n,
+                m.features,
+                threads,
+                w,
+                Some(&fl),
+            );
+            let (on, act) = testbench::run_sequential_plan_activity(
+                &circ,
+                &plan,
+                &xs,
+                n,
+                m.features,
+                threads,
+                w,
+                Some(&fl),
+            );
+            assert_eq!(
+                off, on,
+                "counters changed faulted predictions at W={w}, threads={threads}"
+            );
+            assert_eq!(off, ref_preds, "faulted run diverged at W={w}, threads={threads}");
+            let (a, b): (Vec<u64>, Vec<u64>) = (
+                plan.gate_activity(&ref_act).iter().map(|g| g.toggles).collect(),
+                plan.gate_activity(&act).iter().map(|g| g.toggles).collect(),
+            );
+            assert_eq!(a, b, "faulted toggle counts diverged at W={w}, threads={threads}");
+        }
+    }
 }

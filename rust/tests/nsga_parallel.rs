@@ -10,7 +10,9 @@
 //!
 //! Also covers the NSGA-II structural invariants: non-dominated-sort
 //! rank correctness on hand-built and random fronts, crowding-distance
-//! boundary handling, and seed determinism.
+//! boundary handling, and seed determinism — including 3-objective
+//! tuples, the shape `--energy-objective` produces (`approx::
+//! explore_energy` appends negated measured energy as objectives[2]).
 //!
 //! Artifact-free (random `QuantModel`s), so this suite runs in tier-1.
 
@@ -303,4 +305,126 @@ fn run_is_seed_deterministic_and_seed_sensitive() {
             assert!(!dominates(&x.objectives, &y.objectives) || x.genome == y.genome);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Third objective: measured energy (--energy-objective)
+// ---------------------------------------------------------------------------
+
+/// Deterministic stand-in for the coordinator's measured-energy closure:
+/// mask-dependent, accuracy-independent, and cheap.  The real pipeline
+/// plugs circuit synthesis + activity-profiled simulation in here; the
+/// search machinery under test is identical either way.
+fn fake_energy(mask: &[u8]) -> f64 {
+    mask.iter()
+        .enumerate()
+        .map(|(i, &b)| if b == 0 { (i + 2) as f64 } else { 0.3 })
+        .sum()
+}
+
+#[test]
+fn energy_objective_front_bit_identical_serial_vs_batched() {
+    let m = rand_model(36, 12, 7, 3);
+    let split = rand_split(13, &m, 64);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    let cfg = NsgaConfig {
+        pop_size: 14,
+        generations: 8,
+        ..Default::default()
+    };
+    let serial = approx::explore_energy(
+        m.hidden,
+        &cfg,
+        |mask| m.accuracy(&split.xs, &split.ys, &fm, mask, &tables),
+        &fake_energy,
+    );
+    assert!(!serial.is_empty());
+    for ind in &serial {
+        assert_eq!(ind.objectives.len(), 3, "energy objective makes 3-tuples");
+        let mask: Vec<u8> = ind.genome.iter().map(|&b| b as u8).collect();
+        assert_eq!(
+            ind.objectives[2],
+            -fake_energy(&mask),
+            "objectives[2] is the negated energy of the genome's mask"
+        );
+    }
+    for threads in [1usize, 3, 8] {
+        let (parallel, stats) =
+            approx::explore_parallel_energy(&m, &split, &fm, &tables, &cfg, threads, &fake_energy);
+        assert_fronts_identical(&serial, &parallel, &format!("3-obj, {threads} threads"));
+        assert_eq!(stats.evals + stats.cache_hits, stats.requested);
+    }
+}
+
+#[test]
+fn memo_accounting_holds_with_energy_objective_on() {
+    // 6 genome bits -> 64 possible masks, but pop 14 × (6 + 1 initial)
+    // generations = 98 requested evaluations: the 3-tuple memo *must*
+    // record hits, and two runs at different thread counts must agree on
+    // every counter (the cache key is the genome, never the thread).
+    let m = rand_model(37, 10, 6, 3);
+    let split = rand_split(17, &m, 48);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    let cfg = NsgaConfig {
+        pop_size: 14,
+        generations: 6,
+        ..Default::default()
+    };
+    let run = |threads: usize| {
+        approx::explore_parallel_energy(&m, &split, &fm, &tables, &cfg, threads, &fake_energy)
+    };
+    let (a, sa) = run(4);
+    let (b, sb) = run(2);
+    assert_fronts_identical(&a, &b, "3-obj memo, 4 vs 2 threads");
+    assert_eq!(sa.requested, cfg.pop_size * (cfg.generations + 1));
+    assert_eq!(sa.requested, sb.requested);
+    assert_eq!(sa.evals, sb.evals);
+    assert_eq!(sa.cache_hits, sb.cache_hits);
+    assert_eq!(sa.evals + sa.cache_hits, sa.requested);
+    assert!(
+        sa.cache_hits > 0,
+        "98 requests over 64 possible genomes must hit the memo"
+    );
+    assert!(sa.hit_rate() > 0.0 && sa.hit_rate() < 1.0);
+}
+
+#[test]
+fn rank_and_crowding_on_three_objective_tuples() {
+    // Hand-built 3-objective population with known domination structure
+    // (maximization on every axis, as in (#approx, acc, -energy)).
+    let mut pop = vec![
+        mk(vec![3.0, 2.0, 1.0]), // front 0 — best on objective 0
+        mk(vec![1.0, 3.0, 2.0]), // front 0 — best on objective 1
+        mk(vec![2.0, 1.0, 3.0]), // front 0 — best on objective 2
+        mk(vec![2.0, 2.0, 1.0]), // front 1 — dominated by [3,2,1] only
+        mk(vec![1.0, 1.0, 1.0]), // front 2 — dominated by [2,2,1]
+        mk(vec![0.0, 0.0, 0.0]), // front 3 — dominated by everything
+    ];
+    let fronts = non_dominated_sort(&mut pop);
+    assert_eq!(fronts.len(), 4);
+    assert_eq!(fronts[0], vec![0, 1, 2]);
+    assert_eq!(fronts[1], vec![3]);
+    assert_eq!(fronts[2], vec![4]);
+    assert_eq!(fronts[3], vec![5]);
+    for (rank, front) in fronts.iter().enumerate() {
+        for &i in front {
+            assert_eq!(pop[i].rank, rank);
+        }
+    }
+
+    // Crowding over 3-tuples: members that are extreme on *any* objective
+    // go infinite; members interior on every objective stay finite > 0.
+    let mut pop = vec![
+        mk(vec![0.0, 6.0, 5.0]), // extreme on all three axes
+        mk(vec![1.0, 4.0, 4.0]), // interior everywhere
+        mk(vec![4.0, 1.0, 2.0]), // interior everywhere
+        mk(vec![6.0, 0.0, 1.0]), // extreme on all three axes
+    ];
+    let front: Vec<usize> = (0..4).collect();
+    crowding_distance(&mut pop, &front);
+    assert!(pop[0].crowding.is_infinite() && pop[3].crowding.is_infinite());
+    assert!(pop[1].crowding.is_finite() && pop[1].crowding > 0.0);
+    assert!(pop[2].crowding.is_finite() && pop[2].crowding > 0.0);
 }
