@@ -99,6 +99,8 @@ USAGE:
                         [--slo-ms MS] [--seed N] [--backend native|gatesim]
                         [--sim-lanes W] [--synthetic] [--trace FILE]
                         [--trace-out FILE] [--config FILE]
+                        [--listen ADDR:PORT] [--classes gold,silver,..]
+                        [--shed-late] [--reload S] [--canary-frac F]
   printed-mlp campaign  [serve flags] [--archs ours,hybrid,comb]
                         [--fault-levels 0:0,4:0,16:0,4:4] [--flip-rate P]
                         [--fault-seed N]
@@ -108,6 +110,17 @@ Backends: auto prefers PJRT and falls back to the native functional model;
 gatesim validates on the sharded gate-level netlist simulator.
 Serve hosts every --datasets model concurrently behind per-model bounded
 batching queues drained by a --workers pool; overflow is shed and counted.
+--listen ADDR:PORT puts a hand-rolled non-blocking TCP frontend in front
+(length-prefixed binary frames; port 0 picks an ephemeral port) and turns
+the sensors into open-loop socket clients.  --classes assigns each model a
+tenant SLO class positionally (gold|silver|bronze; unlisted = gold):
+overload sheds bronze first via per-class admission ceilings, and workers
+drain gold queues first.  --shed-late refuses queued frames already older
+than --slo-ms instead of evaluating them (counted separately as `late`).
+--reload S hot-reloads every model at S seconds: the candidate is built
+and warmed off the request path, then atomically swapped in with zero
+downtime; with --canary-frac F the candidate first shadows that fraction
+of live batches and prediction mismatches are counted before promotion.
 Scenarios: steady (fixed rate, round-robin), bursty (Poisson on/off),
 ramp (0.1x -> 2x rate over the run), fanin (each sensor window feeds every
 model), trace (replay a recorded arrival trace — --trace FILE, or a
@@ -544,6 +557,21 @@ fn apply_serve_flags(flags: &Flags, conf: &mut Config) {
     if let Some(v) = flags.get("trace-out") {
         conf.set("serve.trace_out", v);
     }
+    if let Some(v) = flags.get("classes") {
+        conf.set("serve.classes", v);
+    }
+    if flags.has("shed-late") {
+        conf.set("serve.shed_late", "true");
+    }
+    if let Some(v) = flags.get("listen") {
+        conf.set("serve.listen", v);
+    }
+    if let Some(v) = flags.get("reload") {
+        conf.set("serve.reload_secs", v);
+    }
+    if let Some(v) = flags.get("canary-frac") {
+        conf.set("serve.canary_frac", v);
+    }
 }
 
 fn load_config(flags: &Flags) -> Result<Config> {
@@ -589,6 +617,29 @@ fn cmd_serve(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     let rep = server::run(store, &cfg)?;
     let md = report::serve_report(&rep, &store.results_dir())?;
     println!("{md}");
+    if let Some(ing) = &rep.ingress {
+        println!(
+            "ingress {}: {} conns, {} frames in, {} refused, {} malformed, client {}/{} answered, {} lost",
+            ing.listen,
+            ing.connections,
+            ing.frames_in,
+            ing.refused,
+            ing.malformed,
+            ing.client_answered,
+            ing.client_sent,
+            ing.client_lost
+        );
+        // The socket boundary keeps the exactly-once contract: every
+        // accepted frame must come back as *some* response.  A nonzero
+        // lost count is a server bug — fail loudly (CI smoke relies on
+        // this exit code).
+        if ing.client_lost > 0 {
+            anyhow::bail!(
+                "ingress: {} accepted frames went unanswered",
+                ing.client_lost
+            );
+        }
+    }
     Ok(())
 }
 
@@ -811,6 +862,30 @@ mod tests {
         // Bad levels rejected.
         let args: Vec<String> = ["--fault-levels", "bogus"].iter().map(|s| s.to_string()).collect();
         assert!(campaign_config(&Flags::parse(&args).unwrap()).is_err());
+    }
+
+    #[test]
+    fn serve_ingress_flags_reach_config() {
+        use crate::server::SloClass;
+        let args: Vec<String> = [
+            "--listen", "127.0.0.1:0", "--classes", "gold,bronze", "--shed-late", "--reload",
+            "0.2", "--canary-frac", "0.5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let f = Flags::parse(&args).unwrap();
+        let cfg = serve_config(&f).unwrap();
+        assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.classes, vec![SloClass::Gold, SloClass::Bronze]);
+        assert!(cfg.shed_late);
+        assert_eq!(cfg.reload_at, Some(std::time::Duration::from_secs_f64(0.2)));
+        assert_eq!(cfg.canary_frac, 0.5);
+        // Bad class names / canary fractions are rejected.
+        let bad: Vec<String> = ["--classes", "platinum"].iter().map(|s| s.to_string()).collect();
+        assert!(serve_config(&Flags::parse(&bad).unwrap()).is_err());
+        let bad: Vec<String> = ["--canary-frac", "2"].iter().map(|s| s.to_string()).collect();
+        assert!(serve_config(&Flags::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

@@ -41,6 +41,11 @@
 //! synthetic = false       # artifact-free deterministic models
 //! trace = day.trace       # trace scenario: replay this file
 //! trace_out = out.trace   # write the replayed/synthesized trace
+//! classes = gold, silver, bronze  # per-model SLO class (positional)
+//! shed_late = false       # refuse queued frames already past slo_ms
+//! listen = 127.0.0.1:7070 # TCP frontend; sensors become socket clients
+//! reload_secs = 1.5       # stage+promote a hot reload at this offset
+//! canary_frac = 0.1       # shadow this fraction of batches on the candidate
 //!
 //! [campaign]
 //! archs = ours, hybrid, comb
@@ -303,6 +308,29 @@ impl Config {
         if let Some(p) = self.get("serve.trace_out") {
             cfg.trace_out = Some(std::path::PathBuf::from(p));
         }
+        if let Some(cs) = self.get_list("serve.classes") {
+            cfg.classes = cs
+                .iter()
+                .map(|c| c.parse().with_context(|| format!("serve.classes: {c}")))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(b) = self.get_bool("serve.shed_late")? {
+            cfg.shed_late = b;
+        }
+        if let Some(addr) = self.get("serve.listen") {
+            cfg.listen = Some(addr.to_string());
+        }
+        if let Some(v) = self.get_f64("serve.reload_secs")? {
+            ensure!(v >= 0.0, "serve.reload_secs: {v} must be >= 0");
+            cfg.reload_at = Some(Duration::from_secs_f64(v));
+        }
+        if let Some(v) = self.get_f64("serve.canary_frac")? {
+            ensure!(
+                (0.0..=1.0).contains(&v),
+                "serve.canary_frac: {v} outside [0, 1]"
+            );
+            cfg.canary_frac = v;
+        }
         Ok(cfg)
     }
 
@@ -471,6 +499,31 @@ mod tests {
         // Defaults: no trace files.
         let d = Config::default().serve().unwrap();
         assert!(d.trace.is_none() && d.trace_out.is_none());
+    }
+
+    #[test]
+    fn serve_ingress_keys_parse_and_validate() {
+        use crate::server::SloClass;
+        let c = Config::parse(
+            "[serve]\nclasses = gold, bronze, silver\nshed_late = true\n\
+             listen = 127.0.0.1:7070\nreload_secs = 1.5\ncanary_frac = 0.25\n",
+        )
+        .unwrap();
+        let s = c.serve().unwrap();
+        assert_eq!(s.classes, vec![SloClass::Gold, SloClass::Bronze, SloClass::Silver]);
+        assert!(s.shed_late);
+        assert_eq!(s.listen.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(s.reload_at, Some(Duration::from_secs_f64(1.5)));
+        assert_eq!(s.canary_frac, 0.25);
+        // Defaults: classless, in-process, no reload, canary off.
+        let d = Config::default().serve().unwrap();
+        assert!(d.classes.is_empty() && !d.shed_late);
+        assert!(d.listen.is_none() && d.reload_at.is_none());
+        assert_eq!(d.canary_frac, 0.0);
+        // Garbage rejected.
+        assert!(Config::parse("[serve]\nclasses = platinum\n").unwrap().serve().is_err());
+        assert!(Config::parse("[serve]\ncanary_frac = 1.5\n").unwrap().serve().is_err());
+        assert!(Config::parse("[serve]\nreload_secs = -1\n").unwrap().serve().is_err());
     }
 
     #[test]

@@ -36,12 +36,18 @@
 //!   across lane widths and thread counts.
 //! - [`coordinator`] — pipeline orchestration across datasets.
 //! - [`server`] — the multi-tenant model server: [`server::ModelRegistry`]
-//!   (per-dataset artifacts loaded once, shared read-only), per-model
-//!   dynamic-batching queues with bounded capacity and shed counters
-//!   drained by a worker pool, scenario-driven load generation
-//!   (steady / bursty / ramp / multi-sensory fanin / recorded trace),
-//!   and the [`server::campaign`] fault-injection sweep reporting
-//!   accuracy degradation and SLO impact per architecture.
+//!   (per-dataset artifacts loaded once, shared read-only) hosted in
+//!   hot-swappable versioned [`server::ModelSlot`]s (zero-downtime
+//!   reload with optional canary shadowing), per-model dynamic-batching
+//!   queues with bounded capacity, per-tenant SLO-class admission
+//!   ceilings (gold/silver/bronze — overload sheds bronze first) and
+//!   deadline shedding, drained gold-first by a worker pool; an optional
+//!   hand-rolled non-blocking TCP ingress ([`server::frontend`], binary
+//!   length-prefixed frames, graceful drain) with open-loop socket
+//!   clients, scenario-driven load generation (steady / bursty / ramp /
+//!   multi-sensory fanin / recorded trace), and the [`server::campaign`]
+//!   fault-injection sweep reporting accuracy degradation and SLO impact
+//!   per architecture.
 //! - [`report`] — table/figure emitters for the paper's evaluation.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and

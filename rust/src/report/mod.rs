@@ -307,20 +307,23 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
     );
     let _ = writeln!(
         md,
-        "| Model | requests | answered | errors | shed | batches | mean batch | fill | req/s | p50 ms | p99 ms | SLO>{:.0}ms | accuracy |",
+        "| Model | class | v | requests | answered | errors | shed | late | batches | mean batch | fill | req/s | p50 ms | p99 ms | SLO>{:.0}ms | canary | accuracy |",
         rep.models.first().map(|m| m.slo_ms).unwrap_or(0.0)
     );
-    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(md, "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     let mut rows = Vec::new();
     for m in &rep.models {
         let _ = writeln!(
             md,
-            "| {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {:.0} | {:.2} | {:.2} | {} | {:.3} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {:.0} | {:.2} | {:.2} | {} | {}/{} | {:.3} |",
             m.name,
+            m.class.label(),
+            m.version,
             m.requests,
             m.answered,
             m.errors,
             m.shed,
+            m.late,
             m.batches,
             m.mean_batch,
             m.fill,
@@ -328,15 +331,20 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
             m.p50_ms,
             m.p99_ms,
             m.slo_violations,
+            m.canary_mismatches,
+            m.canary_checked,
             m.accuracy
         );
         rows.push(format!(
-            "{},{},{},{},{},{},{:.2},{:.4},{:.1},{:.3},{:.3},{},{:.4}",
+            "{},{},{},{},{},{},{},{},{},{:.2},{:.4},{:.1},{:.3},{:.3},{},{},{},{:.4}",
             m.name,
+            m.class.label(),
+            m.version,
             m.requests,
             m.answered,
             m.errors,
             m.shed,
+            m.late,
             m.batches,
             m.mean_batch,
             m.fill,
@@ -344,23 +352,60 @@ pub fn serve_report(rep: &crate::server::ServerReport, results_dir: &Path) -> Re
             m.p50_ms,
             m.p99_ms,
             m.slo_violations,
+            m.canary_checked,
+            m.canary_mismatches,
             m.accuracy
         ));
     }
     let _ = writeln!(
         md,
-        "\nTotals: **{}** requests, **{}** answered, **{}** errored, **{}** shed, **{:.0}** req/s across {} models.",
+        "\nTotals: **{}** requests, **{}** answered, **{}** errored, **{}** shed, **{}** late, **{:.0}** req/s across {} models.",
         rep.total_requests(),
         rep.total_answered(),
         rep.total_errors(),
         rep.total_shed(),
+        rep.total_late(),
         rep.total_rps(),
         rep.models.len()
     );
+    let classes = rep.class_rows();
+    if classes.len() > 1 {
+        let _ = writeln!(md, "\n| Class | models | requests | answered | shed | late | SLO viol | worst p99 ms |");
+        let _ = writeln!(md, "|---|---|---|---|---|---|---|---|");
+        for c in &classes {
+            let _ = writeln!(
+                md,
+                "| {} | {} | {} | {} | {} | {} | {} | {:.2} |",
+                c.class.label(),
+                c.models,
+                c.requests,
+                c.answered,
+                c.shed,
+                c.late,
+                c.slo_violations,
+                c.p99_ms
+            );
+        }
+    }
+    if let Some(ing) = &rep.ingress {
+        let _ = writeln!(
+            md,
+            "\nIngress {}: **{}** connections, **{}** frames in, **{}** refused, **{}** malformed, **{}** deadline-closed; clients sent **{}**, answered **{}**, lost **{}**.",
+            ing.listen,
+            ing.connections,
+            ing.frames_in,
+            ing.refused,
+            ing.malformed,
+            ing.deadline_closed,
+            ing.client_sent,
+            ing.client_answered,
+            ing.client_lost
+        );
+    }
     write_csv(
         results_dir,
         "serve.csv",
-        "model,requests,answered,errors,shed,batches,mean_batch,fill,rps,p50_ms,p99_ms,slo_violations,accuracy",
+        "model,class,version,requests,answered,errors,shed,late,batches,mean_batch,fill,rps,p50_ms,p99_ms,slo_violations,canary_checked,canary_mismatches,accuracy",
         &rows,
     )?;
     Ok(md)
@@ -471,50 +516,100 @@ mod tests {
 
     #[test]
     fn serve_report_renders_and_writes_csv() {
-        use crate::server::{ModelReport, Scenario, ServerReport};
+        use crate::server::{IngressReport, ModelReport, Scenario, ServerReport, SloClass};
         let rep = ServerReport {
             backend: "native",
             scenario: Scenario::Steady,
             workers: 2,
             elapsed_s: 1.0,
-            models: vec![ModelReport {
-                name: "toy".into(),
-                requests: 10,
-                answered: 9,
-                errors: 0,
-                shed: 1,
-                batches: 3,
-                mean_batch: 3.0,
-                fill: 0.75,
-                throughput_rps: 9.0,
-                p50_ms: 1.5,
-                p99_ms: 4.0,
-                slo_ms: 50.0,
-                slo_violations: 0,
-                accuracy: 1.0,
-            }],
+            models: vec![
+                ModelReport {
+                    name: "toy".into(),
+                    class: SloClass::Gold,
+                    version: 2,
+                    requests: 10,
+                    answered: 9,
+                    errors: 0,
+                    shed: 1,
+                    late: 0,
+                    batches: 3,
+                    mean_batch: 3.0,
+                    fill: 0.75,
+                    throughput_rps: 9.0,
+                    p50_ms: 1.5,
+                    p99_ms: 4.0,
+                    slo_ms: 50.0,
+                    slo_violations: 0,
+                    canary_checked: 5,
+                    canary_mismatches: 0,
+                    accuracy: 1.0,
+                },
+                ModelReport {
+                    name: "bkg".into(),
+                    class: SloClass::Bronze,
+                    version: 1,
+                    requests: 8,
+                    answered: 5,
+                    errors: 0,
+                    shed: 2,
+                    late: 1,
+                    batches: 2,
+                    mean_batch: 2.5,
+                    fill: 1.0,
+                    throughput_rps: 5.0,
+                    p50_ms: 2.0,
+                    p99_ms: 9.0,
+                    slo_ms: 50.0,
+                    slo_violations: 1,
+                    canary_checked: 0,
+                    canary_mismatches: 0,
+                    accuracy: 0.8,
+                },
+            ],
+            ingress: Some(IngressReport {
+                listen: "127.0.0.1:9".into(),
+                connections: 4,
+                frames_in: 18,
+                refused: 0,
+                malformed: 0,
+                deadline_closed: 0,
+                client_sent: 18,
+                client_answered: 18,
+                client_lost: 0,
+            }),
         };
         let dir = std::env::temp_dir().join(format!("pmlp_serve_rep_{}", std::process::id()));
         let md = serve_report(&rep, &dir).unwrap();
         assert!(md.contains("steady"));
-        assert!(md.contains("| toy | 10 | 9 | 0 | 1 |"));
-        assert!(md.contains("**1** shed"));
+        assert!(md.contains("| toy | gold | 2 | 10 | 9 | 0 | 1 | 0 |"));
+        assert!(md.contains("| bkg | bronze | 1 | 8 | 5 | 0 | 2 | 1 |"));
+        assert!(md.contains("**3** shed"));
+        assert!(md.contains("**1** late"));
         assert!(md.contains("**0** errored"));
+        // Per-class table, gold first; ingress totals line.
+        assert!(md.contains("| gold | 1 | 10 |"));
+        assert!(md.contains("| bronze | 1 | 8 |"));
+        assert!(md.contains("Ingress 127.0.0.1:9"));
+        assert!(md.contains("lost **0**"));
         let csv = std::fs::read_to_string(dir.join("serve.csv")).unwrap();
-        assert!(csv.starts_with("model,requests,answered,errors,shed"));
-        assert!(csv.contains("toy,10,9,0,1,3"));
+        assert!(csv.starts_with("model,class,version,requests,answered,errors,shed,late"));
+        assert!(csv.contains("toy,gold,2,10,9,0,1,0,3"));
+        assert!(csv.contains("bkg,bronze,1,8,5,0,2,1,2"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn campaign_report_renders_and_writes_csv() {
-        use crate::server::{ArchKind, CampaignReport, CampaignRow, ModelReport, Scenario};
+        use crate::server::{ArchKind, CampaignReport, CampaignRow, ModelReport, Scenario, SloClass};
         let serve = ModelReport {
             name: "toy".into(),
+            class: SloClass::Gold,
+            version: 1,
             requests: 20,
             answered: 20,
             errors: 0,
             shed: 0,
+            late: 0,
             batches: 4,
             mean_batch: 5.0,
             fill: 1.0,
@@ -523,6 +618,8 @@ mod tests {
             p99_ms: 2.0,
             slo_ms: 50.0,
             slo_violations: 0,
+            canary_checked: 0,
+            canary_mismatches: 0,
             accuracy: 0.9,
         };
         let rep = CampaignReport {

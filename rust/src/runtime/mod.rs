@@ -322,6 +322,87 @@ impl<'m> Evaluator for NativeEvaluator<'m> {
     }
 }
 
+/// [`NativeEvaluator`] that owns its model, so it is `'static` and can
+/// back a hot-swappable server model slot whose versions outlive any
+/// registry borrow.  Bit-identical to the borrowing variant.
+pub struct OwnedNativeEvaluator {
+    pub model: QuantModel,
+}
+
+impl Evaluator for OwnedNativeEvaluator {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn predict(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<Vec<i32>> {
+        let mut out = Vec::new();
+        self.model.predict_rows_into(xs, n, feat_mask, approx_mask, tables, &mut out);
+        Ok(out)
+    }
+
+    fn predict_into(
+        &self,
+        xs: &[u8],
+        n: usize,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        self.model.predict_rows_into(xs, n, feat_mask, approx_mask, tables, out);
+        Ok(())
+    }
+
+    fn accuracy(
+        &self,
+        split: &Split,
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Result<f64> {
+        Ok(self
+            .model
+            .accuracy(&split.xs, &split.ys, feat_mask, approx_mask, tables))
+    }
+}
+
+/// Build a thread-shareable evaluator that owns all of its state
+/// (`'static`) — what the hot-reload model slots require, since a staged
+/// version outlives any registry borrow.  Native clones the model;
+/// gatesim already owns its clone.  PJRT (thread-bound handles) and
+/// unresolved `Auto` are rejected.
+pub fn owned_evaluator(
+    backend: Backend,
+    model: &QuantModel,
+    opts: &EvalOpts,
+) -> Result<Box<dyn Evaluator + Send + Sync>> {
+    Ok(match backend {
+        Backend::Native => Box::new(OwnedNativeEvaluator {
+            model: model.clone(),
+        }),
+        Backend::GateSim => {
+            let threads = if opts.sim_threads == 0 {
+                pool::default_threads()
+            } else {
+                opts.sim_threads
+            };
+            Box::new(GateSimEvaluator::with_opts(model, threads, opts.sim_lanes))
+        }
+        Backend::Pjrt => bail!(
+            "PJRT evaluator handles are thread-bound (!Send) and cannot back a \
+             hot-swappable model slot"
+        ),
+        Backend::Auto => bail!("resolve Backend::Auto to a concrete backend before building"),
+    })
+}
+
 /// Which circuit family [`GateSimEvaluator`] generates — the fault
 /// campaign sweeps all of them over the same model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,165 @@
+//! Per-tenant SLO classes and the admission policy that sheds overload
+//! in class order.
+//!
+//! Every hosted model (one tenant in the paper's multi-sensory story) is
+//! assigned an [`SloClass`] — `gold`, `silver`, or `bronze` — via
+//! `ServeConfig::classes` / the `serve.classes` config key / `--classes`.
+//! The class buys two things on the request path:
+//!
+//! - **Admission depth** ([`SloClass::admit_limit`]): each class may only
+//!   fill a fraction of the shared per-model queue capacity before its
+//!   pushes shed (gold 100%, silver 75%, bronze 50%).  Under overload the
+//!   shallow bronze queues hit their ceiling first, so bronze sheds
+//!   first and bronze queueing delay is bounded at half the gold depth.
+//! - **Drain priority** ([`drain_order`]): batcher workers sweep the
+//!   model queues in class-rank order, so when the pool is saturated the
+//!   gold queues are served first each sweep and gold tail latency stays
+//!   inside its SLO while bronze absorbs the backlog.
+//!
+//! Both effects are pure bookkeeping — no frame is ever reordered within
+//! a model's FIFO, and an unclassified model defaults to gold, which
+//! reproduces the pre-admission behavior exactly (full queue depth,
+//! registry drain order).
+
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Result};
+
+/// Per-tenant service class, best first.  `Ord` follows priority:
+/// `Gold < Silver < Bronze` sorts gold-first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    Gold,
+    Silver,
+    Bronze,
+}
+
+/// Every class, in drain-priority order (the report iterates this).
+pub const CLASS_ORDER: [SloClass; 3] = [SloClass::Gold, SloClass::Silver, SloClass::Bronze];
+
+impl SloClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            SloClass::Gold => "gold",
+            SloClass::Silver => "silver",
+            SloClass::Bronze => "bronze",
+        }
+    }
+
+    /// Drain priority rank: lower drains first.
+    pub fn rank(self) -> usize {
+        match self {
+            SloClass::Gold => 0,
+            SloClass::Silver => 1,
+            SloClass::Bronze => 2,
+        }
+    }
+
+    /// Fraction of the shared queue capacity this class may occupy
+    /// before admission sheds its pushes.
+    pub fn admit_frac(self) -> f64 {
+        match self {
+            SloClass::Gold => 1.0,
+            SloClass::Silver => 0.75,
+            SloClass::Bronze => 0.5,
+        }
+    }
+
+    /// Admission ceiling for a queue of `queue_cap` total slots: the
+    /// class fraction of the capacity, floored, but never below one slot
+    /// (a tenant that can never enqueue is a config bug, not a policy).
+    pub fn admit_limit(self, queue_cap: usize) -> usize {
+        let cap = queue_cap.max(1);
+        (((cap as f64) * self.admit_frac()).floor() as usize).clamp(1, cap)
+    }
+}
+
+impl FromStr for SloClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SloClass> {
+        Ok(match s {
+            "gold" | "g" => SloClass::Gold,
+            "silver" | "s" => SloClass::Silver,
+            "bronze" | "b" => SloClass::Bronze,
+            other => bail!("unknown SLO class `{other}` (want gold|silver|bronze)"),
+        })
+    }
+}
+
+/// Parse a `--classes`-style comma list (`gold,silver,bronze`).  Entries
+/// align positionally with the dataset list; a shorter list leaves the
+/// tail models gold ([`class_of`]).
+pub fn parse_classes(s: &str) -> Result<Vec<SloClass>> {
+    let classes: Vec<SloClass> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse())
+        .collect::<Result<_>>()?;
+    ensure!(!classes.is_empty(), "SLO classes: empty list");
+    Ok(classes)
+}
+
+/// Class of model index `i` under a configured class list: positional,
+/// with models past the end of the list defaulting to gold (so an empty
+/// list reproduces the classless server exactly).
+pub fn class_of(classes: &[SloClass], i: usize) -> SloClass {
+    classes.get(i).copied().unwrap_or(SloClass::Gold)
+}
+
+/// Priority drain order over `classes`: model indices sorted gold-first,
+/// stably, so same-class models keep their registry order and the
+/// workers' round-robin fairness within a class is preserved.
+pub fn drain_order(classes: &[SloClass]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..classes.len()).collect();
+    order.sort_by_key(|&i| classes[i].rank());
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip_and_rank_orders_gold_first() {
+        for c in CLASS_ORDER {
+            assert_eq!(c.label().parse::<SloClass>().unwrap(), c);
+        }
+        assert_eq!("g".parse::<SloClass>().unwrap(), SloClass::Gold);
+        assert!("platinum".parse::<SloClass>().is_err());
+        assert!(SloClass::Gold.rank() < SloClass::Silver.rank());
+        assert!(SloClass::Silver.rank() < SloClass::Bronze.rank());
+        assert!(SloClass::Gold < SloClass::Bronze, "Ord follows priority");
+    }
+
+    #[test]
+    fn admit_limits_shed_bronze_first() {
+        assert_eq!(SloClass::Gold.admit_limit(32), 32);
+        assert_eq!(SloClass::Silver.admit_limit(32), 24);
+        assert_eq!(SloClass::Bronze.admit_limit(32), 16);
+        // Never zero, never above the capacity.
+        assert_eq!(SloClass::Bronze.admit_limit(1), 1);
+        assert_eq!(SloClass::Gold.admit_limit(0), 1);
+    }
+
+    #[test]
+    fn parse_classes_and_positional_defaults() {
+        let cs = parse_classes("gold, bronze ,silver").unwrap();
+        assert_eq!(cs, vec![SloClass::Gold, SloClass::Bronze, SloClass::Silver]);
+        assert!(parse_classes("").is_err());
+        assert!(parse_classes("gold,chrome").is_err());
+        // Past-the-end models default to gold.
+        assert_eq!(class_of(&cs, 1), SloClass::Bronze);
+        assert_eq!(class_of(&cs, 7), SloClass::Gold);
+        assert_eq!(class_of(&[], 0), SloClass::Gold);
+    }
+
+    #[test]
+    fn drain_order_is_gold_first_and_stable() {
+        use SloClass::*;
+        let order = drain_order(&[Bronze, Gold, Silver, Gold, Bronze]);
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+        assert_eq!(drain_order(&[]), Vec::<usize>::new());
+    }
+}

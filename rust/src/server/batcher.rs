@@ -1,13 +1,19 @@
 //! Per-model dynamic-batching queues and the worker pool that drains
 //! them.
 //!
-//! Each hosted model owns one bounded [`BatchQueue`]; load-generator
-//! threads push [`Frame`]s and a pool of drain workers (reusing
+//! Each hosted model owns one bounded [`BatchQueue`]; producers (the
+//! in-process loadgen or the TCP [`frontend`](crate::server::frontend))
+//! push [`Frame`]s and a pool of drain workers (reusing
 //! [`pool::scope_map_with`] so per-worker scratch buffers are allocated
 //! once) pops up to `batch` frames at a time and runs them through the
-//! model's shared [`Evaluator`].  Backpressure is load shedding: a push
-//! into a full queue drops the frame and bumps the model's shed counter —
-//! the queue never blocks a sensor thread and never grows without bound.
+//! model slot's current [`Evaluator`].  Backpressure is load shedding: a
+//! push past the queue's admission ceiling answers the frame `Shed` and
+//! drops it — the queue never blocks a producer and never grows without
+//! bound.  The ceiling is per-tenant: gold admits the full capacity,
+//! silver 75%, bronze 50% ([`SloClass::admit_limit`]), so overload sheds
+//! bronze first, and workers sweep the queues gold-first
+//! ([`admission::drain_order`]) so gold tail latency holds under
+//! saturation.
 //!
 //! The linger rule is the classic dynamic-batching trade-off in one
 //! `if`: a worker takes a sub-full batch only once the oldest waiting
@@ -22,16 +28,30 @@
 //! burst pays for a partial block.  Per-batch lane-slot consumption is
 //! counted in [`ModelStats::lane_slots`], and `fill = answered /
 //! lane_slots` lands in the serve report.
+//!
+//! §Hot reload: workers resolve their model's [`ModelSlot`] version at
+//! the top of every iteration, so an atomic promote takes effect at the
+//! next batch boundary with zero downtime — in-flight batches finish on
+//! the version they started with.  When a candidate is staged and
+//! [`DrainConfig::canary_step`] is nonzero, a deterministic fraction of
+//! batches is shadowed on the candidate and answer mismatches against
+//! the incumbent are counted ([`ModelStats::canary_mismatches`]).
+//!
+//! Exactly-once accounting across all of this:
+//! `submitted = answered + shed + late + errors + still-queued`,
+//! and every accepted *network* frame gets exactly one response frame
+//! (`Ok`, `Shed`, `Late`, or `Error`).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::Evaluator;
-use crate::server::registry::ModelEntry;
+use crate::server::admission::{self, SloClass};
+use crate::server::frontend::{ConnShared, Status};
+use crate::server::registry::{ModelSlot, ModelVersion};
 use crate::util::pool;
 use crate::util::stats::Reservoir;
 
@@ -40,9 +60,58 @@ use crate::util::stats::Reservoir;
 pub struct Frame {
     /// Unique per run; lets tests assert exactly-once answering.
     pub id: u64,
-    /// Row index into the model's test split.
+    /// Model index this frame targets (echoed in network responses).
+    pub model: u16,
+    /// Row index into the model's test split (direct frames only).
     pub sample: usize,
+    /// Feature bytes carried by a network frame; `None` for direct
+    /// frames, which reference `sample` instead.
+    pub payload: Option<Box<[u8]>>,
+    /// Connection to answer on; `None` for direct frames.
+    pub reply: Option<Arc<ConnShared>>,
     pub enqueued: Instant,
+}
+
+impl Frame {
+    /// Direct (in-process loadgen) frame enqueued now.
+    pub fn new(id: u64, sample: usize) -> Frame {
+        Frame::at(id, sample, Instant::now())
+    }
+
+    /// Direct frame with an explicit enqueue instant (tests age frames
+    /// artificially to exercise deadline shedding).
+    pub fn at(id: u64, sample: usize, enqueued: Instant) -> Frame {
+        Frame {
+            id,
+            model: 0,
+            sample,
+            payload: None,
+            reply: None,
+            enqueued,
+        }
+    }
+
+    /// Network frame: carries its own feature bytes and the connection
+    /// to answer on.
+    pub fn remote(id: u64, model: u16, features: Vec<u8>, reply: Arc<ConnShared>) -> Frame {
+        Frame {
+            id,
+            model,
+            sample: 0,
+            payload: Some(features.into_boxed_slice()),
+            reply: Some(reply),
+            enqueued: Instant::now(),
+        }
+    }
+
+    /// Answer this frame's client; a no-op for direct frames.  Every
+    /// accepted frame is answered exactly once on exactly one path
+    /// (batch result, admission shed, deadline shed, or batch error).
+    pub fn respond(&self, status: Status, pred: i32) {
+        if let Some(reply) = &self.reply {
+            reply.respond(self.model, self.id, status, pred);
+        }
+    }
 }
 
 /// Per-model request-path counters and latency samples.
@@ -51,9 +120,14 @@ pub struct ModelStats {
     pub submitted: AtomicUsize,
     pub shed: AtomicUsize,
     pub answered: AtomicUsize,
-    /// Frames popped whose batch then failed in the evaluator — they can
-    /// never be answered, so exactly-once accounting is
-    /// `submitted = answered + shed + errors + still-queued`.
+    /// Frames deadline-shed while queued: their SLO had already expired
+    /// before a worker reached them, so evaluating them would burn lane
+    /// slots on dead work ([`DrainConfig::shed_late`]).
+    pub late: AtomicUsize,
+    /// Frames popped whose batch then failed in the evaluator (or whose
+    /// payload no longer matches the model's shape after a reload) —
+    /// answered `Error`; exactly-once accounting is
+    /// `submitted = answered + shed + late + errors + still-queued`.
     pub errors: AtomicUsize,
     pub correct: AtomicUsize,
     pub batches: AtomicUsize,
@@ -62,6 +136,15 @@ pub struct ModelStats {
     /// super-lane fill ratio, 1.0 on scalar backends.
     pub lane_slots: AtomicUsize,
     pub slo_violations: AtomicUsize,
+    /// Frames shadow-evaluated on a staged candidate version.
+    pub canary_checked: AtomicUsize,
+    /// Shadowed frames where the candidate disagreed with the incumbent.
+    pub canary_mismatches: AtomicUsize,
+    /// Fixed-point accumulator for the canary fraction: each batch adds
+    /// [`DrainConfig::canary_step`]; a carry out of the low 32 bits
+    /// selects the batch for shadowing (deterministic dithering, exact
+    /// long-run fraction, no RNG on the hot path).
+    pub canary_acc: AtomicU64,
     /// Bounded by deterministic reservoir sampling ([`Reservoir`]):
     /// exact percentiles below the cap, an unbiased estimate above it —
     /// a long campaign no longer grows per-frame memory without limit.
@@ -73,28 +156,40 @@ pub struct ModelStats {
 
 /// Bounded FIFO of pending frames for one model.
 pub struct BatchQueue {
-    capacity: usize,
+    /// Admission ceiling: pushes shed once the queue holds this many.
+    /// Equals the full capacity for gold tenants, a class fraction of it
+    /// otherwise ([`SloClass::admit_limit`]).
+    admit: usize,
     q: Mutex<VecDeque<Frame>>,
     pub stats: ModelStats,
 }
 
 impl BatchQueue {
     pub fn new(capacity: usize) -> BatchQueue {
+        BatchQueue::with_admission(capacity, capacity)
+    }
+
+    /// A queue of `capacity` slots that sheds once `admit` of them are
+    /// occupied — the per-tenant admission ceiling.
+    pub fn with_admission(capacity: usize, admit: usize) -> BatchQueue {
+        let capacity = capacity.max(1);
         BatchQueue {
-            capacity: capacity.max(1),
+            admit: admit.clamp(1, capacity),
             q: Mutex::new(VecDeque::new()),
             stats: ModelStats::default(),
         }
     }
 
-    /// Enqueue a frame; returns `false` (and counts a shed) when the
-    /// queue is at capacity.  Every push counts as submitted either way.
+    /// Enqueue a frame; returns `false` (counting a shed and answering
+    /// the frame `Shed`) when the queue is at its admission ceiling.
+    /// Every push counts as submitted either way.
     pub fn push(&self, frame: Frame) -> bool {
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         let mut q = self.q.lock().unwrap();
-        if q.len() >= self.capacity {
+        if q.len() >= self.admit {
             drop(q);
             self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            frame.respond(Status::Shed, -1);
             return false;
         }
         q.push_back(frame);
@@ -148,6 +243,13 @@ pub struct DrainConfig {
     pub max_wait: Duration,
     /// Per-frame latency SLO; frames above it count as violations.
     pub slo_ms: f64,
+    /// Refuse (`Late`) frames whose SLO already expired while queued
+    /// instead of evaluating them.  Off by default: the classless
+    /// trace-replay paths assert `requests == answered` determinism.
+    pub shed_late: bool,
+    /// Canary fraction in 32-bit fixed point per batch (see
+    /// [`canary_step`]); 0 disables shadowing.
+    pub canary_step: u64,
     /// Record `(frame id, prediction)` pairs (tests only).
     pub collect_responses: bool,
 }
@@ -159,29 +261,47 @@ impl Default for DrainConfig {
             batch: 64,
             max_wait: Duration::from_millis(2),
             slo_ms: 50.0,
+            shed_late: false,
+            canary_step: 0,
             collect_responses: false,
         }
     }
 }
 
-/// Execute one popped batch on the model's evaluator and record stats.
-/// `quantum` is the backend's block granularity for lane-fill accounting.
+/// Convert a canary fraction in `[0, 1]` to the fixed-point batch step:
+/// `1.0` → every batch shadowed, `0.5` → every other batch, `0.0` → off.
+pub fn canary_step(frac: f64) -> u64 {
+    (frac.clamp(0.0, 1.0) * 4_294_967_296.0) as u64
+}
+
+/// Execute one popped batch on the slot's current evaluator and record
+/// stats; optionally shadow it on a staged candidate.  Every frame in
+/// `frames` is answered here (`Ok` on success; the caller answers
+/// `Error` when this returns `Err`).
 #[allow(clippy::too_many_arguments)]
 fn process_batch(
     queue: &BatchQueue,
-    entry: &ModelEntry,
-    eval: &dyn Evaluator,
+    ver: &ModelVersion,
+    candidate: Option<&ModelVersion>,
     cfg: &DrainConfig,
-    quantum: usize,
     frames: &[Frame],
     xbuf: &mut Vec<u8>,
     preds: &mut Vec<i32>,
+    shadow: &mut Vec<i32>,
 ) -> Result<()> {
+    let entry = &ver.entry;
+    let quantum = ver.eval.batch_quantum().max(1);
+    // Fold sample indices so a reload to a different-sized test split
+    // cannot send an already-queued direct frame out of bounds.
+    let rows = entry.test.len().max(1);
     xbuf.clear();
     for fr in frames {
-        xbuf.extend_from_slice(entry.test.row(fr.sample));
+        match &fr.payload {
+            Some(p) => xbuf.extend_from_slice(p),
+            None => xbuf.extend_from_slice(entry.test.row(fr.sample % rows)),
+        }
     }
-    eval.predict_into(
+    ver.eval.predict_into(
         xbuf,
         frames.len(),
         &entry.feat_mask,
@@ -203,7 +323,9 @@ fn process_batch(
             if ms > cfg.slo_ms {
                 st.slo_violations.fetch_add(1, Ordering::Relaxed);
             }
-            if p == entry.test.ys[fr.sample] as i32 {
+            // Network frames carry raw features with no known label;
+            // their correctness is scored client-side.
+            if fr.payload.is_none() && p == entry.test.ys[fr.sample % rows] as i32 {
                 st.correct.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -214,25 +336,65 @@ fn process_batch(
             rs.push((fr.id, p));
         }
     }
+    for (fr, &p) in frames.iter().zip(preds.iter()) {
+        fr.respond(Status::Ok, p);
+    }
+    // §Canary shadow: clients were already answered from the incumbent
+    // above, so the candidate run is off the response path — it only
+    // scores agreement.  Shape-changed candidates are skipped (the xbuf
+    // rows would be meaningless to them).
+    if let Some(cand) = candidate {
+        let acc = st.canary_acc.fetch_add(cfg.canary_step, Ordering::Relaxed);
+        let carried = (acc.wrapping_add(cfg.canary_step) >> 32) != (acc >> 32);
+        if carried
+            && cand.entry.model.features == entry.model.features
+            && cand
+                .eval
+                .predict_into(
+                    xbuf,
+                    frames.len(),
+                    &cand.entry.feat_mask,
+                    &cand.entry.approx_mask,
+                    &cand.entry.tables,
+                    shadow,
+                )
+                .is_ok()
+        {
+            st.canary_checked.fetch_add(frames.len(), Ordering::Relaxed);
+            let mism = preds
+                .iter()
+                .zip(shadow.iter())
+                .filter(|(a, b)| a != b)
+                .count();
+            if mism > 0 {
+                st.canary_mismatches.fetch_add(mism, Ordering::Relaxed);
+            }
+        }
+    }
     Ok(())
 }
 
 /// Drain every queue with a pool of `cfg.workers` threads until `stop`
 /// is set **and** all queues are empty; each popped frame is answered
-/// exactly once.  Workers sweep the models round-robin from a per-worker
-/// offset so all models make progress even with one worker, and park
-/// briefly when a full sweep finds nothing.
+/// exactly once.  Workers sweep the models in class-priority order
+/// (gold first — [`admission::drain_order`]) so under saturation the
+/// best tenants are served first each sweep, and park briefly when a
+/// full sweep finds nothing.
+///
+/// Each iteration resolves the slot's *current* version before popping,
+/// so an atomic hot-reload promote takes effect at the next batch
+/// boundary; the in-flight batch keeps the `Arc` to the version it
+/// started on (zero downtime, no torn batch).
 ///
 /// A failing batch does NOT kill its worker: the popped frames are
-/// recorded in [`ModelStats::errors`] (they can never be answered — an
-/// exiting worker would otherwise leave them silently unaccounted) and
-/// the worker keeps draining, so sibling models and later frames still
+/// recorded in [`ModelStats::errors`] and answered `Error` (an exiting
+/// worker would otherwise leave them silently unaccounted) and the
+/// worker keeps draining, so sibling models and later frames still
 /// complete.  The first error per worker is surfaced after the pool
 /// joins.
 pub fn drain(
     queues: &[BatchQueue],
-    entries: &[Arc<ModelEntry>],
-    evals: &[Box<dyn Evaluator + Send + Sync + '_>],
+    slots: &[Arc<ModelSlot>],
     cfg: &DrainConfig,
     stop: &AtomicBool,
 ) -> Result<()> {
@@ -240,22 +402,27 @@ pub fn drain(
     if n == 0 {
         return Ok(());
     }
+    debug_assert_eq!(n, slots.len());
     let workers = cfg.workers.max(1);
     // batch = 0 would pop nothing forever and make the exit condition
     // (stop + empty queues) unreachable; clamp here so every caller of
     // the public DrainConfig is safe, not just server::run.
     let batch = cfg.batch.max(1);
-    // §Block alignment: round each model's batch ceiling up to its
-    // backend's block quantum, so a deep queue drains in whole simulator
-    // super-lane blocks (gatesim: W·64 samples) with no idle lanes.
-    let quanta: Vec<usize> = evals.iter().map(|e| e.batch_quantum().max(1)).collect();
-    let maxes: Vec<usize> = quanta.iter().map(|&q| batch.div_ceil(q) * q).collect();
+    let classes: Vec<SloClass> = slots.iter().map(|s| s.class).collect();
+    let order = admission::drain_order(&classes);
     let results: Vec<Result<()>> = pool::scope_map_with(
         workers,
         workers,
-        || (Vec::<Frame>::new(), Vec::<u8>::new(), Vec::<i32>::new()),
-        |scratch, w| {
-            let (frames, xbuf, preds) = scratch;
+        || {
+            (
+                Vec::<Frame>::new(),
+                Vec::<u8>::new(),
+                Vec::<i32>::new(),
+                Vec::<i32>::new(),
+            )
+        },
+        |scratch, _w| {
+            let (frames, xbuf, preds, shadow) = scratch;
             let mut first_err: Option<anyhow::Error> = None;
             loop {
                 // Read before the sweep: frames seen after `stop` was set
@@ -263,28 +430,74 @@ pub fn drain(
                 // exit check below re-verifies emptiness.
                 let stopping = stop.load(Ordering::Acquire);
                 let mut did_work = false;
-                for k in 0..n {
-                    let m = (w + k) % n;
+                for &m in &order {
+                    let ver = slots[m].current();
+                    let quantum = ver.eval.batch_quantum().max(1);
+                    // §Block alignment: round the batch ceiling up to the
+                    // backend's block quantum so a deep queue drains in
+                    // whole super-lane blocks with no idle lanes.
+                    let max = batch.div_ceil(quantum) * quantum;
                     frames.clear();
-                    if queues[m].pop_batch(maxes[m], cfg.max_wait, stopping, frames) == 0 {
+                    if queues[m].pop_batch(max, cfg.max_wait, stopping, frames) == 0 {
                         continue;
                     }
                     did_work = true;
-                    let eval = evals[m].as_ref();
+                    let st = &queues[m].stats;
+                    if cfg.shed_late {
+                        let now = Instant::now();
+                        frames.retain(|fr| {
+                            let late =
+                                now.duration_since(fr.enqueued).as_secs_f64() * 1e3 > cfg.slo_ms;
+                            if late {
+                                st.late.fetch_add(1, Ordering::Relaxed);
+                                fr.respond(Status::Late, -1);
+                            }
+                            !late
+                        });
+                    }
+                    // A reload may have changed the model's feature
+                    // count while network frames sat queued; their
+                    // payloads can no longer be evaluated.
+                    let want = ver.entry.model.features;
+                    frames.retain(|fr| {
+                        let bad = fr.payload.as_ref().is_some_and(|p| p.len() != want);
+                        if bad {
+                            st.errors.fetch_add(1, Ordering::Relaxed);
+                            fr.respond(Status::Error, -1);
+                        }
+                        !bad
+                    });
+                    if frames.is_empty() {
+                        continue;
+                    }
+                    let candidate = if cfg.canary_step > 0 {
+                        slots[m].candidate()
+                    } else {
+                        None
+                    };
                     if let Err(e) = process_batch(
-                        &queues[m], &entries[m], eval, cfg, quanta[m], frames, xbuf, preds,
+                        &queues[m],
+                        &ver,
+                        candidate.as_deref(),
+                        cfg,
+                        frames,
+                        xbuf,
+                        preds,
+                        shadow,
                     ) {
-                        // The popped frames can never be answered now;
-                        // account them so exactly-once bookkeeping still
-                        // balances, and keep draining instead of exiting
-                        // with sibling queues stranded.
-                        queues[m]
-                            .stats
-                            .errors
-                            .fetch_add(frames.len(), Ordering::Relaxed);
+                        // The popped frames can never be answered `Ok`
+                        // now; account them and answer `Error` so
+                        // exactly-once bookkeeping still balances, and
+                        // keep draining instead of exiting with sibling
+                        // queues stranded.
+                        st.errors.fetch_add(frames.len(), Ordering::Relaxed);
+                        for fr in frames.iter() {
+                            fr.respond(Status::Error, -1);
+                        }
                         if first_err.is_none() {
-                            first_err =
-                                Some(e.context(format!("model `{}` batch failed", entries[m].name)));
+                            first_err = Some(
+                                e.context(format!("model `{}` batch failed", ver.entry.name)),
+                            );
                         }
                     }
                 }

@@ -36,7 +36,8 @@ use anyhow::{bail, ensure, Result};
 use crate::approx;
 use crate::data::ArtifactStore;
 use crate::runtime::{Evaluator, GateArch, GateSimEvaluator};
-use crate::server::registry::{ModelEntry, ModelRegistry};
+use crate::server::admission::class_of;
+use crate::server::registry::{ModelEntry, ModelRegistry, ModelSlot};
 use crate::server::{serve_with, ModelReport, Scenario, ServeConfig, ServerReport};
 use crate::sim::fault::{self, FaultList};
 
@@ -224,8 +225,11 @@ pub fn run_campaign(store: &ArtifactStore, cfg: &CampaignConfig) -> Result<Campa
         let registry = arch_registry(&base, arch);
         for &(n_stuck, n_transient) in &cfg.levels {
             // Per-model fault-capable evaluators plus the two
-            // deterministic accuracy passes (clean, faulted).
-            let mut evals: Vec<Box<dyn Evaluator + Send + Sync>> = Vec::new();
+            // deterministic accuracy passes (clean, faulted).  Each
+            // evaluator is hosted in a ModelSlot so the campaign rides
+            // the same serve path as production (classes included);
+            // nothing reloads mid-cell, so version stays 1.
+            let mut slots: Vec<Arc<ModelSlot>> = Vec::new();
             let mut meta = Vec::new();
             for (mi, entry) in registry.entries().iter().enumerate() {
                 let mut ev = GateSimEvaluator::with_opts(&entry.model, 1, cfg.serve.sim_lanes)
@@ -257,9 +261,14 @@ pub fn run_campaign(store: &ArtifactStore, cfg: &CampaignConfig) -> Result<Campa
                     &entry.tables,
                 )?;
                 meta.push((baseline, fault_acc, stuck, transient));
-                evals.push(Box::new(ev));
+                slots.push(Arc::new(ModelSlot::new(
+                    entry.name.clone(),
+                    class_of(&cfg.serve.classes, mi),
+                    Arc::clone(entry),
+                    Box::new(ev),
+                )));
             }
-            let report: ServerReport = serve_with(&registry, &evals, &cfg.serve)?;
+            let report: ServerReport = serve_with(&slots, &cfg.serve)?;
             for (mr, &(baseline, fault_acc, stuck, transient)) in
                 report.models.iter().zip(&meta)
             {

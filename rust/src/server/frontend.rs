@@ -1,0 +1,618 @@
+//! Non-blocking TCP ingress for the model server.
+//!
+//! The frontend speaks a length-prefixed binary frame protocol that
+//! mirrors the PMLP artifact format (little-endian, magic-tagged):
+//!
+//! ```text
+//! frame    := len:u32le payload              (len = payload bytes, ≤ 4096)
+//! request  := magic:u32le kind:u8=1 model:u16le id:u64le
+//!             nfeat:u16le feat:[u8; nfeat]
+//! response := magic:u32le kind:u8=2 model:u16le id:u64le
+//!             status:u8 pred:i32le
+//! ```
+//!
+//! `magic` is `0x504D_4C46` — the ASCII bytes `"FLMP"` on the wire, the
+//! frame-sibling of the `"PLMP"` data magic.  `status` is a
+//! [`Status`] code; `pred` is `-1` for every non-[`Status::Ok`] answer.
+//!
+//! Design rules, in the spirit of the rest of the crate (no tokio, no
+//! epoll bindings — one plain thread, non-blocking sockets, bounded
+//! buffers):
+//!
+//! - **Every accepted frame is answered.** A decoded request either
+//!   enters its model's [`BatchQueue`] (answered `Ok`/`Shed`/`Late`/
+//!   `Error` by the batcher, exactly once) or is refused on the spot
+//!   (`Refused`: unknown model id or feature-count mismatch).  Shutdown
+//!   drains: the loop stops *reading* but keeps flushing until every
+//!   in-flight frame has been answered and written back.
+//! - **A bad client only loses its own connection.** Malformed frames
+//!   (bad magic/kind/shape, oversized or runt length prefix) close that
+//!   connection; the accept loop never unwinds.
+//! - **Slow writers cannot pin memory.** A partial frame older than
+//!   [`Frontend::read_deadline`] closes the connection, and at most
+//!   [`Frontend::max_inflight`] frames per connection may be inside the
+//!   server at once — past the bound the frontend simply stops reading
+//!   that socket, which surfaces to the client as TCP backpressure.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::server::batcher::{BatchQueue, Frame};
+use crate::server::registry::ModelSlot;
+
+/// Frame magic: ASCII `"FLMP"` little-endian on the wire.
+pub const FRAME_MAGIC: u32 = 0x504D_4C46;
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+/// Maximum payload bytes per frame (the length prefix is not counted).
+pub const MAX_FRAME: usize = 4096;
+/// Bytes of the `u32` length prefix.
+pub const LEN_PREFIX: usize = 4;
+
+/// Request payload bytes before the feature vector.
+const REQ_HEADER: usize = 17;
+/// Response payload bytes (fixed-size).
+const RESP_LEN: usize = 20;
+/// Per-poll socket read size.
+const READ_CHUNK: usize = 4096;
+
+/// Outcome code carried in every response frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Answered by the model; `pred` is the class label.
+    Ok,
+    /// Shed at admission (queue past the tenant class ceiling).
+    Shed,
+    /// Deadline-shed: the frame aged past its SLO while queued.
+    Late,
+    /// Refused at the frontend: unknown model or wrong feature count.
+    Refused,
+    /// The batch evaluating this frame failed.
+    Error,
+}
+
+impl Status {
+    pub fn code(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Shed => 1,
+            Status::Late => 2,
+            Status::Refused => 3,
+            Status::Error => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Status> {
+        Ok(match code {
+            0 => Status::Ok,
+            1 => Status::Shed,
+            2 => Status::Late,
+            3 => Status::Refused,
+            4 => Status::Error,
+            other => bail!("unknown response status code {other}"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Shed => "shed",
+            Status::Late => "late",
+            Status::Refused => "refused",
+            Status::Error => "error",
+        }
+    }
+}
+
+/// A decoded request frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub model: u16,
+    pub id: u64,
+    pub features: Vec<u8>,
+}
+
+/// A decoded response frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Response {
+    pub model: u16,
+    pub id: u64,
+    pub status: Status,
+    pub pred: i32,
+}
+
+/// Encode a request as a wire frame, length prefix included.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let n = req.features.len();
+    debug_assert!(REQ_HEADER + n <= MAX_FRAME);
+    let len = REQ_HEADER + n;
+    let mut buf = Vec::with_capacity(LEN_PREFIX + len);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    buf.push(KIND_REQUEST);
+    buf.extend_from_slice(&req.model.to_le_bytes());
+    buf.extend_from_slice(&req.id.to_le_bytes());
+    buf.extend_from_slice(&(n as u16).to_le_bytes());
+    buf.extend_from_slice(&req.features);
+    buf
+}
+
+/// Encode a response as a wire frame, length prefix included.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(LEN_PREFIX + RESP_LEN);
+    buf.extend_from_slice(&(RESP_LEN as u32).to_le_bytes());
+    buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    buf.push(KIND_RESPONSE);
+    buf.extend_from_slice(&resp.model.to_le_bytes());
+    buf.extend_from_slice(&resp.id.to_le_bytes());
+    buf.push(resp.status.code());
+    buf.extend_from_slice(&resp.pred.to_le_bytes());
+    buf
+}
+
+/// Decode a request payload (frame bytes after the length prefix).
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    ensure!(
+        payload.len() >= REQ_HEADER,
+        "request frame too short: {} bytes",
+        payload.len()
+    );
+    let magic = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#010x}");
+    ensure!(
+        payload[4] == KIND_REQUEST,
+        "unexpected frame kind {} (want request)",
+        payload[4]
+    );
+    let model = u16::from_le_bytes(payload[5..7].try_into().unwrap());
+    let id = u64::from_le_bytes(payload[7..15].try_into().unwrap());
+    let nfeat = u16::from_le_bytes(payload[15..17].try_into().unwrap()) as usize;
+    ensure!(
+        payload.len() == REQ_HEADER + nfeat,
+        "feature payload mismatch: header says {nfeat}, frame holds {}",
+        payload.len() - REQ_HEADER
+    );
+    Ok(Request {
+        model,
+        id,
+        features: payload[REQ_HEADER..].to_vec(),
+    })
+}
+
+/// Decode a response payload (frame bytes after the length prefix).
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    ensure!(
+        payload.len() == RESP_LEN,
+        "response frame is {} bytes (want {RESP_LEN})",
+        payload.len()
+    );
+    let magic = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#010x}");
+    ensure!(
+        payload[4] == KIND_RESPONSE,
+        "unexpected frame kind {} (want response)",
+        payload[4]
+    );
+    Ok(Response {
+        model: u16::from_le_bytes(payload[5..7].try_into().unwrap()),
+        id: u64::from_le_bytes(payload[7..15].try_into().unwrap()),
+        status: Status::from_code(payload[15])?,
+        pred: i32::from_le_bytes(payload[16..20].try_into().unwrap()),
+    })
+}
+
+/// Split one complete frame off the front of a receive buffer.
+///
+/// Returns `Ok(None)` when more bytes are needed, `Ok(Some(payload))`
+/// with the prefix and payload drained from `buf`, and `Err` for a
+/// length prefix that can never become a valid frame (oversized or
+/// runt) — the caller must close the connection.
+pub fn split_frame(buf: &mut Vec<u8>) -> Result<Option<Vec<u8>>> {
+    if buf.len() < LEN_PREFIX {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..LEN_PREFIX].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_FRAME, "oversized frame: {len} bytes (max {MAX_FRAME})");
+    ensure!(len >= 5, "runt frame: {len} bytes");
+    if buf.len() < LEN_PREFIX + len {
+        return Ok(None);
+    }
+    let payload = buf[LEN_PREFIX..LEN_PREFIX + len].to_vec();
+    buf.drain(..LEN_PREFIX + len);
+    Ok(Some(payload))
+}
+
+/// Per-connection state shared between the frontend thread (which owns
+/// the socket) and the batcher workers (which answer frames).  Workers
+/// append encoded response frames to `out`; the frontend flushes it.
+/// `inflight` counts frames accepted off this connection that have not
+/// yet been answered — the read bound and the drain barrier.
+#[derive(Debug, Default)]
+pub struct ConnShared {
+    out: Mutex<Vec<u8>>,
+    inflight: AtomicUsize,
+}
+
+impl ConnShared {
+    /// Answer one accepted frame: enqueue the response and release its
+    /// in-flight slot.  Called exactly once per accepted frame.
+    pub fn respond(&self, model: u16, id: u64, status: Status, pred: i32) {
+        let frame = encode_response(&Response {
+            model,
+            id,
+            status,
+            pred,
+        });
+        self.out.lock().unwrap().extend_from_slice(&frame);
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Refuse a frame at the frontend (unknown model, bad shape).  The
+    /// frame never entered a queue, so no in-flight slot is released.
+    pub fn refuse(&self, model: u16, id: u64) {
+        let frame = encode_response(&Response {
+            model,
+            id,
+            status: Status::Refused,
+            pred: -1,
+        });
+        self.out.lock().unwrap().extend_from_slice(&frame);
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+/// Counters for the ingress layer itself (queue-level accounting lives
+/// in `ModelStats`).
+#[derive(Debug, Default)]
+pub struct FrontendStats {
+    /// Connections accepted over the run.
+    pub connections: AtomicUsize,
+    /// Well-formed request frames decoded.
+    pub frames_in: AtomicUsize,
+    /// Frames refused at the frontend (unknown model / bad shape).
+    pub refused: AtomicUsize,
+    /// Malformed frames (each also closes its connection).
+    pub malformed: AtomicUsize,
+    /// Connections closed by the partial-frame read deadline.
+    pub deadline_closed: AtomicUsize,
+}
+
+struct Conn {
+    stream: std::net::TcpStream,
+    shared: Arc<ConnShared>,
+    buf: Vec<u8>,
+    /// Still reading new frames. Cleared on EOF, protocol error,
+    /// deadline, or server drain; answers already owed keep flushing.
+    open: bool,
+    /// Write side failed — nothing more can reach this client.
+    dead: bool,
+    partial_since: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: std::net::TcpStream) -> Conn {
+        Conn {
+            stream,
+            shared: Arc::new(ConnShared::default()),
+            buf: Vec::new(),
+            open: true,
+            dead: false,
+            partial_since: None,
+        }
+    }
+}
+
+/// The TCP ingress: accepts connections, frames requests into the model
+/// queues, and writes back every answer.  Single event-loop thread,
+/// non-blocking sockets throughout.
+pub struct Frontend {
+    listener: TcpListener,
+    addr: SocketAddr,
+    /// Max frames per connection inside the server at once; past the
+    /// bound the socket simply stops being read (TCP backpressure).
+    pub max_inflight: usize,
+    /// How long a partial frame may sit before the connection is closed.
+    pub read_deadline: Duration,
+    pub stats: Arc<FrontendStats>,
+}
+
+impl Frontend {
+    /// Bind (but do not yet serve) a listener.  `listen` is a socket
+    /// address; port 0 picks an ephemeral port — read it back via
+    /// [`Frontend::local_addr`] before spawning clients.
+    pub fn bind(listen: &str) -> Result<Frontend> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("ingress: binding `{listen}`"))?;
+        listener
+            .set_nonblocking(true)
+            .context("ingress: set_nonblocking on listener")?;
+        let addr = listener.local_addr().context("ingress: local_addr")?;
+        Ok(Frontend {
+            listener,
+            addr,
+            max_inflight: 64,
+            read_deadline: Duration::from_secs(2),
+            stats: Arc::new(FrontendStats::default()),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until `shutdown` is raised *and* every accepted frame has
+    /// been answered and flushed.  `slots[i]` / `queues[i]` pair up by
+    /// model id.  Runs on the calling thread.
+    pub fn run(
+        &self,
+        slots: &[Arc<ModelSlot>],
+        queues: &[BatchQueue],
+        shutdown: &AtomicBool,
+    ) -> Result<()> {
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            let stopping = shutdown.load(Ordering::Acquire);
+            let mut progressed = false;
+            if !stopping {
+                loop {
+                    match self.listener.accept() {
+                        Ok((stream, _)) => {
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            self.stats.connections.fetch_add(1, Ordering::Relaxed);
+                            conns.push(Conn::new(stream));
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) => return Err(e).context("ingress: accept failed"),
+                    }
+                }
+            }
+            for conn in conns.iter_mut() {
+                if stopping {
+                    // Drain: ingest nothing new, answer everything owed.
+                    conn.open = false;
+                }
+                let mut at_bound = conn.shared.inflight() >= self.max_inflight;
+                if conn.open && !at_bound {
+                    match conn.stream.read(&mut chunk) {
+                        Ok(0) => conn.open = false,
+                        Ok(n) => {
+                            conn.buf.extend_from_slice(&chunk[..n]);
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                        Err(_) => conn.open = false,
+                    }
+                }
+                while conn.open && !at_bound {
+                    match split_frame(&mut conn.buf) {
+                        Ok(Some(payload)) => {
+                            progressed = true;
+                            self.handle_frame(&payload, slots, queues, &conn.shared, &mut conn.open);
+                            at_bound = conn.shared.inflight() >= self.max_inflight;
+                        }
+                        Ok(None) => break,
+                        Err(_) => {
+                            self.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                            conn.buf.clear();
+                            conn.open = false;
+                        }
+                    }
+                }
+                // Partial-frame read deadline (slow-loris guard).  Only
+                // ticks while the *client* is the blocker — a buffer
+                // held back by the in-flight bound is the server's slow
+                // batcher, not a slow writer.
+                if conn.open && !conn.buf.is_empty() && !at_bound {
+                    let since = *conn.partial_since.get_or_insert_with(Instant::now);
+                    if since.elapsed() > self.read_deadline {
+                        self.stats.deadline_closed.fetch_add(1, Ordering::Relaxed);
+                        conn.buf.clear();
+                        conn.open = false;
+                    }
+                } else {
+                    conn.partial_since = None;
+                }
+                // Flush queued responses (batcher workers append).
+                let mut out = conn.shared.out.lock().unwrap();
+                while !out.is_empty() {
+                    match conn.stream.write(&out) {
+                        Ok(0) => {
+                            conn.dead = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            out.drain(..n);
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            conn.dead = true;
+                            break;
+                        }
+                    }
+                }
+                drop(out);
+            }
+            conns.retain(|c| {
+                !c.dead
+                    && (c.open
+                        || c.shared.inflight() > 0
+                        || !c.shared.out.lock().unwrap().is_empty())
+            });
+            if stopping && conns.is_empty() {
+                return Ok(());
+            }
+            if !progressed {
+                thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+
+    fn handle_frame(
+        &self,
+        payload: &[u8],
+        slots: &[Arc<ModelSlot>],
+        queues: &[BatchQueue],
+        shared: &Arc<ConnShared>,
+        open: &mut bool,
+    ) {
+        let req = match decode_request(payload) {
+            Ok(r) => r,
+            Err(_) => {
+                self.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                *open = false;
+                return;
+            }
+        };
+        self.stats.frames_in.fetch_add(1, Ordering::Relaxed);
+        let m = req.model as usize;
+        if m >= queues.len() {
+            self.stats.refused.fetch_add(1, Ordering::Relaxed);
+            shared.refuse(req.model, req.id);
+            return;
+        }
+        let want = slots[m].current().entry.model.features;
+        if req.features.len() != want {
+            self.stats.refused.fetch_add(1, Ordering::Relaxed);
+            shared.refuse(req.model, req.id);
+            return;
+        }
+        // Accepted: from here the frame is answered exactly once — by
+        // admission shed inside `push`, or by the batcher.
+        shared.inflight.fetch_add(1, Ordering::AcqRel);
+        queues[m].push(Frame::remote(req.id, req.model, req.features, Arc::clone(shared)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_codec_roundtrip() {
+        let req = Request {
+            model: 3,
+            id: 0xDEAD_BEEF_0042,
+            features: vec![0, 1, 2, 250, 255],
+        };
+        let mut wire = encode_request(&req);
+        let payload = split_frame(&mut wire).unwrap().unwrap();
+        assert!(wire.is_empty(), "frame fully drained");
+        assert_eq!(decode_request(&payload).unwrap(), req);
+    }
+
+    #[test]
+    fn response_codec_roundtrip_all_statuses() {
+        for (i, status) in [
+            Status::Ok,
+            Status::Shed,
+            Status::Late,
+            Status::Refused,
+            Status::Error,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(Status::from_code(status.code()).unwrap(), status);
+            assert_eq!(status.code(), i as u8);
+            let resp = Response {
+                model: 7,
+                id: 99 + i as u64,
+                status,
+                pred: if status == Status::Ok { 2 } else { -1 },
+            };
+            let mut wire = encode_response(&resp);
+            let payload = split_frame(&mut wire).unwrap().unwrap();
+            assert_eq!(decode_response(&payload).unwrap(), resp);
+        }
+        assert!(Status::from_code(9).is_err());
+    }
+
+    #[test]
+    fn split_frame_handles_partials_and_rejects_bad_lengths() {
+        let req = Request {
+            model: 0,
+            id: 1,
+            features: vec![5; 8],
+        };
+        let wire = encode_request(&req);
+        // Feed byte by byte: no frame until the last byte arrives.
+        let mut buf = Vec::new();
+        for (i, b) in wire.iter().enumerate() {
+            buf.push(*b);
+            let got = split_frame(&mut buf).unwrap();
+            if i + 1 < wire.len() {
+                assert!(got.is_none(), "premature frame at byte {i}");
+            } else {
+                assert_eq!(decode_request(&got.unwrap()).unwrap(), req);
+            }
+        }
+        // Two frames back to back split cleanly.
+        let mut buf: Vec<u8> = [wire.clone(), wire.clone()].concat();
+        assert!(split_frame(&mut buf).unwrap().is_some());
+        assert!(split_frame(&mut buf).unwrap().is_some());
+        assert!(buf.is_empty());
+        // Oversized and runt length prefixes are fatal.
+        let mut buf = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        assert!(split_frame(&mut buf).is_err());
+        let mut buf = 2u32.to_le_bytes().to_vec();
+        assert!(split_frame(&mut buf).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_kind_and_shape() {
+        let req = Request {
+            model: 1,
+            id: 2,
+            features: vec![3; 4],
+        };
+        let wire = encode_request(&req);
+        let payload = &wire[LEN_PREFIX..];
+        let mut bad = payload.to_vec();
+        bad[0] ^= 0xFF;
+        assert!(decode_request(&bad).is_err(), "bad magic");
+        let mut bad = payload.to_vec();
+        bad[4] = KIND_RESPONSE;
+        assert!(decode_request(&bad).is_err(), "wrong kind");
+        let mut bad = payload.to_vec();
+        bad.pop();
+        assert!(decode_request(&bad).is_err(), "truncated features");
+        assert!(decode_request(&payload[..10]).is_err(), "runt header");
+        assert!(decode_response(payload).is_err(), "request is not a response");
+    }
+
+    #[test]
+    fn conn_shared_respond_releases_inflight_but_refuse_does_not() {
+        let shared = ConnShared::default();
+        shared.inflight.fetch_add(1, Ordering::AcqRel);
+        shared.refuse(0, 41);
+        assert_eq!(shared.inflight(), 1, "refusal is not an in-flight answer");
+        shared.respond(0, 42, Status::Ok, 1);
+        assert_eq!(shared.inflight(), 0);
+        let mut out = shared.out.lock().unwrap().clone();
+        let first = decode_response(&split_frame(&mut out).unwrap().unwrap()).unwrap();
+        assert_eq!(first.status, Status::Refused);
+        assert_eq!(first.pred, -1);
+        let second = decode_response(&split_frame(&mut out).unwrap().unwrap()).unwrap();
+        assert_eq!(second.id, 42);
+        assert_eq!(second.status, Status::Ok);
+        assert_eq!(second.pred, 1);
+    }
+}

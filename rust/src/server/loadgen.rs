@@ -30,7 +30,21 @@
 //! the serve seed verbatim with other subsystems), so a serve run is
 //! reproducible modulo OS scheduling; a trace replay additionally pins
 //! the request *content* exactly.
+//!
+//! Every shape has two transports: [`run_sensor`] pushes frames straight
+//! into the queues (in-process mode), and [`run_tcp_sensor`] drives the
+//! same schedule through a real socket against the TCP
+//! [`frontend`](crate::server::frontend).  The TCP client is **open
+//! loop**: send instants are precomputed on an absolute schedule and
+//! latency is measured from each frame's *scheduled* instant, not its
+//! actual write — so server backpressure inflates the reported latency
+//! instead of silently thinning the offered load
+//! (coordinated-omission-correct, per Tene's "How NOT to Measure
+//! Latency").
 
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::Path;
 use std::str::FromStr;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -40,6 +54,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::server::batcher::{BatchQueue, Frame};
+use crate::server::frontend::{self, Request, Status};
 use crate::server::registry::ModelEntry;
 use crate::server::ServeConfig;
 use crate::util::prng::{fold_u64, Rng};
@@ -238,6 +253,29 @@ const BURST_PHASE_S: f64 = 0.25;
 /// deadline without flooring long inter-arrival gaps (the full gap is
 /// always slept, in chunks of at most this).
 const MAX_SLEEP_CHUNK: Duration = Duration::from_millis(50);
+/// How long a TCP sensor keeps reading after its schedule ends, waiting
+/// for answers still owed; accepted frames unanswered past this are
+/// counted in [`ClientStats::lost`].
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Inter-arrival gap (seconds) the scenario dictates at run-time `t` —
+/// the one schedule shared by the in-process and TCP transports.
+fn scenario_gap(scenario: Scenario, t: f64, per_sensor: f64, total_s: f64, rng: &mut Rng) -> f64 {
+    match scenario {
+        Scenario::Steady | Scenario::FanIn | Scenario::Trace => 1.0 / per_sensor,
+        Scenario::Bursty => {
+            // 1.8x / 0.2x phases average to 1.0: the mean offered rate
+            // stays rate_hz, comparable to steady at the same --rate.
+            let hot = ((t / BURST_PHASE_S) as u64) % 2 == 0;
+            let rate = per_sensor * if hot { 1.8 } else { 0.2 };
+            -rng.f64().max(1e-12).ln() / rate
+        }
+        Scenario::Ramp => {
+            let rate = per_sensor * (0.1 + 1.9 * (t / total_s).min(1.0));
+            1.0 / rate
+        }
+    }
+}
 
 /// One sensor thread's generation loop: compute the scenario's current
 /// inter-arrival gap, sleep it, and push the next frame(s).  All
@@ -274,21 +312,7 @@ pub fn run_sensor(
             break;
         }
         let t = (now - start).as_secs_f64();
-        let gap = match cfg.scenario {
-            Scenario::Steady | Scenario::FanIn | Scenario::Trace => 1.0 / per_sensor,
-            Scenario::Bursty => {
-                // 1.8x / 0.2x phases average to 1.0: the mean offered
-                // rate stays rate_hz, comparable to steady at the same
-                // --rate.
-                let hot = ((t / BURST_PHASE_S) as u64) % 2 == 0;
-                let rate = per_sensor * if hot { 1.8 } else { 0.2 };
-                -rng.f64().max(1e-12).ln() / rate
-            }
-            Scenario::Ramp => {
-                let rate = per_sensor * (0.1 + 1.9 * (t / total_s).min(1.0));
-                1.0 / rate
-            }
-        };
+        let gap = scenario_gap(cfg.scenario, t, per_sensor, total_s, &mut rng);
         // Sleep the whole gap in deadline-responsive chunks: a single
         // capped sleep would silently inflate low offered rates (every
         // iteration would push after at most one chunk).
@@ -313,21 +337,20 @@ pub fn run_sensor(
                 let window = rng.next_u64();
                 let enqueued = Instant::now();
                 for (entry, queue) in entries.iter().zip(queues) {
-                    let frame = Frame {
-                        id: next_id.fetch_add(1, Ordering::Relaxed),
-                        sample: fold_u64(window, entry.test.len() as u64) as usize,
+                    let frame = Frame::at(
+                        next_id.fetch_add(1, Ordering::Relaxed),
+                        fold_u64(window, entry.test.len() as u64) as usize,
                         enqueued,
-                    };
+                    );
                     queue.push(frame);
                 }
             }
             _ => {
                 let entry = &entries[target];
-                let frame = Frame {
-                    id: next_id.fetch_add(1, Ordering::Relaxed),
-                    sample: rng.usize_below(entry.test.len()),
-                    enqueued: Instant::now(),
-                };
+                let frame = Frame::new(
+                    next_id.fetch_add(1, Ordering::Relaxed),
+                    rng.usize_below(entry.test.len()),
+                );
                 queues[target].push(frame);
                 target = (target + 1) % n_models;
             }
@@ -360,13 +383,285 @@ fn run_trace_sensor(
         }
         let m = tr.model[i] as usize % n_models;
         let entry = &entries[m];
-        queues[m].push(Frame {
-            id: next_id.fetch_add(1, Ordering::Relaxed),
-            sample: fold_u64(tr.draw[i], entry.test.len() as u64) as usize,
-            enqueued: Instant::now(),
-        });
+        queues[m].push(Frame::new(
+            next_id.fetch_add(1, Ordering::Relaxed),
+            fold_u64(tr.draw[i], entry.test.len() as u64) as usize,
+        ));
         i += sensors;
     }
+}
+
+/// Client-side accounting for one hosted model over a TCP serve run.
+///
+/// Latency is open-loop — measured from each frame's *scheduled* send
+/// instant — and accuracy is scored against the sensor's own snapshot of
+/// the test split, so the numbers survive a mid-run hot reload on the
+/// server.  `lost` counts accepted-side frames the client sent but never
+/// got an answer for within [`DRAIN_GRACE`]; a healthy run reports zero.
+#[derive(Clone, Debug, Default)]
+pub struct ClientStats {
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub late: usize,
+    pub refused: usize,
+    pub errors: usize,
+    /// `ok` responses whose prediction matched the snapshot label.
+    pub correct: usize,
+    /// Sent frames never answered within the drain grace.
+    pub lost: usize,
+    /// Per-`ok`-frame latency from scheduled send to response decode.
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ClientStats {
+    /// Frames that received *some* response — the client half of the
+    /// exactly-once ledger (`sent == answered() + lost` after drain).
+    pub fn answered(&self) -> usize {
+        self.ok + self.shed + self.late + self.refused + self.errors
+    }
+
+    /// Fold another sensor's counters into this one.
+    pub fn merge(&mut self, other: ClientStats) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.late += other.late;
+        self.refused += other.refused;
+        self.errors += other.errors;
+        self.correct += other.correct;
+        self.lost += other.lost;
+        self.latencies_ms.extend(other.latencies_ms);
+    }
+}
+
+/// One sensor's non-blocking connection to the frontend: outgoing frames
+/// are written with spin-and-pump backpressure handling, responses are
+/// matched back to in-flight requests by id.
+struct TcpClient {
+    stream: TcpStream,
+    rxbuf: Vec<u8>,
+    /// In-flight request id → (model, sample, scheduled send instant).
+    pending: HashMap<u64, (usize, usize, Instant)>,
+    server_closed: bool,
+}
+
+impl TcpClient {
+    fn new(stream: TcpStream) -> TcpClient {
+        TcpClient {
+            stream,
+            rxbuf: Vec::new(),
+            pending: HashMap::new(),
+            server_closed: false,
+        }
+    }
+
+    /// Drain whatever the server has written so far; settle pending
+    /// requests into `stats`.  A connection-level read failure marks the
+    /// server closed (leftovers become `lost`); a *protocol* failure —
+    /// unframeable bytes or a bad response — is a hard error.
+    fn pump(&mut self, entries: &[Arc<ModelEntry>], stats: &mut [ClientStats]) -> Result<()> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.server_closed = true;
+                    break;
+                }
+                Ok(n) => self.rxbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.server_closed = true;
+                    break;
+                }
+            }
+        }
+        while let Some(payload) = frontend::split_frame(&mut self.rxbuf)
+            .context("tcp client: unframeable response bytes")?
+        {
+            let resp = frontend::decode_response(&payload).context("tcp client: bad response")?;
+            let done = Instant::now();
+            if let Some((m, sample, sched)) = self.pending.remove(&resp.id) {
+                let st = &mut stats[m];
+                match resp.status {
+                    Status::Ok => {
+                        st.ok += 1;
+                        st.latencies_ms
+                            .push(done.duration_since(sched).as_secs_f64() * 1e3);
+                        if entries[m].test.ys.get(sample).map(|&y| y as i32) == Some(resp.pred) {
+                            st.correct += 1;
+                        }
+                    }
+                    Status::Shed => st.shed += 1,
+                    Status::Late => st.late += 1,
+                    Status::Refused => st.refused += 1,
+                    Status::Error => st.errors += 1,
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write one request frame, pumping responses whenever the socket
+    /// pushes back (the frontend stops reading a connection at its
+    /// in-flight bound, so draining answers *is* the flow control).
+    #[allow(clippy::too_many_arguments)]
+    fn send(
+        &mut self,
+        id: u64,
+        m: usize,
+        sample: usize,
+        sched: Instant,
+        entries: &[Arc<ModelEntry>],
+        stats: &mut [ClientStats],
+        hard_stop: Instant,
+    ) -> Result<()> {
+        if self.server_closed {
+            return Ok(());
+        }
+        let req = Request {
+            model: m as u16,
+            id,
+            features: entries[m].test.row(sample).to_vec(),
+        };
+        let bytes = frontend::encode_request(&req);
+        stats[m].sent += 1;
+        self.pending.insert(id, (m, sample, sched));
+        let mut off = 0;
+        while off < bytes.len() {
+            match self.stream.write(&bytes[off..]) {
+                Ok(0) => {
+                    self.server_closed = true;
+                    break;
+                }
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    self.pump(entries, stats)?;
+                    ensure!(
+                        Instant::now() < hard_stop,
+                        "tcp client write stalled past drain grace"
+                    );
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.server_closed = true;
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Sleep until `wake`, pumping responses in short chunks so latency
+    /// timestamps stay honest and the receive path never backs up.
+    fn sleep_until_pumping(
+        &mut self,
+        wake: Instant,
+        entries: &[Arc<ModelEntry>],
+        stats: &mut [ClientStats],
+    ) -> Result<()> {
+        loop {
+            self.pump(entries, stats)?;
+            let now = Instant::now();
+            if now >= wake || self.server_closed {
+                return Ok(());
+            }
+            std::thread::sleep((wake - now).min(Duration::from_millis(1)));
+        }
+    }
+}
+
+/// TCP twin of [`run_sensor`]: the same scenario schedule driven through
+/// a real socket, open loop.  Send instants are precomputed on an
+/// absolute timeline (`sched_t` accumulates scenario gaps from run
+/// start), so server backpressure delays the *write* but never the
+/// *schedule* — queueing shows up as latency, not as a thinner offered
+/// load.  Returns per-model [`ClientStats`]; the sensor only returns
+/// once every sent frame is answered or charged `lost` (bounded by
+/// [`DRAIN_GRACE`]).
+pub fn run_tcp_sensor(
+    sensor: usize,
+    entries: &[Arc<ModelEntry>],
+    addr: SocketAddr,
+    cfg: &ServeConfig,
+    start: Instant,
+    deadline: Instant,
+    trace: Option<&Trace>,
+) -> Result<Vec<ClientStats>> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("tcp sensor {sensor}: connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_nonblocking(true)
+        .with_context(|| format!("tcp sensor {sensor}: set_nonblocking"))?;
+    let mut client = TcpClient::new(stream);
+    let mut stats = vec![ClientStats::default(); entries.len()];
+    let n_models = entries.len();
+    let hard_stop = deadline + DRAIN_GRACE;
+    // Ids are globally unique without cross-sensor coordination: the
+    // sensor index rides in the top 16 bits.
+    let mut seq: u64 = 0;
+    if let Some(tr) = trace {
+        let sensors = cfg.sensors.max(1);
+        let mut i = sensor;
+        while i < tr.len() && !client.server_closed {
+            let sched = start + Duration::from_micros(tr.arrivals_us[i]);
+            client.sleep_until_pumping(sched, entries, &mut stats)?;
+            let m = tr.model[i] as usize % n_models;
+            let sample = fold_u64(tr.draw[i], entries[m].test.len() as u64) as usize;
+            let id = ((sensor as u64) << 48) | seq;
+            seq += 1;
+            client.send(id, m, sample, sched, entries, &mut stats, hard_stop)?;
+            i += sensors;
+        }
+    } else {
+        let sensors = cfg.sensors.max(1) as f64;
+        let per_sensor = (cfg.rate_hz / sensors).max(1e-6);
+        let total_s = cfg.duration.as_secs_f64().max(1e-9);
+        let mut rng = Rng::new(cfg.seed ^ (0xC0FFEE + sensor as u64));
+        let mut target = sensor % n_models;
+        let mut sched_t = 0.0f64;
+        loop {
+            sched_t += scenario_gap(cfg.scenario, sched_t, per_sensor, total_s, &mut rng);
+            if sched_t >= total_s || client.server_closed {
+                break;
+            }
+            let sched = start + Duration::from_secs_f64(sched_t);
+            client.sleep_until_pumping(sched, entries, &mut stats)?;
+            match cfg.scenario {
+                Scenario::FanIn => {
+                    let window = rng.next_u64();
+                    for m in 0..n_models {
+                        let sample = fold_u64(window, entries[m].test.len() as u64) as usize;
+                        let id = ((sensor as u64) << 48) | seq;
+                        seq += 1;
+                        client.send(id, m, sample, sched, entries, &mut stats, hard_stop)?;
+                    }
+                }
+                _ => {
+                    let sample = rng.usize_below(entries[target].test.len());
+                    let id = ((sensor as u64) << 48) | seq;
+                    seq += 1;
+                    client.send(id, target, sample, sched, entries, &mut stats, hard_stop)?;
+                    target = (target + 1) % n_models;
+                }
+            }
+        }
+    }
+    // Drain: wait (bounded) for every in-flight answer, then charge the
+    // remainder as lost.  The server's graceful drain answers everything
+    // it accepted, so `lost` stays zero unless something actually broke.
+    while !client.pending.is_empty() && !client.server_closed && Instant::now() < hard_stop {
+        client.pump(entries, &mut stats)?;
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    client.pump(entries, &mut stats)?;
+    for &(m, _, _) in client.pending.values() {
+        stats[m].lost += 1;
+    }
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -428,5 +723,59 @@ mod tests {
         let ok = Trace::parse(&format!("{TRACE_HEADER}\n# c\n\n3 1 7\n3 0 9\n")).unwrap();
         assert_eq!(ok.len(), 2);
         assert_eq!(ok.model, vec![1, 0]);
+    }
+
+    #[test]
+    fn trace_load_reports_file_and_line_context() {
+        let path = std::env::temp_dir().join(format!("pmlp_trace_corrupt_{}.txt", std::process::id()));
+        std::fs::write(&path, format!("{TRACE_HEADER}\n1 0 2\nbogus 0 2\n")).unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(
+            chain.contains(&path.display().to_string()),
+            "error should name the file: {chain}"
+        );
+        assert!(chain.contains("trace line 3"), "error should cite the line: {chain}");
+        let _ = std::fs::remove_file(&path);
+        assert!(Trace::load(Path::new("/nonexistent/pmlp/trace.txt")).is_err());
+    }
+
+    #[test]
+    fn client_stats_merge_sums_counters_and_latencies() {
+        let mut a = ClientStats {
+            sent: 5,
+            ok: 3,
+            shed: 1,
+            correct: 2,
+            lost: 1,
+            latencies_ms: vec![1.0, 2.0],
+            ..ClientStats::default()
+        };
+        let b = ClientStats {
+            sent: 4,
+            ok: 2,
+            late: 1,
+            refused: 1,
+            correct: 1,
+            latencies_ms: vec![3.0],
+            ..ClientStats::default()
+        };
+        assert_eq!(b.answered(), 4);
+        a.merge(b);
+        assert_eq!(a.sent, 9);
+        assert_eq!(a.answered(), 8);
+        assert_eq!(a.correct, 3);
+        assert_eq!(a.lost, 1);
+        assert_eq!(a.latencies_ms, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn scenario_gap_matches_shapes() {
+        let mut rng = Rng::new(7);
+        assert!((scenario_gap(Scenario::Steady, 0.3, 100.0, 1.0, &mut rng) - 0.01).abs() < 1e-12);
+        // Ramp: 0.1x the offered rate at t=0, 2x at the end of the run.
+        assert!((scenario_gap(Scenario::Ramp, 0.0, 100.0, 1.0, &mut rng) - 0.1).abs() < 1e-12);
+        assert!((scenario_gap(Scenario::Ramp, 1.0, 100.0, 1.0, &mut rng) - 0.005).abs() < 1e-12);
+        assert!(scenario_gap(Scenario::Bursty, 0.0, 100.0, 1.0, &mut rng) > 0.0);
     }
 }

@@ -2,51 +2,68 @@
 //! (wearables streaming multi-sensory frames into several bespoke
 //! sequential MLPs) as a first-class subsystem.
 //!
-//! Four pieces (DESIGN.md §Server, §Faults):
+//! Six pieces (DESIGN.md §Server, §Faults, §Ingress):
 //!
 //! - [`registry`] — [`registry::ModelRegistry`]: every hosted dataset's
 //!   artifacts (model, masks, [`crate::model::ApproxTables`], and — via
 //!   warmup — the gatesim circuit and its compiled
-//!   [`crate::sim::SimPlan`]) loaded once and shared read-only.
+//!   [`crate::sim::SimPlan`]) loaded once; [`registry::ModelSlot`] wraps
+//!   each in a versioned, hot-swappable slot for zero-downtime reload.
+//! - [`admission`] — per-tenant SLO classes ([`SloClass`]:
+//!   gold/silver/bronze) setting each queue's admission ceiling and the
+//!   workers' drain priority, so overload sheds bronze first.
 //! - [`batcher`] — per-model bounded [`batcher::BatchQueue`]s with shed
 //!   counters, drained by a [`crate::util::pool::scope_map_with`] worker
-//!   pool running dynamic batching with a `max_wait` linger.
+//!   pool running dynamic batching with a `max_wait` linger, optional
+//!   deadline shedding, and canary shadowing of staged candidates.
+//! - [`frontend`] — the non-blocking TCP ingress speaking length-
+//!   prefixed PMLP-style frames; every accepted frame is answered or
+//!   explicitly refused, even through shutdown.
 //! - [`loadgen`] — scenario-driven sensors ([`loadgen::Scenario`]:
 //!   steady / bursty / ramp / fanin / trace) pushing frames at the
-//!   queues; `trace` replays a recorded [`loadgen::Trace`] so the
+//!   queues directly or through a real socket
+//!   ([`loadgen::run_tcp_sensor`], open-loop and coordinated-omission-
+//!   correct); `trace` replays a recorded [`loadgen::Trace`] so the
 //!   offered stream is bit-reproducible.
 //! - [`campaign`] — the printed-hardware fault campaign: sweeps
 //!   stuck-at / transient fault levels per circuit architecture and
 //!   reports accuracy degradation and SLO impact through the same serve
 //!   path.
 //!
-//! [`run`] wires registry + evaluators together and hands off to
+//! [`run`] wires registry + slots together and hands off to
 //! [`serve_with`], which returns a [`ServerReport`] with per-model
-//! requests, p50/p99 latency, shed/error counts, SLO violations, and
-//! accuracy.  Under `steady` at the default rate nothing sheds and every
-//! prediction is bit-identical to a direct [`Evaluator::predict`] call
-//! (`tests/server_batching.rs`).
+//! requests, p50/p99 latency, shed/late/error counts, SLO violations,
+//! canary agreement, and accuracy.  Under `steady` at the default rate
+//! nothing sheds and every prediction is bit-identical to a direct
+//! [`Evaluator::predict`] call (`tests/server_batching.rs`,
+//! `tests/server_frontend.rs`).
 
+pub mod admission;
 pub mod batcher;
 pub mod campaign;
+pub mod frontend;
 pub mod loadgen;
 pub mod registry;
 
+use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
 use crate::data::ArtifactStore;
-use crate::runtime::{Backend, Evaluator};
+use crate::runtime::{owned_evaluator, Backend, EvalOpts, Evaluator};
 use crate::util::pool::default_threads;
 use crate::util::stats;
 
+pub use admission::{SloClass, CLASS_ORDER};
 pub use batcher::{BatchQueue, DrainConfig, Frame, ModelStats};
 pub use campaign::{ArchKind, CampaignConfig, CampaignReport, CampaignRow};
-pub use loadgen::{Scenario, Trace};
-pub use registry::{ModelEntry, ModelRegistry};
+pub use frontend::{Frontend, FrontendStats, Status};
+pub use loadgen::{ClientStats, Scenario, Trace};
+pub use registry::{ModelEntry, ModelRegistry, ModelSlot, ModelVersion};
 
 /// Server configuration (see `config` for the `[serve]` file section;
 /// every key has a CLI override).
@@ -54,6 +71,10 @@ pub use registry::{ModelEntry, ModelRegistry};
 pub struct ServeConfig {
     /// Datasets to host concurrently (one model + queue each).
     pub datasets: Vec<String>,
+    /// Per-tenant SLO classes, positional with `datasets`; models past
+    /// the end of the list default to gold (an empty list reproduces
+    /// the classless server exactly).
+    pub classes: Vec<SloClass>,
     pub scenario: Scenario,
     /// Offered load, frames per second across all sensors and models
     /// (for `fanin`: window rate — each window feeds every model).
@@ -66,10 +87,15 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Max frames per executed batch.
     pub batch: usize,
-    /// Bounded queue capacity per model; overflow is shed.
+    /// Bounded queue capacity per model; overflow is shed (non-gold
+    /// tenants shed earlier — [`SloClass::admit_limit`]).
     pub queue_cap: usize,
     /// Per-frame latency SLO in milliseconds.
     pub slo_ms: f64,
+    /// Refuse (`Late`) frames whose SLO already expired while queued
+    /// instead of evaluating dead work.  Off by default so the
+    /// trace-replay determinism paths keep `requests == answered`.
+    pub shed_late: bool,
     pub seed: u64,
     /// Evaluator backend on the request path (`Auto` → native; PJRT is
     /// rejected — its handles cannot cross the worker pool).
@@ -81,6 +107,19 @@ pub struct ServeConfig {
     /// Host deterministic synthetic models instead of store artifacts
     /// (artifact-free smoke/bench mode; accuracy 1.0 expected).
     pub synthetic: bool,
+    /// Serve over TCP: bind this address (port 0 = ephemeral) and drive
+    /// the scenario through real sockets ([`loadgen::run_tcp_sensor`])
+    /// instead of in-process queue pushes.  `None` = direct mode.
+    pub listen: Option<String>,
+    /// Hot reload: this long after start, stage a freshly built
+    /// evaluator for every model and promote it (immediately, or after
+    /// a canary window when `canary_frac > 0`).  Ignored when not
+    /// before the run's end.
+    pub reload_at: Option<Duration>,
+    /// Fraction of batches shadow-evaluated on a staged candidate, with
+    /// incumbent/candidate mismatches counted
+    /// ([`ModelStats::canary_mismatches`]).  0 disables the canary.
+    pub canary_frac: f64,
     /// `trace` scenario: replay this recorded trace file; when unset a
     /// diurnal trace is synthesized from `seed`/`rate_hz`/`duration`.
     pub trace: Option<PathBuf>,
@@ -93,6 +132,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             datasets: vec!["spectf".into(), "arrhythmia".into(), "gas".into()],
+            classes: Vec::new(),
             scenario: Scenario::Steady,
             rate_hz: 2000.0,
             duration: Duration::from_secs(3),
@@ -102,10 +142,14 @@ impl Default for ServeConfig {
             batch: 64,
             queue_cap: 1024,
             slo_ms: 50.0,
+            shed_late: false,
             seed: 7,
             backend: Backend::Auto,
             sim_lanes: 0,
             synthetic: false,
+            listen: None,
+            reload_at: None,
+            canary_frac: 0.0,
             trace: None,
             trace_out: None,
         }
@@ -116,13 +160,19 @@ impl Default for ServeConfig {
 #[derive(Clone, Debug)]
 pub struct ModelReport {
     pub name: String,
-    /// Frames offered (answered + shed + errors).
+    /// Tenant SLO class the model served under.
+    pub class: SloClass,
+    /// Model version serving at the end of the run (2+ after a reload).
+    pub version: u64,
+    /// Frames offered (answered + shed + late + errors).
     pub requests: usize,
     pub answered: usize,
     /// Frames whose batch failed in the evaluator (see
     /// [`ModelStats::errors`]); 0 on a healthy run.
     pub errors: usize,
     pub shed: usize,
+    /// Frames deadline-shed while queued ([`ServeConfig::shed_late`]).
+    pub late: usize,
     pub batches: usize,
     pub mean_batch: f64,
     /// Super-lane fill ratio: answered frames / simulator lane slots
@@ -130,11 +180,52 @@ pub struct ModelReport {
     /// gatesim batches).
     pub fill: f64,
     pub throughput_rps: f64,
+    /// In TCP mode these are client-side open-loop latencies measured
+    /// from each frame's *scheduled* send instant (coordinated-omission
+    /// correct); in direct mode, queue-to-answer latency.
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub slo_ms: f64,
     pub slo_violations: usize,
+    /// Canary shadow volume and disagreements for this run.
+    pub canary_checked: usize,
+    pub canary_mismatches: usize,
     pub accuracy: f64,
+}
+
+/// Ingress-layer summary, present only for TCP (`--listen`) runs.
+#[derive(Clone, Debug)]
+pub struct IngressReport {
+    /// Address actually bound (resolves port 0).
+    pub listen: String,
+    pub connections: usize,
+    /// Well-formed request frames decoded.
+    pub frames_in: usize,
+    /// Refused at the frontend (unknown model / bad shape).
+    pub refused: usize,
+    pub malformed: usize,
+    /// Connections closed by the partial-frame read deadline.
+    pub deadline_closed: usize,
+    /// Client-side totals across all sensors.
+    pub client_sent: usize,
+    pub client_answered: usize,
+    /// Accepted frames that never got an answer — the socket-boundary
+    /// exactly-once guarantee requires this to be 0.
+    pub client_lost: usize,
+}
+
+/// Per-SLO-class aggregation of a run (see [`ServerReport::class_rows`]).
+#[derive(Clone, Debug)]
+pub struct ClassRow {
+    pub class: SloClass,
+    pub models: usize,
+    pub requests: usize,
+    pub answered: usize,
+    pub shed: usize,
+    pub late: usize,
+    pub slo_violations: usize,
+    /// Worst per-model p99 within the class.
+    pub p99_ms: f64,
 }
 
 /// Whole-run summary across every hosted model.
@@ -146,6 +237,8 @@ pub struct ServerReport {
     pub workers: usize,
     pub elapsed_s: f64,
     pub models: Vec<ModelReport>,
+    /// TCP ingress stats; `None` for direct (in-process) runs.
+    pub ingress: Option<IngressReport>,
 }
 
 impl ServerReport {
@@ -161,12 +254,41 @@ impl ServerReport {
         self.models.iter().map(|m| m.shed).sum()
     }
 
+    pub fn total_late(&self) -> usize {
+        self.models.iter().map(|m| m.late).sum()
+    }
+
     pub fn total_errors(&self) -> usize {
         self.models.iter().map(|m| m.errors).sum()
     }
 
     pub fn total_rps(&self) -> f64 {
         self.total_answered() as f64 / self.elapsed_s.max(1e-9)
+    }
+
+    /// Aggregate the per-model rows by SLO class, gold first; classes
+    /// hosting no model are omitted.
+    pub fn class_rows(&self) -> Vec<ClassRow> {
+        CLASS_ORDER
+            .iter()
+            .filter_map(|&class| {
+                let ms: Vec<&ModelReport> =
+                    self.models.iter().filter(|m| m.class == class).collect();
+                if ms.is_empty() {
+                    return None;
+                }
+                Some(ClassRow {
+                    class,
+                    models: ms.len(),
+                    requests: ms.iter().map(|m| m.requests).sum(),
+                    answered: ms.iter().map(|m| m.answered).sum(),
+                    shed: ms.iter().map(|m| m.shed).sum(),
+                    late: ms.iter().map(|m| m.late).sum(),
+                    slo_violations: ms.iter().map(|m| m.slo_violations).sum(),
+                    p99_ms: ms.iter().map(|m| m.p99_ms).fold(0.0, f64::max),
+                })
+            })
+            .collect()
     }
 }
 
@@ -176,6 +298,13 @@ fn resolve_serve_backend(b: Backend) -> Backend {
     match b {
         Backend::Auto => Backend::Native,
         other => other,
+    }
+}
+
+fn sleep_until(target: Instant) {
+    let now = Instant::now();
+    if target > now {
+        std::thread::sleep(target - now);
     }
 }
 
@@ -192,31 +321,27 @@ pub fn run(store: &ArtifactStore, cfg: &ServeConfig) -> Result<ServerReport> {
     // parallelism, and nesting pools would oversubscribe to threads².
     // The super-lane width rides through so warmup compiles the plan a
     // wide simulator will execute and the batcher can align to it.
-    let evals = registry.evaluators(backend, 1, cfg.sim_lanes)?;
-    registry.warmup(&evals)?;
-    serve_with(&registry, &evals, cfg)
+    let slots = registry.slots(backend, 1, cfg.sim_lanes, &cfg.classes)?;
+    serve_with(&slots, cfg)
 }
 
-/// Serve an already-built registry through already-built evaluators —
-/// the shared lower half of [`run`] and of the fault campaign (which
-/// injects fault-carrying gatesim evaluators the plain entry point
-/// would never construct).
-pub fn serve_with(
-    registry: &ModelRegistry,
-    evals: &[Box<dyn Evaluator + Send + Sync + '_>],
-    cfg: &ServeConfig,
-) -> Result<ServerReport> {
-    ensure!(!registry.is_empty(), "serve: empty model registry");
-    ensure!(
-        evals.len() == registry.len(),
-        "serve: {} evaluators for {} models",
-        evals.len(),
-        registry.len()
-    );
+/// Serve already-built model slots — the shared lower half of [`run`],
+/// of the fault campaign (which stages fault-carrying gatesim
+/// evaluators the plain entry point would never construct), and of the
+/// tier-1 overload/reload tests.
+///
+/// Wiring: an optional TCP [`Frontend`] and an optional hot-reload
+/// timer run beside the sensor threads; the batcher drains on the
+/// calling thread.  Shutdown order is producers → frontend drain →
+/// batcher drain, so every accepted frame is answered before anything
+/// exits and the exactly-once guarantee extends across the socket
+/// boundary.
+pub fn serve_with(slots: &[Arc<ModelSlot>], cfg: &ServeConfig) -> Result<ServerReport> {
+    ensure!(!slots.is_empty(), "serve: no model slots");
     let trace = if cfg.scenario == Scenario::Trace {
         let tr = match &cfg.trace {
             Some(path) => Trace::load(path)?,
-            None => Trace::synth_diurnal(cfg.seed, cfg.rate_hz, cfg.duration, registry.len()),
+            None => Trace::synth_diurnal(cfg.seed, cfg.rate_hz, cfg.duration, slots.len()),
         };
         ensure!(!tr.is_empty(), "trace scenario: trace has no requests");
         if let Some(out) = &cfg.trace_out {
@@ -229,23 +354,99 @@ pub fn serve_with(
     let trace_ref = trace.as_ref();
 
     let workers = if cfg.workers == 0 { default_threads() } else { cfg.workers.max(1) };
-    let queues: Vec<BatchQueue> =
-        registry.entries().iter().map(|_| BatchQueue::new(cfg.queue_cap)).collect();
+    let queues: Vec<BatchQueue> = slots
+        .iter()
+        .map(|s| BatchQueue::with_admission(cfg.queue_cap, s.class.admit_limit(cfg.queue_cap)))
+        .collect();
     let drain_cfg = DrainConfig {
         workers,
         batch: cfg.batch.max(1),
         max_wait: cfg.max_wait,
         slo_ms: cfg.slo_ms,
+        shed_late: cfg.shed_late,
+        canary_step: batcher::canary_step(cfg.canary_frac),
         collect_responses: false,
     };
+    // Bind before anything starts so ephemeral ports resolve and
+    // clients can connect from their first instant.
+    let frontend = match &cfg.listen {
+        Some(addr) => Some(Frontend::bind(addr)?),
+        None => None,
+    };
+    let bound: Option<SocketAddr> = frontend.as_ref().map(|f| f.local_addr());
+
+    // Entry snapshot for the load generators: samples (and client-side
+    // labels) are drawn against the versions hosted at start, so a
+    // mid-run reload does not disturb the offered stream.
+    let entries: Vec<Arc<ModelEntry>> = slots
+        .iter()
+        .map(|s| Arc::clone(&s.current().entry))
+        .collect();
+
     let stop = AtomicBool::new(false);
+    let fe_stop = AtomicBool::new(false);
+    let client_stats: Mutex<Vec<ClientStats>> =
+        Mutex::new(vec![ClientStats::default(); slots.len()]);
+    let side_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
     let start = Instant::now();
     let deadline = start + cfg.duration;
 
-    let entries = registry.entries();
     let queues_ref = &queues;
+    let entries_ref = &entries[..];
     let stop_ref = &stop;
+    let fe_stop_ref = &fe_stop;
+    let client_stats_ref = &client_stats;
+    let side_err_ref = &side_err;
+    let backend = resolve_serve_backend(cfg.backend);
+
     std::thread::scope(|scope| -> Result<()> {
+        if let Some(fe) = &frontend {
+            scope.spawn(move || {
+                if let Err(e) = fe.run(slots, queues_ref, fe_stop_ref) {
+                    let mut slot = side_err_ref.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e.context("ingress frontend failed"));
+                    }
+                }
+            });
+        }
+        if let Some(at) = cfg.reload_at.filter(|&at| at < cfg.duration) {
+            scope.spawn(move || {
+                let opts = EvalOpts {
+                    sim_threads: 1,
+                    sim_lanes: cfg.sim_lanes,
+                    ..EvalOpts::default()
+                };
+                let target = start + at;
+                sleep_until(target);
+                for slot in slots {
+                    // Rebuild from the entry the slot currently hosts —
+                    // the printed-deployment story re-fabricates the
+                    // same logical model; stage() warms it off-path.
+                    let entry = Arc::clone(&slot.current().entry);
+                    let staged = owned_evaluator(backend, &entry.model, &opts)
+                        .and_then(|eval| slot.stage(entry, eval));
+                    if let Err(e) = staged {
+                        let mut guard = side_err_ref.lock().unwrap();
+                        if guard.is_none() {
+                            *guard =
+                                Some(e.context(format!("hot reload of `{}` failed", slot.name)));
+                        }
+                        return;
+                    }
+                }
+                if cfg.canary_frac > 0.0 {
+                    // Shadow the candidates on live traffic for half the
+                    // remaining run before promoting, so the mismatch
+                    // counters mean something.
+                    sleep_until(target + (deadline - target) / 2);
+                }
+                for slot in slots {
+                    slot.promote();
+                }
+            });
+        }
         // Producer side: sensors run in a nested scope so `stop` flips
         // only after every producer has exited — workers then drain the
         // remainder and the exactly-once guarantee holds through exit.
@@ -254,36 +455,88 @@ pub fn serve_with(
             let next_id = &next_id;
             std::thread::scope(|sensors| {
                 for s in 0..cfg.sensors.max(1) {
-                    sensors.spawn(move || {
-                        loadgen::run_sensor(
-                            s, entries, queues_ref, cfg, start, deadline, next_id, trace_ref,
-                        )
-                    });
+                    match bound {
+                        Some(addr) => {
+                            sensors.spawn(move || {
+                                match loadgen::run_tcp_sensor(
+                                    s, entries_ref, addr, cfg, start, deadline, trace_ref,
+                                ) {
+                                    Ok(per_model) => {
+                                        let mut all = client_stats_ref.lock().unwrap();
+                                        for (acc, got) in all.iter_mut().zip(per_model) {
+                                            acc.merge(got);
+                                        }
+                                    }
+                                    Err(e) => {
+                                        let mut guard = side_err_ref.lock().unwrap();
+                                        if guard.is_none() {
+                                            *guard =
+                                                Some(e.context(format!("tcp sensor {s} failed")));
+                                        }
+                                    }
+                                }
+                            });
+                        }
+                        None => {
+                            sensors.spawn(move || {
+                                loadgen::run_sensor(
+                                    s, entries_ref, queues_ref, cfg, start, deadline, next_id,
+                                    trace_ref,
+                                )
+                            });
+                        }
+                    }
                 }
             });
+            // Sensors have exited (TCP clients only return once every
+            // accepted frame is answered or charged lost), so nothing
+            // new can arrive: drain the frontend, then the batcher.
+            fe_stop_ref.store(true, Ordering::Release);
             stop_ref.store(true, Ordering::Release);
         });
-        batcher::drain(queues_ref, entries, evals, &drain_cfg, stop_ref)
+        batcher::drain(queues_ref, slots, &drain_cfg, stop_ref)
     })?;
 
     let elapsed_s = start.elapsed().as_secs_f64();
-    let eval_name = evals
-        .first()
-        .map(|e| e.name())
-        .unwrap_or(resolve_serve_backend(cfg.backend).label());
-    let mut models = Vec::with_capacity(registry.len());
-    for (entry, queue) in registry.entries().iter().zip(&queues) {
+    if let Some(e) = side_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    let merged = client_stats.into_inner().unwrap();
+    let tcp = bound.is_some();
+    let eval_name = slots[0].current().eval.name();
+    let mut models = Vec::with_capacity(slots.len());
+    for (i, (slot, queue)) in slots.iter().zip(&queues).enumerate() {
         let st = &queue.stats;
         let answered = st.answered.load(Ordering::Relaxed);
         let batches = st.batches.load(Ordering::Relaxed);
         let lane_slots = st.lane_slots.load(Ordering::Relaxed);
-        let lat = st.latencies_ms.lock().unwrap();
+        // TCP runs score latency and accuracy client-side: open-loop
+        // from the scheduled send instant, labels from the sensor's own
+        // entry snapshot.  Direct runs keep the server-side view.
+        let (p50_ms, p99_ms, accuracy) = if tcp {
+            let cs = &merged[i];
+            (
+                stats::percentile(&cs.latencies_ms, 50.0),
+                stats::percentile(&cs.latencies_ms, 99.0),
+                cs.correct as f64 / cs.ok.max(1) as f64,
+            )
+        } else {
+            let lat = st.latencies_ms.lock().unwrap();
+            (
+                stats::percentile(lat.samples(), 50.0),
+                stats::percentile(lat.samples(), 99.0),
+                st.correct.load(Ordering::Relaxed) as f64 / answered.max(1) as f64,
+            )
+        };
         models.push(ModelReport {
-            name: entry.name.clone(),
+            name: slot.name.clone(),
+            class: slot.class,
+            version: slot.version(),
             requests: st.submitted.load(Ordering::Relaxed),
             answered,
             errors: st.errors.load(Ordering::Relaxed),
             shed: st.shed.load(Ordering::Relaxed),
+            late: st.late.load(Ordering::Relaxed),
             batches,
             mean_batch: answered as f64 / batches.max(1) as f64,
             fill: if lane_slots == 0 {
@@ -292,19 +545,36 @@ pub fn serve_with(
                 answered as f64 / lane_slots as f64
             },
             throughput_rps: answered as f64 / elapsed_s.max(1e-9),
-            p50_ms: stats::percentile(lat.samples(), 50.0),
-            p99_ms: stats::percentile(lat.samples(), 99.0),
+            p50_ms,
+            p99_ms,
             slo_ms: cfg.slo_ms,
             slo_violations: st.slo_violations.load(Ordering::Relaxed),
-            accuracy: st.correct.load(Ordering::Relaxed) as f64 / answered.max(1) as f64,
+            canary_checked: st.canary_checked.load(Ordering::Relaxed),
+            canary_mismatches: st.canary_mismatches.load(Ordering::Relaxed),
+            accuracy,
         });
     }
+    let ingress = frontend.as_ref().map(|fe| {
+        let fs = &fe.stats;
+        IngressReport {
+            listen: fe.local_addr().to_string(),
+            connections: fs.connections.load(Ordering::Relaxed),
+            frames_in: fs.frames_in.load(Ordering::Relaxed),
+            refused: fs.refused.load(Ordering::Relaxed),
+            malformed: fs.malformed.load(Ordering::Relaxed),
+            deadline_closed: fs.deadline_closed.load(Ordering::Relaxed),
+            client_sent: merged.iter().map(|c| c.sent).sum(),
+            client_answered: merged.iter().map(|c| c.answered()).sum(),
+            client_lost: merged.iter().map(|c| c.lost).sum(),
+        }
+    });
     Ok(ServerReport {
         backend: eval_name,
         scenario: cfg.scenario,
         workers,
         elapsed_s,
         models,
+        ingress,
     })
 }
 
@@ -320,6 +590,13 @@ mod tests {
         assert!(c.queue_cap >= 1);
         assert!(!c.synthetic);
         assert!(c.trace.is_none() && c.trace_out.is_none());
+        // Ingress / admission / reload are all opt-in: the defaults
+        // reproduce the classless in-process server exactly.
+        assert!(c.classes.is_empty());
+        assert!(c.listen.is_none());
+        assert!(c.reload_at.is_none());
+        assert_eq!(c.canary_frac, 0.0);
+        assert!(!c.shed_late);
     }
 
     #[test]
@@ -339,12 +616,53 @@ mod tests {
     }
 
     #[test]
-    fn serve_with_rejects_mismatched_evaluators() {
-        let names = vec!["a".to_string(), "b".to_string()];
-        let reg = ModelRegistry::synthetic(&names, 3);
-        let evals = reg.evaluators(Backend::Native, 1, 0).unwrap();
-        let one = ModelRegistry::synthetic(&names[..1], 3);
-        assert!(serve_with(&one, &evals, &ServeConfig::default()).is_err());
-        assert!(serve_with(&ModelRegistry::new(), &[], &ServeConfig::default()).is_err());
+    fn serve_with_requires_slots() {
+        assert!(serve_with(&[], &ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn class_rows_aggregate_gold_first() {
+        let row = |name: &str, class: SloClass, shed: usize, p99: f64| ModelReport {
+            name: name.into(),
+            class,
+            version: 1,
+            requests: 10,
+            answered: 10 - shed,
+            errors: 0,
+            shed,
+            late: 0,
+            batches: 1,
+            mean_batch: (10 - shed) as f64,
+            fill: 1.0,
+            throughput_rps: 100.0,
+            p50_ms: p99 / 2.0,
+            p99_ms: p99,
+            slo_ms: 50.0,
+            slo_violations: 0,
+            canary_checked: 0,
+            canary_mismatches: 0,
+            accuracy: 1.0,
+        };
+        let rep = ServerReport {
+            backend: "native",
+            scenario: Scenario::Steady,
+            workers: 1,
+            elapsed_s: 0.1,
+            models: vec![
+                row("b0", SloClass::Bronze, 4, 9.0),
+                row("g0", SloClass::Gold, 0, 3.0),
+                row("b1", SloClass::Bronze, 2, 7.0),
+            ],
+            ingress: None,
+        };
+        let rows = rep.class_rows();
+        assert_eq!(rows.len(), 2, "silver hosts no model");
+        assert_eq!(rows[0].class, SloClass::Gold);
+        assert_eq!(rows[0].requests, 10);
+        assert_eq!(rows[1].class, SloClass::Bronze);
+        assert_eq!(rows[1].models, 2);
+        assert_eq!(rows[1].shed, 6);
+        assert_eq!(rows[1].p99_ms, 9.0);
+        assert_eq!(rep.total_late(), 0);
     }
 }

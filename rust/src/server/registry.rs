@@ -10,13 +10,14 @@
 //! generator starts, which forces lazy state (the gatesim circuit and its
 //! compiled [`crate::sim::SimPlan`]) off the request path.
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::{ArtifactStore, Split};
 use crate::model::{synth, ApproxTables, QuantModel};
-use crate::runtime::{build_evaluator, Backend, EvalOpts, Evaluator};
+use crate::runtime::{build_evaluator, owned_evaluator, Backend, EvalOpts, Evaluator};
+use crate::server::admission::{class_of, SloClass};
 
 /// One hosted model and the read-only state its traffic needs.
 #[derive(Clone, Debug)]
@@ -46,6 +47,125 @@ impl ModelEntry {
             tables,
         }
     }
+}
+
+/// One immutable, warmed (entry, evaluator) pair.  The batcher resolves
+/// a slot's current version at every batch boundary and holds this `Arc`
+/// for the batch's duration, so a concurrent promote can never tear a
+/// batch or stall the request path.
+pub struct ModelVersion {
+    /// Monotonic per slot, starting at 1.
+    pub version: u64,
+    pub entry: Arc<ModelEntry>,
+    /// Owns its model state (`'static`) so versions can be swapped at
+    /// runtime — built via [`owned_evaluator`], never borrowing the
+    /// registry.
+    pub eval: Box<dyn Evaluator + Send + Sync>,
+}
+
+/// One hosted tenant: the incumbent model version serving traffic, plus
+/// an optional staged candidate for zero-downtime hot reload.
+///
+/// Reload protocol: [`ModelSlot::stage`] builds and warms the candidate
+/// *off* the request path (traffic keeps hitting the incumbent), the
+/// batcher optionally shadows a canary fraction of batches on it, and
+/// [`ModelSlot::promote`] atomically swaps it in.  In-flight batches
+/// finish on the version they resolved — nothing blocks, nothing drops.
+pub struct ModelSlot {
+    pub name: String,
+    /// Tenant SLO class; fixed for the slot's lifetime (admission
+    /// ceilings and drain order are derived from it once at startup).
+    pub class: SloClass,
+    incumbent: RwLock<Arc<ModelVersion>>,
+    candidate: RwLock<Option<Arc<ModelVersion>>>,
+}
+
+impl ModelSlot {
+    pub fn new(
+        name: String,
+        class: SloClass,
+        entry: Arc<ModelEntry>,
+        eval: Box<dyn Evaluator + Send + Sync>,
+    ) -> ModelSlot {
+        ModelSlot {
+            name,
+            class,
+            incumbent: RwLock::new(Arc::new(ModelVersion {
+                version: 1,
+                entry,
+                eval,
+            })),
+            candidate: RwLock::new(None),
+        }
+    }
+
+    /// The version currently serving traffic.
+    pub fn current(&self) -> Arc<ModelVersion> {
+        self.incumbent.read().unwrap().clone()
+    }
+
+    /// The staged candidate, if any (shadow-evaluated by the batcher
+    /// when a canary fraction is configured).
+    pub fn candidate(&self) -> Option<Arc<ModelVersion>> {
+        self.candidate.read().unwrap().clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.incumbent.read().unwrap().version
+    }
+
+    /// Stage a candidate version: warm it here — on the caller's
+    /// thread, off the request path — then publish it for canary
+    /// shadowing.  Returns the candidate's version number.  A
+    /// previously staged candidate is replaced.
+    pub fn stage(
+        &self,
+        entry: Arc<ModelEntry>,
+        eval: Box<dyn Evaluator + Send + Sync>,
+    ) -> Result<u64> {
+        warm_one(&entry, eval.as_ref())
+            .with_context(|| format!("warming candidate for `{}`", self.name))?;
+        let version = self.version() + 1;
+        *self.candidate.write().unwrap() = Some(Arc::new(ModelVersion {
+            version,
+            entry,
+            eval,
+        }));
+        Ok(version)
+    }
+
+    /// Atomically swap the staged candidate in as the incumbent.
+    /// Returns `false` when nothing is staged.  Batches already running
+    /// hold their old `Arc<ModelVersion>` and finish undisturbed.
+    pub fn promote(&self) -> bool {
+        let cand = self.candidate.write().unwrap().take();
+        match cand {
+            Some(v) => {
+                *self.incumbent.write().unwrap() = v;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop the staged candidate (e.g. after canary mismatches).
+    pub fn abort_candidate(&self) -> bool {
+        self.candidate.write().unwrap().take().is_some()
+    }
+}
+
+/// Force one prediction through an evaluator so lazily-built state
+/// (gatesim circuit + compiled plan) is paid before traffic sees it.
+fn warm_one(entry: &ModelEntry, eval: &dyn Evaluator) -> Result<()> {
+    let mut out = Vec::with_capacity(1);
+    eval.predict_into(
+        entry.test.row(0),
+        1,
+        &entry.feat_mask,
+        &entry.approx_mask,
+        &entry.tables,
+        &mut out,
+    )
 }
 
 /// The set of models one server instance hosts, in request-routing order.
@@ -166,6 +286,45 @@ impl ModelRegistry {
         }
         Ok(())
     }
+
+    /// Build one hot-swappable [`ModelSlot`] per entry, each owning a
+    /// warmed `'static` evaluator ([`owned_evaluator`]) so versions can
+    /// be staged and promoted at runtime.  `classes` assigns SLO classes
+    /// positionally; models past its end default to gold.  PJRT is
+    /// rejected for the same reason as in [`ModelRegistry::evaluators`].
+    pub fn slots(
+        &self,
+        backend: Backend,
+        sim_threads: usize,
+        sim_lanes: usize,
+        classes: &[SloClass],
+    ) -> Result<Vec<Arc<ModelSlot>>> {
+        if backend == Backend::Pjrt {
+            bail!(
+                "serve: PJRT handles are thread-bound (!Send) and cannot back the \
+                 multi-model worker pool; use --backend native|gatesim"
+            );
+        }
+        let opts = EvalOpts {
+            sim_threads: sim_threads.max(1),
+            sim_lanes,
+            ..EvalOpts::default()
+        };
+        let mut slots = Vec::with_capacity(self.entries.len());
+        for (i, entry) in self.entries.iter().enumerate() {
+            let eval = owned_evaluator(backend, &entry.model, &opts)
+                .with_context(|| format!("building evaluator for `{}`", entry.name))?;
+            warm_one(entry, eval.as_ref())
+                .with_context(|| format!("warming up `{}`", entry.name))?;
+            slots.push(Arc::new(ModelSlot::new(
+                entry.name.clone(),
+                class_of(classes, i),
+                Arc::clone(entry),
+                eval,
+            )));
+        }
+        Ok(slots)
+    }
 }
 
 #[cfg(test)]
@@ -194,5 +353,40 @@ mod tests {
         let names = vec!["x".to_string()];
         let reg = ModelRegistry::synthetic(&names, 1);
         assert!(reg.evaluators(Backend::Pjrt, 1, 0).is_err());
+        assert!(reg.slots(Backend::Pjrt, 1, 0, &[]).is_err());
+    }
+
+    #[test]
+    fn slot_stage_and_promote_swap_versions_atomically() {
+        let names = vec!["m".to_string()];
+        let reg = ModelRegistry::synthetic(&names, 9);
+        let slots = reg
+            .slots(Backend::Native, 1, 0, &[SloClass::Silver])
+            .unwrap();
+        let slot = &slots[0];
+        assert_eq!(slot.class, SloClass::Silver);
+        assert_eq!(slot.version(), 1);
+        assert!(slot.candidate().is_none());
+        assert!(!slot.promote(), "nothing staged yet");
+
+        let entry = Arc::clone(&slot.current().entry);
+        let eval = owned_evaluator(Backend::Native, &entry.model, &EvalOpts::default()).unwrap();
+        let v = slot.stage(Arc::clone(&entry), eval).unwrap();
+        assert_eq!(v, 2);
+        assert!(slot.candidate().is_some());
+        assert_eq!(slot.version(), 1, "staging must not touch the incumbent");
+
+        let held = slot.current();
+        assert!(slot.promote());
+        assert_eq!(slot.version(), 2);
+        assert!(slot.candidate().is_none());
+        assert_eq!(held.version, 1, "in-flight batches keep their version");
+
+        // Abort path: stage again, then drop instead of promoting.
+        let eval = owned_evaluator(Backend::Native, &entry.model, &EvalOpts::default()).unwrap();
+        slot.stage(Arc::clone(&entry), eval).unwrap();
+        assert!(slot.abort_candidate());
+        assert!(!slot.abort_candidate());
+        assert_eq!(slot.version(), 2);
     }
 }

@@ -5,21 +5,29 @@
 //!   drain-to-exit;
 //! - batched predictions are bit-identical to a direct
 //!   [`Evaluator::predict`] call on the same rows;
-//! - shedding triggers exactly at queue capacity and nowhere else;
+//! - shedding triggers exactly at the admission ceiling and nowhere
+//!   else, and per-class ceilings shed bronze before silver before gold;
+//! - deadline shedding (`shed_late`) refuses expired frames *before*
+//!   the evaluator sees them, with an exact `late` count;
 //! - the steady scenario at a modest rate serves ≥ 3 models end-to-end
 //!   with zero shed and accuracy 1.0 (self-labeled splits + exact
 //!   backend ⇒ accuracy is a bit-exactness check);
 //! - fan-in feeds every hosted model the same window count;
 //! - a failing batch is charged to `ModelStats::errors`, the pool keeps
 //!   draining sibling queues, and the first error surfaces after the
-//!   join (exactly-once: submitted = answered + shed + errors).
+//!   join (exactly-once: submitted = answered + shed + late + errors);
+//! - under 2× overload a gold/bronze pair sheds bronze first while gold
+//!   stays inside its SLO.
 
 use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use printed_mlp::data::ArtifactStore;
-use printed_mlp::runtime::{Backend, Evaluator};
-use printed_mlp::server::{self, batcher, BatchQueue, DrainConfig, Frame, ModelRegistry, Scenario};
+use printed_mlp::runtime::{owned_evaluator, Backend, EvalOpts, Evaluator};
+use printed_mlp::server::{
+    self, batcher, BatchQueue, DrainConfig, Frame, ModelRegistry, ModelSlot, Scenario, SloClass,
+};
 use printed_mlp::util::prng::Rng;
 
 fn synthetic_registry(n: usize, seed: u64) -> ModelRegistry {
@@ -30,7 +38,7 @@ fn synthetic_registry(n: usize, seed: u64) -> ModelRegistry {
 #[test]
 fn every_frame_answered_exactly_once_and_bit_identical() {
     let reg = synthetic_registry(3, 21);
-    let evals = reg.evaluators(Backend::Native, 1, 0).unwrap();
+    let slots = reg.slots(Backend::Native, 1, 0, &[]).unwrap();
     let entries = reg.entries();
     let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
 
@@ -41,11 +49,7 @@ fn every_frame_answered_exactly_once_and_bit_identical() {
     for _ in 0..400 {
         let m = rng.usize_below(entries.len());
         let sample = rng.usize_below(entries[m].test.len());
-        let ok = queues[m].push(Frame {
-            id: next_id,
-            sample,
-            enqueued: Instant::now(),
-        });
+        let ok = queues[m].push(Frame::new(next_id, sample));
         assert!(ok, "queue far below capacity must accept");
         pushed[m].push((next_id, sample));
         next_id += 1;
@@ -60,8 +64,9 @@ fn every_frame_answered_exactly_once_and_bit_identical() {
         max_wait: Duration::from_millis(1),
         slo_ms: 1e9,
         collect_responses: true,
+        ..DrainConfig::default()
     };
-    batcher::drain(&queues, entries, &evals, &cfg, &stop).unwrap();
+    batcher::drain(&queues, &slots, &cfg, &stop).unwrap();
 
     for (m, queue) in queues.iter().enumerate() {
         let mut responses = queue.stats.responses.lock().unwrap().clone();
@@ -82,7 +87,9 @@ fn every_frame_answered_exactly_once_and_bit_identical() {
         for &(_, sample) in &pushed[m] {
             xs.extend_from_slice(entry.test.row(sample));
         }
-        let want = evals[m]
+        let ver = slots[m].current();
+        let want = ver
+            .eval
             .predict(&xs, pushed[m].len(), &entry.feat_mask, &entry.approx_mask, &entry.tables)
             .unwrap();
         // `pushed` is in id order per model, `responses` sorted by id.
@@ -99,23 +106,18 @@ fn every_frame_answered_exactly_once_and_bit_identical() {
 fn shedding_triggers_exactly_at_capacity() {
     let cap = 4;
     let q = BatchQueue::new(cap);
-    let frame = |id: u64| Frame {
-        id,
-        sample: 0,
-        enqueued: Instant::now(),
-    };
     for id in 0..cap as u64 {
-        assert!(q.push(frame(id)), "below capacity must accept");
+        assert!(q.push(Frame::new(id, 0)), "below capacity must accept");
     }
     assert_eq!(q.stats.shed.load(std::sync::atomic::Ordering::Relaxed), 0);
     // One over: shed, and only that one.
-    assert!(!q.push(frame(99)));
+    assert!(!q.push(Frame::new(99, 0)));
     assert_eq!(q.stats.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
     assert_eq!(q.len(), cap);
     // Draining frees capacity again.
     let mut out = Vec::new();
     assert_eq!(q.pop_batch(cap, Duration::ZERO, true, &mut out), cap);
-    assert!(q.push(frame(100)), "post-drain push must succeed");
+    assert!(q.push(Frame::new(100, 0)), "post-drain push must succeed");
     assert_eq!(q.stats.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
     assert_eq!(
         q.stats.submitted.load(std::sync::atomic::Ordering::Relaxed),
@@ -124,14 +126,36 @@ fn shedding_triggers_exactly_at_capacity() {
 }
 
 #[test]
+fn admission_ceilings_shed_bronze_before_silver_before_gold() {
+    use std::sync::atomic::Ordering;
+    let cap = 32;
+    for (class, want_admit) in [
+        (SloClass::Gold, 32),
+        (SloClass::Silver, 24),
+        (SloClass::Bronze, 16),
+    ] {
+        let q = BatchQueue::with_admission(cap, class.admit_limit(cap));
+        let mut accepted = 0;
+        for id in 0..40u64 {
+            if q.push(Frame::new(id, 0)) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(
+            accepted, want_admit,
+            "{}: admission ceiling is deterministic",
+            class.label()
+        );
+        assert_eq!(q.stats.shed.load(Ordering::Relaxed), 40 - want_admit);
+        assert_eq!(q.stats.submitted.load(Ordering::Relaxed), 40);
+    }
+}
+
+#[test]
 fn subfull_batches_linger_until_max_wait_or_force() {
     let q = BatchQueue::new(64);
     for id in 0..3 {
-        q.push(Frame {
-            id,
-            sample: 0,
-            enqueued: Instant::now(),
-        });
+        q.push(Frame::new(id, 0));
     }
     let mut out = Vec::new();
     // Fresh + sub-full + long linger: held back.
@@ -140,11 +164,7 @@ fn subfull_batches_linger_until_max_wait_or_force() {
     assert_eq!(q.pop_batch(8, Duration::from_secs(600), true, &mut out), 3);
     // A full batch never lingers.
     for id in 0..8 {
-        q.push(Frame {
-            id,
-            sample: 0,
-            enqueued: Instant::now(),
-        });
+        q.push(Frame::new(id, 0));
     }
     out.clear();
     assert_eq!(q.pop_batch(8, Duration::from_secs(600), false, &mut out), 8);
@@ -157,19 +177,14 @@ fn gatesim_drain_aligns_batches_to_super_lane_blocks() {
     // small configured batch must drain in whole blocks (batch ceiling
     // rounded up), leaving only the forced tail partial.
     let reg = synthetic_registry(1, 31);
-    let evals = reg.evaluators(Backend::GateSim, 1, 1).unwrap();
-    reg.warmup(&evals).unwrap();
-    assert_eq!(evals[0].batch_quantum(), 64);
+    let slots = reg.slots(Backend::GateSim, 1, 1, &[]).unwrap();
+    assert_eq!(slots[0].current().eval.batch_quantum(), 64);
     let entries = reg.entries();
     let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
     let mut rng = Rng::new(7);
     for id in 0..200u64 {
         let sample = rng.usize_below(entries[0].test.len());
-        assert!(queues[0].push(Frame {
-            id,
-            sample,
-            enqueued: Instant::now(),
-        }));
+        assert!(queues[0].push(Frame::new(id, sample)));
     }
     let stop = AtomicBool::new(true);
     let cfg = DrainConfig {
@@ -177,9 +192,9 @@ fn gatesim_drain_aligns_batches_to_super_lane_blocks() {
         batch: 16,
         max_wait: Duration::from_millis(1),
         slo_ms: 1e9,
-        collect_responses: false,
+        ..DrainConfig::default()
     };
-    batcher::drain(&queues, entries, &evals, &cfg, &stop).unwrap();
+    batcher::drain(&queues, &slots, &cfg, &stop).unwrap();
     let st = &queues[0].stats;
     assert_eq!(st.answered.load(Ordering::Relaxed), 200);
     assert_eq!(
@@ -191,6 +206,83 @@ fn gatesim_drain_aligns_batches_to_super_lane_blocks() {
         st.lane_slots.load(Ordering::Relaxed),
         256,
         "three full blocks plus one partial block of lane slots"
+    );
+}
+
+#[test]
+fn late_frames_never_reach_the_evaluator() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // Counts every row the backend is actually asked to evaluate.
+    struct CountingEval {
+        inner: Box<dyn Evaluator + Send + Sync>,
+        seen: Arc<AtomicUsize>,
+    }
+    impl Evaluator for CountingEval {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn predict(
+            &self,
+            xs: &[u8],
+            n: usize,
+            feat_mask: &[u8],
+            approx_mask: &[u8],
+            tables: &printed_mlp::model::ApproxTables,
+        ) -> anyhow::Result<Vec<i32>> {
+            self.seen.fetch_add(n, Ordering::Relaxed);
+            self.inner.predict(xs, n, feat_mask, approx_mask, tables)
+        }
+    }
+
+    let reg = synthetic_registry(1, 23);
+    let entries = reg.entries();
+    let seen = Arc::new(AtomicUsize::new(0));
+    let eval = Box::new(CountingEval {
+        inner: owned_evaluator(Backend::Native, &entries[0].model, &EvalOpts::default()).unwrap(),
+        seen: Arc::clone(&seen),
+    });
+    let slots = vec![Arc::new(ModelSlot::new(
+        "aged".into(),
+        SloClass::Gold,
+        Arc::clone(&entries[0]),
+        eval,
+    ))];
+    let queues = vec![BatchQueue::new(4096)];
+
+    // 20 frames pre-aged far past the SLO, 30 fresh ones.
+    let aged = Instant::now().checked_sub(Duration::from_secs(10)).unwrap();
+    let rows = entries[0].test.len();
+    for id in 0..20u64 {
+        assert!(queues[0].push(Frame::at(id, id as usize % rows, aged)));
+    }
+    for id in 20..50u64 {
+        assert!(queues[0].push(Frame::new(id, id as usize % rows)));
+    }
+    let stop = AtomicBool::new(true);
+    let cfg = DrainConfig {
+        workers: 1,
+        batch: 16,
+        max_wait: Duration::from_millis(1),
+        slo_ms: 50.0,
+        shed_late: true,
+        collect_responses: true,
+        ..DrainConfig::default()
+    };
+    batcher::drain(&queues, &slots, &cfg, &stop).unwrap();
+    let st = &queues[0].stats;
+    assert_eq!(st.late.load(Ordering::Relaxed), 20, "every aged frame refused as late");
+    assert_eq!(st.answered.load(Ordering::Relaxed), 30);
+    assert_eq!(st.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        seen.load(Ordering::Relaxed),
+        30,
+        "the evaluator never sees a deadline-shed frame"
+    );
+    assert_eq!(
+        st.responses.lock().unwrap().len(),
+        30,
+        "late frames answer Late, not a prediction"
     );
 }
 
@@ -213,8 +305,13 @@ fn steady_three_models_zero_shed_exact_accuracy() {
     assert_eq!(rep.backend, "native");
     assert_eq!(rep.models.len(), 3, "hosts three models concurrently");
     assert!(rep.total_answered() > 0, "steady load must serve traffic");
+    assert!(rep.ingress.is_none(), "no --listen, no ingress section");
     for m in &rep.models {
+        assert_eq!(m.class, SloClass::Gold, "{}: classless defaults to gold", m.name);
+        assert_eq!(m.version, 1, "{}: no reload, version stays 1", m.name);
         assert_eq!(m.shed, 0, "{}: steady default rate must not shed", m.name);
+        assert_eq!(m.late, 0, "{}: shed_late defaults off", m.name);
+        assert_eq!(m.canary_checked, 0, "{}: canary defaults off", m.name);
         assert_eq!(
             m.requests, m.answered,
             "{}: every submitted frame answered",
@@ -240,11 +337,11 @@ fn failing_batches_are_accounted_and_drain_continues() {
 
     // Wraps a real evaluator and fails every other batch — the shape of
     // a transient backend fault (OOM, poisoned lock, device error).
-    struct FlakyEval<'a> {
-        inner: Box<dyn Evaluator + Send + Sync + 'a>,
+    struct FlakyEval {
+        inner: Box<dyn Evaluator + Send + Sync>,
         calls: AtomicUsize,
     }
-    impl Evaluator for FlakyEval<'_> {
+    impl Evaluator for FlakyEval {
         fn name(&self) -> &'static str {
             "flaky"
         }
@@ -264,25 +361,34 @@ fn failing_batches_are_accounted_and_drain_continues() {
     }
 
     let reg = synthetic_registry(2, 17);
-    let mut inner = reg.evaluators(Backend::Native, 1, 0).unwrap();
+    let entries = reg.entries();
+    let opts = EvalOpts::default();
     // Model 0 fails every other batch; model 1 stays healthy.
-    let healthy = inner.pop().unwrap();
-    let flaky: Box<dyn Evaluator + Send + Sync + '_> = Box::new(FlakyEval {
-        inner: inner.pop().unwrap(),
+    let flaky = Box::new(FlakyEval {
+        inner: owned_evaluator(Backend::Native, &entries[0].model, &opts).unwrap(),
         calls: AtomicUsize::new(0),
     });
-    let evals = vec![flaky, healthy];
-    let entries = reg.entries();
+    let healthy = owned_evaluator(Backend::Native, &entries[1].model, &opts).unwrap();
+    let slots = vec![
+        Arc::new(ModelSlot::new(
+            entries[0].name.clone(),
+            SloClass::Gold,
+            Arc::clone(&entries[0]),
+            flaky,
+        )),
+        Arc::new(ModelSlot::new(
+            entries[1].name.clone(),
+            SloClass::Gold,
+            Arc::clone(&entries[1]),
+            healthy,
+        )),
+    ];
     let queues: Vec<BatchQueue> = entries.iter().map(|_| BatchQueue::new(4096)).collect();
     let mut rng = Rng::new(3);
     for id in 0..400u64 {
         let m = (id % 2) as usize;
         let sample = rng.usize_below(entries[m].test.len());
-        assert!(queues[m].push(Frame {
-            id,
-            sample,
-            enqueued: Instant::now(),
-        }));
+        assert!(queues[m].push(Frame::new(id, sample)));
     }
     let stop = AtomicBool::new(true);
     let cfg = DrainConfig {
@@ -291,8 +397,9 @@ fn failing_batches_are_accounted_and_drain_continues() {
         max_wait: Duration::from_millis(1),
         slo_ms: 1e9,
         collect_responses: true,
+        ..DrainConfig::default()
     };
-    let err = batcher::drain(&queues, entries, &evals, &cfg, &stop)
+    let err = batcher::drain(&queues, &slots, &cfg, &stop)
         .expect_err("the flaky model's first failure must surface after the join");
     assert!(
         format!("{err:#}").contains("injected batch failure"),
@@ -323,6 +430,97 @@ fn failing_batches_are_accounted_and_drain_continues() {
         healthy_st.answered.load(Ordering::Relaxed),
         200,
         "sibling model fully served despite the failures"
+    );
+}
+
+#[test]
+fn overload_sheds_bronze_before_gold_and_gold_meets_slo() {
+    // One slow backend shared shape: each batch costs ~8 ms regardless
+    // of size, so throughput is bounded by batches/s and the run is a
+    // sustained ~2x overload.  The class separation is structural, not a
+    // timing accident: both queues saturate, so every popped batch is
+    // bounded by the class's admission ceiling (gold 8, bronze 4 at
+    // queue_cap 8) and the gold-first drain moves twice the frames per
+    // sweep for gold — bronze's shed count must exceed gold's.
+    struct SlowEval {
+        inner: Box<dyn Evaluator + Send + Sync>,
+        delay: Duration,
+    }
+    impl Evaluator for SlowEval {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+        fn predict(
+            &self,
+            xs: &[u8],
+            n: usize,
+            feat_mask: &[u8],
+            approx_mask: &[u8],
+            tables: &printed_mlp::model::ApproxTables,
+        ) -> anyhow::Result<Vec<i32>> {
+            std::thread::sleep(self.delay);
+            self.inner.predict(xs, n, feat_mask, approx_mask, tables)
+        }
+    }
+
+    let reg = synthetic_registry(2, 41);
+    let entries = reg.entries();
+    let opts = EvalOpts::default();
+    let mk = |i: usize, class: SloClass| {
+        Arc::new(ModelSlot::new(
+            entries[i].name.clone(),
+            class,
+            Arc::clone(&entries[i]),
+            Box::new(SlowEval {
+                inner: owned_evaluator(Backend::Native, &entries[i].model, &opts).unwrap(),
+                delay: Duration::from_millis(8),
+            }),
+        ))
+    };
+    let slots = vec![mk(0, SloClass::Gold), mk(1, SloClass::Bronze)];
+    let cfg = server::ServeConfig {
+        datasets: vec!["g".into(), "b".into()],
+        scenario: Scenario::Steady,
+        rate_hz: 2000.0,
+        duration: Duration::from_millis(400),
+        sensors: 2,
+        workers: 1,
+        batch: 16,
+        queue_cap: 8,
+        slo_ms: 300.0,
+        shed_late: true,
+        backend: Backend::Native,
+        synthetic: true,
+        seed: 13,
+        ..server::ServeConfig::default()
+    };
+    let rep = server::serve_with(&slots, &cfg).unwrap();
+    assert_eq!(rep.models.len(), 2);
+    let gold = &rep.models[0];
+    let bronze = &rep.models[1];
+    assert_eq!(gold.class, SloClass::Gold);
+    assert_eq!(bronze.class, SloClass::Bronze);
+    for m in &rep.models {
+        assert_eq!(m.errors, 0, "{}: overload must not error", m.name);
+        assert_eq!(
+            m.requests,
+            m.answered + m.shed + m.late,
+            "{}: exactly-once through overload",
+            m.name
+        );
+        assert!(m.requests > 0 && m.answered > 0, "{}: traffic flowed", m.name);
+    }
+    assert!(
+        bronze.shed + bronze.late > gold.shed + gold.late,
+        "bronze must shed first under overload (bronze {} vs gold {})",
+        bronze.shed + bronze.late,
+        gold.shed + gold.late
+    );
+    assert!(
+        gold.p99_ms <= cfg.slo_ms,
+        "gold p99 {:.1} ms must stay inside the {:.0} ms SLO",
+        gold.p99_ms,
+        cfg.slo_ms
     );
 }
 

@@ -1,0 +1,398 @@
+//! Tier-1 loopback tests for the TCP ingress (`server::frontend`) and
+//! the hot-reload/canary path, artifact-free via synthetic registries:
+//!
+//! - a socket round trip is bit-identical to a direct
+//!   [`Evaluator::predict`] call on the same rows;
+//! - a slow client dribbling one byte at a time is still answered
+//!   (partial frames reassemble; the read deadline only fires on stalls);
+//! - an oversized length prefix or bad magic loses only that connection
+//!   — the accept loop survives and a fresh connection is served;
+//! - unknown models and wrong-shape feature vectors are `Refused` on a
+//!   connection that stays open;
+//! - the canary counts incumbent/candidate disagreements exactly on a
+//!   deliberately divergent same-shape candidate, off the response path;
+//! - a full `serve_with` run over TCP with a mid-run hot reload answers
+//!   every accepted frame (zero client-side losses), promotes every
+//!   slot to version 2, and records zero canary mismatches for an
+//!   identical rebuild.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use printed_mlp::data::ArtifactStore;
+use printed_mlp::model::synth;
+use printed_mlp::runtime::{owned_evaluator, Backend, EvalOpts};
+use printed_mlp::server::frontend::{decode_response, encode_request, Request, MAX_FRAME};
+use printed_mlp::server::{
+    self, batcher, BatchQueue, DrainConfig, Frame, Frontend, ModelEntry, ModelRegistry, Scenario,
+    Status,
+};
+
+fn synthetic_registry(n: usize, seed: u64) -> ModelRegistry {
+    let names: Vec<String> = (0..n).map(|i| format!("net{i}")).collect();
+    ModelRegistry::synthetic(&names, seed)
+}
+
+/// Read one length-prefixed response frame off a blocking socket.
+fn read_response(stream: &mut TcpStream) -> printed_mlp::server::frontend::Response {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).expect("response length prefix");
+    let n = u32::from_le_bytes(len) as usize;
+    let mut payload = vec![0u8; n];
+    stream.read_exact(&mut payload).expect("response payload");
+    decode_response(&payload).expect("well-formed response frame")
+}
+
+/// Run `client` against a live frontend + batcher, then drain both.
+/// Returns after both server threads have exited cleanly.
+fn with_server<T>(
+    reg: &ModelRegistry,
+    dcfg: &DrainConfig,
+    client: impl FnOnce(&Frontend, std::net::SocketAddr) -> T,
+) -> T {
+    let slots = reg.slots(Backend::Native, 1, 0, &[]).unwrap();
+    let queues: Vec<BatchQueue> = reg.entries().iter().map(|_| BatchQueue::new(4096)).collect();
+    let frontend = Frontend::bind("127.0.0.1:0").unwrap();
+    let addr = frontend.local_addr();
+    let fe_stop = AtomicBool::new(false);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let fe_h = s.spawn(|| frontend.run(&slots, &queues, &fe_stop));
+        let dr_h = s.spawn(|| batcher::drain(&queues, &slots, dcfg, &stop));
+        let out = client(&frontend, addr);
+        // Drain order mirrors serve_with: stop reading, answer
+        // everything owed, then let the workers empty the queues.
+        fe_stop.store(true, Ordering::Release);
+        stop.store(true, Ordering::Release);
+        fe_h.join().unwrap().expect("frontend exits cleanly");
+        dr_h.join().unwrap().expect("batcher exits cleanly");
+        out
+    })
+}
+
+fn quick_drain() -> DrainConfig {
+    DrainConfig {
+        workers: 2,
+        batch: 16,
+        max_wait: Duration::from_micros(200),
+        slo_ms: 1e9,
+        ..DrainConfig::default()
+    }
+}
+
+#[test]
+fn tcp_round_trip_is_bit_identical_to_direct_predict() {
+    let reg = synthetic_registry(2, 71);
+    let entries = reg.entries().to_vec();
+    let got = with_server(&reg, &quick_drain(), |_, addr| {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        // Interleave both models; features are the split's own rows so
+        // the server-side answer has a computable ground truth.
+        let mut sent: Vec<(u64, usize, usize)> = Vec::new();
+        for i in 0..50u64 {
+            let m = (i % 2) as usize;
+            let sample = i as usize % entries[m].test.len();
+            let req = Request {
+                model: m as u16,
+                id: i,
+                features: entries[m].test.row(sample).to_vec(),
+            };
+            stream.write_all(&encode_request(&req)).unwrap();
+            sent.push((i, m, sample));
+        }
+        let mut got = Vec::new();
+        for _ in 0..sent.len() {
+            got.push(read_response(&mut stream));
+        }
+        (sent, got)
+    });
+    let (sent, responses) = got;
+    assert_eq!(responses.len(), 50, "every request answered exactly once");
+
+    // Ground truth: direct predict over the same rows, per model.
+    let opts = EvalOpts::default();
+    let mut want: std::collections::HashMap<u64, i32> = std::collections::HashMap::new();
+    for (m, entry) in entries.iter().enumerate() {
+        let rows: Vec<(u64, usize)> = sent
+            .iter()
+            .filter(|&&(_, mm, _)| mm == m)
+            .map(|&(id, _, sample)| (id, sample))
+            .collect();
+        let mut xs = Vec::new();
+        for &(_, sample) in &rows {
+            xs.extend_from_slice(entry.test.row(sample));
+        }
+        let eval = owned_evaluator(Backend::Native, &entry.model, &opts).unwrap();
+        let preds = eval
+            .predict(&xs, rows.len(), &entry.feat_mask, &entry.approx_mask, &entry.tables)
+            .unwrap();
+        for (&(id, _), &p) in rows.iter().zip(&preds) {
+            want.insert(id, p);
+        }
+    }
+    for resp in &responses {
+        assert_eq!(resp.status, Status::Ok, "frame {}: must be served", resp.id);
+        assert_eq!(
+            resp.pred, want[&resp.id],
+            "frame {}: socket answer must be bit-identical to direct predict",
+            resp.id
+        );
+    }
+}
+
+#[test]
+fn slow_byte_by_byte_writer_is_still_answered() {
+    let reg = synthetic_registry(1, 73);
+    let entry = Arc::clone(&reg.entries()[0]);
+    let resp = with_server(&reg, &quick_drain(), |_, addr| {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let req = Request {
+            model: 0,
+            id: 9001,
+            features: entry.test.row(3).to_vec(),
+        };
+        // Dribble the frame one byte at a time, well inside the read
+        // deadline: the frontend must reassemble, not give up.
+        for b in encode_request(&req) {
+            stream.write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        read_response(&mut stream)
+    });
+    assert_eq!(resp.id, 9001);
+    assert_eq!(resp.status, Status::Ok);
+}
+
+#[test]
+fn malformed_frames_lose_only_their_connection() {
+    let reg = synthetic_registry(1, 77);
+    let entry = Arc::clone(&reg.entries()[0]);
+    with_server(&reg, &quick_drain(), |fe, addr| {
+        // Oversized length prefix: fatal for this connection.
+        let mut bad = TcpStream::connect(addr).unwrap();
+        bad.write_all(&((MAX_FRAME + 1) as u32).to_le_bytes()).unwrap();
+        let mut byte = [0u8; 1];
+        let closed = matches!(bad.read(&mut byte), Ok(0) | Err(_));
+        assert!(closed, "oversized frame must close the connection");
+
+        // Valid length, bad magic: also fatal for this connection.
+        let mut bad = TcpStream::connect(addr).unwrap();
+        let mut wire = encode_request(&Request {
+            model: 0,
+            id: 1,
+            features: entry.test.row(0).to_vec(),
+        });
+        wire[4] ^= 0xFF; // corrupt the magic inside the payload
+        bad.write_all(&wire).unwrap();
+        let closed = matches!(bad.read(&mut byte), Ok(0) | Err(_));
+        assert!(closed, "bad magic must close the connection");
+
+        // The accept loop survived both: a fresh connection is served.
+        let mut good = TcpStream::connect(addr).unwrap();
+        good.write_all(&encode_request(&Request {
+            model: 0,
+            id: 2,
+            features: entry.test.row(1).to_vec(),
+        }))
+        .unwrap();
+        let resp = read_response(&mut good);
+        assert_eq!(resp.id, 2);
+        assert_eq!(resp.status, Status::Ok);
+        assert!(
+            fe.stats.malformed.load(Ordering::Relaxed) >= 2,
+            "both poison frames counted as malformed"
+        );
+    });
+}
+
+#[test]
+fn unknown_model_and_bad_shape_are_refused_without_closing() {
+    let reg = synthetic_registry(1, 79);
+    let entry = Arc::clone(&reg.entries()[0]);
+    with_server(&reg, &quick_drain(), |fe, addr| {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // Unknown model id.
+        stream
+            .write_all(&encode_request(&Request {
+                model: 99,
+                id: 1,
+                features: entry.test.row(0).to_vec(),
+            }))
+            .unwrap();
+        let resp = read_response(&mut stream);
+        assert_eq!(resp.status, Status::Refused);
+        assert_eq!(resp.pred, -1);
+        // Wrong feature count for a known model.
+        stream
+            .write_all(&encode_request(&Request {
+                model: 0,
+                id: 2,
+                features: vec![1; entry.model.features + 1],
+            }))
+            .unwrap();
+        let resp = read_response(&mut stream);
+        assert_eq!(resp.status, Status::Refused);
+        // The same connection still serves valid traffic afterwards.
+        stream
+            .write_all(&encode_request(&Request {
+                model: 0,
+                id: 3,
+                features: entry.test.row(2).to_vec(),
+            }))
+            .unwrap();
+        let resp = read_response(&mut stream);
+        assert_eq!(resp.id, 3);
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(fe.stats.refused.load(Ordering::Relaxed), 2);
+        assert_eq!(fe.stats.malformed.load(Ordering::Relaxed), 0);
+    });
+}
+
+#[test]
+fn canary_counts_divergent_candidate_mismatches_exactly() {
+    let reg = synthetic_registry(1, 83);
+    let slots = reg.slots(Backend::Native, 1, 0, &[]).unwrap();
+    let slot = &slots[0];
+    let entry = Arc::clone(&slot.current().entry);
+    let opts = EvalOpts::default();
+
+    // A deliberately divergent candidate with the *same shape* (so the
+    // canary's shape guard admits it) but different random weights,
+    // sharing the incumbent's test split for a computable ground truth.
+    let m = &entry.model;
+    let cand_model = synth::rand_model(0xD1FF, m.features, m.hidden, m.classes);
+    let cand_entry = Arc::new(ModelEntry::full_precision(
+        "net0-cand",
+        cand_model.clone(),
+        entry.test.clone(),
+    ));
+    let n = entry.test.len();
+    let incumbent_eval = owned_evaluator(Backend::Native, &entry.model, &opts).unwrap();
+    let cand_eval = owned_evaluator(Backend::Native, &cand_model, &opts).unwrap();
+    let inc_preds = incumbent_eval
+        .predict(&entry.test.xs, n, &entry.feat_mask, &entry.approx_mask, &entry.tables)
+        .unwrap();
+    let cand_preds = cand_eval
+        .predict(
+            &entry.test.xs,
+            n,
+            &cand_entry.feat_mask,
+            &cand_entry.approx_mask,
+            &cand_entry.tables,
+        )
+        .unwrap();
+    let expected_mismatches = inc_preds
+        .iter()
+        .zip(&cand_preds)
+        .filter(|(a, b)| a != b)
+        .count();
+
+    let staged_eval = owned_evaluator(Backend::Native, &cand_model, &opts).unwrap();
+    let v = slot.stage(Arc::clone(&cand_entry), staged_eval).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(slot.version(), 1, "staging leaves the incumbent serving");
+
+    // One frame per test row, shadowing every batch (canary_frac 1.0).
+    let queues = vec![BatchQueue::new(4096)];
+    for i in 0..n {
+        assert!(queues[0].push(Frame::new(i as u64, i)));
+    }
+    let stop = AtomicBool::new(true);
+    let cfg = DrainConfig {
+        workers: 1,
+        batch: 16,
+        max_wait: Duration::from_millis(1),
+        slo_ms: 1e9,
+        canary_step: batcher::canary_step(1.0),
+        collect_responses: true,
+        ..DrainConfig::default()
+    };
+    batcher::drain(&queues, &slots, &cfg, &stop).unwrap();
+
+    let st = &queues[0].stats;
+    assert_eq!(st.answered.load(Ordering::Relaxed), n);
+    assert_eq!(
+        st.canary_checked.load(Ordering::Relaxed),
+        n,
+        "canary_frac 1.0 shadows every frame"
+    );
+    assert_eq!(
+        st.canary_mismatches.load(Ordering::Relaxed),
+        expected_mismatches,
+        "mismatch counter must equal the precomputed disagreement count"
+    );
+    // Clients were answered from the incumbent, never the candidate.
+    let responses = st.responses.lock().unwrap().clone();
+    for &(id, pred) in &responses {
+        assert_eq!(
+            pred, inc_preds[id as usize],
+            "frame {id}: canary shadowing must stay off the response path"
+        );
+    }
+    assert_eq!(slot.version(), 1, "shadowing alone never promotes");
+    assert!(slot.promote());
+    assert_eq!(slot.version(), 2);
+    assert!(slot.candidate().is_none(), "promote consumes the candidate");
+}
+
+#[test]
+fn tcp_serve_with_hot_reload_answers_every_accepted_frame() {
+    let store = ArtifactStore::new("/nonexistent-artifacts-root");
+    let cfg = server::ServeConfig {
+        datasets: vec!["net0".into(), "net1".into()],
+        scenario: Scenario::Steady,
+        rate_hz: 400.0,
+        duration: Duration::from_millis(400),
+        sensors: 2,
+        workers: 2,
+        queue_cap: 4096,
+        backend: Backend::Native,
+        synthetic: true,
+        seed: 29,
+        listen: Some("127.0.0.1:0".into()),
+        reload_at: Some(Duration::from_millis(100)),
+        canary_frac: 1.0,
+        ..server::ServeConfig::default()
+    };
+    let rep = server::run(&store, &cfg).unwrap();
+
+    let ing = rep.ingress.as_ref().expect("TCP run must report ingress");
+    assert!(ing.connections >= cfg.sensors, "one connection per sensor");
+    assert_eq!(ing.malformed, 0);
+    assert_eq!(ing.refused, 0);
+    assert_eq!(
+        ing.client_lost, 0,
+        "exactly-once across the socket: every accepted frame answered"
+    );
+    assert_eq!(
+        ing.client_sent, ing.client_answered,
+        "client ledger balances: sent == answered when nothing is lost"
+    );
+    assert!(ing.client_sent > 0, "the open-loop clients offered traffic");
+    assert_eq!(ing.frames_in, ing.client_sent, "no frame lost in framing");
+
+    assert_eq!(rep.total_errors(), 0);
+    assert_eq!(rep.total_shed(), 0, "this rate is far below capacity");
+    for m in &rep.models {
+        assert_eq!(
+            m.version, 2,
+            "{}: the mid-run reload must promote every slot",
+            m.name
+        );
+        assert_eq!(
+            m.canary_mismatches, 0,
+            "{}: an identical rebuild must agree with its incumbent",
+            m.name
+        );
+        assert!(m.answered > 0, "{}: traffic reached the model", m.name);
+        assert_eq!(
+            m.accuracy, 1.0,
+            "{}: client-side scoring sees bit-exact answers throughout the reload",
+            m.name
+        );
+    }
+}
