@@ -243,6 +243,65 @@ fn main() {
         ]));
     }
 
+    // Fused serving: the fan-in scenario submits one small frame per
+    // model per sensor window — the worst case for per-model batching
+    // (three ragged queues, partial super-lane blocks everywhere).
+    // --fuse-models concatenates the three compiled plans and drains all
+    // queues through one simulator pass per sweep, so the tenants share
+    // lane fill.  Accuracy pins at 1.000 either way (bit-identical per
+    // tests/server_batching.rs); the interesting deltas are fill, p99,
+    // and req/s.
+    harness::section("serve_scaling — fan-in: fused (one plan, all tenants) vs per-model drain");
+    let fanin_cfg = |fuse: bool| ServeConfig {
+        datasets: vec!["syn0".into(), "syn1".into(), "syn2".into()],
+        scenario: Scenario::FanIn,
+        rate_hz: 3_000.0,
+        duration: Duration::from_millis(400),
+        sensors: 4,
+        workers: 2,
+        queue_cap: 8192,
+        backend: Backend::GateSim,
+        synthetic: true,
+        fuse_models: fuse,
+        seed: 7,
+        ..ServeConfig::default()
+    };
+    println!(
+        "{:>10} {:>10} {:>10} {:>10} {:>8} {:>6} {:>8}",
+        "drain", "req/s", "p50 ms", "p99 ms", "shed", "fill", "acc"
+    );
+    let mut fused_rows: Vec<Json> = Vec::new();
+    for fuse in [false, true] {
+        let rep = server::run(&store, &fanin_cfg(fuse)).expect("fan-in serve run");
+        let p50 = rep.models.iter().map(|m| m.p50_ms).fold(0.0f64, f64::max);
+        let p99 = rep.models.iter().map(|m| m.p99_ms).fold(0.0f64, f64::max);
+        let acc = rep.models.iter().map(|m| m.accuracy).fold(1.0f64, f64::min);
+        let fill = rep.models.iter().map(|m| m.fill).fold(1.0f64, f64::min);
+        let label = if fuse { "fused" } else { "per-model" };
+        println!(
+            "{:>10} {:>10.0} {:>10.2} {:>10.2} {:>8} {:>6.2} {:>8.3}",
+            label,
+            rep.total_rps(),
+            p50,
+            p99,
+            rep.total_shed(),
+            fill,
+            acc
+        );
+        assert_eq!(acc, 1.0, "fan-in serving must stay bit-exact (fused={fuse})");
+        fused_rows.push(obj(vec![
+            ("drain", s(label)),
+            ("scenario", s("fanin")),
+            ("workers", num(2.0)),
+            ("rps", num(rep.total_rps())),
+            ("p50_ms", num(p50)),
+            ("p99_ms", num(p99)),
+            ("shed", num(rep.total_shed() as f64)),
+            ("fill", num(fill)),
+            ("accuracy", num(acc)),
+        ]));
+    }
+
     harness::write_results_json(
         "BENCH_serve.json",
         &obj(vec![
@@ -253,6 +312,7 @@ fn main() {
             ("ingress_class_rows", Json::Arr(class_rows_json)),
             ("reload", reload_json),
             ("fault_rows", Json::Arr(fault_rows)),
+            ("fused_rows", Json::Arr(fused_rows)),
         ]),
     );
 }

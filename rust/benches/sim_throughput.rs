@@ -48,6 +48,7 @@ fn main() {
     let mut rows: Vec<Json> = Vec::new();
     let mut best_speedup = 0.0f64;
     let mut worst_activity_overhead = f64::NEG_INFINITY;
+    let mut best_gate_speedup = 0.0f64;
 
     for (cname, seed, f, h, c) in shapes {
         let m = rand_model(seed, f, h, c);
@@ -161,6 +162,44 @@ fn main() {
         ]));
         worst_activity_overhead = worst_activity_overhead.max(overhead);
 
+        // §Activity gating: skip compiled runs whose input blocks did
+        // not toggle.  The sequential protocol holds the feature bus
+        // through the drain cycles and settles to a fixpoint, so real
+        // work drops out; predictions stay bit-identical
+        // (tests/sim_gating.rs).  Reported: speedup vs the ungated
+        // compiled path at the same width and the measured skip rate.
+        let r = harness::bench(&format!("{cname} 1thr compiled W={w} gated  "), 3, || {
+            let (preds, st) = testbench::run_sequential_plan_gated(
+                &circ, &compiled, &xs, n, m.features, 1, w, None,
+            );
+            std::hint::black_box((preds.len(), st.executed));
+        });
+        let (_, stats) =
+            testbench::run_sequential_plan_gated(&circ, &compiled, &xs, n, m.features, 1, w, None);
+        let sps = n as f64 / r.mean_ms * 1e3;
+        let gate_speedup = off_ms / r.mean_ms;
+        println!(
+            "         -> {sps:9.0} samples/s | {:.2}x vs ungated | skip rate {:.1}% \
+             ({} executed / {} skipped runs)",
+            gate_speedup,
+            stats.skip_rate() * 100.0,
+            stats.executed,
+            stats.skipped
+        );
+        rows.push(obj(vec![
+            ("circuit", s(cname)),
+            ("path", s("compiled+gated")),
+            ("lane_words", num(w as f64)),
+            ("threads", num(1.0)),
+            ("mean_ms", num(r.mean_ms)),
+            ("p50_ms", num(r.p50_ms)),
+            ("p99_ms", num(r.p99_ms)),
+            ("samples_per_s", num(sps)),
+            ("speedup_vs_ungated", num(gate_speedup)),
+            ("skip_rate", num(stats.skip_rate())),
+        ]));
+        best_gate_speedup = best_gate_speedup.max(gate_speedup);
+
         // Thread scaling on the HAR-class circuit at the auto-picked
         // width (reusing this iteration's plan and stimulus) — shows
         // super-lanes and sharding stack.
@@ -207,6 +246,11 @@ fn main() {
          {worst_activity_overhead:+.1}% (acceptance bar: <= 15%; counters off = untouched path)"
     );
     println!(
+        "best activity-gating speedup vs ungated compiled (single thread): \
+         {best_gate_speedup:.2}x (opt-in via --gate-activity; bit-identical per \
+         tests/sim_gating.rs)"
+    );
+    println!(
         "note: PRINTED_MLP_THREADS caps the default worker count ({avail} here) and \
          PRINTED_MLP_SIM_LANES / --sim-lanes pins the width; sharded, serial, wide, \
          compiled and interpreted runs are all bit-identical \
@@ -219,6 +263,7 @@ fn main() {
             ("samples", num(n as f64)),
             ("best_w_speedup_vs_w1", num(best_speedup)),
             ("worst_activity_overhead_pct", num(worst_activity_overhead)),
+            ("best_gate_speedup_vs_ungated", num(best_gate_speedup)),
             ("rows", Json::Arr(rows)),
         ]),
     );

@@ -6,17 +6,17 @@
 //!                       [--search-threads N] [--no-nsga-cache]
 //!                       [--native] [--no-cache] [--fit-subset N]
 //!                       [--no-compile-sim] [--sim-lanes W]
-//!                       [--profile-activity] [--energy-objective]
-//!                       [--config FILE]
+//!                       [--profile-activity] [--gate-activity]
+//!                       [--energy-objective] [--config FILE]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
 //! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
 //!                       [--no-compile-sim] [--sim-lanes W]
-//!                       [--profile-activity] [--synthetic]
+//!                       [--profile-activity] [--gate-activity] [--synthetic]
 //! printed-mlp serve     [--datasets a,b,..] [--scenario S] [--rate HZ] [--secs S]
 //!                       [--workers N] [--queue-cap N] [--batch N] [--backend B]
-//!                       [--sim-lanes W] [--synthetic] [--trace FILE]
-//!                       [--trace-out FILE] [--config FILE]
+//!                       [--sim-lanes W] [--synthetic] [--fuse-models]
+//!                       [--trace FILE] [--trace-out FILE] [--config FILE]
 //! printed-mlp campaign  [serve flags] [--archs ours,hybrid,comb]
 //!                       [--fault-levels S:T,..] [--flip-rate P] [--fault-seed N]
 //! printed-mlp info
@@ -85,13 +85,13 @@ USAGE:
                         [--search-threads N] [--no-nsga-cache]
                         [--no-cache] [--fit-subset N] [--pop N] [--gens N]
                         [--no-compile-sim] [--sim-lanes 0|1|2|4|8]
-                        [--profile-activity] [--energy-objective]
-                        [--config FILE] [--fast]
+                        [--profile-activity] [--gate-activity]
+                        [--energy-objective] [--config FILE] [--fast]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
                         [--threads N] [--no-compile-sim] [--sim-lanes W]
-                        [--profile-activity] [--synthetic]
+                        [--profile-activity] [--gate-activity] [--synthetic]
   printed-mlp serve     [--datasets a,b,..]
                         [--scenario steady|bursty|ramp|fanin|trace]
                         [--rate HZ] [--secs S] [--sensors N] [--workers N]
@@ -101,6 +101,7 @@ USAGE:
                         [--trace-out FILE] [--config FILE]
                         [--listen ADDR:PORT] [--classes gold,silver,..]
                         [--shed-late] [--reload S] [--canary-frac F]
+                        [--fuse-models]
   printed-mlp campaign  [serve flags] [--archs ours,hybrid,comb]
                         [--fault-levels 0:0,4:0,16:0,4:4] [--flip-rate P]
                         [--fault-seed N]
@@ -152,6 +153,19 @@ across every --sim-lanes width and thread count.  --energy-objective
 to the NSGA-II search as a third objective alongside feature count and
 accuracy.  simulate --synthetic runs a deterministic self-labeled model
 with no artifacts (the CI smoke path).
+--gate-activity (sim.gate_on_activity config key,
+PRINTED_MLP_GATE_ACTIVITY env) turns on activity-gated evaluation of the
+compiled micro-op stream: runs whose input blocks did not toggle since the
+last pass are skipped.  Results are bit-identical to the ungated simulator
+at every --sim-lanes width, thread count, and fault list; sequential
+circuits with held inputs settle early and skip most of the work.
+serve --fuse-models (serve.fuse_models config key, gatesim backend only)
+concatenates every hosted model's compiled plan into one level-merged
+fused plan and drains all tenant queues through a single simulator pass
+per sweep, so small per-tenant batches share super-lane fill; --workers
+then sets the fused simulator's shard threads.  Predictions are
+bit-identical to per-model serving; hot reload still works (the fused
+plan is rebuilt when any tenant promotes a new version).
 Artifacts root: $PRINTED_MLP_ARTIFACTS (default ./artifacts); build with `make artifacts`.";
 
 /// CLI entrypoint.
@@ -213,6 +227,9 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
     }
     if flags.has("profile-activity") {
         conf.set("sim.profile_activity", "true");
+    }
+    if flags.has("gate-activity") {
+        conf.set("sim.gate_on_activity", "true");
     }
     if flags.has("energy-objective") {
         conf.set("nsga.energy_objective", "true");
@@ -437,6 +454,9 @@ fn cmd_simulate(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     if flags.has("no-compile-sim") {
         crate::sim::set_compile_default(false);
     }
+    if flags.has("gate-activity") {
+        crate::sim::set_gate_on_activity_default(true);
+    }
     if let Some(v) = flags.get("sim-lanes") {
         let w: usize = v.parse().with_context(|| format!("--sim-lanes {v}"))?;
         if !crate::sim::valid_lane_words(w) {
@@ -571,6 +591,9 @@ fn apply_serve_flags(flags: &Flags, conf: &mut Config) {
     }
     if let Some(v) = flags.get("canary-frac") {
         conf.set("serve.canary_frac", v);
+    }
+    if flags.has("fuse-models") {
+        conf.set("serve.fuse_models", "true");
     }
 }
 
@@ -764,6 +787,15 @@ mod tests {
     }
 
     #[test]
+    fn gate_activity_flag_reaches_config() {
+        let args: Vec<String> = ["--gate-activity"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert!(pipeline_config(&f).unwrap().gate_activity);
+        // Opt-in: plain runs never pay the dirty-tracking bookkeeping.
+        assert!(!pipeline_config(&Flags::parse(&[]).unwrap()).unwrap().gate_activity);
+    }
+
+    #[test]
     fn simulate_synthetic_smoke_is_artifact_free() {
         // The CI smoke path: no artifacts, deterministic model, measured
         // energy printed.  Must succeed without `make artifacts`.
@@ -886,6 +918,15 @@ mod tests {
         assert!(serve_config(&Flags::parse(&bad).unwrap()).is_err());
         let bad: Vec<String> = ["--canary-frac", "2"].iter().map(|s| s.to_string()).collect();
         assert!(serve_config(&Flags::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fuse_models_flag_reaches_config() {
+        let args: Vec<String> =
+            ["--fuse-models", "--backend", "gatesim"].iter().map(|s| s.to_string()).collect();
+        let cfg = serve_config(&Flags::parse(&args).unwrap()).unwrap();
+        assert!(cfg.fuse_models);
+        assert!(!serve_config(&Flags::parse(&[]).unwrap()).unwrap().fuse_models);
     }
 
     #[test]

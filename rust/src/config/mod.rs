@@ -25,6 +25,7 @@
 //! lanes = 0               # super-lane width in u64 words: 0 = auto
 //!                         # (detected SIMD width), else 1|2|4|8
 //! profile_activity = false # per-net toggle counters + measured energy
+//! gate_on_activity = false # skip clean compiled runs (bit-identical)
 //!
 //! [serve]
 //! datasets = spectf, arrhythmia, gas
@@ -46,6 +47,7 @@
 //! listen = 127.0.0.1:7070 # TCP frontend; sensors become socket clients
 //! reload_secs = 1.5       # stage+promote a hot reload at this offset
 //! canary_frac = 0.1       # shadow this fraction of batches on the candidate
+//! fuse_models = false     # one fused gatesim plan drains every tenant
 //!
 //! [campaign]
 //! archs = ours, hybrid, comb
@@ -226,6 +228,9 @@ impl Config {
         if let Some(b) = self.get_bool("sim.profile_activity")? {
             cfg.profile_activity = b;
         }
+        if let Some(b) = self.get_bool("sim.gate_on_activity")? {
+            cfg.gate_activity = b;
+        }
         Ok(cfg)
     }
 
@@ -331,6 +336,9 @@ impl Config {
             );
             cfg.canary_frac = v;
         }
+        if let Some(b) = self.get_bool("serve.fuse_models")? {
+            cfg.fuse_models = b;
+        }
         Ok(cfg)
     }
 
@@ -419,6 +427,13 @@ mod tests {
     fn activity_and_energy_objective_keys() {
         let c = Config::parse("[sim]\nprofile_activity = true\n").unwrap();
         assert!(c.pipeline().unwrap().profile_activity);
+        let c = Config::parse("[sim]\ngate_on_activity = true\n").unwrap();
+        assert!(c.pipeline().unwrap().gate_activity);
+        assert!(!Config::default().pipeline().unwrap().gate_activity);
+        assert!(Config::parse("[sim]\ngate_on_activity = maybe\n")
+            .unwrap()
+            .pipeline()
+            .is_err());
         let c = Config::parse("[nsga]\nenergy_objective = yes\n").unwrap();
         assert!(c.pipeline().unwrap().energy_objective);
         // Defaults: both off — the clean path pays nothing.
@@ -506,7 +521,8 @@ mod tests {
         use crate::server::SloClass;
         let c = Config::parse(
             "[serve]\nclasses = gold, bronze, silver\nshed_late = true\n\
-             listen = 127.0.0.1:7070\nreload_secs = 1.5\ncanary_frac = 0.25\n",
+             listen = 127.0.0.1:7070\nreload_secs = 1.5\ncanary_frac = 0.25\n\
+             fuse_models = true\n",
         )
         .unwrap();
         let s = c.serve().unwrap();
@@ -515,11 +531,14 @@ mod tests {
         assert_eq!(s.listen.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(s.reload_at, Some(Duration::from_secs_f64(1.5)));
         assert_eq!(s.canary_frac, 0.25);
-        // Defaults: classless, in-process, no reload, canary off.
+        assert!(s.fuse_models);
+        // Defaults: classless, in-process, no reload, canary off,
+        // per-model drains.
         let d = Config::default().serve().unwrap();
         assert!(d.classes.is_empty() && !d.shed_late);
         assert!(d.listen.is_none() && d.reload_at.is_none());
         assert_eq!(d.canary_frac, 0.0);
+        assert!(!d.fuse_models);
         // Garbage rejected.
         assert!(Config::parse("[serve]\nclasses = platinum\n").unwrap().serve().is_err());
         assert!(Config::parse("[serve]\ncanary_frac = 1.5\n").unwrap().serve().is_err());

@@ -67,6 +67,12 @@ pub struct PipelineConfig {
     /// [`tech::EnergyReport`] that `report`/`fig8_energy` use in place
     /// of the static estimate.
     pub profile_activity: bool,
+    /// Activity-gated gate-level evaluation (`sim.gate_on_activity` /
+    /// `--gate-activity`): compiled simulators skip homogeneous runs
+    /// whose input blocks did not change since the last eval (§Perf).
+    /// Bit-identical to ungated evaluation by construction
+    /// (`tests/sim_gating.rs`), so this is purely a speed knob.
+    pub gate_activity: bool,
     /// Feed measured energy per inference in as a third NSGA objective
     /// (`nsga.energy_objective` / `--energy-objective`): each candidate
     /// mask's hybrid circuit is generated and activity-profiled on a
@@ -91,6 +97,7 @@ impl Default for PipelineConfig {
             sim_compile: true,
             sim_lanes: 0,
             profile_activity: false,
+            gate_activity: false,
             energy_objective: false,
             cache: true,
         }
@@ -448,6 +455,7 @@ pub fn run_pipeline(store: &ArtifactStore, cfg: &PipelineConfig) -> Result<Vec<D
     crate::sim::set_compile_default(cfg.sim_compile);
     crate::sim::set_lane_words_default(cfg.sim_lanes);
     crate::sim::set_profile_activity_default(cfg.profile_activity);
+    crate::sim::set_gate_on_activity_default(cfg.gate_activity);
     let results = scope_map(cfg.datasets.len(), cfg.threads, |i| {
         let name = &cfg.datasets[i];
         if cfg.cache {
@@ -692,6 +700,7 @@ mod tests {
         // Activity profiling and the energy objective are opt-in: the
         // clean pipeline must not pay for counters it didn't ask for.
         assert!(!c.profile_activity);
+        assert!(!c.gate_activity, "gating is an opt-in perf knob");
         assert!(!c.energy_objective);
     }
 

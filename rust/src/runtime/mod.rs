@@ -30,7 +30,9 @@ use crate::data::Split;
 use crate::model::{ApproxTables, QuantModel};
 use crate::netlist::NetRole;
 use crate::sim::fault::{FaultList, SharedFaultList};
+use crate::sim::fuse::{FusedBatch, FusedModelSpec, FusedPlan};
 use crate::sim::testbench;
+use crate::sim::SimPlan;
 use crate::util::pool;
 
 pub use pjrt::{Engine, PjrtEvaluator, PreparedInput, BATCH_LATENCY, BATCH_THROUGHPUT};
@@ -685,6 +687,143 @@ impl Evaluator for GateSimEvaluator {
     }
 }
 
+/// One hosted model's contribution to a [`FusedGateSim`]: the quantized
+/// model plus the masks/tables its circuit is generated under — the same
+/// inputs [`Evaluator::predict`] takes per call, fixed at build
+/// time here because the fused stream is compiled once for all tenants.
+pub struct FusedSpec<'a> {
+    pub model: &'a QuantModel,
+    pub feat_mask: &'a [u8],
+    pub approx_mask: &'a [u8],
+    pub tables: &'a ApproxTables,
+}
+
+/// Cross-model fused gate-level evaluator (§Fusion): generates every
+/// hosted model's sequential circuit, concatenates their compiled
+/// micro-op streams into one level-merged [`FusedPlan`], and predicts all
+/// tenants' batches in a single sharded pass — the serve batcher's fan-in
+/// fast path.  Predictions are bit-identical to running each model
+/// through its own [`GateSimEvaluator`].
+///
+/// Fault injection is not supported on the fused stream (faults name one
+/// model's source nets); the campaign paths keep per-model evaluators.
+pub struct FusedGateSim {
+    fused: FusedPlan,
+    /// Per-model feature counts, in build order (input shape checks).
+    features: Vec<usize>,
+    threads: usize,
+    /// Super-lane width in `u64` words (0 = process default).
+    lane_words: usize,
+}
+
+impl FusedGateSim {
+    /// Generate and fuse every spec's sequential circuit.  Plans are
+    /// compiled unconditionally — the fused stream is an optimisation of
+    /// the compiled backend and has no interpreted form, so it ignores
+    /// `--no-compile-sim` (per-model differential tests still exercise
+    /// the interpreted oracle).
+    pub fn build(specs: &[FusedSpec], threads: usize, lane_words: usize) -> Result<FusedGateSim> {
+        ensure!(!specs.is_empty(), "fused gatesim: zero models");
+        let mut circuits: Vec<(SeqCircuit, Arc<SimPlan>)> = Vec::with_capacity(specs.len());
+        for s in specs {
+            ensure!(
+                s.feat_mask.len() == s.model.features && s.approx_mask.len() == s.model.hidden,
+                "fused gatesim: mask shapes do not match the model"
+            );
+            let active: Vec<usize> = s
+                .feat_mask
+                .iter()
+                .enumerate()
+                .filter(|&(_, &m)| m == 1)
+                .map(|(f, _)| f)
+                .collect();
+            ensure!(!active.is_empty(), "fused gatesim: feature mask prunes every input");
+            let approx: Vec<bool> = s.approx_mask.iter().map(|&a| a == 1).collect();
+            let circ = seq_multicycle::generate_hybrid(s.model, &active, &approx, s.tables);
+            let plan = Arc::new(SimPlan::compiled(&circ.netlist));
+            circuits.push((circ, plan));
+        }
+        let model_specs: Vec<FusedModelSpec> = circuits
+            .iter()
+            .zip(specs)
+            .map(|((circ, plan), s)| FusedModelSpec {
+                plan,
+                x: testbench::input_port(&circ.netlist, "x"),
+                rst: testbench::input_port(&circ.netlist, "rst")[0],
+                class_out: testbench::output_port(&circ.netlist, "class_out"),
+                cycles: circ.cycles,
+                active: &circ.active,
+                features: s.model.features,
+            })
+            .collect();
+        let fused = FusedPlan::build(&model_specs);
+        Ok(FusedGateSim {
+            fused,
+            features: specs.iter().map(|s| s.model.features).collect(),
+            threads: threads.max(1),
+            lane_words,
+        })
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.fused.n_models()
+    }
+
+    /// Total fused micro-op count (reporting).
+    pub fn n_ops(&self) -> usize {
+        self.fused.n_ops()
+    }
+
+    /// Resolved super-lane width — same precedence as
+    /// [`GateSimEvaluator::lane_words`] (`PRINTED_MLP_SIM_LANES` beats
+    /// the configured width).
+    pub fn lane_words(&self) -> usize {
+        if let Some(n) = crate::sim::lane_words_env() {
+            return n;
+        }
+        if self.lane_words == 0 {
+            crate::sim::lane_words_default()
+        } else {
+            self.lane_words
+        }
+    }
+
+    /// Whole super-lane blocks, like [`Evaluator::batch_quantum`].
+    pub fn batch_quantum(&self) -> usize {
+        crate::sim::batch::block_lanes(self.lane_words())
+    }
+
+    /// Predict every model's batch in one fused sharded pass.  `batches`
+    /// holds one `(xs, n)` row-major 4-bit batch per model, in build
+    /// order; batches may be ragged (a model whose rows run out is frozen
+    /// for the padding lanes).  Returns per-model prediction vectors.
+    pub fn predict_multi(&self, batches: &[(&[u8], usize)]) -> Result<Vec<Vec<i32>>> {
+        ensure!(
+            batches.len() == self.features.len(),
+            "fused gatesim: expected {} batches, got {}",
+            self.features.len(),
+            batches.len()
+        );
+        for (i, (&(xs, n), &feats)) in batches.iter().zip(&self.features).enumerate() {
+            ensure!(
+                xs.len() == n * feats,
+                "fused gatesim: model {i} expected {} input values, got {}",
+                n * feats,
+                xs.len()
+            );
+        }
+        let fb: Vec<FusedBatch> = batches
+            .iter()
+            .map(|&(xs, n)| FusedBatch { xs, n })
+            .collect();
+        let preds = self.fused.run(&fb, self.threads, self.lane_words());
+        Ok(preds
+            .into_iter()
+            .map(|v| v.into_iter().map(|p| p as i32).collect())
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -843,5 +982,46 @@ mod tests {
         let t = ApproxTables::disabled(m.hidden);
         let xs = vec![0u8; 2 * m.features];
         assert!(Evaluator::predict(&gate, &xs, 2, &fm, &am, &t).is_err());
+    }
+
+    #[test]
+    fn fused_gatesim_matches_per_model_evaluators() {
+        // Two models of different shapes → different cycle counts, so the
+        // fused driver's freeze path is exercised, plus ragged batches.
+        let m1 = rand_model(61, 6, 3, 3);
+        let m2 = rand_model(62, 5, 4, 2);
+        let t1 = ApproxTables::disabled(m1.hidden);
+        let t2 = ApproxTables::disabled(m2.hidden);
+        let fm1 = vec![1u8; m1.features];
+        let mut fm2 = vec![1u8; m2.features];
+        fm2[1] = 0; // pruned feature: fused active schedule must match
+        let am1 = vec![0u8; m1.hidden];
+        let am2 = vec![0u8; m2.hidden];
+        let mut r = Rng::new(31);
+        let (n1, n2) = (70usize, 40usize);
+        let xs1: Vec<u8> = (0..n1 * m1.features).map(|_| r.below(16) as u8).collect();
+        let xs2: Vec<u8> = (0..n2 * m2.features).map(|_| r.below(16) as u8).collect();
+        let fused = FusedGateSim::build(
+            &[
+                FusedSpec { model: &m1, feat_mask: &fm1, approx_mask: &am1, tables: &t1 },
+                FusedSpec { model: &m2, feat_mask: &fm2, approx_mask: &am2, tables: &t2 },
+            ],
+            2,
+            2,
+        )
+        .unwrap();
+        assert_eq!(fused.n_models(), 2);
+        assert!(fused.n_ops() > 0);
+        assert_eq!(fused.batch_quantum(), 2 * 64);
+        let got = fused.predict_multi(&[(&xs1, n1), (&xs2, n2)]).unwrap();
+        let g1 = GateSimEvaluator::with_opts(&m1, 2, 2);
+        let g2 = GateSimEvaluator::with_opts(&m2, 2, 2);
+        let want1 = Evaluator::predict(&g1, &xs1, n1, &fm1, &am1, &t1).unwrap();
+        let want2 = Evaluator::predict(&g2, &xs2, n2, &fm2, &am2, &t2).unwrap();
+        assert_eq!(got[0], want1);
+        assert_eq!(got[1], want2);
+        // Shape errors are rejected, not mis-sliced.
+        assert!(fused.predict_multi(&[(&xs1, n1)]).is_err());
+        assert!(fused.predict_multi(&[(&xs1, n1 - 1), (&xs2, n2)]).is_err());
     }
 }

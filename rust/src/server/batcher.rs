@@ -51,7 +51,7 @@ use anyhow::Result;
 
 use crate::server::admission::{self, SloClass};
 use crate::server::frontend::{ConnShared, Status};
-use crate::server::registry::{ModelSlot, ModelVersion};
+use crate::server::registry::{FusedSlot, ModelEntry, ModelSlot, ModelVersion};
 use crate::util::pool;
 use crate::util::stats::Reservoir;
 
@@ -274,6 +274,34 @@ pub fn canary_step(frac: f64) -> u64 {
     (frac.clamp(0.0, 1.0) * 4_294_967_296.0) as u64
 }
 
+/// §Block alignment, shared by every drain path: a version's batch
+/// quantum floored at 1 (scalar backends report 1 already; the floor
+/// guards degenerate evaluators), and a count rounded **up** to whole
+/// quanta.  Both the batch ceiling and the lane-slot accounting go
+/// through these, so the two can never disagree again.
+fn eval_quantum(ver: &ModelVersion) -> usize {
+    ver.eval.batch_quantum().max(1)
+}
+
+fn align_up(n: usize, quantum: usize) -> usize {
+    n.div_ceil(quantum) * quantum
+}
+
+/// Concatenate the batch's feature rows into `xbuf`: network frames
+/// carry their own payload, direct frames reference the entry's test
+/// split.  Sample indices are folded so a reload to a different-sized
+/// split cannot send an already-queued direct frame out of bounds.
+fn gather_features(entry: &ModelEntry, frames: &[Frame], xbuf: &mut Vec<u8>) {
+    let rows = entry.test.len().max(1);
+    xbuf.clear();
+    for fr in frames {
+        match &fr.payload {
+            Some(p) => xbuf.extend_from_slice(p),
+            None => xbuf.extend_from_slice(entry.test.row(fr.sample % rows)),
+        }
+    }
+}
+
 /// Execute one popped batch on the slot's current evaluator and record
 /// stats; optionally shadow it on a staged candidate.  Every frame in
 /// `frames` is answered here (`Ok` on success; the caller answers
@@ -290,17 +318,7 @@ fn process_batch(
     shadow: &mut Vec<i32>,
 ) -> Result<()> {
     let entry = &ver.entry;
-    let quantum = ver.eval.batch_quantum().max(1);
-    // Fold sample indices so a reload to a different-sized test split
-    // cannot send an already-queued direct frame out of bounds.
-    let rows = entry.test.len().max(1);
-    xbuf.clear();
-    for fr in frames {
-        match &fr.payload {
-            Some(p) => xbuf.extend_from_slice(p),
-            None => xbuf.extend_from_slice(entry.test.row(fr.sample % rows)),
-        }
-    }
+    gather_features(entry, frames, xbuf);
     ver.eval.predict_into(
         xbuf,
         frames.len(),
@@ -309,12 +327,45 @@ fn process_batch(
         &entry.tables,
         preds,
     )?;
-    let done = Instant::now();
+    record_batch(
+        queue,
+        ver,
+        candidate,
+        cfg,
+        frames,
+        xbuf,
+        preds,
+        shadow,
+        eval_quantum(ver),
+        Instant::now(),
+    );
+    Ok(())
+}
+
+/// Post-prediction bookkeeping shared by the per-model and fused drain
+/// paths: stats, latency samples, client responses, and the optional
+/// canary shadow.  `quantum` is the lane-slot accounting granularity
+/// (the executing backend's — on the fused path, the fused plan's).
+#[allow(clippy::too_many_arguments)]
+fn record_batch(
+    queue: &BatchQueue,
+    ver: &ModelVersion,
+    candidate: Option<&ModelVersion>,
+    cfg: &DrainConfig,
+    frames: &[Frame],
+    xbuf: &[u8],
+    preds: &[i32],
+    shadow: &mut Vec<i32>,
+    quantum: usize,
+    done: Instant,
+) {
+    let entry = &ver.entry;
+    let rows = entry.test.len().max(1);
     let st = &queue.stats;
     st.batches.fetch_add(1, Ordering::Relaxed);
     st.answered.fetch_add(frames.len(), Ordering::Relaxed);
     st.lane_slots
-        .fetch_add(frames.len().div_ceil(quantum) * quantum, Ordering::Relaxed);
+        .fetch_add(align_up(frames.len(), quantum), Ordering::Relaxed);
     {
         let mut lat = st.latencies_ms.lock().unwrap();
         for (fr, &p) in frames.iter().zip(preds.iter()) {
@@ -371,7 +422,38 @@ fn process_batch(
             }
         }
     }
-    Ok(())
+}
+
+/// Deadline-shed and shape-check a popped batch in place (shared by the
+/// per-model and fused drain paths): frames whose SLO already expired
+/// answer `Late` (when [`DrainConfig::shed_late`] is on), and network
+/// payloads whose length no longer matches the possibly-reloaded model
+/// answer `Error`.
+fn filter_popped(
+    frames: &mut Vec<Frame>,
+    st: &ModelStats,
+    want_features: usize,
+    cfg: &DrainConfig,
+) {
+    if cfg.shed_late {
+        let now = Instant::now();
+        frames.retain(|fr| {
+            let late = now.duration_since(fr.enqueued).as_secs_f64() * 1e3 > cfg.slo_ms;
+            if late {
+                st.late.fetch_add(1, Ordering::Relaxed);
+                fr.respond(Status::Late, -1);
+            }
+            !late
+        });
+    }
+    frames.retain(|fr| {
+        let bad = fr.payload.as_ref().is_some_and(|p| p.len() != want_features);
+        if bad {
+            st.errors.fetch_add(1, Ordering::Relaxed);
+            fr.respond(Status::Error, -1);
+        }
+        !bad
+    });
 }
 
 /// Drain every queue with a pool of `cfg.workers` threads until `stop`
@@ -432,41 +514,17 @@ pub fn drain(
                 let mut did_work = false;
                 for &m in &order {
                     let ver = slots[m].current();
-                    let quantum = ver.eval.batch_quantum().max(1);
                     // §Block alignment: round the batch ceiling up to the
                     // backend's block quantum so a deep queue drains in
                     // whole super-lane blocks with no idle lanes.
-                    let max = batch.div_ceil(quantum) * quantum;
+                    let max = align_up(batch, eval_quantum(&ver));
                     frames.clear();
                     if queues[m].pop_batch(max, cfg.max_wait, stopping, frames) == 0 {
                         continue;
                     }
                     did_work = true;
                     let st = &queues[m].stats;
-                    if cfg.shed_late {
-                        let now = Instant::now();
-                        frames.retain(|fr| {
-                            let late =
-                                now.duration_since(fr.enqueued).as_secs_f64() * 1e3 > cfg.slo_ms;
-                            if late {
-                                st.late.fetch_add(1, Ordering::Relaxed);
-                                fr.respond(Status::Late, -1);
-                            }
-                            !late
-                        });
-                    }
-                    // A reload may have changed the model's feature
-                    // count while network frames sat queued; their
-                    // payloads can no longer be evaluated.
-                    let want = ver.entry.model.features;
-                    frames.retain(|fr| {
-                        let bad = fr.payload.as_ref().is_some_and(|p| p.len() != want);
-                        if bad {
-                            st.errors.fetch_add(1, Ordering::Relaxed);
-                            fr.respond(Status::Error, -1);
-                        }
-                        !bad
-                    });
+                    filter_popped(frames, st, ver.entry.model.features, cfg);
                     if frames.is_empty() {
                         continue;
                     }
@@ -514,4 +572,139 @@ pub fn drain(
         },
     );
     results.into_iter().collect()
+}
+
+/// §Fusion: drain every tenant's queue through one cross-model fused
+/// gatesim pass per sweep instead of one evaluator call per model
+/// ([`crate::runtime::FusedGateSim`]) — the fan-in scenario's fast path,
+/// where every model receives a frame per event and N per-model drains
+/// would pay N sharded simulator passes for the same wall-clock window.
+///
+/// One sweep: resolve the fused plan against the slots' current versions
+/// ([`FusedSlot::resolve`] — a hot-reload promote since the last sweep
+/// rebuilds it, exactly the per-model batch-boundary rule), pop up to a
+/// fused-quantum-aligned batch from every queue, and run all non-empty
+/// batches in a single [`crate::runtime::FusedGateSim::predict_multi`]
+/// call.  Parallelism comes from the fused simulator's shard threads, so
+/// this runs on the calling thread alone; lane-slot accounting attributes
+/// each tenant's aligned share of the shared super-lane blocks.  Canary
+/// shadowing still runs per model on the candidate's own evaluator.
+///
+/// Exactly-once accounting is identical to [`drain`]: a failed fused
+/// batch answers `Error` on every popped frame of every tenant and the
+/// loop keeps draining, surfacing the first error at exit.
+pub fn drain_fused(
+    queues: &[BatchQueue],
+    slots: &[Arc<ModelSlot>],
+    fused: &FusedSlot,
+    cfg: &DrainConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let n = queues.len();
+    if n == 0 {
+        return Ok(());
+    }
+    debug_assert_eq!(n, slots.len());
+    let batch = cfg.batch.max(1);
+    let mut frames: Vec<Vec<Frame>> = (0..n).map(|_| Vec::new()).collect();
+    let mut xbufs: Vec<Vec<u8>> = (0..n).map(|_| Vec::new()).collect();
+    let mut shadow: Vec<i32> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        // Batch boundary: resolve (and on promote, rebuild) the fused
+        // plan before popping anything.
+        let (vers, eval) = match fused.resolve() {
+            Ok(r) => r,
+            Err(e) => {
+                // Nothing can be evaluated: answer `Error` on every
+                // queued frame so accounting balances, then surface.
+                for q in queues {
+                    let mut buf = Vec::new();
+                    while q.pop_batch(usize::MAX, Duration::ZERO, true, &mut buf) > 0 {
+                        q.stats.errors.fetch_add(buf.len(), Ordering::Relaxed);
+                        for fr in &buf {
+                            fr.respond(Status::Error, -1);
+                        }
+                        buf.clear();
+                    }
+                }
+                return Err(e);
+            }
+        };
+        let quantum = eval.batch_quantum().max(1);
+        let max = align_up(batch, quantum);
+        let mut did_work = false;
+        let mut any = false;
+        for m in 0..n {
+            frames[m].clear();
+            if queues[m].pop_batch(max, cfg.max_wait, stopping, &mut frames[m]) == 0 {
+                continue;
+            }
+            did_work = true;
+            filter_popped(&mut frames[m], &queues[m].stats, vers[m].entry.model.features, cfg);
+            any |= !frames[m].is_empty();
+        }
+        if any {
+            for m in 0..n {
+                gather_features(&vers[m].entry, &frames[m], &mut xbufs[m]);
+            }
+            let batches: Vec<(&[u8], usize)> = (0..n)
+                .map(|m| (xbufs[m].as_slice(), frames[m].len()))
+                .collect();
+            match eval.predict_multi(&batches) {
+                Ok(preds) => {
+                    let done = Instant::now();
+                    for m in 0..n {
+                        if frames[m].is_empty() {
+                            continue;
+                        }
+                        let candidate = if cfg.canary_step > 0 {
+                            slots[m].candidate()
+                        } else {
+                            None
+                        };
+                        record_batch(
+                            &queues[m],
+                            &vers[m],
+                            candidate.as_deref(),
+                            cfg,
+                            &frames[m],
+                            &xbufs[m],
+                            &preds[m],
+                            &mut shadow,
+                            quantum,
+                            done,
+                        );
+                    }
+                }
+                Err(e) => {
+                    for m in 0..n {
+                        if frames[m].is_empty() {
+                            continue;
+                        }
+                        queues[m]
+                            .stats
+                            .errors
+                            .fetch_add(frames[m].len(), Ordering::Relaxed);
+                        for fr in &frames[m] {
+                            fr.respond(Status::Error, -1);
+                        }
+                    }
+                    if first_err.is_none() {
+                        first_err = Some(e.context("fused batch failed"));
+                    }
+                }
+            }
+        }
+        if !did_work {
+            if stopping && queues.iter().all(|q| q.is_empty()) {
+                return match first_err.take() {
+                    Some(e) => Err(e),
+                    None => Ok(()),
+                };
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
 }

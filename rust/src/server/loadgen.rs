@@ -71,6 +71,18 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Every scenario, in canonical order.  [`Scenario::wanted`] (and
+    /// through it the `FromStr` error text) derives from this list, and
+    /// the round-trip property test walks it — so the accepted set, the
+    /// canonical labels, and the error message cannot drift apart.
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Steady,
+        Scenario::Bursty,
+        Scenario::Ramp,
+        Scenario::FanIn,
+        Scenario::Trace,
+    ];
+
     pub fn label(self) -> &'static str {
         match self {
             Scenario::Steady => "steady",
@@ -79,6 +91,17 @@ impl Scenario {
             Scenario::FanIn => "fanin",
             Scenario::Trace => "trace",
         }
+    }
+
+    /// The `steady|bursty|…` list shown by the parse error and `--help`.
+    pub fn wanted() -> String {
+        Scenario::ALL.map(Scenario::label).join("|")
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
     }
 }
 
@@ -92,7 +115,7 @@ impl FromStr for Scenario {
             "ramp" => Scenario::Ramp,
             "fanin" | "fan-in" => Scenario::FanIn,
             "trace" => Scenario::Trace,
-            other => bail!("unknown scenario `{other}` (want steady|bursty|ramp|fanin|trace)"),
+            other => bail!("unknown scenario `{other}` (want {})", Scenario::wanted()),
         })
     }
 }
@@ -670,18 +693,47 @@ mod tests {
 
     #[test]
     fn scenario_labels_roundtrip() {
-        for s in [
-            Scenario::Steady,
-            Scenario::Bursty,
-            Scenario::Ramp,
-            Scenario::FanIn,
-            Scenario::Trace,
-        ] {
+        // Canonical labels round-trip through Display and FromStr.
+        for s in Scenario::ALL {
             assert_eq!(s.label().parse::<Scenario>().unwrap(), s);
+            assert_eq!(s.to_string(), s.label());
         }
+        // Aliases parse but are not canonical.
         assert_eq!("poisson".parse::<Scenario>().unwrap(), Scenario::Bursty);
         assert_eq!("fan-in".parse::<Scenario>().unwrap(), Scenario::FanIn);
-        assert!("nosuch".parse::<Scenario>().is_err());
+        // The error text lists exactly the canonical set.
+        let err = "nosuch".parse::<Scenario>().unwrap_err().to_string();
+        assert_eq!(
+            err,
+            format!("unknown scenario `nosuch` (want {})", Scenario::wanted())
+        );
+        assert_eq!(Scenario::wanted(), "steady|bursty|ramp|fanin|trace");
+    }
+
+    #[test]
+    fn scenario_parse_display_roundtrip_property() {
+        // Property: for ANY input string, parsing either fails with the
+        // canonical want-list in the message, or succeeds on a value
+        // whose Display re-parses to itself (parse ∘ display = id).
+        crate::util::propcheck::check("scenario_roundtrip", 300, |g| {
+            let pick = g.usize_in(0..=9);
+            let s = if pick < Scenario::ALL.len() {
+                Scenario::ALL[pick].label().to_string()
+            } else {
+                // Near-miss soup over the labels' own alphabet, so typos
+                // and truncations (`stead`, `fanin-`) get exercised.
+                let alphabet = b"abdefinprsty- ";
+                (0..g.usize_in(0..=8))
+                    .map(|_| alphabet[g.usize_in(0..=alphabet.len() - 1)] as char)
+                    .collect()
+            };
+            match s.parse::<Scenario>() {
+                Ok(sc) => sc.to_string().parse::<Scenario>().map(|x| x == sc).unwrap_or(false),
+                Err(e) => e
+                    .to_string()
+                    .ends_with(&format!("(want {})", Scenario::wanted())),
+            }
+        });
     }
 
     #[test]

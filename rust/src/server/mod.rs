@@ -63,7 +63,7 @@ pub use batcher::{BatchQueue, DrainConfig, Frame, ModelStats};
 pub use campaign::{ArchKind, CampaignConfig, CampaignReport, CampaignRow};
 pub use frontend::{Frontend, FrontendStats, Status};
 pub use loadgen::{ClientStats, Scenario, Trace};
-pub use registry::{ModelEntry, ModelRegistry, ModelSlot, ModelVersion};
+pub use registry::{FusedSlot, ModelEntry, ModelRegistry, ModelSlot, ModelVersion};
 
 /// Server configuration (see `config` for the `[serve]` file section;
 /// every key has a CLI override).
@@ -120,6 +120,12 @@ pub struct ServeConfig {
     /// incumbent/candidate mismatches counted
     /// ([`ModelStats::canary_mismatches`]).  0 disables the canary.
     pub canary_frac: f64,
+    /// §Fusion: drain every tenant through one cross-model fused gatesim
+    /// plan per sweep ([`batcher::drain_fused`]) instead of per-model
+    /// evaluator calls — the fan-in fast path.  Requires
+    /// `--backend gatesim`; the drain-workers knob becomes the fused
+    /// simulator's shard threads.
+    pub fuse_models: bool,
     /// `trace` scenario: replay this recorded trace file; when unset a
     /// diurnal trace is synthesized from `seed`/`rate_hz`/`duration`.
     pub trace: Option<PathBuf>,
@@ -150,6 +156,7 @@ impl Default for ServeConfig {
             listen: None,
             reload_at: None,
             canary_frac: 0.0,
+            fuse_models: false,
             trace: None,
             trace_out: None,
         }
@@ -367,6 +374,23 @@ pub fn serve_with(slots: &[Arc<ModelSlot>], cfg: &ServeConfig) -> Result<ServerR
         canary_step: batcher::canary_step(cfg.canary_frac),
         collect_responses: false,
     };
+    // §Fusion: one cross-model fused gatesim plan drains every tenant's
+    // queue in a single sharded pass; the drain-workers knob becomes the
+    // fused simulator's shard threads.  Resolve (build + warm) the fused
+    // plan here, before any producer starts, so plan compilation is off
+    // the request path — exactly like per-slot warmup.
+    let fused = if cfg.fuse_models {
+        ensure!(
+            resolve_serve_backend(cfg.backend) == Backend::GateSim,
+            "serve: --fuse-models requires --backend gatesim \
+             (fusion concatenates compiled gate-level plans)"
+        );
+        let f = FusedSlot::new(slots, workers, cfg.sim_lanes);
+        f.resolve()?;
+        Some(f)
+    } else {
+        None
+    };
     // Bind before anything starts so ephemeral ports resolve and
     // clients can connect from their first instant.
     let frontend = match &cfg.listen {
@@ -494,7 +518,10 @@ pub fn serve_with(slots: &[Arc<ModelSlot>], cfg: &ServeConfig) -> Result<ServerR
             fe_stop_ref.store(true, Ordering::Release);
             stop_ref.store(true, Ordering::Release);
         });
-        batcher::drain(queues_ref, slots, &drain_cfg, stop_ref)
+        match &fused {
+            Some(f) => batcher::drain_fused(queues_ref, slots, f, &drain_cfg, stop_ref),
+            None => batcher::drain(queues_ref, slots, &drain_cfg, stop_ref),
+        }
     })?;
 
     let elapsed_s = start.elapsed().as_secs_f64();
@@ -597,6 +624,7 @@ mod tests {
         assert!(c.reload_at.is_none());
         assert_eq!(c.canary_frac, 0.0);
         assert!(!c.shed_late);
+        assert!(!c.fuse_models, "fusion is opt-in");
     }
 
     #[test]
@@ -618,6 +646,19 @@ mod tests {
     #[test]
     fn serve_with_requires_slots() {
         assert!(serve_with(&[], &ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn fuse_models_requires_gatesim_backend() {
+        let reg = ModelRegistry::synthetic(&["a".to_string()], 3);
+        let slots = reg.slots(Backend::Native, 1, 0, &[]).unwrap();
+        let cfg = ServeConfig {
+            fuse_models: true,
+            backend: Backend::Native,
+            duration: Duration::from_millis(10),
+            ..ServeConfig::default()
+        };
+        assert!(serve_with(&slots, &cfg).is_err());
     }
 
     #[test]

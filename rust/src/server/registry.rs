@@ -16,7 +16,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::{ArtifactStore, Split};
 use crate::model::{synth, ApproxTables, QuantModel};
-use crate::runtime::{build_evaluator, owned_evaluator, Backend, EvalOpts, Evaluator};
+use crate::runtime::{
+    build_evaluator, owned_evaluator, Backend, EvalOpts, Evaluator, FusedGateSim, FusedSpec,
+};
 use crate::server::admission::{class_of, SloClass};
 
 /// One hosted model and the read-only state its traffic needs.
@@ -151,6 +153,62 @@ impl ModelSlot {
     /// Drop the staged candidate (e.g. after canary mismatches).
     pub fn abort_candidate(&self) -> bool {
         self.candidate.write().unwrap().take().is_some()
+    }
+}
+
+/// Lazily (re)built cross-model fused gatesim plan over a set of hosted
+/// slots (§Fusion).  The batcher resolves it at batch boundaries exactly
+/// as it resolves per-model versions: [`FusedSlot::resolve`] compares the
+/// slots' current version vector against the cached one and rebuilds the
+/// fused stream when any slot was promoted since — hot reload composes
+/// with fusion for free, at the cost of one fused rebuild per promote
+/// (paid on the drain thread at a batch boundary, never mid-batch).
+pub struct FusedSlot {
+    slots: Vec<Arc<ModelSlot>>,
+    sim_threads: usize,
+    sim_lanes: usize,
+    #[allow(clippy::type_complexity)]
+    cached: RwLock<Option<(Vec<u64>, Arc<FusedGateSim>)>>,
+}
+
+impl FusedSlot {
+    pub fn new(slots: &[Arc<ModelSlot>], sim_threads: usize, sim_lanes: usize) -> FusedSlot {
+        FusedSlot {
+            slots: slots.to_vec(),
+            sim_threads: sim_threads.max(1),
+            sim_lanes,
+            cached: RwLock::new(None),
+        }
+    }
+
+    /// The fused evaluator for the slots' *current* versions, plus the
+    /// resolved version vector itself (the batcher needs the entries for
+    /// frame payloads and the version numbers for shadow accounting).
+    /// Cache hit when no slot was promoted since the last call; rebuild
+    /// otherwise.
+    pub fn resolve(&self) -> Result<(Vec<Arc<ModelVersion>>, Arc<FusedGateSim>)> {
+        let vers: Vec<Arc<ModelVersion>> = self.slots.iter().map(|s| s.current()).collect();
+        let vv: Vec<u64> = vers.iter().map(|v| v.version).collect();
+        if let Some((cached_vv, fused)) = self.cached.read().unwrap().as_ref() {
+            if *cached_vv == vv {
+                return Ok((vers, Arc::clone(fused)));
+            }
+        }
+        let specs: Vec<FusedSpec> = vers
+            .iter()
+            .map(|v| FusedSpec {
+                model: &v.entry.model,
+                feat_mask: &v.entry.feat_mask,
+                approx_mask: &v.entry.approx_mask,
+                tables: &v.entry.tables,
+            })
+            .collect();
+        let fused = Arc::new(
+            FusedGateSim::build(&specs, self.sim_threads, self.sim_lanes)
+                .context("building fused gatesim plan")?,
+        );
+        *self.cached.write().unwrap() = Some((vv, Arc::clone(&fused)));
+        Ok((vers, fused))
     }
 }
 
@@ -388,5 +446,42 @@ mod tests {
         assert!(slot.abort_candidate());
         assert!(!slot.abort_candidate());
         assert_eq!(slot.version(), 2);
+    }
+
+    #[test]
+    fn fused_slot_caches_rebuilds_on_promote_and_matches_per_model() {
+        let names: Vec<String> = ["f1", "f2"].iter().map(|s| s.to_string()).collect();
+        let reg = ModelRegistry::synthetic(&names, 77);
+        let slots = reg.slots(Backend::GateSim, 1, 1, &[]).unwrap();
+        let fused_slot = FusedSlot::new(&slots, 1, 1);
+        let (vers, f1) = fused_slot.resolve().unwrap();
+        assert_eq!(vers.len(), 2);
+        let (_, f2) = fused_slot.resolve().unwrap();
+        assert!(Arc::ptr_eq(&f1, &f2), "same versions must hit the cache");
+
+        // Fused predictions over the full test splits match each slot's
+        // own evaluator bit-for-bit.
+        let batches: Vec<(&[u8], usize)> = vers
+            .iter()
+            .map(|v| (v.entry.test.xs.as_slice(), v.entry.test.len()))
+            .collect();
+        let got = f1.predict_multi(&batches).unwrap();
+        for (v, got_m) in vers.iter().zip(&got) {
+            let e = &v.entry;
+            let want = v
+                .eval
+                .predict(&e.test.xs, e.test.len(), &e.feat_mask, &e.approx_mask, &e.tables)
+                .unwrap();
+            assert_eq!(*got_m, want, "fused vs per-model for `{}`", e.name);
+        }
+
+        // Promote slot 0 → version vector changes → fused plan rebuilt.
+        let entry = Arc::clone(&slots[0].current().entry);
+        let eval = owned_evaluator(Backend::GateSim, &entry.model, &EvalOpts::default()).unwrap();
+        slots[0].stage(Arc::clone(&entry), eval).unwrap();
+        assert!(slots[0].promote());
+        let (vers2, f3) = fused_slot.resolve().unwrap();
+        assert_eq!(vers2[0].version, 2);
+        assert!(!Arc::ptr_eq(&f1, &f3), "promote must invalidate the fused cache");
     }
 }

@@ -24,7 +24,7 @@
 use std::sync::Arc;
 
 use crate::sim::fault::FaultList;
-use crate::sim::{Activity, Sim, SimPlan};
+use crate::sim::{Activity, GateStats, Sim, SimPlan};
 use crate::util::pool::scope_map_with;
 
 /// Samples per block at a given super-lane width (`W·64`).
@@ -180,6 +180,64 @@ where
         activity.merge(&act);
     }
     (outs, activity)
+}
+
+/// [`run_sharded_wide_faulted`] with activity-gated evaluation turned on
+/// (`sim` §Gating): every worker simulator skips homogeneous opcode runs
+/// whose input blocks are clean, and the per-worker executed/skipped
+/// counters are summed after the join.  Predictions are bit-identical to
+/// the ungated runner at every width, thread count, and fault list (the
+/// gating differential suite enforces it); the stats are diagnostic —
+/// the skip rate is what the benches report.  On interpreted plans
+/// gating is a no-op and the stats come back zero.
+pub fn run_sharded_wide_gated<T, F>(
+    plan: &Arc<SimPlan>,
+    n: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+    drive: F,
+) -> (Vec<T>, GateStats)
+where
+    T: Send,
+    F: Fn(&mut Sim, usize, usize) -> Vec<T> + Sync,
+{
+    if n == 0 {
+        return (Vec::new(), GateStats::default());
+    }
+    let w = if lane_words == 0 {
+        crate::sim::lane_words_default()
+    } else {
+        lane_words
+    };
+    let bl = block_lanes(w);
+    let blocks = n.div_ceil(bl);
+    let shards = scope_map_with(
+        blocks,
+        threads.clamp(1, blocks),
+        || {
+            let mut sim = Sim::from_plan_wide(plan.clone(), w);
+            if let Some(fl) = faults {
+                sim.set_faults(fl);
+            }
+            sim.set_gating(true);
+            sim
+        },
+        |sim, b| {
+            let base = b * bl;
+            let lanes = (n - base).min(bl);
+            sim.fault_begin_block(base);
+            let out = drive(sim, base, lanes);
+            (out, sim.take_gate_stats())
+        },
+    );
+    let mut stats = GateStats::default();
+    let mut outs = Vec::with_capacity(n);
+    for (out, st) in shards {
+        outs.extend(out);
+        stats.merge(&st);
+    }
+    (outs, stats)
 }
 
 #[cfg(test)]

@@ -199,6 +199,13 @@ pub(crate) struct FaultState {
     /// otherwise contain a reader of the faulted net.  `None` when no
     /// fault needs mid-stream application (the plan's own runs execute).
     pub(crate) runs: Option<Vec<(u8, u32, u32)>>,
+    /// Per-run gate lists for the split run table (`Some` exactly when
+    /// `runs` is) — activity gating composes with run re-splitting
+    /// because the lists are rebuilt from whichever table executes.
+    /// Runs with scheduled transient flips are pinned hot: the flip mask
+    /// changes every eval, so the producing store must never be skipped
+    /// (a stale store would be double-flipped).
+    pub(crate) run_gates: Option<crate::sim::RunGates>,
     seed: u64,
     /// Flip probability in 24-bit fixed point (`P = rate_q24 / 2^24`).
     rate_q24: u64,
@@ -263,7 +270,7 @@ impl FaultState {
         // at faulted producers so the mask lands before any later op in
         // the (possibly level-merged) run can read the clean value, and
         // re-key the schedule by the run that now ends at the producer.
-        let (runs, scheduled) = match plan.compiled_plan() {
+        let (runs, run_gates, scheduled) = match plan.compiled_plan() {
             Some(cp) if !by_producer.is_empty() => {
                 let mut cuts: Vec<u32> = by_producer.iter().map(|&(op, _)| op).collect();
                 cuts.dedup();
@@ -286,9 +293,15 @@ impl FaultState {
                         runs.push((op, s, end - s));
                     }
                 }
-                (Some(runs), scheduled)
+                let mut rg = crate::sim::RunGates::build(&runs, &cp.src_a, &cp.src_b, &cp.src_c);
+                for &(ri, ref af) in &scheduled {
+                    if af.transient {
+                        rg.pin_hot(ri as usize);
+                    }
+                }
+                (Some(runs), Some(rg), scheduled)
             }
-            _ => (None, by_producer),
+            _ => (None, None, by_producer),
         };
 
         let rate_q24 = (list.flip_rate.clamp(0.0, 1.0) * (1u64 << 24) as f64).round() as u64;
@@ -296,6 +309,7 @@ impl FaultState {
             sources,
             scheduled,
             runs,
+            run_gates,
             seed: list.seed,
             rate_q24,
             cycle: 0,
@@ -339,6 +353,33 @@ impl FaultState {
                 x ^= self.flip_word(af.net, self.base_word + j as u64);
             }
             v[base + j] = x;
+        }
+    }
+
+    /// [`FaultState::apply`] with gating dirt (`sim` §Gating): any lane
+    /// word the force actually changed marks the slot's dirty block, so
+    /// a forced transition wakes downstream runs exactly like a computed
+    /// one.  Idempotent stuck re-forces produce no diff and no dirt.
+    #[inline]
+    pub(crate) fn apply_marked<const W: usize>(
+        &self,
+        v: &mut [u64],
+        af: &ActiveFault,
+        dirty: &mut [u64],
+    ) {
+        let base = af.slot as usize * W;
+        let mut diff = 0u64;
+        for j in 0..W {
+            let old = v[base + j];
+            let mut x = (old & af.and_mask) | af.or_mask;
+            if af.transient && self.rate_q24 > 0 {
+                x ^= self.flip_word(af.net, self.base_word + j as u64);
+            }
+            v[base + j] = x;
+            diff |= x ^ old;
+        }
+        if diff != 0 {
+            crate::sim::mark_dirty(dirty, af.slot);
         }
     }
 

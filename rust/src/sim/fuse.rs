@@ -1,0 +1,469 @@
+//! Cross-model fused simulation (§Fusion): concatenate several hosted
+//! models' compiled micro-op streams into one mega-plan so a multi-tenant
+//! batch drains every model's block in a single sharded pass.
+//!
+//! Layout: each model's dense slots `2..n_dense` are relocated by a
+//! per-model base offset (`fused = base + slot - 2`); slots 0/1 stay the
+//! shared constants.  Net ranges are disjoint by construction, so
+//! concatenating the op streams preserves every producer→reader
+//! dependency; per-op topological levels carry over unchanged (levels
+//! are relative to externally-written slots, which relocation does not
+//! disturb), and one global stable sort by `(level, opcode)` level-merges
+//! the models so same-opcode runs span tenants — the fused stream pays
+//! one run dispatch where N per-model streams paid N.  DFF state arrays
+//! concatenate the same way, and each model records its `[lo, hi)` index
+//! range so the fused clock driver can commit models independently.
+//!
+//! Clocking: tenants may need different cycle counts.  Extra clock edges
+//! past a model's schedule are **not** safe — the sequential circuits'
+//! free-running phase counter wraps and re-activates datapath enables —
+//! so the fused driver *freezes* finished models instead: it simply stops
+//! committing their DFF range ([`crate::sim::Sim::commit_state_ranges`])
+//! and stops touching their inputs.  A frozen model's combinational cone
+//! is then a pure function of held registers and inputs, so every
+//! re-evaluation reproduces its standalone settled values bit-for-bit
+//! (and under activity gating those runs are all clean and skip).
+//!
+//! IO goes through pre-translated fused slots (`Sim::set_slot_word`) —
+//! there is no meaningful source-netlist id space for the fused plan, so
+//! its external `port_map`/`write_map` are empty and
+//! [`crate::sim::Sim::set`]/[`crate::sim::Sim::get`] must not be used on
+//! a fused simulator.  Fault injection is likewise not supported here
+//! (faults name source nets of one model); the campaign paths keep using
+//! per-model plans.
+//!
+//! Differential guarantee: fused predictions are bit-identical to each
+//! model's own [`crate::sim::testbench::run_sequential_plan`] output —
+//! enforced per-backend in `tests/sim_gating.rs` and end-to-end through
+//! the server in `tests/server_batching.rs`.
+
+use std::sync::Arc;
+
+use crate::netlist::NetId;
+use crate::sim::{batch, CompiledPlan, RunGates, Sim, SimPlan};
+
+/// One tenant's contribution to a fused plan: its compiled plan plus the
+/// sequential protocol ports and schedule.
+pub struct FusedModelSpec<'a> {
+    pub plan: &'a SimPlan,
+    /// The 4-bit feature bus ("x").
+    pub x: &'a [NetId],
+    /// Reset input ("rst").
+    pub rst: NetId,
+    /// Class output word ("class_out").
+    pub class_out: &'a [NetId],
+    /// Total clock cycles after the reset pulse.
+    pub cycles: usize,
+    /// RFP feature schedule (`active[t]` is on the bus at cycle `t`).
+    pub active: &'a [usize],
+    /// Feature count of the model's sample rows.
+    pub features: usize,
+}
+
+/// Per-model IO resolved against the fused slot space.
+struct FusedModelIo {
+    /// Fused write slots of the feature bus (`u32::MAX` = pruned bit).
+    x: Vec<u32>,
+    /// Fused write slot of the reset input (`u32::MAX` = pruned).
+    rst: u32,
+    /// Fused read slots of the class word (`u32::MAX` reads 0).
+    class_out: Vec<u32>,
+    cycles: usize,
+    active: Vec<usize>,
+    features: usize,
+    /// `[lo, hi)` into the fused DFF SoA — the commit/freeze handle.
+    dff_range: (u32, u32),
+}
+
+/// One model's sample batch for a fused pass: row-major
+/// `features`-wide 4-bit values, `n` rows.
+pub struct FusedBatch<'a> {
+    pub xs: &'a [u8],
+    pub n: usize,
+}
+
+/// All hosted models' compiled streams concatenated, level-merged, and
+/// re-run-scheduled into one shareable [`SimPlan`].
+pub struct FusedPlan {
+    plan: Arc<SimPlan>,
+    models: Vec<FusedModelIo>,
+    max_cycles: usize,
+}
+
+impl FusedPlan {
+    /// Concatenate the models' compiled streams.  Every spec's plan must
+    /// be compiled ([`SimPlan::compiled`]); panics otherwise — the fused
+    /// path is an optimisation of the compiled backend only.
+    pub fn build(specs: &[FusedModelSpec]) -> FusedPlan {
+        assert!(!specs.is_empty(), "fusing zero models");
+        let mut ops: Vec<u8> = Vec::new();
+        let mut src_a: Vec<u32> = Vec::new();
+        let mut src_b: Vec<u32> = Vec::new();
+        let mut src_c: Vec<u32> = Vec::new();
+        let mut dst: Vec<u32> = Vec::new();
+        let mut op_level: Vec<u32> = Vec::new();
+        let mut dff_d = Vec::new();
+        let mut dff_q = Vec::new();
+        let mut dff_en = Vec::new();
+        let mut dff_rst = Vec::new();
+        let mut dff_rstval = Vec::new();
+        let mut models = Vec::with_capacity(specs.len());
+        let mut base = 2u32;
+        for spec in specs {
+            let cp = spec
+                .plan
+                .compiled_plan()
+                .expect("fused plans require compiled per-model plans");
+            // Relocate this model's dense slots; constants are shared.
+            let t = |s: u32| if s < 2 { s } else { base + s - 2 };
+            let tm = |s: u32| if s == u32::MAX { u32::MAX } else { t(s) };
+            for i in 0..cp.ops.len() {
+                ops.push(cp.ops[i]);
+                src_a.push(t(cp.src_a[i]));
+                src_b.push(t(cp.src_b[i]));
+                src_c.push(t(cp.src_c[i]));
+                dst.push(t(cp.dst[i]));
+                op_level.push(cp.op_level[i]);
+            }
+            let dff_lo = dff_q.len() as u32;
+            for i in 0..cp.dff_q.len() {
+                dff_d.push(t(cp.dff_d[i]));
+                dff_q.push(t(cp.dff_q[i]));
+                dff_en.push(t(cp.dff_en[i]));
+                dff_rst.push(t(cp.dff_rst[i]));
+                dff_rstval.push(cp.dff_rstval[i]);
+            }
+            let wslot = |net: NetId| tm(cp.write_map[net as usize]);
+            let rslot = |net: NetId| tm(cp.port_map[net as usize]);
+            models.push(FusedModelIo {
+                x: spec.x.iter().map(|&b| wslot(b)).collect(),
+                rst: wslot(spec.rst),
+                class_out: spec.class_out.iter().map(|&b| rslot(b)).collect(),
+                cycles: spec.cycles,
+                active: spec.active.to_vec(),
+                features: spec.features,
+                dff_range: (dff_lo, dff_q.len() as u32),
+            });
+            base += cp.n_dense as u32 - 2;
+        }
+
+        // Global level merge: the same stable `(level, opcode)` sort the
+        // per-model compiler uses, now spanning tenants, then rebuild
+        // the homogeneous runs and their gate lists.
+        let n_stream = ops.len();
+        let mut idx: Vec<u32> = (0..n_stream as u32).collect();
+        idx.sort_by_key(|&i| (op_level[i as usize], ops[i as usize]));
+        let permute_u8 = |src: &[u8]| -> Vec<u8> { idx.iter().map(|&i| src[i as usize]).collect() };
+        let permute = |src: &[u32]| -> Vec<u32> { idx.iter().map(|&i| src[i as usize]).collect() };
+        let ops = permute_u8(&ops);
+        let src_a = permute(&src_a);
+        let src_b = permute(&src_b);
+        let src_c = permute(&src_c);
+        let dst = permute(&dst);
+        let op_level = permute(&op_level);
+        let mut runs: Vec<(u8, u32, u32)> = Vec::new();
+        for (i, &op) in ops.iter().enumerate() {
+            match runs.last_mut() {
+                Some((last, _, len)) if *last == op => *len += 1,
+                _ => runs.push((op, i as u32, 1)),
+            }
+        }
+        let run_gates = RunGates::build(&runs, &src_a, &src_b, &src_c);
+
+        let compiled = CompiledPlan {
+            ops,
+            src_a,
+            src_b,
+            src_c,
+            dst,
+            runs,
+            op_level,
+            dff_d,
+            dff_q,
+            dff_en,
+            dff_rst,
+            dff_rstval,
+            n_dense: base as usize,
+            // No source-netlist id space exists for the fused plan:
+            // external set/get must go through the fused slot IO.
+            port_map: Vec::new(),
+            write_map: Vec::new(),
+            run_gates,
+        };
+        let max_cycles = models.iter().map(|m| m.cycles).max().unwrap_or(0);
+        FusedPlan {
+            plan: Arc::new(SimPlan {
+                cells: Vec::new(),
+                order: Vec::new(),
+                dffs: Vec::new(),
+                n_nets: 2,
+                compiled: Some(compiled),
+            }),
+            models,
+            max_cycles,
+        }
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Total fused micro-op count (reporting).
+    pub fn n_ops(&self) -> usize {
+        self.plan.compiled_plan().map_or(0, |c| c.n_ops())
+    }
+
+    /// The shared fused [`SimPlan`].
+    pub fn sim_plan(&self) -> &Arc<SimPlan> {
+        &self.plan
+    }
+
+    /// Run one batch per model through the fused plan, sharded into
+    /// super-lane blocks like [`crate::sim::testbench`] (lane `l` of a
+    /// block carries sample `base + l` of *every* tenant at once).
+    /// Batches may be ragged: a model whose rows run out early is frozen
+    /// for the remaining lanes' protocol (its padding-lane outputs are
+    /// never read).  Returns one prediction vector per model, in spec
+    /// order, each of its own batch length.
+    pub fn run(&self, batches: &[FusedBatch], threads: usize, lane_words: usize) -> Vec<Vec<u16>> {
+        assert_eq!(batches.len(), self.models.len(), "one batch per model");
+        let n = batches.iter().map(|b| b.n).max().unwrap_or(0);
+        if n == 0 {
+            return self.models.iter().map(|_| Vec::new()).collect();
+        }
+        let flat: Vec<Vec<u16>> =
+            batch::run_sharded_wide(&self.plan, n, threads, lane_words, |sim, base, lanes| {
+                self.drive_block(sim, batches, base, lanes);
+                (0..lanes)
+                    .map(|lane| {
+                        self.models
+                            .iter()
+                            .map(|m| read_class(sim, &m.class_out, lane))
+                            .collect()
+                    })
+                    .collect()
+            });
+        let mut out: Vec<Vec<u16>> = batches.iter().map(|b| Vec::with_capacity(b.n)).collect();
+        for (i, lane_vals) in flat.iter().enumerate() {
+            for (m, &v) in lane_vals.iter().enumerate() {
+                if i < batches[m].n {
+                    out[m].push(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// One super-lane block of the fused sequential protocol: a shared
+    /// reset edge, then per-cycle feature drive + range commit for every
+    /// model still inside its schedule (finished models freeze), then a
+    /// final settle.
+    fn drive_block(&self, sim: &mut Sim, batches: &[FusedBatch], base: usize, lanes: usize) {
+        let mut scratch: Vec<i64> = Vec::with_capacity(lanes);
+        let all_ranges: Vec<(u32, u32)> =
+            self.models.iter().map(|m| m.dff_range).collect();
+        // Reset pulse across every model.
+        for m in &self.models {
+            fill_slot(sim, m.rst, !0u64);
+            set_slot_word_all(sim, &m.x, 0);
+        }
+        sim.eval();
+        sim.commit_state_ranges(&all_ranges);
+        for m in &self.models {
+            fill_slot(sim, m.rst, 0);
+        }
+        // Clocked phase: each model follows its own schedule and is
+        // frozen (no drive, no commit) once `t` passes its last cycle.
+        let mut live_ranges: Vec<(u32, u32)> = Vec::with_capacity(self.models.len());
+        for t in 0..self.max_cycles {
+            live_ranges.clear();
+            for (m, b) in self.models.iter().zip(batches) {
+                if t >= m.cycles {
+                    continue;
+                }
+                live_ranges.push(m.dff_range);
+                if t < m.active.len() {
+                    drive_feature(sim, m, b, base, lanes, m.active[t], &mut scratch);
+                } else {
+                    set_slot_word_all(sim, &m.x, 0);
+                }
+            }
+            sim.eval();
+            sim.commit_state_ranges(&live_ranges);
+        }
+        sim.settle();
+    }
+}
+
+/// Gather feature `f` of every in-range sample into the lane buffer and
+/// drive it onto the model's fused feature-bus slots (padding lanes and
+/// lanes past the model's batch read as 0).
+fn drive_feature(
+    sim: &mut Sim,
+    m: &FusedModelIo,
+    b: &FusedBatch,
+    base: usize,
+    lanes: usize,
+    f: usize,
+    scratch: &mut Vec<i64>,
+) {
+    scratch.clear();
+    for lane in 0..lanes {
+        let row = base + lane;
+        scratch.push(if row < b.n {
+            b.xs[row * m.features + f] as i64
+        } else {
+            0
+        });
+    }
+    set_slot_word_lanes(sim, &m.x, scratch);
+}
+
+/// [`Sim::set_word_lanes`] over fused slots: bit `i` of value `v` drives
+/// lane `l` of slot `slots[i]`; lanes beyond `values.len()` are zeroed.
+fn set_slot_word_lanes(sim: &mut Sim, slots: &[u32], values: &[i64]) {
+    let w = sim.lane_words();
+    for (bit, &slot) in slots.iter().enumerate() {
+        if slot == u32::MAX {
+            continue;
+        }
+        for j in 0..w {
+            let chunk = values.iter().skip(j * Sim::LANES).take(Sim::LANES);
+            let mut packed = 0u64;
+            for (lane, &v) in chunk.enumerate() {
+                packed |= (((v >> bit) & 1) as u64) << lane;
+            }
+            sim.set_slot_word(slot, j, packed);
+        }
+    }
+}
+
+/// Broadcast one value to every lane of a word of fused slots.
+fn set_slot_word_all(sim: &mut Sim, slots: &[u32], value: i64) {
+    let w = sim.lane_words();
+    for (bit, &slot) in slots.iter().enumerate() {
+        if slot == u32::MAX {
+            continue;
+        }
+        let v = if (value >> bit) & 1 == 1 { !0u64 } else { 0u64 };
+        for j in 0..w {
+            sim.set_slot_word(slot, j, v);
+        }
+    }
+}
+
+/// Broadcast one packed word to every lane word of one fused slot.
+fn fill_slot(sim: &mut Sim, slot: u32, packed: u64) {
+    if slot == u32::MAX {
+        return;
+    }
+    let w = sim.lane_words();
+    for j in 0..w {
+        sim.set_slot_word(slot, j, packed);
+    }
+}
+
+/// Read one lane of a fused class word (eliminated bits read 0).
+fn read_class(sim: &Sim, slots: &[u32], lane: usize) -> u16 {
+    let (wd, bit_in) = (lane / Sim::LANES, lane % Sim::LANES);
+    let mut v = 0u16;
+    for (bit, &slot) in slots.iter().enumerate() {
+        if slot == u32::MAX {
+            continue;
+        }
+        if (sim.get_slot_word(slot, wd) >> bit_in) & 1 == 1 {
+            v |= 1 << bit;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::SeqCircuit;
+    use crate::netlist::{Netlist, CONST1};
+    use crate::sim::testbench;
+
+    /// A tiny 2-bit wrap-around counter with the sequential protocol's
+    /// port shape: counts cycles where x != 0.
+    fn toy_counter(name: &str, cycles: usize) -> SeqCircuit {
+        let mut n = Netlist::new(name);
+        let x = n.add_input("x", 4);
+        let rst = n.add_input("rst", 1)[0];
+        let a = n.or2(x[0], x[1]);
+        let b = n.or2(x[2], x[3]);
+        let any = n.or2(a, b);
+        let (q0, c0) = n.dff_deferred(CONST1, rst, false);
+        let (q1, c1) = n.dff_deferred(CONST1, rst, false);
+        // q += any (2-bit wrap).
+        let d0 = n.xor2(q0, any);
+        let carry = n.and2(q0, any);
+        let d1 = n.xor2(q1, carry);
+        n.set_dff_d(c0, d0);
+        n.set_dff_d(c1, d1);
+        n.add_output("class_out", vec![q0, q1]);
+        let active = (0..cycles.min(3)).collect();
+        SeqCircuit::new(n, cycles, active, 0)
+    }
+
+    #[test]
+    fn fused_matches_per_model_on_toy_counters() {
+        let c1 = toy_counter("m1", 3);
+        let c2 = toy_counter("m2", 5);
+        let p1 = Arc::new(SimPlan::compiled(&c1.netlist));
+        let p2 = Arc::new(SimPlan::compiled(&c2.netlist));
+        // Samples with 8 features each (only the scheduled ones matter);
+        // ragged batch sizes exercise the freeze-on-padding path.
+        let feats = 8usize;
+        let xs1: Vec<u8> = (0..100 * feats).map(|i| (i % 5) as u8 & 0xF).collect();
+        let xs2: Vec<u8> = (0..70 * feats).map(|i| (i % 7) as u8 & 0xF).collect();
+        let want1 = testbench::run_sequential_plan(&c1, &p1, &xs1, 100, feats, 1, 1);
+        let want2 = testbench::run_sequential_plan(&c2, &p2, &xs2, 70, feats, 1, 1);
+
+        let port = |n: &Netlist, name: &str| -> Vec<crate::netlist::NetId> {
+            n.inputs
+                .iter()
+                .chain(n.outputs.iter())
+                .find(|p| p.name == name)
+                .unwrap()
+                .bits
+                .clone()
+        };
+        let (x1, x2) = (port(&c1.netlist, "x"), port(&c2.netlist, "x"));
+        let (o1, o2) = (port(&c1.netlist, "class_out"), port(&c2.netlist, "class_out"));
+        let fused = FusedPlan::build(&[
+            FusedModelSpec {
+                plan: &p1,
+                x: &x1,
+                rst: port(&c1.netlist, "rst")[0],
+                class_out: &o1,
+                cycles: c1.cycles,
+                active: &c1.active,
+                features: feats,
+            },
+            FusedModelSpec {
+                plan: &p2,
+                x: &x2,
+                rst: port(&c2.netlist, "rst")[0],
+                class_out: &o2,
+                cycles: c2.cycles,
+                active: &c2.active,
+                features: feats,
+            },
+        ]);
+        assert_eq!(fused.n_models(), 2);
+        for (threads, w) in [(1usize, 1usize), (2, 2), (4, 4)] {
+            let got = fused.run(
+                &[
+                    FusedBatch { xs: &xs1, n: 100 },
+                    FusedBatch { xs: &xs2, n: 70 },
+                ],
+                threads,
+                w,
+            );
+            assert_eq!(got[0], want1, "model 1, threads={threads} w={w}");
+            assert_eq!(got[1], want2, "model 2, threads={threads} w={w}");
+        }
+    }
+}

@@ -81,6 +81,7 @@
 
 pub mod batch;
 pub mod fault;
+pub mod fuse;
 pub mod testbench;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -211,6 +212,32 @@ pub fn set_profile_activity_default(on: bool) {
     PROFILE_ACTIVITY_DEFAULT.store(on, Ordering::Relaxed);
 }
 
+/// Process-wide default for activity-gated (event-driven) evaluation
+/// (§Gating).  Off by default — it is a pure optimisation and the
+/// differential suite pins it bit-identical either way; `--gate-activity`,
+/// the `sim.gate_on_activity` config key, or the
+/// `PRINTED_MLP_GATE_ACTIVITY` environment variable (any value but `0`)
+/// turn it on.
+static GATE_ACTIVITY_DEFAULT: AtomicBool = AtomicBool::new(false);
+
+/// Whether activity-gated evaluation is on by default (see
+/// [`set_gate_on_activity_default`]; `PRINTED_MLP_GATE_ACTIVITY`
+/// overrides the process-wide flag, mirroring the other sim knobs).
+pub fn gate_on_activity_default() -> bool {
+    match std::env::var_os("PRINTED_MLP_GATE_ACTIVITY") {
+        Some(v) if !v.is_empty() && v != "0" => true,
+        _ => GATE_ACTIVITY_DEFAULT.load(Ordering::Relaxed),
+    }
+}
+
+/// Set the process-wide activity-gating default (the `--gate-activity`
+/// knob).  Simulators built *after* the call pick it up —
+/// [`Sim::from_plan_wide`] auto-enables gating on compiled plans, so
+/// serve and pipeline paths need no signature changes.
+pub fn set_gate_on_activity_default(on: bool) {
+    GATE_ACTIVITY_DEFAULT.store(on, Ordering::Relaxed);
+}
+
 // Micro-op opcodes: one byte per surviving gate, dispatched over
 // contiguous arrays (branch-predictable, cache-dense — no enum payload
 // loads from a scattered `Vec<Cell>`).
@@ -223,6 +250,120 @@ const OP_OR: u8 = 5;
 const OP_XOR: u8 = 6;
 const OP_XNOR: u8 = 7;
 const OP_MUX: u8 = 8;
+
+/// Dirty-block granularity for activity gating (§Gating): value slots
+/// are grouped 16 to a block (`slot >> 4`), one dirty bit per block.
+/// Coarser blocks false-share — e.g. a free-running cycle counter
+/// renumbered next to settled accumulator state would keep its whole
+/// block permanently dirty — while finer blocks inflate the per-run gate
+/// lists; 16 slots keeps both small at the paper's circuit sizes.
+const GATE_BLOCK_SHIFT: u32 = 4;
+
+/// Mark the dirty bit of `slot`'s block in a gating bitmap.
+#[inline(always)]
+pub(crate) fn mark_dirty(dirty: &mut [u64], slot: u32) {
+    let b = slot >> GATE_BLOCK_SHIFT;
+    dirty[(b >> 6) as usize] |= 1u64 << (b & 63);
+}
+
+/// Per-run input-block gate lists for activity-gated evaluation
+/// (§Gating): run `ri` may be skipped when it is not pinned hot and none
+/// of `blocks[off[ri]..off[ri+1]]` is dirty.  Built once per run table —
+/// [`CompiledPlan::build`] builds the clean table's lists, and the
+/// fault-split table builds its own (run re-splitting composes because
+/// the lists are a pure function of whichever run table executes),
+/// pinning runs with scheduled transient flips hot so a flip mask is
+/// never XORed on top of a stale store.
+#[derive(Clone, Debug)]
+pub(crate) struct RunGates {
+    /// CSR offsets into `blocks`, one span per run (`runs.len() + 1`).
+    off: Vec<u32>,
+    /// Sorted, deduplicated input block ids per run.  Operand slots that
+    /// an opcode does not read (`src_b` of a unary op, `src_c` of
+    /// anything but a mux) are excluded — they are parked on constant
+    /// slot 0, whose block also holds real low-numbered inputs, and
+    /// including them would false-wake every unary run.
+    blocks: Vec<u32>,
+    /// Runs that must execute every eval regardless of dirt.
+    hot: Vec<bool>,
+}
+
+impl RunGates {
+    pub(crate) fn build(
+        runs: &[(u8, u32, u32)],
+        src_a: &[u32],
+        src_b: &[u32],
+        src_c: &[u32],
+    ) -> RunGates {
+        let mut off = Vec::with_capacity(runs.len() + 1);
+        let mut blocks = Vec::new();
+        let mut scratch: Vec<u32> = Vec::new();
+        off.push(0);
+        for &(op, start, len) in runs {
+            let r = start as usize..start as usize + len as usize;
+            scratch.clear();
+            scratch.extend(src_a[r.clone()].iter().map(|&s| s >> GATE_BLOCK_SHIFT));
+            if op >= OP_NAND {
+                scratch.extend(src_b[r.clone()].iter().map(|&s| s >> GATE_BLOCK_SHIFT));
+            }
+            if op == OP_MUX {
+                scratch.extend(src_c[r].iter().map(|&s| s >> GATE_BLOCK_SHIFT));
+            }
+            scratch.sort_unstable();
+            scratch.dedup();
+            blocks.extend_from_slice(&scratch);
+            off.push(blocks.len() as u32);
+        }
+        RunGates {
+            off,
+            blocks,
+            hot: vec![false; runs.len()],
+        }
+    }
+
+    /// Pin one run hot (always executed).
+    pub(crate) fn pin_hot(&mut self, ri: usize) {
+        self.hot[ri] = true;
+    }
+
+    /// Must run `ri` execute this eval?
+    #[inline(always)]
+    pub(crate) fn is_hot(&self, ri: usize, dirty: &[u64]) -> bool {
+        self.hot[ri]
+            || self.blocks[self.off[ri] as usize..self.off[ri + 1] as usize]
+                .iter()
+                .any(|&b| dirty[(b >> 6) as usize] & (1u64 << (b & 63)) != 0)
+    }
+}
+
+/// Executed/skipped run counters harvested from one gated simulator
+/// (§Gating).  Skips are the win: a skipped run pays one gate-list probe
+/// instead of its whole lane-block loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GateStats {
+    /// Homogeneous opcode runs executed.
+    pub executed: u64,
+    /// Runs skipped because every input block was clean.
+    pub skipped: u64,
+}
+
+impl GateStats {
+    /// Accumulate another worker's counters.
+    pub fn merge(&mut self, other: &GateStats) {
+        self.executed += other.executed;
+        self.skipped += other.skipped;
+    }
+
+    /// Fraction of runs skipped (`0.0` when nothing ran).
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.executed + self.skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped as f64 / total as f64
+        }
+    }
+}
 
 /// A netlist lowered to a flat structure-of-arrays micro-op stream with
 /// densely renumbered nets — the compiled form [`Sim::eval`] executes.
@@ -272,6 +413,9 @@ pub struct CompiledPlan {
     /// silent no-op (on the oracle the next `eval` would overwrite such
     /// a write anyway; following the alias could clobber a live input).
     write_map: Vec<u32>,
+    /// Per-run input-block gate lists for activity-gated evaluation
+    /// (§Gating).
+    run_gates: RunGates,
 }
 
 impl CompiledPlan {
@@ -468,6 +612,7 @@ impl CompiledPlan {
                 _ => runs.push((op, i as u32, 1)),
             }
         }
+        let run_gates = RunGates::build(&runs, &src_a, &src_b, &src_c);
 
         CompiledPlan {
             ops,
@@ -485,6 +630,7 @@ impl CompiledPlan {
             n_dense: next as usize,
             port_map,
             write_map,
+            run_gates,
         }
     }
 
@@ -968,6 +1114,117 @@ fn exec_run_counted<const W: usize>(
     }
 }
 
+/// [`run_unary`] with store-time dirty marking and skip-on-equal stores
+/// (§Gating): the freshly computed block is compared against the
+/// standing value; an unchanged store is elided, a changed one marks the
+/// destination's dirty block so downstream runs wake.
+#[inline(always)]
+fn run_unary_gated<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    d: &[u32],
+    dirty: &mut [u64],
+    f: impl Fn(u64) -> u64,
+) {
+    for (&ai, &di) in a.iter().zip(d) {
+        let va = load::<W>(v, ai);
+        let old = load::<W>(v, di);
+        let mut out = [0u64; W];
+        let mut diff = 0u64;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = f(va[j]);
+            diff |= *o ^ old[j];
+        }
+        if diff != 0 {
+            mark_dirty(dirty, di);
+            store::<W>(v, di, out);
+        }
+    }
+}
+
+/// [`run_binary`] with store-time dirty marking (§Gating).
+#[inline(always)]
+fn run_binary_gated<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    b: &[u32],
+    d: &[u32],
+    dirty: &mut [u64],
+    f: impl Fn(u64, u64) -> u64,
+) {
+    for ((&ai, &bi), &di) in a.iter().zip(b).zip(d) {
+        let va = load::<W>(v, ai);
+        let vb = load::<W>(v, bi);
+        let old = load::<W>(v, di);
+        let mut out = [0u64; W];
+        let mut diff = 0u64;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = f(va[j], vb[j]);
+            diff |= *o ^ old[j];
+        }
+        if diff != 0 {
+            mark_dirty(dirty, di);
+            store::<W>(v, di, out);
+        }
+    }
+}
+
+/// [`run_mux`] with store-time dirty marking (§Gating).
+#[inline(always)]
+fn run_mux_gated<const W: usize>(
+    v: &mut [u64],
+    a: &[u32],
+    b: &[u32],
+    c: &[u32],
+    d: &[u32],
+    dirty: &mut [u64],
+) {
+    for (((&ai, &bi), &si), &di) in a.iter().zip(b).zip(c).zip(d) {
+        let va = load::<W>(v, ai);
+        let vb = load::<W>(v, bi);
+        let vs = load::<W>(v, si);
+        let old = load::<W>(v, di);
+        let mut out = [0u64; W];
+        let mut diff = 0u64;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (va[j] & !vs[j]) | (vb[j] & vs[j]);
+            diff |= *o ^ old[j];
+        }
+        if diff != 0 {
+            mark_dirty(dirty, di);
+            store::<W>(v, di, out);
+        }
+    }
+}
+
+/// [`exec_run`] through the marking kernels — identical values, plus
+/// downstream wake-up via the dirty bitmap (§Gating).
+#[inline(always)]
+fn exec_run_gated<const W: usize>(
+    v: &mut [u64],
+    op: u8,
+    a: &[u32],
+    b: &[u32],
+    c: &[u32],
+    d: &[u32],
+    dirty: &mut [u64],
+) {
+    match op {
+        OP_INV => run_unary_gated::<W>(v, a, d, dirty, |x| !x),
+        OP_BUF => run_unary_gated::<W>(v, a, d, dirty, |x| x),
+        OP_NAND => run_binary_gated::<W>(v, a, b, d, dirty, |x, y| !(x & y)),
+        OP_NOR => run_binary_gated::<W>(v, a, b, d, dirty, |x, y| !(x | y)),
+        OP_AND => run_binary_gated::<W>(v, a, b, d, dirty, |x, y| x & y),
+        OP_OR => run_binary_gated::<W>(v, a, b, d, dirty, |x, y| x | y),
+        OP_XOR => run_binary_gated::<W>(v, a, b, d, dirty, |x, y| x ^ y),
+        OP_XNOR => run_binary_gated::<W>(v, a, b, d, dirty, |x, y| !(x ^ y)),
+        _ => {
+            debug_assert_eq!(op, OP_MUX);
+            run_mux_gated::<W>(v, a, b, c, d, dirty);
+        }
+    }
+}
+
 /// Lower one interpreted cell to its micro-op view `(op, a, b, sel, y)`
 /// so both plan forms share the [`exec_run`]/[`exec_run_counted`]
 /// dispatch (interpreted slots are the source net ids themselves).
@@ -999,6 +1256,14 @@ struct ActivityState {
     mask: Vec<u64>,
 }
 
+/// Internal activity-gating state (§Gating): one dirty bit per 16-slot
+/// value block, plus executed/skipped run counters.
+struct GateState {
+    /// Dirty bitmap over [`GATE_BLOCK_SHIFT`] slot blocks.
+    dirty: Vec<u64>,
+    stats: GateStats,
+}
+
 /// Packed super-lane two-valued simulator state over a shared
 /// [`SimPlan`]: `W` consecutive `u64` words per net, one sample per bit
 /// (`W·64` samples per pass; `W = 1` is the original 64-lane geometry).
@@ -1018,6 +1283,9 @@ pub struct Sim {
     /// Activity profiling (`None` = off — the default; one branch per
     /// opcode run when on).
     activity: Option<Box<ActivityState>>,
+    /// Activity gating (`None` = off — every run executes; see
+    /// [`Sim::set_gating`]).
+    gate: Option<Box<GateState>>,
 }
 
 impl Sim {
@@ -1054,14 +1322,19 @@ impl Sim {
         for j in 0..lane_words {
             vals[lane_words + j] = !0u64; // CONST1 (slot 1), every word
         }
-        Sim {
+        let mut sim = Sim {
             next_q: vec![0; n_state * lane_words],
             plan,
             w: lane_words,
             vals,
             faults: None,
             activity: None,
+            gate: None,
+        };
+        if gate_on_activity_default() {
+            sim.set_gating(true);
         }
+        sim
     }
 
     /// Inject a fault list: lower it against this simulator's plan so
@@ -1072,11 +1345,13 @@ impl Sim {
     /// at a nonzero sample offset (sharded runs).
     pub fn set_faults(&mut self, list: &fault::FaultList) {
         self.faults = fault::FaultState::build(&self.plan, list).map(Box::new);
+        self.gate_all_dirty();
     }
 
     /// Remove every injected fault.
     pub fn clear_faults(&mut self) {
         self.faults = None;
+        self.gate_all_dirty();
     }
 
     /// Whether any fault survived lowering.
@@ -1092,6 +1367,11 @@ impl Sim {
         debug_assert_eq!(base_sample % Self::LANES, 0);
         if let Some(fs) = &mut self.faults {
             fs.begin_block(base_sample);
+            // The transient key space just moved: every flip mask may
+            // change next eval, so nothing is provably clean.
+            if let Some(g) = self.gate.as_deref_mut() {
+                g.dirty.fill(!0u64);
+            }
         }
     }
 
@@ -1148,6 +1428,8 @@ impl Sim {
         for j in 0..w {
             self.vals[w + j] = !0u64; // CONST1 (slot 1), every word
         }
+        // The wipe invalidated every value slot for the gating map too.
+        self.gate_all_dirty();
     }
 
     /// Harvest the accumulated counters as an [`Activity`] snapshot and
@@ -1162,6 +1444,52 @@ impl Sim {
                 }
             }
             None => Activity::default(),
+        }
+    }
+
+    /// Turn activity-gated evaluation on or off (§Gating).  Gating is a
+    /// pure optimisation over compiled plans: a homogeneous opcode run
+    /// is skipped when none of its input blocks changed since the
+    /// previous eval, which the differential suite pins bit-identical to
+    /// the ungated walk at every width, thread count, and fault list.
+    /// On an interpreted plan this is a silent no-op — the oracle always
+    /// pays full price.  Turning it on starts all-dirty (the first eval
+    /// executes everything).  While activity *profiling* is on, gating
+    /// is suspended — the counted kernels must observe every store — and
+    /// resumes correctly afterwards because ungated evals never clear
+    /// the dirty map.
+    pub fn set_gating(&mut self, on: bool) {
+        if on && self.plan.is_compiled() {
+            let slots = self.vals.len() / self.w;
+            let words = slots.div_ceil(1usize << (GATE_BLOCK_SHIFT + 6)).max(1);
+            self.gate = Some(Box::new(GateState {
+                dirty: vec![!0u64; words],
+                stats: GateStats::default(),
+            }));
+        } else {
+            self.gate = None;
+        }
+    }
+
+    /// Whether activity-gated evaluation is on.
+    pub fn gating_enabled(&self) -> bool {
+        self.gate.is_some()
+    }
+
+    /// Harvest the executed/skipped run counters and reset them (gating
+    /// stays on).  Zeroed stats when gating is off.
+    pub fn take_gate_stats(&mut self) -> GateStats {
+        match self.gate.as_deref_mut() {
+            Some(g) => std::mem::take(&mut g.stats),
+            None => GateStats::default(),
+        }
+    }
+
+    /// Conservatively mark every gating block dirty (cheap; the next
+    /// gated eval simply recomputes everything).
+    fn gate_all_dirty(&mut self) {
+        if let Some(g) = self.gate.as_deref_mut() {
+            g.dirty.fill(!0u64);
         }
     }
 
@@ -1206,7 +1534,14 @@ impl Sim {
         let slot = self.plan.write_slot(net);
         if slot != u32::MAX {
             debug_assert!(slot >= 2, "cannot drive a constant slot");
-            self.vals[slot as usize * self.w + word] = packed;
+            let idx = slot as usize * self.w + word;
+            let old = self.vals[idx];
+            self.vals[idx] = packed;
+            if old != packed {
+                if let Some(g) = self.gate.as_deref_mut() {
+                    mark_dirty(&mut g.dirty, slot);
+                }
+            }
         }
     }
 
@@ -1241,6 +1576,32 @@ impl Sim {
         } else {
             self.vals[slot as usize * self.w + word]
         }
+    }
+
+    /// Drive one lane word of a *dense value slot* directly — the fused
+    /// plan's IO path (§Fusion), where per-model port slots are
+    /// pre-translated and there is no source netlist to map through.
+    /// Compare-and-marks the gating map like [`Sim::set_lane_word`].
+    #[inline]
+    pub(crate) fn set_slot_word(&mut self, slot: u32, word: usize, packed: u64) {
+        debug_assert!(slot >= 2, "cannot drive a constant slot");
+        debug_assert!(word < self.w, "lane word out of range");
+        let idx = slot as usize * self.w + word;
+        let old = self.vals[idx];
+        self.vals[idx] = packed;
+        if old != packed {
+            if let Some(g) = self.gate.as_deref_mut() {
+                mark_dirty(&mut g.dirty, slot);
+            }
+        }
+    }
+
+    /// Read one lane word of a dense value slot (§Fusion); constant
+    /// slots 0/1 read their constant value.
+    #[inline]
+    pub(crate) fn get_slot_word(&self, slot: u32, word: usize) -> u64 {
+        debug_assert!(word < self.w, "lane word out of range");
+        self.vals[slot as usize * self.w + word]
     }
 
     /// Drive a word with per-lane integer values (bit i of value v goes
@@ -1317,6 +1678,13 @@ impl Sim {
 
     fn eval_w<const W: usize>(&mut self) {
         debug_assert_eq!(self.w, W);
+        // Gated fast path: compiled plan, gating on, profiling off (the
+        // counted kernels must see every store, so profiling suspends
+        // gating for the duration).
+        if self.gate.is_some() && self.activity.is_none() && self.plan.is_compiled() {
+            self.eval_gated_w::<W>();
+            return;
+        }
         let plan = &*self.plan;
         let v = &mut self.vals;
         let fs = self.faults.as_deref();
@@ -1390,6 +1758,62 @@ impl Sim {
         }
     }
 
+    /// Activity-gated compiled eval (§Gating): walk the same run table
+    /// as the ungated path, but probe each run's input-block gate list
+    /// first and skip it when nothing it reads changed since the last
+    /// eval.  Executed runs store through the marking kernels so
+    /// downstream runs wake; fault masks are applied through
+    /// [`fault::FaultState::apply_marked`] so a forced change propagates
+    /// dirt exactly like a computed one.  After the walk every slot is
+    /// consistent with the current inputs (skipped runs were already
+    /// consistent), so the dirty map is cleared wholesale — external
+    /// writes, register commits, and fault-key changes re-mark it.
+    fn eval_gated_w<const W: usize>(&mut self) {
+        let plan = &*self.plan;
+        let cp = plan.compiled.as_ref().expect("gated eval needs a compiled plan");
+        let v = &mut self.vals;
+        let g = self.gate.as_deref_mut().expect("gated eval needs gating on");
+        let fs = self.faults.as_deref();
+        if let Some(fs) = fs {
+            for af in &fs.sources {
+                fs.apply_marked::<W>(v, af, &mut g.dirty);
+            }
+        }
+        let (runs, gates): (&[(u8, u32, u32)], &RunGates) =
+            match fs.and_then(|f| f.runs.as_deref().zip(f.run_gates.as_ref())) {
+                Some((split, rg)) => (split, rg),
+                None => (&cp.runs, &cp.run_gates),
+            };
+        let mut cursor = 0usize;
+        for (ri, &(op, start, len)) in runs.iter().enumerate() {
+            if gates.is_hot(ri, &g.dirty) {
+                let r = start as usize..start as usize + len as usize;
+                exec_run_gated::<W>(
+                    v,
+                    op,
+                    &cp.src_a[r.clone()],
+                    &cp.src_b[r.clone()],
+                    &cp.src_c[r.clone()],
+                    &cp.dst[r],
+                    &mut g.dirty,
+                );
+                g.stats.executed += 1;
+            } else {
+                g.stats.skipped += 1;
+            }
+            if let Some(fs) = fs {
+                while cursor < fs.scheduled.len() && fs.scheduled[cursor].0 == ri as u32 {
+                    fs.apply_marked::<W>(v, &fs.scheduled[cursor].1, &mut g.dirty);
+                    cursor += 1;
+                }
+            }
+        }
+        g.dirty.fill(0);
+        if let Some(fs) = self.faults.as_deref_mut() {
+            fs.end_eval();
+        }
+    }
+
     /// One clock edge: propagate combinational logic from the current
     /// inputs, capture register inputs (two-phase), and commit.
     ///
@@ -1426,42 +1850,85 @@ impl Sim {
         }
     }
 
+    /// Commit only the given DFF index ranges (`[lo, hi)` pairs, per the
+    /// compiled DFF SoA order) — the fused driver's freeze primitive
+    /// (§Fusion): a tenant whose clock schedule has finished is simply
+    /// left out, so its registers hold and its combinational cone stays
+    /// a pure function of held state, bit-identical to a standalone
+    /// settle.  Compiled plans only.
+    pub fn commit_state_ranges(&mut self, ranges: &[(u32, u32)]) {
+        for &(lo, hi) in ranges {
+            match self.w {
+                1 => self.commit_dff_range::<1>(lo as usize, hi as usize),
+                2 => self.commit_dff_range::<2>(lo as usize, hi as usize),
+                4 => self.commit_dff_range::<4>(lo as usize, hi as usize),
+                _ => self.commit_dff_range::<8>(lo as usize, hi as usize),
+            }
+        }
+    }
+
+    /// Two-phase commit of compiled DFF indices `lo..hi`: capture every
+    /// next-state word, count commit toggles (profiling), then copy —
+    /// marking each q slot whose value changed in the gating map (the
+    /// commit is the only writer of register slots, so this is the only
+    /// place settled state can wake downstream runs).
+    fn commit_dff_range<const W: usize>(&mut self, lo: usize, hi: usize) {
+        let plan = &*self.plan;
+        let cp = plan
+            .compiled
+            .as_ref()
+            .expect("range commit needs a compiled plan");
+        for i in lo..hi {
+            let v = &self.vals;
+            let d = load::<W>(v, cp.dff_d[i]);
+            let en = load::<W>(v, cp.dff_en[i]);
+            let rst = load::<W>(v, cp.dff_rst[i]);
+            let q = load::<W>(v, cp.dff_q[i]);
+            let rv = cp.dff_rstval[i];
+            for j in 0..W {
+                let held = (en[j] & d[j]) | (!en[j] & q[j]);
+                self.next_q[i * W + j] = (rst[j] & rv) | (!rst[j] & held);
+            }
+        }
+        // Count commit transitions of each q slot before the copy —
+        // register state nets have no combinational producer, so the
+        // commit is the only place they toggle.
+        if let Some(st) = self.activity.as_deref_mut() {
+            for i in lo..hi {
+                let qslot = cp.dff_q[i] as usize;
+                let base = qslot * W;
+                let mut t = 0u64;
+                for j in 0..W {
+                    t += ((self.vals[base + j] ^ self.next_q[i * W + j]) & st.mask[j])
+                        .count_ones() as u64;
+                }
+                st.counts[qslot] += t;
+            }
+        }
+        for i in lo..hi {
+            let qslot = cp.dff_q[i];
+            let base = qslot as usize * W;
+            let mut changed = 0u64;
+            for j in 0..W {
+                changed |= self.vals[base + j] ^ self.next_q[i * W + j];
+            }
+            self.vals[base..base + W].copy_from_slice(&self.next_q[i * W..i * W + W]);
+            if changed != 0 {
+                if let Some(g) = self.gate.as_deref_mut() {
+                    mark_dirty(&mut g.dirty, qslot);
+                }
+            }
+        }
+    }
+
     fn commit_state<const W: usize>(&mut self) {
         debug_assert_eq!(self.w, W);
-        let plan = &*self.plan;
-        if let Some(cp) = &plan.compiled {
-            for i in 0..cp.dff_q.len() {
-                let v = &self.vals;
-                let d = load::<W>(v, cp.dff_d[i]);
-                let en = load::<W>(v, cp.dff_en[i]);
-                let rst = load::<W>(v, cp.dff_rst[i]);
-                let q = load::<W>(v, cp.dff_q[i]);
-                let rv = cp.dff_rstval[i];
-                for j in 0..W {
-                    let held = (en[j] & d[j]) | (!en[j] & q[j]);
-                    self.next_q[i * W + j] = (rst[j] & rv) | (!rst[j] & held);
-                }
-            }
-            // Count commit transitions of each q slot before the copy —
-            // register state nets have no combinational producer, so the
-            // commit is the only place they toggle.
-            if let Some(st) = self.activity.as_deref_mut() {
-                for (i, &qslot) in cp.dff_q.iter().enumerate() {
-                    let base = qslot as usize * W;
-                    let mut t = 0u64;
-                    for j in 0..W {
-                        t += ((self.vals[base + j] ^ self.next_q[i * W + j]) & st.mask[j])
-                            .count_ones() as u64;
-                    }
-                    st.counts[qslot as usize] += t;
-                }
-            }
-            for (i, &qslot) in cp.dff_q.iter().enumerate() {
-                let base = qslot as usize * W;
-                self.vals[base..base + W].copy_from_slice(&self.next_q[i * W..i * W + W]);
-            }
+        if self.plan.compiled.is_some() {
+            let n = self.plan.compiled.as_ref().map_or(0, |c| c.dff_q.len());
+            self.commit_dff_range::<W>(0, n);
             return;
         }
+        let plan = &*self.plan;
         for (slot, &ci) in plan.dffs.iter().enumerate() {
             if let Cell::Dff {
                 d,
@@ -1526,6 +1993,9 @@ impl Sim {
                 }
             }
         }
+        // Register slots were rewritten wholesale; nothing is provably
+        // clean for the propagate below.
+        self.gate_all_dirty();
         self.eval();
     }
 }

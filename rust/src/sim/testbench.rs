@@ -28,10 +28,10 @@ use std::sync::Arc;
 use crate::circuits::{CombCircuit, SeqCircuit};
 use crate::netlist::{NetId, Netlist, Word};
 use crate::sim::fault::FaultList;
-use crate::sim::{batch, Activity, Sim, SimPlan};
+use crate::sim::{batch, Activity, GateStats, Sim, SimPlan};
 use crate::util::pool;
 
-fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
+pub(crate) fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
     &n.inputs
         .iter()
         .find(|p| p.name == name)
@@ -39,7 +39,7 @@ fn input_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
         .bits
 }
 
-fn output_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
+pub(crate) fn output_port<'a>(n: &'a Netlist, name: &str) -> &'a Word {
     &n.outputs
         .iter()
         .find(|p| p.name == name)
@@ -122,6 +122,40 @@ where
     D: Fn(&mut Sim, &mut BlockIo) + Sync,
 {
     batch::run_sharded_wide_activity(plan, n, threads, lane_words, faults, |sim, base, lanes| {
+        let mut io = BlockIo {
+            xs,
+            features,
+            base,
+            lanes,
+            scratch: Vec::with_capacity(lanes),
+        };
+        drive(sim, &mut io);
+        (0..lanes)
+            .map(|lane| sim.get_word_lane(class_out, lane) as u16)
+            .collect()
+    })
+}
+
+/// [`run_blocks`] with activity-gated evaluation (`sim` §Gating): same
+/// sharding, same protocol closure, identical predictions, plus the
+/// merged executed/skipped run counters — the skip rate is the measured
+/// win the benches report.
+#[allow(clippy::too_many_arguments)]
+fn run_blocks_gated<D>(
+    plan: &Arc<SimPlan>,
+    class_out: &[NetId],
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+    drive: D,
+) -> (Vec<u16>, GateStats)
+where
+    D: Fn(&mut Sim, &mut BlockIo) + Sync,
+{
+    batch::run_sharded_wide_gated(plan, n, threads, lane_words, faults, |sim, base, lanes| {
         let mut io = BlockIo {
             xs,
             features,
@@ -267,6 +301,39 @@ pub fn run_sequential_plan_activity(
     let class_out = output_port(net, "class_out").clone();
 
     run_blocks_activity(
+        plan,
+        &class_out,
+        xs,
+        n,
+        features,
+        threads,
+        lane_words,
+        faults,
+        seq_drive(circ, &x, rst),
+    )
+}
+
+/// [`run_sequential_plan_faulted`] with activity-gated evaluation:
+/// returns the (identical) predictions plus the merged [`GateStats`] —
+/// how the benches and the skip-rate property test measure what gating
+/// actually skips on the multi-cycle protocol.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sequential_plan_gated(
+    circ: &SeqCircuit,
+    plan: &Arc<SimPlan>,
+    xs: &[u8],
+    n: usize,
+    features: usize,
+    threads: usize,
+    lane_words: usize,
+    faults: Option<&FaultList>,
+) -> (Vec<u16>, GateStats) {
+    let net = &circ.netlist;
+    let x = input_port(net, "x").clone();
+    let rst = input_port(net, "rst")[0];
+    let class_out = output_port(net, "class_out").clone();
+
+    run_blocks_gated(
         plan,
         &class_out,
         xs,

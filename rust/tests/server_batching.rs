@@ -525,6 +525,55 @@ fn overload_sheds_bronze_before_gold_and_gold_meets_slo() {
 }
 
 #[test]
+fn fused_drain_is_bit_identical_to_per_model_drain() {
+    // The same frame stream through the per-model drain pool and the
+    // fused single-plan drain must produce identical responses: fusion
+    // only changes *how* lanes are packed, never what they compute.
+    let reg = synthetic_registry(3, 67);
+    let slots = reg.slots(Backend::GateSim, 1, 1, &[]).unwrap();
+    let entries = reg.entries();
+    let make_queues =
+        || -> Vec<BatchQueue> { entries.iter().map(|_| BatchQueue::new(4096)).collect() };
+    let q_solo = make_queues();
+    let q_fused = make_queues();
+
+    // Ragged per-model load (model 0 gets ~3x model 2's traffic) so the
+    // fused sweep sees uneven batch sizes per tenant.
+    let mut rng = Rng::new(13);
+    let mut next_id = 0u64;
+    for _ in 0..300 {
+        let m = [0, 0, 0, 1, 1, 2][rng.usize_below(6)];
+        let sample = rng.usize_below(entries[m].test.len());
+        let fr = Frame::new(next_id, sample);
+        assert!(q_solo[m].push(fr.clone()));
+        assert!(q_fused[m].push(fr));
+        next_id += 1;
+    }
+
+    let stop = AtomicBool::new(true);
+    let cfg = DrainConfig {
+        workers: 2,
+        batch: 16,
+        max_wait: Duration::from_millis(1),
+        slo_ms: 1e9,
+        collect_responses: true,
+        ..DrainConfig::default()
+    };
+    batcher::drain(&q_solo, &slots, &cfg, &stop).unwrap();
+    let fused = server::FusedSlot::new(&slots, 2, 1);
+    batcher::drain_fused(&q_fused, &slots, &fused, &cfg, &stop).unwrap();
+
+    for m in 0..entries.len() {
+        let mut want = q_solo[m].stats.responses.lock().unwrap().clone();
+        let mut got = q_fused[m].stats.responses.lock().unwrap().clone();
+        assert!(!want.is_empty(), "model {m}: stream must reach every model");
+        want.sort_by_key(|&(id, _)| id);
+        got.sort_by_key(|&(id, _)| id);
+        assert_eq!(want, got, "model {m}: fused drain diverged from per-model drain");
+    }
+}
+
+#[test]
 fn fanin_feeds_every_model_equally() {
     let store = ArtifactStore::new("/nonexistent-artifacts-root");
     let cfg = server::ServeConfig {
@@ -551,5 +600,40 @@ fn fanin_feeds_every_model_equally() {
         assert_eq!(m.shed, 0);
         assert_eq!(m.requests, m.answered);
         assert_eq!(m.accuracy, 1.0);
+    }
+}
+
+#[test]
+fn fused_fanin_serves_every_model_bit_exactly() {
+    // End-to-end fused serving on the fan-in scenario: one gatesim plan
+    // hosts all three tenants, and accuracy 1.0 on self-labeled splits
+    // is the bit-exactness check (same convention as the steady test).
+    let store = ArtifactStore::new("/nonexistent-artifacts-root");
+    let cfg = server::ServeConfig {
+        datasets: vec!["a".into(), "b".into(), "c".into()],
+        scenario: Scenario::FanIn,
+        rate_hz: 200.0,
+        duration: Duration::from_millis(250),
+        sensors: 2,
+        workers: 2,
+        queue_cap: 4096,
+        backend: Backend::GateSim,
+        fuse_models: true,
+        synthetic: true,
+        seed: 9,
+        ..server::ServeConfig::default()
+    };
+    let rep = server::run(&store, &cfg).unwrap();
+    assert_eq!(rep.backend, "gatesim");
+    assert_eq!(rep.models.len(), 3, "the fused plan hosts every tenant");
+    for m in &rep.models {
+        assert!(m.answered > 0, "{}: fan-in reaches every fused tenant", m.name);
+        assert_eq!(m.shed, 0, "{}: modest fan-in rate must not shed", m.name);
+        assert_eq!(m.requests, m.answered, "{}: exactly-once through the fused drain", m.name);
+        assert_eq!(
+            m.accuracy, 1.0,
+            "{}: fused predictions must stay bit-exact",
+            m.name
+        );
     }
 }
