@@ -1,14 +1,20 @@
-//! NSGA-II approximation-search throughput: genome-evals/sec at 1..N
-//! fitness-batch threads (native-model fitness, memo cache off so every
-//! requested genome costs a full training-set pass), plus the memo-cache
-//! hit rate and its end-to-end speedup at full threads, and the
-//! 3-objective (`--energy-objective`) bookkeeping cost.
+//! NSGA-II approximation-search throughput: the delta-logit fitness
+//! cache vs the scalar accuracy oracle at equal seeds and threads, plus
+//! genome-evals/sec at 1..N fitness-batch threads, the memo-cache hit
+//! rate, and the 3-objective (`--energy-objective`) bookkeeping cost.
 //!
 //! Artifact-free — the model and training split are synthetic — so this
-//! bench always runs, unlike the `make artifacts`-gated harnesses.  The
-//! acceptance bar mirrors the sim-sharding bench: >= 2x genome-evals/sec
-//! at 4+ threads vs 1 thread on multi-core hosts, with bit-identical
-//! fronts at every thread count (enforced by `tests/nsga_parallel.rs`).
+//! bench always runs, unlike the `make artifacts`-gated harnesses.
+//! Acceptance bars (ISSUE 10 / DESIGN.md §Perf):
+//!   - >= 5x genome-evals/sec cached vs scalar at equal seeds and
+//!     thread count (`cached_speedup` in `BENCH_nsga.json`);
+//!   - bit-identical Pareto fronts on both paths at every thread count
+//!     (spot-checked here; enforced by `tests/fitness_cache.rs` and
+//!     `tests/nsga_parallel.rs`).
+//!
+//! Writes the machine-readable trajectory to
+//! `artifacts/results/BENCH_nsga.json` (same shape as
+//! `BENCH_sim.json`/`BENCH_serve.json`) so regressions diff across PRs.
 
 mod harness;
 #[path = "../tests/common/mod.rs"]
@@ -18,11 +24,12 @@ use common::rand_model;
 use printed_mlp::approx;
 use printed_mlp::data::Split;
 use printed_mlp::nsga::NsgaConfig;
+use printed_mlp::util::json::{num, obj, s, Json};
 use printed_mlp::util::pool;
 use printed_mlp::util::prng::Rng;
 
 fn main() {
-    harness::section("NSGA-II search — genome-evals/sec vs fitness threads (native)");
+    harness::section("NSGA-II search — cached vs scalar fitness, evals/sec vs threads");
 
     // HAR-class search: 48 features, 24 hidden neurons (genome bits).
     let m = rand_model(21, 48, 24, 5);
@@ -36,93 +43,166 @@ fn main() {
     let fm = vec![1u8; m.features];
     let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
 
-    // Cache off: genome-evals/sec measures raw fitness throughput.
-    let uncached = NsgaConfig {
+    // Memo off on both configs so every requested genome pays a full
+    // fitness evaluation: the scalar/cached delta isolates the kernel,
+    // not the memo table.
+    let scalar = NsgaConfig {
         pop_size: 24,
         generations: 12,
         memoize: false,
+        cached_fitness: false,
         ..Default::default()
     };
-    let evals_per_run = (uncached.pop_size * (uncached.generations + 1)) as f64;
+    let cached = NsgaConfig {
+        cached_fitness: true,
+        ..scalar.clone()
+    };
+    let evals_per_run = (scalar.pop_size * (scalar.generations + 1)) as f64;
     println!(
         "search: pop {} × gen {} = {:.0} genome evals/run, {} samples/eval, {} genome bits",
-        uncached.pop_size, uncached.generations, evals_per_run, n, m.hidden
+        scalar.pop_size, scalar.generations, evals_per_run, n, m.hidden
     );
 
+    let mut rows: Vec<Json> = Vec::new();
+    let mut row = |path: &str, threads: usize, r: &harness::BenchResult, evals: f64| {
+        let eps = evals / (r.mean_ms / 1e3);
+        rows.push(obj(vec![
+            ("path", s(path)),
+            ("threads", num(threads as f64)),
+            ("mean_ms", num(r.mean_ms)),
+            ("p50_ms", num(r.p50_ms)),
+            ("p99_ms", num(r.p99_ms)),
+            ("genome_evals_per_s", num(eps)),
+        ]));
+        eps
+    };
+
+    // --- Head-to-head: scalar oracle vs delta-logit cache, 1 thread ----
+    // Equal seeds, equal thread count; the front must not move.
+    let r_scalar = harness::bench("NSGA pop24×gen12 scalar oracle, 1 thread", 3, || {
+        let (front, stats) = approx::explore_parallel(&m, &split, &fm, &tables, &scalar, 1);
+        assert_eq!(stats.evals as f64, evals_per_run);
+        std::hint::black_box(front.len());
+    });
+    let scalar_eps = row("scalar", 1, &r_scalar, evals_per_run);
+    println!("          {scalar_eps:>10.0} genome-evals/sec");
+
+    let r_cached = harness::bench("NSGA pop24×gen12 delta-logit cache, 1 thread", 3, || {
+        let (front, stats) = approx::explore_parallel(&m, &split, &fm, &tables, &cached, 1);
+        assert_eq!(stats.evals as f64, evals_per_run);
+        std::hint::black_box(front.len());
+    });
+    let cached_eps = row("cached", 1, &r_cached, evals_per_run);
+    let cached_speedup = r_scalar.mean_ms / r_cached.mean_ms.max(1e-9);
+    println!(
+        "          {cached_eps:>10.0} genome-evals/sec | cached speedup {cached_speedup:5.1}x vs scalar (bar: >= 5x)"
+    );
+
+    let (front_s, _) = approx::explore_parallel(&m, &split, &fm, &tables, &scalar, 1);
+    let (front_c, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cached, 1);
+    assert_eq!(front_s.len(), front_c.len(), "cached front size diverged");
+    for (a, b) in front_s.iter().zip(&front_c) {
+        assert_eq!(a.genome, b.genome, "cached front genome diverged");
+        assert_eq!(a.objectives, b.objectives, "cached front objectives diverged");
+    }
+    println!("          fronts bit-identical (scalar == cached at equal seeds)");
+
+    // --- Cached-path thread scaling -----------------------------------
     let avail = pool::default_threads();
     let mut thread_counts = vec![1usize, 2, 4];
     if !thread_counts.contains(&avail) {
         thread_counts.push(avail);
     }
-
     let mut base_ms = 0.0f64;
     for &threads in &thread_counts {
         let r = harness::bench(
-            &format!("NSGA pop24×gen12 cache off, {threads:>2} thread(s)"),
+            &format!("NSGA pop24×gen12 cached, {threads:>2} thread(s)"),
             3,
             || {
-                let (front, stats) =
-                    approx::explore_parallel(&m, &split, &fm, &tables, &uncached, threads);
-                assert_eq!(stats.evals as f64, evals_per_run);
+                let (front, _) =
+                    approx::explore_parallel(&m, &split, &fm, &tables, &cached, threads);
                 std::hint::black_box(front.len());
             },
         );
         if threads == 1 {
             base_ms = r.mean_ms;
         }
+        let eps = row("cached", threads, &r, evals_per_run);
         println!(
             "          {:>10.0} genome-evals/sec, speedup {:>5.2}x vs 1 thread",
-            evals_per_run / (r.mean_ms / 1e3),
+            eps,
             base_ms / r.mean_ms.max(1e-9)
         );
     }
 
-    // Cache on at full threads: crossover/mutation re-produce genomes
-    // across generations, and each hit skips a full training-set pass.
-    let cached = NsgaConfig {
+    // --- Memo on top: crossover/mutation re-produce genomes across ----
+    // generations, and each hit skips even the delta-adds.
+    let memoized = NsgaConfig {
         memoize: true,
-        ..uncached.clone()
+        ..cached.clone()
     };
     let r = harness::bench(
-        &format!("NSGA pop24×gen12 cache on,  {avail:>2} thread(s)"),
+        &format!("NSGA pop24×gen12 cached+memo, {avail:>2} thread(s)"),
         3,
         || {
             let (front, _stats) =
-                approx::explore_parallel(&m, &split, &fm, &tables, &cached, avail);
+                approx::explore_parallel(&m, &split, &fm, &tables, &memoized, avail);
             std::hint::black_box(front.len());
         },
     );
-    let (_, stats) = approx::explore_parallel(&m, &split, &fm, &tables, &cached, avail);
+    let (_, stats) = approx::explore_parallel(&m, &split, &fm, &tables, &memoized, avail);
+    let memo_hit_rate = stats.hit_rate();
+    row("cached+memo", avail, &r, stats.requested as f64);
     println!(
         "          memo: {} unique evals / {} requested ({:.0}% hit rate), {:>10.0} effective genome-evals/sec",
         stats.evals,
         stats.requested,
-        100.0 * stats.hit_rate(),
+        100.0 * memo_hit_rate,
         stats.requested as f64 / (r.mean_ms / 1e3)
     );
 
-    // Third objective: energy (--energy-objective).  The closure here is
-    // a cheap deterministic stand-in (count of exact neurons kept), so
-    // the delta vs the 2-objective run isolates the 3-tuple bookkeeping
-    // cost — rank/crowding over three objectives plus the memo on
-    // 3-tuples — not circuit simulation.
+    // --- Third objective: energy (--energy-objective) ------------------
+    // The closure is a cheap deterministic stand-in (count of exact
+    // neurons kept), so the delta vs the 2-objective run isolates the
+    // 3-tuple bookkeeping — rank/crowding over three objectives plus the
+    // memo on 3-tuples — not circuit simulation.
     let energy = |mask: &[u8]| mask.iter().filter(|&&b| b == 0).count() as f64;
     let r = harness::bench(
-        &format!("NSGA pop24×gen12 3-obj cache on, {avail:>2} thread(s)"),
+        &format!("NSGA pop24×gen12 cached+memo 3-obj, {avail:>2} thread(s)"),
         3,
         || {
-            let (front, _stats) =
-                approx::explore_parallel_energy(&m, &split, &fm, &tables, &cached, avail, &energy);
+            let (front, _stats) = approx::explore_parallel_energy(
+                &m, &split, &fm, &tables, &memoized, avail, &energy,
+            );
             std::hint::black_box(front.len());
         },
     );
     let (front, stats) =
-        approx::explore_parallel_energy(&m, &split, &fm, &tables, &cached, avail, &energy);
+        approx::explore_parallel_energy(&m, &split, &fm, &tables, &memoized, avail, &energy);
+    row("cached+memo+3obj", avail, &r, stats.requested as f64);
     println!(
         "          3-obj: {} front points, memo {:.0}% hit rate, {:>10.0} effective genome-evals/sec \
          (serial == batched: tests/nsga_parallel.rs)",
         front.len(),
         100.0 * stats.hit_rate(),
         stats.requested as f64 / (r.mean_ms / 1e3)
+    );
+
+    assert!(
+        cached_speedup >= 5.0,
+        "delta-logit cache speedup {cached_speedup:.1}x below the 5x acceptance bar"
+    );
+    harness::write_results_json(
+        "BENCH_nsga.json",
+        &obj(vec![
+            ("bench", s("nsga_throughput")),
+            ("samples", num(n as f64)),
+            ("genome_bits", num(m.hidden as f64)),
+            ("pop_size", num(scalar.pop_size as f64)),
+            ("generations", num(scalar.generations as f64)),
+            ("cached_speedup", num(cached_speedup)),
+            ("memo_hit_rate", num(memo_hit_rate)),
+            ("rows", Json::Arr(rows)),
+        ]),
     );
 }

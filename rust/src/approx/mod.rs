@@ -16,11 +16,33 @@
 //! [`explore_energy`]/[`explore_parallel_energy`] differ from their
 //! 2-objective twins only in the appended objective
 //! (`tests/nsga_parallel.rs` locks the 3-tuple invariants down).
+//!
+//! Fitness evaluation itself runs through `model::cache::FitnessCache`
+//! by default (DESIGN.md §Perf): one precompute pass over the split
+//! collapses every genome evaluation to baseline-plus-selected-deltas,
+//! bit-identical to the scalar forward.  `nsga.cached_fitness = false`,
+//! `--no-fitness-cache`, or `PRINTED_MLP_NO_FITNESS_CACHE=1` restores
+//! the scalar oracle path.
 
 use crate::data::Split;
+use crate::model::cache::{CacheScratch, FitnessCache};
 use crate::model::{importance, ApproxTables, QuantModel};
 use crate::nsga::{self, FitnessEval, Individual, NsgaConfig, SearchStats};
 use crate::util::pool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// `PRINTED_MLP_NO_FITNESS_CACHE=1|true|yes` disables the delta-logit
+/// fitness cache at use time, forcing every genome through the scalar
+/// `QuantModel::accuracy` oracle (mirrors `PRINTED_MLP_NO_COMPILE_SIM`).
+/// Both paths are bit-identical; this exists for debugging and for
+/// measuring the cache's speedup (`nsga_throughput`).
+pub fn fitness_cache_env_disabled() -> bool {
+    matches!(
+        std::env::var("PRINTED_MLP_NO_FITNESS_CACHE").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
+}
 
 /// A chosen hybrid configuration.
 #[derive(Clone, Debug)]
@@ -93,16 +115,26 @@ where
 
 /// Parallel batch fitness for the approximation search (DESIGN.md §Perf):
 /// a generation's genomes fan out across worker threads via
-/// [`pool::scope_map_with`], each worker owning its own model +
-/// [`ApproxTables`] clone.  The native forward pass is `&self`-pure, so
-/// the clones are not about contention today — they keep each worker's
-/// evaluator state private (mirroring `sim::batch`'s per-worker lanes) so
-/// future backends with mutable scratch state slot in unchanged, and one
-/// clone per worker per generation is noise next to a single
-/// training-set pass.  Objectives match [`explore`]'s exactly —
-/// (#approximated neurons, training accuracy on the split) — and fitness
-/// is a pure function of the genome, so [`nsga::run_batched`] over this
-/// evaluator is bit-identical to the serial path at equal seeds.
+/// [`pool::scope_map_with`], all workers sharing one read-only
+/// [`FitnessCache`] — per-sample baseline logits under the all-exact
+/// mask plus per-(neuron, class) delta-logit columns, built lazily on
+/// the first batch.  A genome evaluation is then
+/// `base + Σ_{h∈mask} Δ[h]` + argmax, O(n·|mask_diff|·classes) instead
+/// of the scalar path's O(n·hidden·features) full forward, and each
+/// worker keeps a persistent [`CacheScratch`] (claimed from a slot pool
+/// by atomic counter) so successive generations re-apply only the
+/// XOR-diff between the previous and next mask.  No model/tables clones
+/// and no per-genome `Vec<bool>`→`Vec<u8>` allocations survive on
+/// either path — workers borrow shared state and reuse one mask buffer.
+///
+/// The cache is exact, not approximate (see `model::cache` for the
+/// bit-identity argument), and [`with_cached`](Self::with_cached)`(false)`
+/// or `PRINTED_MLP_NO_FITNESS_CACHE=1` falls back to the scalar
+/// `QuantModel::accuracy` oracle.  Objectives match [`explore`]'s
+/// exactly — (#approximated neurons, training accuracy on the split) —
+/// and fitness is a pure function of the genome, so
+/// [`nsga::run_batched`] over this evaluator is bit-identical to the
+/// serial path at equal seeds on both the cached and scalar routes.
 pub struct ParallelFitness<'a> {
     model: &'a QuantModel,
     split: &'a Split,
@@ -111,6 +143,14 @@ pub struct ParallelFitness<'a> {
     threads: usize,
     /// Optional measured-energy third objective (appended negated).
     energy: Option<EnergyEval<'a>>,
+    /// Delta-logit cache toggle (`nsga.cached_fitness`); the env var
+    /// [`fitness_cache_env_disabled`] is consulted per batch on top.
+    use_cache: bool,
+    /// Lazily-built shared cache; `None` until the first cached batch.
+    cache: Option<FitnessCache>,
+    /// One persistent scratch per worker slot, reused across
+    /// generations so the incremental mask-diff path can kick in.
+    scratches: Vec<Mutex<CacheScratch>>,
 }
 
 impl<'a> ParallelFitness<'a> {
@@ -128,6 +168,9 @@ impl<'a> ParallelFitness<'a> {
             tables,
             threads: threads.max(1),
             energy: None,
+            use_cache: true,
+            cache: None,
+            scratches: Vec::new(),
         }
     }
 
@@ -139,24 +182,67 @@ impl<'a> ParallelFitness<'a> {
         self.energy = Some(energy);
         self
     }
+
+    /// Toggle the delta-logit fitness cache (`nsga.cached_fitness`).
+    /// Off routes every genome through the scalar accuracy oracle;
+    /// fronts are bit-identical either way.
+    pub fn with_cached(mut self, on: bool) -> Self {
+        self.use_cache = on;
+        self
+    }
 }
 
 impl FitnessEval for ParallelFitness<'_> {
     fn eval_batch(&mut self, genomes: &[Vec<bool>]) -> Vec<Vec<f64>> {
+        let use_cache = self.use_cache && !fitness_cache_env_disabled();
+        if use_cache && self.cache.is_none() {
+            self.cache = Some(FitnessCache::build(
+                self.model,
+                &self.split.xs,
+                &self.split.ys,
+                self.feat_mask,
+                self.tables,
+            ));
+        }
+        if use_cache {
+            // One scratch per worker the pool may spawn for this batch;
+            // slots persist across batches so each worker's incremental
+            // logits survive between generations.
+            let want = self.threads.clamp(1, genomes.len().max(1));
+            let cache = self.cache.as_ref().expect("cache built above");
+            while self.scratches.len() < want {
+                self.scratches.push(Mutex::new(cache.new_scratch()));
+            }
+        }
+        let cache = if use_cache { self.cache.as_ref() } else { None };
+        let scratches = &self.scratches;
         let (model, split) = (self.model, self.split);
         let (feat_mask, tables) = (self.feat_mask, self.tables);
         let energy = self.energy;
+        // Workers claim scratch slots by atomic counter; the pool spawns
+        // at most `threads.clamp(1, genomes.len())` workers, so every
+        // claim lands on a distinct slot and the lock never contends.
+        let slot = AtomicUsize::new(0);
         pool::scope_map_with(
             genomes.len(),
             self.threads,
-            || (model.clone(), tables.clone()),
-            move |state, i| {
-                let (m, t) = state;
-                let mask: Vec<u8> = genomes[i].iter().map(|&b| b as u8).collect();
-                let acc = m.accuracy(&split.xs, &split.ys, feat_mask, &mask, t);
+            || {
+                let guard =
+                    cache.map(|_| scratches[slot.fetch_add(1, Ordering::Relaxed)].lock().unwrap());
+                (guard, vec![0u8; model.hidden])
+            },
+            |state, i| {
+                let (guard, mask) = state;
+                for (mj, &b) in mask.iter_mut().zip(&genomes[i]) {
+                    *mj = b as u8;
+                }
+                let acc = match (cache, guard.as_mut()) {
+                    (Some(c), Some(s)) => c.accuracy(s, &mask[..]),
+                    _ => model.accuracy(&split.xs, &split.ys, feat_mask, &mask[..], tables),
+                };
                 let mut obj = vec![genomes[i].iter().filter(|&&b| b).count() as f64, acc];
                 if let Some(e) = energy {
-                    obj.push(-e(&mask));
+                    obj.push(-e(&mask[..]));
                 }
                 obj
             },
@@ -176,7 +262,8 @@ pub fn explore_parallel(
     cfg: &NsgaConfig,
     threads: usize,
 ) -> (Vec<Individual>, SearchStats) {
-    let mut fitness = ParallelFitness::new(model, split, feat_mask, tables, threads);
+    let mut fitness = ParallelFitness::new(model, split, feat_mask, tables, threads)
+        .with_cached(cfg.cached_fitness);
     nsga::run_batched(model.hidden, cfg, &mut fitness)
 }
 
@@ -193,8 +280,9 @@ pub fn explore_parallel_energy(
     threads: usize,
     energy: EnergyEval<'_>,
 ) -> (Vec<Individual>, SearchStats) {
-    let mut fitness =
-        ParallelFitness::new(model, split, feat_mask, tables, threads).with_energy(energy);
+    let mut fitness = ParallelFitness::new(model, split, feat_mask, tables, threads)
+        .with_energy(energy)
+        .with_cached(cfg.cached_fitness);
     nsga::run_batched(model.hidden, cfg, &mut fitness)
 }
 

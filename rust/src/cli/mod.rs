@@ -4,10 +4,12 @@
 //! ```text
 //! printed-mlp pipeline  [--datasets a,b] [--threads N] [--backend B]
 //!                       [--search-threads N] [--no-nsga-cache]
-//!                       [--native] [--no-cache] [--fit-subset N]
-//!                       [--no-compile-sim] [--sim-lanes W]
+//!                       [--no-fitness-cache] [--native] [--no-cache]
+//!                       [--fit-subset N] [--no-compile-sim] [--sim-lanes W]
 //!                       [--profile-activity] [--gate-activity]
 //!                       [--energy-objective] [--config FILE]
+//! printed-mlp search    --synthetic [--hidden N] [--features N] [--classes N]
+//!                       [--samples N] [--seed N] [--verify] [pipeline flags]
 //! printed-mlp reproduce [--exp table1|fig4|fig6|fig7|fig8|rfp|all] [...]
 //! printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
 //! printed-mlp simulate  --dataset NAME [--arch ...] [--samples N] [--threads N]
@@ -83,10 +85,15 @@ USAGE:
   printed-mlp pipeline  [--datasets a,b,..] [--threads N] [--native]
                         [--backend auto|native|pjrt|gatesim]
                         [--search-threads N] [--no-nsga-cache]
-                        [--no-cache] [--fit-subset N] [--pop N] [--gens N]
+                        [--no-fitness-cache] [--no-cache] [--fit-subset N]
+                        [--pop N] [--gens N]
                         [--no-compile-sim] [--sim-lanes 0|1|2|4|8]
                         [--profile-activity] [--gate-activity]
                         [--energy-objective] [--config FILE] [--fast]
+  printed-mlp search    --synthetic [--hidden N] [--features N] [--classes N]
+                        [--samples N] [--seed N] [--pop N] [--gens N]
+                        [--search-threads N] [--no-nsga-cache]
+                        [--no-fitness-cache] [--verify]
   printed-mlp reproduce [--exp table1|fig6|fig7|fig8|rfp|all] [pipeline flags]
   printed-mlp verilog   --dataset NAME [--arch ours|hybrid|comb|sota] [--out FILE]
   printed-mlp simulate  --dataset NAME [--arch ours|comb|sota] [--samples N]
@@ -135,8 +142,17 @@ transient flip probability.  Rows report deterministic clean/faulted
 accuracy plus serve-path SLO impact (campaign.csv).
 On the native backend the NSGA-II approximation search fans each
 generation's fitness batch across --search-threads workers (0 = auto)
-with a genome memo cache (--no-nsga-cache disables it); results are
-bit-identical to the serial search at the same seed.
+with a genome memo cache (--no-nsga-cache disables it) and a shared
+delta-logit fitness cache (nsga.cached_fitness config key): one
+precompute pass over the split collapses every genome evaluation to
+baseline-plus-selected-delta adds, re-applying only the mask diff
+between generations.  --no-fitness-cache (or
+PRINTED_MLP_NO_FITNESS_CACHE=1) falls back to the scalar accuracy
+oracle; both paths and every thread count are bit-identical to the
+serial search at the same seed.  search --synthetic exercises exactly
+this machinery on a deterministic artifact-free model (--verify
+re-checks the front against the serial scalar oracle; the CI smoke
+path).
 Gate-level simulation compiles each netlist into a strength-reduced
 micro-op stream (sim.compile config key); --no-compile-sim (or
 PRINTED_MLP_NO_COMPILE_SIM=1) falls back to the interpreted reference
@@ -178,6 +194,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
     let store = ArtifactStore::discover();
     match cmd.as_str() {
         "pipeline" => cmd_pipeline(&store, &flags),
+        "search" => cmd_search(&flags),
         "reproduce" => cmd_reproduce(&store, &flags),
         "verilog" => cmd_verilog(&store, &flags),
         "simulate" => cmd_simulate(&store, &flags),
@@ -209,6 +226,9 @@ pub fn pipeline_config(flags: &Flags) -> Result<coordinator::PipelineConfig> {
     }
     if flags.has("no-nsga-cache") {
         conf.set("nsga.memoize", "false");
+    }
+    if flags.has("no-fitness-cache") {
+        conf.set("nsga.cached_fitness", "false");
     }
     if flags.has("native") {
         conf.set("pipeline.backend", "native");
@@ -279,6 +299,63 @@ fn cmd_pipeline(store: &ArtifactStore, flags: &Flags) -> Result<()> {
     let md = report::full_report(&outs, &store.results_dir())?;
     println!("{md}");
     println!("CSV + report.md written to {}", store.results_dir().display());
+    Ok(())
+}
+
+/// Artifact-free NSGA-II search smoke on a deterministic synthetic
+/// model: the CI path for the delta-logit fitness cache (and its
+/// `--no-fitness-cache` scalar-oracle twin).  `--verify` re-runs the
+/// serial scalar search and fails unless the Pareto fronts are
+/// bit-identical.
+fn cmd_search(flags: &Flags) -> Result<()> {
+    if !flags.has("synthetic") {
+        bail!("search runs on synthetic models only (pass --synthetic); dataset searches run inside `pipeline`");
+    }
+    let cfg = pipeline_config(flags)?;
+    let seed: u64 = flags.get("seed").unwrap_or("7").parse()?;
+    let features: usize = flags.get("features").unwrap_or("16").parse()?;
+    let hidden: usize = flags.get("hidden").unwrap_or("12").parse()?;
+    let classes: usize = flags.get("classes").unwrap_or("4").parse()?;
+    let samples: usize = flags.get("samples").unwrap_or("128").parse()?;
+    let model = crate::model::synth::rand_model(seed, features, hidden, classes);
+    let split = crate::model::synth::rand_split(&model, seed ^ 0x5EED, samples);
+    let fm = vec![1u8; model.features];
+    let tables = crate::approx::build_tables(&model, &split.xs, split.len(), &fm);
+    let threads = if cfg.search_threads > 0 {
+        cfg.search_threads
+    } else {
+        crate::util::pool::default_threads()
+    };
+    let t0 = std::time::Instant::now();
+    let (front, stats) =
+        crate::approx::explore_parallel(&model, &split, &fm, &tables, &cfg.nsga, threads);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "search: front {} of pop {} after {} gens, {} samples, {:.2}s \
+         ({threads} threads, fitness cache {}, {:.0} genome-evals/s, memo hit rate {:.2})",
+        front.len(),
+        cfg.nsga.pop_size,
+        cfg.nsga.generations,
+        split.len(),
+        secs,
+        if cfg.nsga.cached_fitness { "on" } else { "off" },
+        stats.requested as f64 / secs.max(1e-9),
+        stats.hit_rate(),
+    );
+    if flags.has("verify") {
+        let serial = crate::approx::explore(model.hidden, &cfg.nsga, |mask| {
+            model.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+        });
+        if serial.len() != front.len()
+            || serial
+                .iter()
+                .zip(&front)
+                .any(|(a, b)| a.genome != b.genome || a.objectives != b.objectives)
+        {
+            bail!("cached/parallel front diverged from the serial scalar oracle");
+        }
+        println!("verify: front bit-identical to the serial scalar oracle");
+    }
     Ok(())
 }
 
@@ -745,6 +822,48 @@ mod tests {
         let cfg = pipeline_config(&Flags::parse(&[]).unwrap()).unwrap();
         assert_eq!(cfg.search_threads, 0);
         assert!(cfg.nsga.memoize);
+    }
+
+    #[test]
+    fn no_fitness_cache_flag_reaches_config() {
+        let args: Vec<String> = ["--no-fitness-cache"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert!(!pipeline_config(&f).unwrap().nsga.cached_fitness);
+        // Default: the delta-logit fitness cache is on.
+        assert!(pipeline_config(&Flags::parse(&[]).unwrap()).unwrap().nsga.cached_fitness);
+    }
+
+    #[test]
+    fn search_synthetic_smoke_verifies_against_oracle() {
+        // The CI smoke path for the cached-fitness machinery: no
+        // artifacts, deterministic model, --verify cross-checks the
+        // front against the serial scalar oracle.
+        let args: Vec<String> = [
+            "search", "--synthetic", "--hidden", "6", "--features", "8", "--classes", "3",
+            "--samples", "32", "--pop", "8", "--gens", "3", "--search-threads", "2", "--verify",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(args).unwrap();
+    }
+
+    #[test]
+    fn search_scalar_oracle_smoke() {
+        // The --no-fitness-cache twin keeps the scalar path green in CI.
+        let args: Vec<String> = [
+            "search", "--synthetic", "--hidden", "5", "--features", "6", "--classes", "3",
+            "--samples", "24", "--pop", "6", "--gens", "2", "--no-fitness-cache", "--verify",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(args).unwrap();
+    }
+
+    #[test]
+    fn search_requires_synthetic() {
+        assert!(run(vec!["search".into()]).is_err());
     }
 
     #[test]

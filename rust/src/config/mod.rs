@@ -18,6 +18,7 @@
 //! pop_size = 40
 //! generations = 30
 //! memoize = true          # genome→objectives cache (perf only)
+//! cached_fitness = true   # delta-logit fitness cache (perf only)
 //! energy_objective = false # 3rd objective: measured energy/inference
 //!
 //! [sim]
@@ -215,6 +216,9 @@ impl Config {
         if let Some(b) = self.get_bool("nsga.memoize")? {
             nsga.memoize = b;
         }
+        if let Some(b) = self.get_bool("nsga.cached_fitness")? {
+            nsga.cached_fitness = b;
+        }
         cfg.nsga = nsga;
         if let Some(b) = self.get_bool("nsga.energy_objective")? {
             cfg.energy_objective = b;
@@ -409,10 +413,13 @@ mod tests {
         assert_eq!(c.pipeline().unwrap().search_threads, 6);
         let c = Config::parse("[nsga]\nmemoize = false\n").unwrap();
         assert!(!c.pipeline().unwrap().nsga.memoize);
-        // Defaults: auto-derived search threads, cache on.
+        let c = Config::parse("[nsga]\ncached_fitness = false\n").unwrap();
+        assert!(!c.pipeline().unwrap().nsga.cached_fitness);
+        // Defaults: auto-derived search threads, both caches on.
         let d = Config::default().pipeline().unwrap();
         assert_eq!(d.search_threads, 0);
         assert!(d.nsga.memoize);
+        assert!(d.nsga.cached_fitness);
     }
 
     #[test]

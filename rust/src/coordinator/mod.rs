@@ -218,11 +218,14 @@ pub fn run_dataset(
     let tables = approx::build_tables(&model, &fit_split.xs, fit_split.len(), &rfp.feat_mask);
     let baseline = rfp.accuracy;
     // §Perf: on the native backend each generation's offspring slate fans
-    // out across search workers (per-worker model + tables clones) with a
-    // genome→objectives memo — bit-identical to the serial path at equal
-    // seeds (tests/nsga_parallel.rs).  PJRT and gatesim keep the serial
-    // reference loop: PJRT's prepared-input handles are `!Send`, and the
-    // gatesim evaluator regenerates its circuit per mask anyway.
+    // out across search workers sharing one read-only delta-logit
+    // FitnessCache (model::cache; nsga.cached_fitness /
+    // --no-fitness-cache to fall back to the scalar oracle) with a
+    // genome→objectives memo on top — bit-identical to the serial path
+    // at equal seeds (tests/nsga_parallel.rs, tests/fitness_cache.rs).
+    // PJRT and gatesim keep the serial reference loop: PJRT's
+    // prepared-input handles are `!Send`, and the gatesim evaluator
+    // regenerates its circuit per mask anyway.
     let search_threads = if cfg.search_threads > 0 {
         cfg.search_threads
     } else {

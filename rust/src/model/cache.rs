@@ -1,0 +1,355 @@
+//! Delta-logit fitness cache for the NSGA-II approximation search
+//! (DESIGN.md §Perf).
+//!
+//! A genome only chooses, per hidden neuron, between two *fixed*
+//! activations — exact (multi-cycle) or approximated (single-cycle) —
+//! and the output layer is linear in those activations.  Over a fixed
+//! fitness split the logits of any approximation mask therefore
+//! decompose as
+//!
+//! ```text
+//! logits[c][i] = base[c][i] + Σ_{h : mask[h]=1} Δ[h][c][i]
+//! Δ[h][c][i]   = w2s[c][h] · ((hid_approx[i][h] − hid_exact[i][h]) << w2p[c][h])
+//! ```
+//!
+//! where `base` is the all-exact logits.  [`FitnessCache::build`] pays
+//! one O(n·hidden·features) precompute for `base` plus the per-neuron,
+//! per-class delta columns (stored sample-contiguous — SoA, i32 lanes —
+//! so the apply loops are straight-line adds over contiguous memory and
+//! autovectorize); after that a genome evaluation costs
+//! O(n·classes·|changed|): [`FitnessCache::apply`] re-applies only the
+//! XOR-diff between the scratch's current mask and the requested one,
+//! which between an NSGA parent and child is a handful of neurons.
+//! Columns that are identically zero (pruned output weight, or an
+//! approximation that never changes the activation on this split) are
+//! flagged and skipped entirely.
+//!
+//! Bit-identity with the scalar oracle ([`QuantModel::forward`]) is
+//! structural, not approximate: the decomposition telescopes exactly in
+//! i32 arithmetic (`a<<p − b<<p == (a−b)<<p` at these magnitudes — the
+//! qReLU range is [0, 15] and shifts are ≤ `pmax`), every intermediate
+//! scratch state equals some valid mask's logits, and the argmax uses
+//! the same strict-`>` lowest-index tie break.  `tests/fitness_cache.rs`
+//! enforces the equivalence differentially over random models × masks ×
+//! splits; `PRINTED_MLP_NO_FITNESS_CACHE=1` / `--no-fitness-cache`
+//! select the scalar path at run time (see [`crate::approx`]).
+
+use super::{qrelu, ApproxTables, QuantModel};
+
+/// Precomputed baseline + per-neuron delta-logit columns for one
+/// (model, split, feature-mask, tables) fitness context.  Read-only
+/// after [`Self::build`]; workers share it and carry their own
+/// [`CacheScratch`].
+pub struct FitnessCache {
+    n: usize,
+    classes: usize,
+    hidden: usize,
+    /// All-exact logits, class-major: `base[c * n + i]`.
+    base: Vec<i32>,
+    /// Delta columns, sample-contiguous: `delta[(h * classes + c) * n + i]`.
+    delta: Vec<i32>,
+    /// Per-(h, c) flag: `false` when the whole column is zero, so
+    /// [`Self::apply`] skips it without touching the data.
+    nonzero: Vec<bool>,
+    /// Split labels, for [`Self::accuracy`].
+    ys: Vec<u16>,
+}
+
+/// Per-worker mutable state: the logits of the last-applied mask plus
+/// that mask.  Persisting a scratch across generations is what makes
+/// the parent→child incremental path pay only for changed neurons.
+#[derive(Default)]
+pub struct CacheScratch {
+    /// Class-major logits of `mask`: `logits[c * n + i]`.  Empty until
+    /// the first [`FitnessCache::apply`].
+    logits: Vec<i32>,
+    /// The approximation mask `logits` currently reflects.
+    mask: Vec<u8>,
+}
+
+impl FitnessCache {
+    /// One full pass over the split: exact and approximated activations
+    /// per (sample, neuron), then the baseline logits and delta columns.
+    pub fn build(
+        model: &QuantModel,
+        xs: &[u8],
+        ys: &[u16],
+        feat_mask: &[u8],
+        tables: &ApproxTables,
+    ) -> Self {
+        let (f, hidden, classes) = (model.features, model.hidden, model.classes);
+        let n = ys.len();
+        assert_eq!(xs.len(), n * f, "xs rows must match ys");
+        let mut base = vec![0i32; classes * n];
+        let mut delta = vec![0i32; hidden * classes * n];
+        let mut nonzero = vec![false; hidden * classes];
+        let mut x = vec![0i32; f];
+        let mut hid_exact = vec![0i32; hidden];
+        let mut hid_diff = vec![0i32; hidden];
+        for i in 0..n {
+            for (xj, &v) in x.iter_mut().zip(&xs[i * f..(i + 1) * f]) {
+                *xj = v as i32;
+            }
+            for h in 0..hidden {
+                hid_exact[h] = qrelu(model.hidden_acc_exact(&x, feat_mask, h), model.trunc);
+                let approx = qrelu(model.hidden_acc_approx(&x, feat_mask, tables, h), model.trunc);
+                hid_diff[h] = approx - hid_exact[h];
+            }
+            for c in 0..classes {
+                let row = &model.w2p[c * hidden..(c + 1) * hidden];
+                let sgn = &model.w2s[c * hidden..(c + 1) * hidden];
+                let mut acc = model.b2[c];
+                for h in 0..hidden {
+                    acc += sgn[h] * (hid_exact[h] << row[h]);
+                }
+                base[c * n + i] = acc;
+                for h in 0..hidden {
+                    let d = sgn[h] * (hid_diff[h] << row[h]);
+                    if d != 0 {
+                        delta[(h * classes + c) * n + i] = d;
+                        nonzero[h * classes + c] = true;
+                    }
+                }
+            }
+        }
+        FitnessCache {
+            n,
+            classes,
+            hidden,
+            base,
+            delta,
+            nonzero,
+            ys: ys.to_vec(),
+        }
+    }
+
+    /// Fresh worker scratch (lazily initialized from the baseline on its
+    /// first [`Self::apply`]).
+    pub fn new_scratch(&self) -> CacheScratch {
+        CacheScratch::default()
+    }
+
+    /// Number of samples the cache covers.
+    pub fn samples(&self) -> usize {
+        self.n
+    }
+
+    /// Fraction of (neuron, class) delta columns that are identically
+    /// zero and therefore skipped by [`Self::apply`].
+    pub fn zero_column_rate(&self) -> f64 {
+        let total = self.nonzero.len();
+        if total == 0 {
+            return 0.0;
+        }
+        self.nonzero.iter().filter(|&&nz| !nz).count() as f64 / total as f64
+    }
+
+    /// Bring `scratch.logits` to `mask`'s logits by adding/subtracting
+    /// only the delta columns whose mask bit changed since the scratch's
+    /// previous mask (first use initializes from the all-exact
+    /// baseline).  Every intermediate state equals some valid mask's
+    /// logits, so overflow behavior matches the scalar oracle exactly.
+    pub fn apply(&self, scratch: &mut CacheScratch, mask: &[u8]) {
+        assert_eq!(mask.len(), self.hidden, "mask length");
+        if scratch.mask.len() != self.hidden {
+            scratch.logits.clear();
+            scratch.logits.extend_from_slice(&self.base);
+            scratch.mask.clear();
+            scratch.mask.resize(self.hidden, 0);
+        }
+        let n = self.n;
+        for h in 0..self.hidden {
+            let want = mask[h] != 0;
+            if want == (scratch.mask[h] != 0) {
+                continue;
+            }
+            scratch.mask[h] = want as u8;
+            for c in 0..self.classes {
+                let col = h * self.classes + c;
+                if !self.nonzero[col] {
+                    continue;
+                }
+                let src = &self.delta[col * n..(col + 1) * n];
+                let dst = &mut scratch.logits[c * n..(c + 1) * n];
+                if want {
+                    for (l, &d) in dst.iter_mut().zip(src) {
+                        *l += d;
+                    }
+                } else {
+                    for (l, &d) in dst.iter_mut().zip(src) {
+                        *l -= d;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Split accuracy under `mask` — the cached twin of
+    /// [`QuantModel::accuracy`], bit-identical by construction.
+    pub fn accuracy(&self, scratch: &mut CacheScratch, mask: &[u8]) -> f64 {
+        self.apply(scratch, mask);
+        let mut correct = 0usize;
+        for i in 0..self.n {
+            if self.argmax(&scratch.logits, i) == self.ys[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.n.max(1) as f64
+    }
+
+    /// Predictions under `mask` into `out` (cleared first) — the
+    /// differential hook `tests/fitness_cache.rs` compares against the
+    /// scalar [`QuantModel::forward`] oracle.
+    pub fn predict_into(&self, scratch: &mut CacheScratch, mask: &[u8], out: &mut Vec<i32>) {
+        self.apply(scratch, mask);
+        out.clear();
+        out.reserve(self.n);
+        for i in 0..self.n {
+            out.push(self.argmax(&scratch.logits, i) as i32);
+        }
+    }
+
+    /// Strided argmax over the class-major logits of sample `i`; ties
+    /// break to the lowest class index (strict `>`), matching
+    /// [`QuantModel::forward`].
+    #[inline]
+    fn argmax(&self, logits: &[i32], i: usize) -> usize {
+        let mut best = 0usize;
+        for c in 1..self.classes {
+            if logits[c * self.n + i] > logits[best * self.n + i] {
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::rand_model;
+    use crate::util::prng::Rng;
+
+    fn scalar_predictions(
+        m: &QuantModel,
+        xs: &[u8],
+        n: usize,
+        fm: &[u8],
+        am: &[u8],
+        tables: &ApproxTables,
+    ) -> Vec<i32> {
+        let mut out = Vec::new();
+        let mut x = vec![0i32; m.features];
+        for i in 0..n {
+            for (xj, &v) in x.iter_mut().zip(&xs[i * m.features..(i + 1) * m.features]) {
+                *xj = v as i32;
+            }
+            out.push(m.forward(&x, fm, am, tables).0 as i32);
+        }
+        out
+    }
+
+    #[test]
+    fn baseline_matches_all_exact_oracle() {
+        let m = rand_model(41, 9, 6, 4);
+        let mut r = Rng::new(2);
+        let n = 30;
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(m.classes as u64) as u16).collect();
+        let fm = vec![1u8; m.features];
+        let tables = crate::model::importance::approx_tables(&m, &xs, n, &fm);
+        let cache = FitnessCache::build(&m, &xs, &ys, &fm, &tables);
+        let mut scratch = cache.new_scratch();
+        let zeros = vec![0u8; m.hidden];
+        let mut preds = Vec::new();
+        cache.predict_into(&mut scratch, &zeros, &mut preds);
+        assert_eq!(preds, scalar_predictions(&m, &xs, n, &fm, &zeros, &tables));
+        assert_eq!(
+            cache.accuracy(&mut scratch, &zeros),
+            m.accuracy(&xs, &ys, &fm, &zeros, &tables)
+        );
+    }
+
+    #[test]
+    fn incremental_mask_walk_matches_oracle_and_fresh_scratch() {
+        let m = rand_model(42, 11, 8, 3);
+        let mut r = Rng::new(3);
+        let n = 40;
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(m.classes as u64) as u16).collect();
+        let fm = vec![1u8; m.features];
+        let tables = crate::model::importance::approx_tables(&m, &xs, n, &fm);
+        let cache = FitnessCache::build(&m, &xs, &ys, &fm, &tables);
+        let mut walk = cache.new_scratch();
+        for step in 0..12u64 {
+            let mut mr = Rng::new(100 + step);
+            let mask: Vec<u8> = (0..m.hidden).map(|_| mr.chance(0.5) as u8).collect();
+            let mut got = Vec::new();
+            cache.predict_into(&mut walk, &mask, &mut got);
+            let want = scalar_predictions(&m, &xs, n, &fm, &mask, &tables);
+            assert_eq!(got, want, "incremental walk step {step}");
+            // A cold scratch must land on the same state the walk did.
+            let mut fresh = cache.new_scratch();
+            let mut cold = Vec::new();
+            cache.predict_into(&mut fresh, &mask, &mut cold);
+            assert_eq!(got, cold, "fresh vs incremental, step {step}");
+        }
+    }
+
+    #[test]
+    fn all_approx_and_feature_mask_paths_match() {
+        let m = rand_model(43, 7, 5, 3);
+        let mut r = Rng::new(4);
+        let n = 24;
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(m.classes as u64) as u16).collect();
+        // Prune a couple of features: the cache must bake feat_mask in.
+        let mut fm = vec![1u8; m.features];
+        fm[0] = 0;
+        fm[3] = 0;
+        let tables = crate::model::importance::approx_tables(&m, &xs, n, &fm);
+        let cache = FitnessCache::build(&m, &xs, &ys, &fm, &tables);
+        let mut scratch = cache.new_scratch();
+        let ones = vec![1u8; m.hidden];
+        assert_eq!(
+            cache.accuracy(&mut scratch, &ones),
+            m.accuracy(&xs, &ys, &fm, &ones, &tables)
+        );
+    }
+
+    #[test]
+    fn zero_columns_are_flagged_for_pruned_output_weights() {
+        let mut m = rand_model(44, 6, 4, 3);
+        // Prune every output weight of neuron 1: its delta columns must
+        // all be zero no matter what the activations do.
+        for c in 0..m.classes {
+            m.w2s[c * m.hidden + 1] = 0;
+        }
+        let mut r = Rng::new(5);
+        let n = 16;
+        let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| r.below(m.classes as u64) as u16).collect();
+        let fm = vec![1u8; m.features];
+        let tables = crate::model::importance::approx_tables(&m, &xs, n, &fm);
+        let cache = FitnessCache::build(&m, &xs, &ys, &fm, &tables);
+        assert!(cache.zero_column_rate() >= 3.0 / (4.0 * 3.0) - 1e-12);
+        // Toggling the pruned neuron must not change anything.
+        let mut scratch = cache.new_scratch();
+        let mut mask = vec![0u8; m.hidden];
+        let base_acc = cache.accuracy(&mut scratch, &mask);
+        mask[1] = 1;
+        assert_eq!(cache.accuracy(&mut scratch, &mask), base_acc);
+        assert_eq!(base_acc, m.accuracy(&xs, &ys, &fm, &mask, &tables));
+    }
+
+    #[test]
+    fn empty_split_is_harmless() {
+        let m = rand_model(45, 5, 3, 2);
+        let fm = vec![1u8; m.features];
+        let tables = ApproxTables::disabled(m.hidden);
+        let cache = FitnessCache::build(&m, &[], &[], &fm, &tables);
+        assert_eq!(cache.samples(), 0);
+        let mut scratch = cache.new_scratch();
+        assert_eq!(cache.accuracy(&mut scratch, &vec![1u8; m.hidden]), 0.0);
+    }
+}

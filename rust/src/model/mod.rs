@@ -10,6 +10,7 @@
 //!
 //! See DESIGN.md §Functional semantics.
 
+pub mod cache;
 pub mod importance;
 pub mod synth;
 
@@ -192,8 +193,29 @@ impl QuantModel {
         approx_mask: &[u8],
         tables: &ApproxTables,
     ) -> (usize, Vec<i32>) {
-        debug_assert_eq!(x.len(), self.features);
         let mut hid = vec![0i32; self.hidden];
+        let mut logits = vec![0i32; self.classes];
+        let best = self.forward_into(x, feat_mask, approx_mask, tables, &mut hid, &mut logits);
+        (best, logits)
+    }
+
+    /// [`Self::forward`] with caller-provided scratch: writes the hidden
+    /// activations into `hid` and the logits into `logits` (no
+    /// allocation) and returns the argmax prediction.  The batch paths
+    /// ([`Self::predict_rows_into`], [`Self::accuracy`]) reuse one
+    /// scratch pair across every sample.
+    pub fn forward_into(
+        &self,
+        x: &[i32],
+        feat_mask: &[u8],
+        approx_mask: &[u8],
+        tables: &ApproxTables,
+        hid: &mut [i32],
+        logits: &mut [i32],
+    ) -> usize {
+        debug_assert_eq!(x.len(), self.features);
+        debug_assert_eq!(hid.len(), self.hidden);
+        debug_assert_eq!(logits.len(), self.classes);
         for h in 0..self.hidden {
             let acc = if approx_mask[h] == 1 {
                 self.hidden_acc_approx(x, feat_mask, tables, h)
@@ -202,7 +224,6 @@ impl QuantModel {
             };
             hid[h] = qrelu(acc, self.trunc);
         }
-        let mut logits = vec![0i32; self.classes];
         for c in 0..self.classes {
             let row = &self.w2p[c * self.hidden..(c + 1) * self.hidden];
             let sgn = &self.w2s[c * self.hidden..(c + 1) * self.hidden];
@@ -220,7 +241,7 @@ impl QuantModel {
                 best = c;
             }
         }
-        (best, logits)
+        best
     }
 
     /// Exact (no approximation, full feature set) convenience forward.
@@ -233,6 +254,15 @@ impl QuantModel {
     /// Predict classes for `n` row-major 4-bit samples into `out`
     /// (cleared first) — the one u8-row → i32 decode loop shared by the
     /// native evaluator's batch paths and synthetic-split labeling.
+    ///
+    /// SoA-blocked: samples are processed in blocks of [`Self::BLOCK`],
+    /// decoding each block's u8 rows once, walking the hidden layer
+    /// neuron-major (one `w1p`/`w1s` weight-row read serves the whole
+    /// block) and the output layer class-major, with all scratch
+    /// allocated once per call — no per-sample `Vec`s.  Predictions are
+    /// bit-identical to the per-sample [`Self::forward`] loop: the
+    /// accumulation order within each neuron/class is unchanged, only
+    /// the loop nest around it.
     pub fn predict_rows_into(
         &self,
         xs: &[u8],
@@ -246,16 +276,67 @@ impl QuantModel {
         debug_assert_eq!(xs.len(), n * f);
         out.clear();
         out.reserve(n);
-        let mut x = vec![0i32; f];
-        for i in 0..n {
-            for (xj, &v) in x.iter_mut().zip(&xs[i * f..(i + 1) * f]) {
+        let b = Self::BLOCK.min(n.max(1));
+        let mut xblk = vec![0i32; b * f];
+        let mut hid = vec![0i32; b * self.hidden];
+        let mut logits = vec![0i32; b * self.classes];
+        let mut start = 0usize;
+        while start < n {
+            let m = Self::BLOCK.min(n - start);
+            for (xj, &v) in xblk[..m * f]
+                .iter_mut()
+                .zip(&xs[start * f..(start + m) * f])
+            {
                 *xj = v as i32;
             }
-            out.push(self.forward(&x, feat_mask, approx_mask, tables).0 as i32);
+            for h in 0..self.hidden {
+                if approx_mask[h] == 1 {
+                    for s in 0..m {
+                        let acc =
+                            self.hidden_acc_approx(&xblk[s * f..(s + 1) * f], feat_mask, tables, h);
+                        hid[s * self.hidden + h] = qrelu(acc, self.trunc);
+                    }
+                } else {
+                    for s in 0..m {
+                        let acc = self.hidden_acc_exact(&xblk[s * f..(s + 1) * f], feat_mask, h);
+                        hid[s * self.hidden + h] = qrelu(acc, self.trunc);
+                    }
+                }
+            }
+            for c in 0..self.classes {
+                let row = &self.w2p[c * self.hidden..(c + 1) * self.hidden];
+                let sgn = &self.w2s[c * self.hidden..(c + 1) * self.hidden];
+                for s in 0..m {
+                    let hrow = &hid[s * self.hidden..(s + 1) * self.hidden];
+                    let mut acc = self.b2[c];
+                    for h in 0..self.hidden {
+                        acc += sgn[h] * (hrow[h] << row[h]);
+                    }
+                    logits[s * self.classes + c] = acc;
+                }
+            }
+            for s in 0..m {
+                let l = &logits[s * self.classes..(s + 1) * self.classes];
+                let mut best = 0usize;
+                for c in 1..self.classes {
+                    if l[c] > l[best] {
+                        best = c;
+                    }
+                }
+                out.push(best as i32);
+            }
+            start += m;
         }
     }
 
+    /// Sample-block width of [`Self::predict_rows_into`] — sized so a
+    /// block's decoded inputs + activations + logits stay L1-resident
+    /// for every dataset shape in the suite.
+    pub const BLOCK: usize = 64;
+
     /// Accuracy over a dataset slice (rows of `features` u8 inputs).
+    /// Allocation-free per sample: one decode buffer + one
+    /// [`Self::forward_into`] scratch pair reused across the slice.
     pub fn accuracy(
         &self,
         xs: &[u8],
@@ -268,11 +349,17 @@ impl QuantModel {
         assert_eq!(xs.len(), n * self.features);
         let mut correct = 0usize;
         let mut x = vec![0i32; self.features];
+        let mut hid = vec![0i32; self.hidden];
+        let mut logits = vec![0i32; self.classes];
         for i in 0..n {
-            for f in 0..self.features {
-                x[f] = xs[i * self.features + f] as i32;
+            for (xj, &v) in x
+                .iter_mut()
+                .zip(&xs[i * self.features..(i + 1) * self.features])
+            {
+                *xj = v as i32;
             }
-            let (pred, _) = self.forward(&x, feat_mask, approx_mask, tables);
+            let pred =
+                self.forward_into(&x, feat_mask, approx_mask, tables, &mut hid, &mut logits);
             if pred == ys[i] as usize {
                 correct += 1;
             }
@@ -370,6 +457,38 @@ mod tests {
         let (pred, logits) = m.forward_exact(&[0, 0, 0]);
         assert_eq!(logits, vec![5, 5]);
         assert_eq!(pred, 0);
+    }
+
+    #[test]
+    fn blocked_predict_rows_matches_per_sample_forward() {
+        // The SoA-blocked batch kernel must agree with the scalar
+        // forward at sizes straddling the block boundary (including a
+        // partial tail block) and with a mixed approximation mask.
+        let m = crate::model::synth::rand_model(19, 7, 5, 3);
+        let mut r = crate::util::prng::Rng::new(6);
+        let fm = vec![1u8; m.features];
+        let am: Vec<u8> = (0..m.hidden).map(|h| (h % 2) as u8).collect();
+        let tables = crate::model::importance::approx_tables(
+            &m,
+            &(0..32 * m.features).map(|i| (i % 16) as u8).collect::<Vec<_>>(),
+            32,
+            &fm,
+        );
+        for n in [0usize, 1, QuantModel::BLOCK - 1, QuantModel::BLOCK, QuantModel::BLOCK + 7] {
+            let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+            let mut got = Vec::new();
+            m.predict_rows_into(&xs, n, &fm, &am, &tables, &mut got);
+            let mut x = vec![0i32; m.features];
+            let want: Vec<i32> = (0..n)
+                .map(|i| {
+                    for (xj, &v) in x.iter_mut().zip(&xs[i * m.features..(i + 1) * m.features]) {
+                        *xj = v as i32;
+                    }
+                    m.forward(&x, &fm, &am, &tables).0 as i32
+                })
+                .collect();
+            assert_eq!(got, want, "n = {n}");
+        }
     }
 
     #[test]

@@ -143,6 +143,12 @@ pub struct NsgaConfig {
     /// perf toggle: hits skip a full training-set pass without changing
     /// the search trajectory.
     pub memoize: bool,
+    /// Route batched fitness through the shared delta-logit
+    /// [`crate::model::cache::FitnessCache`] (`nsga.cached_fitness`,
+    /// `--no-fitness-cache` to disable; `PRINTED_MLP_NO_FITNESS_CACHE=1`
+    /// overrides at use time).  Bit-identical to the scalar accuracy
+    /// oracle — purely a perf toggle, like [`memoize`](Self::memoize).
+    pub cached_fitness: bool,
 }
 
 impl Default for NsgaConfig {
@@ -154,6 +160,7 @@ impl Default for NsgaConfig {
             mutation_prob: 0.05,
             seed: 0xA5D0,
             memoize: true,
+            cached_fitness: true,
         }
     }
 }

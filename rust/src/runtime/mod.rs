@@ -254,6 +254,9 @@ pub trait Evaluator {
 
 /// Fallback evaluator with the same interface, running the bit-exact Rust
 /// functional model (used where PJRT is unavailable and in cross-checks).
+/// Batch paths delegate to the SoA-blocked `QuantModel::predict_rows_into`
+/// kernel, so `predict_into` reuses one block of scratch across the whole
+/// slice instead of allocating per sample (DESIGN.md §Perf).
 pub struct NativeEvaluator<'m> {
     pub model: &'m QuantModel,
 }

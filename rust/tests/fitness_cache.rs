@@ -1,0 +1,270 @@
+//! Differential suite for the delta-logit fitness cache
+//! (`model::cache::FitnessCache`, DESIGN.md §Perf).
+//!
+//! The contract under test: a genome evaluation through the cache —
+//! all-exact baseline logits plus the selected per-neuron delta columns,
+//! re-applied incrementally along a mask walk — is **bit-identical** to
+//! the scalar reference (`QuantModel::forward` per sample) for every
+//! model shape, RFP feature mask, approximation mask, and split,
+//! including the all-exact, all-approx, and pruned-output-weight cases;
+//! and an NSGA-II search over the cached evaluator returns the same
+//! Pareto front as the serial scalar oracle at equal seeds, with the
+//! 2- and 3-objective (`--energy-objective`) paths and the
+//! `PRINTED_MLP_NO_FITNESS_CACHE` escape hatch all covered.
+//!
+//! Artifact-free (random `QuantModel`s), so this suite runs in tier-1.
+
+mod common;
+
+use common::rand_model;
+use printed_mlp::approx;
+use printed_mlp::data::Split;
+use printed_mlp::model::cache::FitnessCache;
+use printed_mlp::model::{ApproxTables, QuantModel};
+use printed_mlp::nsga::{Individual, NsgaConfig};
+use printed_mlp::util::propcheck::{check, Gen};
+
+/// Scalar oracle: per-sample predictions through the reference
+/// `forward` (not the blocked batch kernel, which has its own
+/// differential tests in `model::tests`).
+fn scalar_predictions(
+    m: &QuantModel,
+    xs: &[u8],
+    n: usize,
+    fm: &[u8],
+    am: &[u8],
+    tables: &ApproxTables,
+) -> Vec<i32> {
+    let mut x = vec![0i32; m.features];
+    (0..n)
+        .map(|i| {
+            for (xj, &v) in x.iter_mut().zip(&xs[i * m.features..(i + 1) * m.features]) {
+                *xj = v as i32;
+            }
+            m.forward(&x, fm, am, tables).0 as i32
+        })
+        .collect()
+}
+
+fn assert_fronts_identical(a: &[Individual], b: &[Individual], what: &str) {
+    assert_eq!(a.len(), b.len(), "front size differs: {what}");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.genome, y.genome, "genome differs: {what}");
+        assert_eq!(x.objectives, y.objectives, "objectives differ: {what}");
+    }
+}
+
+/// Deterministic stand-in for the measured-energy closure (matches
+/// `tests/nsga_parallel.rs`).
+fn fake_energy(mask: &[u8]) -> f64 {
+    mask.iter()
+        .enumerate()
+        .map(|(i, &b)| if b == 0 { (i + 2) as f64 } else { 0.3 })
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// Cache vs scalar forward, property-checked over random everything
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_accuracy_and_predictions_match_scalar_oracle() {
+    check("delta-logit cache == scalar forward", 60, |g: &mut Gen| {
+        let features = g.usize_in(1..=20);
+        let hidden = g.usize_in(1..=12);
+        let classes = g.usize_in(1..=5);
+        let n = g.usize_in(1..=40);
+        let seed = g.rng().below(1 << 20);
+        let m = rand_model(seed, features, hidden, classes);
+        let xs: Vec<u8> = (0..n * features).map(|_| g.rng().below(16) as u8).collect();
+        let ys: Vec<u16> = (0..n).map(|_| g.rng().below(classes as u64) as u16).collect();
+        // RFP mask with occasional pruned features (the cache must bake
+        // the same feature gating into base and delta columns).
+        let fm: Vec<u8> = (0..features).map(|_| g.rng().chance(0.8) as u8).collect();
+        let tables = approx::build_tables(&m, &xs, n, &fm);
+        let cache = FitnessCache::build(&m, &xs, &ys, &fm, &tables);
+        let mut scratch = cache.new_scratch();
+        let mut preds = Vec::new();
+        // One shared scratch walked over the whole mask sequence, so the
+        // incremental parent→child diff path is what gets exercised; the
+        // walk pins the all-exact and all-approx endpoints.
+        let mut masks: Vec<Vec<u8>> = vec![vec![0u8; hidden]];
+        for _ in 0..5 {
+            masks.push((0..hidden).map(|_| g.bool() as u8).collect());
+        }
+        masks.push(vec![1u8; hidden]);
+        for mask in &masks {
+            if cache.accuracy(&mut scratch, mask) != m.accuracy(&xs, &ys, &fm, mask, &tables) {
+                return false;
+            }
+            cache.predict_into(&mut scratch, mask, &mut preds);
+            if preds != scalar_predictions(&m, &xs, n, &fm, mask, &tables) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn pruned_output_weights_skip_columns_without_changing_results() {
+    // Zeroing a neuron's entire output-weight column prunes its delta
+    // columns (flagged zero, skipped by apply) — and toggling that
+    // neuron must still agree with the scalar oracle, which also sees
+    // the zero weights.
+    let mut m = rand_model(91, 10, 6, 4);
+    for c in 0..m.classes {
+        m.w2s[c * m.hidden + 2] = 0;
+    }
+    let n = 48usize;
+    let mut r = printed_mlp::util::prng::Rng::new(14);
+    let xs: Vec<u8> = (0..n * m.features).map(|_| r.below(16) as u8).collect();
+    let ys: Vec<u16> = (0..n).map(|_| r.below(m.classes as u64) as u16).collect();
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &xs, n, &fm);
+    let cache = FitnessCache::build(&m, &xs, &ys, &fm, &tables);
+    assert!(
+        cache.zero_column_rate() >= 1.0 / m.hidden as f64 - 1e-12,
+        "neuron 2's columns must all be flagged zero"
+    );
+    let mut scratch = cache.new_scratch();
+    for mask in [
+        vec![0, 0, 1, 0, 0, 0],
+        vec![1, 0, 1, 1, 0, 0],
+        vec![1, 0, 0, 1, 0, 0],
+        vec![1u8; 6],
+    ] {
+        assert_eq!(
+            cache.accuracy(&mut scratch, &mask),
+            m.accuracy(&xs, &ys, &fm, &mask, &tables),
+            "mask {mask:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NSGA fronts: cached vs scalar oracle, 2- and 3-objective, env hatch
+// ---------------------------------------------------------------------------
+
+fn search_fixture(seed: u64) -> (QuantModel, Split, Vec<u8>, ApproxTables) {
+    let m = rand_model(seed, 12, 8, 3);
+    let mut r = printed_mlp::util::prng::Rng::new(seed ^ 0xF00D);
+    let n = 64usize;
+    let split = Split {
+        xs: (0..n * m.features).map(|_| r.below(16) as u8).collect(),
+        ys: (0..n).map(|_| r.below(m.classes as u64) as u16).collect(),
+        features: m.features,
+    };
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    (m, split, fm, tables)
+}
+
+#[test]
+fn cached_search_front_matches_serial_scalar_oracle() {
+    let (m, split, fm, tables) = search_fixture(92);
+    let cached = NsgaConfig {
+        pop_size: 12,
+        generations: 8,
+        ..Default::default()
+    };
+    let scalar = NsgaConfig {
+        cached_fitness: false,
+        ..cached.clone()
+    };
+    let serial = approx::explore(m.hidden, &cached, |mask| {
+        m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+    });
+    for threads in [1usize, 2, 4] {
+        let (c, cs) = approx::explore_parallel(&m, &split, &fm, &tables, &cached, threads);
+        let (s, ss) = approx::explore_parallel(&m, &split, &fm, &tables, &scalar, threads);
+        assert_fronts_identical(&serial, &c, &format!("cached, {threads} threads"));
+        assert_fronts_identical(&serial, &s, &format!("scalar, {threads} threads"));
+        // The cache changes how objectives are computed, never which
+        // genomes get evaluated: memo accounting is path-independent.
+        assert_eq!(cs.evals, ss.evals);
+        assert_eq!(cs.cache_hits, ss.cache_hits);
+        assert_eq!(cs.requested, ss.requested);
+    }
+}
+
+#[test]
+fn cached_search_front_matches_oracle_with_energy_objective() {
+    let (m, split, fm, tables) = search_fixture(93);
+    let cached = NsgaConfig {
+        pop_size: 10,
+        generations: 6,
+        ..Default::default()
+    };
+    let scalar = NsgaConfig {
+        cached_fitness: false,
+        ..cached.clone()
+    };
+    let serial = approx::explore_energy(
+        m.hidden,
+        &cached,
+        |mask| m.accuracy(&split.xs, &split.ys, &fm, mask, &tables),
+        &fake_energy,
+    );
+    for threads in [1usize, 3] {
+        let (c, _) = approx::explore_parallel_energy(
+            &m, &split, &fm, &tables, &cached, threads, &fake_energy,
+        );
+        let (s, _) = approx::explore_parallel_energy(
+            &m, &split, &fm, &tables, &scalar, threads, &fake_energy,
+        );
+        assert_fronts_identical(&serial, &c, &format!("3-obj cached, {threads} threads"));
+        assert_fronts_identical(&serial, &s, &format!("3-obj scalar, {threads} threads"));
+    }
+}
+
+#[test]
+fn env_hatch_forces_scalar_path_with_identical_front() {
+    // PRINTED_MLP_NO_FITNESS_CACHE is consulted per batch; flipping it
+    // mid-process must only change *how* fitness is computed.  (Other
+    // tests racing on this var are safe for the same reason: both paths
+    // are bit-identical.)
+    let (m, split, fm, tables) = search_fixture(94);
+    let cfg = NsgaConfig {
+        pop_size: 10,
+        generations: 5,
+        ..Default::default()
+    };
+    let serial = approx::explore(m.hidden, &cfg, |mask| {
+        m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+    });
+    std::env::set_var("PRINTED_MLP_NO_FITNESS_CACHE", "1");
+    assert!(approx::fitness_cache_env_disabled());
+    let (hatched, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, 2);
+    std::env::remove_var("PRINTED_MLP_NO_FITNESS_CACHE");
+    assert!(!approx::fitness_cache_env_disabled());
+    let (cached, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, 2);
+    assert_fronts_identical(&serial, &hatched, "env hatch on");
+    assert_fronts_identical(&serial, &cached, "env hatch off");
+}
+
+#[test]
+fn empty_and_degenerate_splits_are_harmless() {
+    // n = 0 and single-sample splits through the full search machinery.
+    let m = rand_model(95, 6, 4, 3);
+    let fm = vec![1u8; m.features];
+    for n in [0usize, 1] {
+        let mut r = printed_mlp::util::prng::Rng::new(n as u64 + 3);
+        let split = Split {
+            xs: (0..n * m.features).map(|_| r.below(16) as u8).collect(),
+            ys: (0..n).map(|_| r.below(m.classes as u64) as u16).collect(),
+            features: m.features,
+        };
+        let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+        let cfg = NsgaConfig {
+            pop_size: 8,
+            generations: 3,
+            ..Default::default()
+        };
+        let serial = approx::explore(m.hidden, &cfg, |mask| {
+            m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+        });
+        let (par, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cfg, 2);
+        assert_fronts_identical(&serial, &par, &format!("n = {n}"));
+    }
+}

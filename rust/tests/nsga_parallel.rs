@@ -3,10 +3,12 @@
 //!
 //! The contract under test (DESIGN.md §Perf): `nsga::run_batched` over
 //! `approx::ParallelFitness` — per-generation offspring batches fanned
-//! across worker threads with per-worker model/table clones, plus a
-//! genome→objectives memo cache — returns a **bit-identical** final
-//! Pareto front to the serial reference `nsga::run` at the same seed,
-//! for every thread count and with the cache on or off.
+//! across worker threads sharing one read-only delta-logit fitness
+//! cache (`model::cache`), plus a genome→objectives memo cache —
+//! returns a **bit-identical** final Pareto front to the serial
+//! reference `nsga::run` at the same seed, for every thread count and
+//! with either cache on or off (`tests/fitness_cache.rs` covers the
+//! delta-logit cache's own differentials).
 //!
 //! Also covers the NSGA-II structural invariants: non-dominated-sort
 //! rank correctness on hand-built and random fronts, crowding-distance
@@ -107,6 +109,36 @@ fn cache_off_is_still_bit_identical() {
         assert_fronts_identical(&serial, &parallel, &format!("{threads} threads, cache off"));
         assert_eq!(stats.cache_hits, 0, "disabled cache must record no hits");
         assert_eq!(stats.evals, stats.requested);
+    }
+}
+
+#[test]
+fn scalar_and_cached_fitness_fronts_bit_identical() {
+    // `nsga.cached_fitness` only changes how each accuracy is computed
+    // (delta-logit cache vs full scalar forward), never its value:
+    // serial oracle, scalar-parallel, and cached-parallel fronts must
+    // coincide at every thread count.
+    let m = rand_model(38, 14, 7, 4);
+    let split = rand_split(19, &m, 80);
+    let fm = vec![1u8; m.features];
+    let tables = approx::build_tables(&m, &split.xs, split.len(), &fm);
+    let cached = NsgaConfig {
+        pop_size: 12,
+        generations: 8,
+        ..Default::default()
+    };
+    let scalar = NsgaConfig {
+        cached_fitness: false,
+        ..cached.clone()
+    };
+    let serial = approx::explore(m.hidden, &cached, |mask| {
+        m.accuracy(&split.xs, &split.ys, &fm, mask, &tables)
+    });
+    for threads in [1usize, 3] {
+        let (with_cache, _) = approx::explore_parallel(&m, &split, &fm, &tables, &cached, threads);
+        let (without, _) = approx::explore_parallel(&m, &split, &fm, &tables, &scalar, threads);
+        assert_fronts_identical(&serial, &with_cache, &format!("cached, {threads} threads"));
+        assert_fronts_identical(&serial, &without, &format!("scalar, {threads} threads"));
     }
 }
 
